@@ -1,0 +1,58 @@
+//! Quickstart: train LeNet across two simulated cloud regions with
+//! ASGD-GA synchronization and print the run report.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use cloudless::cloud::devices::Device;
+use cloudless::cloud::CloudEnv;
+use cloudless::runtime::PjrtRuntime;
+use cloudless::sched::optimal_matching;
+use cloudless::sync::{Strategy, SyncConfig};
+use cloudless::train::{run_geo_training, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = PjrtRuntime::new(artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // Two Tencent-like regions: Shanghai (Cascade Lake) and Chongqing
+    // (Skylake), with a 2:1 data split — the paper's Table IV case 3.
+    let env = CloudEnv::tencent_two_region(Device::Skylake, 2048, 1024);
+
+    // The elastic scheduler picks the load-balanced plan (12:4 cores).
+    let plan = optimal_matching(&env);
+    println!("elastic plan:");
+    for (alloc, region) in plan.allocations.iter().zip(&env.regions) {
+        println!(
+            "  {:<10} {:?} (LP full={:.5} planned={:.5})",
+            region.name,
+            alloc.units,
+            plan.full_lp[region.id],
+            plan.planned_lp[region.id]
+        );
+    }
+
+    // Train LeNet for a few epochs with ASGD-GA (sync every 4 updates).
+    let mut cfg = TrainConfig::new("lenet");
+    cfg.epochs = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    cfg.n_train = 3072;
+    cfg.n_eval = 1024;
+    cfg.sync = SyncConfig::new(Strategy::AsgdGa, 4);
+    let report = run_geo_training(&rt, &env, plan.allocations, cfg)?;
+
+    println!("\n{}", report.summary());
+    println!("\naccuracy curve:");
+    for pt in &report.curve {
+        println!("  t={:>8.1}s epoch={} acc={:.4} loss={:.4}", pt.t, pt.epoch, pt.accuracy, pt.loss);
+    }
+    println!("\nper-partition:");
+    for p in &report.partitions {
+        println!(
+            "  {:<10} units={:<2} steps={:<5} finish={:.1}s wait={:.1}s comm_wait={:.1}s staleness={:.2}",
+            p.region, p.units, p.steps, p.local_finish, p.waiting, p.comm_wait, p.mean_staleness
+        );
+    }
+    Ok(())
+}

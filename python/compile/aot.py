@@ -1,0 +1,166 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas kernels) -> HLO text artifacts.
+
+For every model this emits, under `artifacts/`:
+
+    {model}_train_step.hlo.txt  (params f32[P], x, y) -> (grads f32[P], loss f32[])
+    {model}_eval.hlo.txt        (params f32[P], x, y) -> (loss_sum, correct)
+    {model}_sgd_apply.hlo.txt   (p f32[P], g f32[P], lr f32[]) -> p'    [Pallas]
+    {model}_avg.hlo.txt         (a f32[P], b f32[P], w f32[])  -> avg   [Pallas]
+    {model}_acc.hlo.txt         (acc f32[P], g f32[P])         -> acc'  [Pallas]
+    {model}_init.bin            f32 LE initial parameters (P floats)
+    {model}_meta.json           geometry the Rust side needs (P, batch, dims...)
+
+plus `kernel_matmul.hlo.txt`, the raw L1 Pallas matmul (256x256x256) used by
+the Rust runtime smoke tests and the L1 block-shape bench.
+
+Compute-path note (see models/common.py): train/eval graphs default to the
+XLA path for the conv models and to the Pallas path for DeepFM — on the
+1-core CPU PJRT this keeps the Rust experiment suite inside its budget —
+while the PS-side vector ops above are always the Pallas kernels, so every
+model's artifact set contains Pallas-lowered HLO. Override with --compute.
+
+Interchange format is HLO **text**, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the `xla` crate links) rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids, so text round-trips cleanly. Lowered with
+return_tuple=True; the Rust runtime unwraps the tuple.
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.model import DEFAULT_MODELS, get_model
+from compile.models.common import Model
+
+#: Per-model default compute path for the train/eval graphs (see docstring).
+COMPUTE_DEFAULTS = {"deepfm": "pallas"}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _avals(model: Model):
+    import jax.numpy as jnp
+
+    p = jax.ShapeDtypeStruct((model.param_count,), jnp.float32)
+    x_np, y_np = model.example_batch()
+    x = jax.ShapeDtypeStruct(x_np.shape, x_np.dtype)
+    y = jax.ShapeDtypeStruct(y_np.shape, y_np.dtype)
+    return p, x, y
+
+
+def lower_model(model: Model, out_dir: str, seed: int = 0, verbose: bool = True,
+                compute: str | None = None):
+    """Lower train/eval/vecop entry points + write init params and metadata."""
+    import jax.numpy as jnp
+
+    from compile.kernels import grad_accumulate, model_average, sgd_apply
+
+    os.makedirs(out_dir, exist_ok=True)
+    os.environ["CLOUDLESS_COMPUTE"] = compute or COMPUTE_DEFAULTS.get(model.name, "xla")
+    p, x, y = _avals(model)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    entries = [
+        ("train_step", model.train_step, (p, x, y)),
+        ("eval", model.eval_step, (p, x, y)),
+        # PS-side vector ops: always the L1 Pallas kernels.
+        ("sgd_apply", sgd_apply, (p, p, scalar)),
+        ("avg", model_average, (p, p, scalar)),
+        ("acc", grad_accumulate, (p, p)),
+    ]
+    for entry, fn, avals in entries:
+        lowered = jax.jit(fn).lower(*avals)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{model.name}_{entry}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        if verbose:
+            print(f"  {path}: {len(text)/1e6:.2f} MB of HLO text")
+
+    init = model.init_flat(seed)
+    init_path = os.path.join(out_dir, f"{model.name}_init.bin")
+    init.tofile(init_path)
+
+    meta = {
+        "name": model.name,
+        "param_count": model.param_count,
+        "batch_size": model.batch_size,
+        "x_shape": list(model.x_shape),
+        "x_dtype": model.x_dtype,
+        "y_dtype": model.y_dtype,
+        "num_classes": model.num_classes,
+        "param_bytes": model.param_count * 4,
+        "specs": [{"name": s.name, "shape": list(s.shape)} for s in model.specs],
+        "meta": model.meta,
+        "init_seed": seed,
+        "entry_points": {
+            "train_step": f"{model.name}_train_step.hlo.txt",
+            "eval": f"{model.name}_eval.hlo.txt",
+        },
+    }
+    meta["compute"] = os.environ["CLOUDLESS_COMPUTE"]
+    meta_path = os.path.join(out_dir, f"{model.name}_meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    if verbose:
+        print(f"  {init_path}: {model.param_count} params "
+              f"({model.param_count * 4 / 1e6:.2f} MB)")
+    return meta
+
+
+def lower_kernel_demo(out_dir: str, n: int = 256, verbose: bool = True):
+    """Lower the raw Pallas matmul (n x n x n) for Rust runtime smoke tests."""
+    import jax.numpy as jnp
+
+    from compile.kernels import matmul
+
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    lowered = jax.jit(matmul).lower(spec, spec)
+    path = os.path.join(out_dir, "kernel_matmul.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    if verbose:
+        print(f"  {path}: Pallas matmul {n}x{n}x{n}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument(
+        "--models",
+        default=",".join(DEFAULT_MODELS),
+        help="comma-separated model names (see compile.model.list_models)",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compute", default=None, choices=(None, "pallas", "xla"),
+                    help="override the per-model compute-path default")
+    args = ap.parse_args()
+
+    names = [n for n in args.models.split(",") if n]
+    os.makedirs(args.out, exist_ok=True)
+    lower_kernel_demo(args.out)
+    for name in names:
+        print(f"lowering {name} ...")
+        lower_model(get_model(name), args.out, seed=args.seed, compute=args.compute)
+    print(f"artifacts written to {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""L1: Pallas kernels for the paper's compute hot-spots (see DESIGN.md).
+
+`matmul` is the differentiable tiled matmul every model's FLOPs flow
+through; `elementwise` holds the fused bias+activation and the PS-side
+vector ops (sgd_apply / model_average / grad_accumulate); `ref` is the
+pure-jnp oracle suite.
+"""
+
+from compile.kernels.matmul import matmul, matmul_pallas_raw  # noqa: F401
+from compile.kernels.elementwise import (  # noqa: F401
+    bias_act,
+    grad_accumulate,
+    model_average,
+    sgd_apply,
+)

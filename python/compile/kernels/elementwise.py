@@ -1,0 +1,180 @@
+"""L1 fused elementwise Pallas kernels.
+
+- bias_act: fused bias-add + activation used by every dense layer, so the
+  activation never round-trips through HBM between the matmul and the
+  nonlinearity.
+- sgd_apply: fused parameter update p <- p - lr*g (the PS-side hot op).
+- model_average: weighted average of two flat parameter vectors (the MA
+  strategy's PS-side update).
+- grad_accumulate: acc <- acc + g (ASGD-GA's local merge).
+
+All operate on flat vectors or row blocks, tiled so each block fits VMEM,
+and are lowered interpret=True (see matmul.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 1-D kernels tile the vector into slabs of this many elements (f32: 2 MB).
+VEC_BLOCK = 512 * 1024
+# 2-D bias+act kernels tile rows so a block stays under this VMEM budget
+# (grid-minimizing, same rationale as matmul.auto_blocks).
+ROW_BLOCK_BUDGET_BYTES = 8 * 1024 * 1024
+
+_ACTS = {
+    "linear": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+    "sigmoid": jax.nn.sigmoid,
+}
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _bias_act_kernel(x_ref, b_ref, o_ref, *, act):
+    o_ref[...] = _ACTS[act](x_ref[...] + b_ref[...])
+
+
+def _bias_act_bwd_kernel(x_ref, b_ref, g_ref, o_ref, *, act):
+    """Elementwise VJP: o = g * act'(x + b), act' via jax.vjp of the act."""
+    z = x_ref[...] + b_ref[...]
+    _, vjp = jax.vjp(_ACTS[act], z)
+    (dz,) = vjp(g_ref[...])
+    o_ref[...] = dz
+
+
+def _row_tiled(kernel, arrays, n_cols, out_dtype, act):
+    """Run a row-blocked elementwise kernel over [M, N] arrays (+[N] bias)."""
+    m = arrays[0].shape[0]
+    rows_cap = max(256, ROW_BLOCK_BUDGET_BYTES // max(1, 4 * n_cols))
+    bm = min(_ceil_to(rows_cap, 8), _ceil_to(m, 8))
+    mp = _ceil_to(m, bm)
+    padded, specs = [], []
+    for a in arrays:
+        if a.ndim == 2:
+            padded.append(jnp.pad(a, ((0, mp - m), (0, 0))))
+            specs.append(pl.BlockSpec((bm, n_cols), lambda i: (i, 0)))
+        else:  # bias row, broadcast to every block
+            padded.append(a)
+            specs.append(pl.BlockSpec((n_cols,), lambda i: (0,)))
+    out = pl.pallas_call(
+        functools.partial(kernel, act=act),
+        grid=(mp // bm,),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((bm, n_cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n_cols), out_dtype),
+        interpret=True,
+    )(*padded)
+    return out[:m]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def bias_act(x, b, act: str = "relu"):
+    """Fused o = act(x + b) for x: [M, N], b: [N] (differentiable)."""
+    if act not in _ACTS:
+        raise ValueError(f"unknown activation {act!r}")
+    return _row_tiled(_bias_act_kernel, [x, b], x.shape[1], x.dtype, act)
+
+
+def _bias_act_fwd(x, b, act):
+    return bias_act(x, b, act), (x, b)
+
+
+def _bias_act_bwd(act, res, g):
+    x, b = res
+    dx = _row_tiled(_bias_act_bwd_kernel, [x, b, g], x.shape[1], x.dtype, act)
+    return dx, jnp.sum(dx, axis=0)
+
+
+bias_act.defvjp(_bias_act_fwd, _bias_act_bwd)
+
+
+def _sgd_kernel(p_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+@jax.jit
+def sgd_apply(p, g, lr):
+    """Fused p' = p - lr * g over a flat f32[P] vector."""
+    (n,) = p.shape
+    blk = min(VEC_BLOCK, _ceil_to(n, 8))
+    np_ = _ceil_to(n, blk)
+    p_p = jnp.pad(p, (0, np_ - n))
+    g_p = jnp.pad(g, (0, np_ - n))
+    lr_v = jnp.asarray(lr, p.dtype).reshape((1,))
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(np_ // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), p.dtype),
+        interpret=True,
+    )(p_p, g_p, lr_v)
+    return out[:n]
+
+
+def _avg_kernel(a_ref, b_ref, w_ref, o_ref):
+    w = w_ref[0]
+    o_ref[...] = w * a_ref[...] + (1.0 - w) * b_ref[...]
+
+
+@jax.jit
+def model_average(a, b, w=0.5):
+    """Fused o = w*a + (1-w)*b over flat f32[P] vectors (inter-PS MA update)."""
+    (n,) = a.shape
+    blk = min(VEC_BLOCK, _ceil_to(n, 8))
+    np_ = _ceil_to(n, blk)
+    a_p = jnp.pad(a, (0, np_ - n))
+    b_p = jnp.pad(b, (0, np_ - n))
+    w_v = jnp.asarray(w, a.dtype).reshape((1,))
+    out = pl.pallas_call(
+        _avg_kernel,
+        grid=(np_ // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), a.dtype),
+        interpret=True,
+    )(a_p, b_p, w_v)
+    return out[:n]
+
+
+def _acc_kernel(a_ref, g_ref, o_ref):
+    o_ref[...] = a_ref[...] + g_ref[...]
+
+
+@jax.jit
+def grad_accumulate(acc, g):
+    """Fused acc' = acc + g over flat f32[P] vectors (ASGD-GA local merge)."""
+    (n,) = acc.shape
+    blk = min(VEC_BLOCK, _ceil_to(n, 8))
+    np_ = _ceil_to(n, blk)
+    a_p = jnp.pad(acc, (0, np_ - n))
+    g_p = jnp.pad(g, (0, np_ - n))
+    out = pl.pallas_call(
+        _acc_kernel,
+        grid=(np_ // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), acc.dtype),
+        interpret=True,
+    )(a_p, g_p)
+    return out[:n]

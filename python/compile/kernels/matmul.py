@@ -1,0 +1,158 @@
+"""L1 Pallas matmul kernel — the compute hot-spot of every model in this repo.
+
+Dense layers, the DeepFM deep tower, transformer attention/MLP projections and
+(via im2col) convolutions all funnel through this kernel, so it is the single
+hot-spot the paper's training plane spends its FLOPs in.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the kernel tiles C[M,N] into
+(bm, bn) output blocks resident in VMEM and marches over K in (bk,) slabs —
+the BlockSpec index maps express the HBM->VMEM schedule that a GPU kernel
+would express with threadblocks + shared memory. Block defaults are MXU-
+aligned (128x128) and sized so a double-buffered A/B/C working set fits
+comfortably in 16 MB VMEM. Accumulation is always f32 (MXU native), with the
+output cast back to the input dtype (bf16 supported).
+
+Lowered with interpret=True: CPU PJRT cannot execute Mosaic custom-calls, so
+interpret mode (which lowers to plain HLO) is the correctness + interchange
+path; real-TPU efficiency is estimated in DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget the auto-tiler targets: double-buffered A/B slabs + resident
+# f32 accumulator must fit a 16 MB VMEM with headroom.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def auto_blocks(m: int, k: int, n: int, budget: int = VMEM_BUDGET_BYTES):
+    """Pick (bm, bn, bk) so the per-step working set fits the VMEM budget.
+
+    Policy: prefer the whole problem as a single block (grid 1x1x1) when it
+    fits — on TPU that is the zero-revisit schedule, and under interpret
+    mode it also minimizes per-grid-step overhead (measured ~5 ms/step on
+    this CPU, see EXPERIMENTS.md §Perf). Otherwise clamp to MXU-aligned
+    1024/1024/512 tiles and shrink bm until the working set fits.
+    """
+    bm, bn, bk = _ceil_to(m, 8), _ceil_to(n, 8), _ceil_to(k, 8)
+    if vmem_bytes(bm, bn, bk) <= budget:
+        return bm, bn, bk
+    bm, bn, bk = min(bm, 1024), min(bn, 1024), min(bk, 512)
+    while vmem_bytes(bm, bn, bk) > budget and bm > 128:
+        bm //= 2
+    while vmem_bytes(bm, bn, bk) > budget and bn > 128:
+        bn //= 2
+    while vmem_bytes(bm, bn, bk) > budget and bk > 128:
+        bk //= 2
+    return bm, bn, bk
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] += a[i,k] @ b[k,j], f32 accumulate."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pallas_raw(a, b, *, bm=None, bn=None, bk=None):
+    """Tiled Pallas matmul without autodiff support. a: [M,K], b: [K,N].
+
+    Block sizes default to `auto_blocks` (VMEM-budgeted, grid-minimizing).
+    Pads every dimension up to a block multiple (zero padding is exact for
+    matmul) and slices the result back, so arbitrary shapes are supported.
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul_pallas expects rank-2 operands, got {a.shape} @ {b.shape}")
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+
+    abm, abn, abk = auto_blocks(m, k, n)
+    # Explicit overrides (block-shape sweep bench) still shrink to the
+    # padded problem so tiny layers don't blow up the padding.
+    bm = min(bm, _ceil_to(m, 8)) if bm else abm
+    bn = min(bn, _ceil_to(n, 8)) if bn else abn
+    bk = min(bk, _ceil_to(k, 8)) if bk else abk
+
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+
+    # f32 accumulator block; cast at the end for bf16 inputs.
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n].astype(a.dtype)
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Differentiable Pallas matmul: C = A @ B.
+
+    The VJP routes both cotangent contractions (dA = g·Bᵀ, dB = Aᵀ·g) back
+    through the same Pallas kernel, so fwd *and* bwd FLOPs run on the L1
+    hot path.
+    """
+    return matmul_pallas_raw(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_pallas_raw(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    g = g.astype(a.dtype)
+    da = matmul_pallas_raw(g, b.T)
+    db = matmul_pallas_raw(a.T, g)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set for one grid step, double-buffered inputs.
+
+    A block (bm x bk) + B block (bk x bn), x2 for double buffering, plus the
+    resident f32 accumulator block (bm x bn). Used by the §Perf analysis and
+    the block-shape sweep bench.
+    """
+    return 2 * (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU-issue slots doing useful work, from padding overhead.
+
+    The MXU is a 128x128 systolic array; blocks aligned to 128 waste no
+    lanes. Padding waste is (padded FLOPs - real FLOPs) / padded FLOPs.
+    """
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    real = 2.0 * m * n * k
+    padded = 2.0 * mp * np_ * kp
+    lane = min(bm, 128) * min(bn, 128) / (128.0 * 128.0)
+    return (real / padded) * min(1.0, lane)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness references the pytest suite asserts the kernels
+against (assert_allclose); they are also what hypothesis sweeps compare to
+across shapes and dtypes. Keep them boring: one obvious jnp expression each.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    "linear": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+    "sigmoid": jax.nn.sigmoid,
+}
+
+
+def matmul(a, b):
+    return jnp.matmul(a, b)
+
+
+def bias_act(x, b, act: str = "relu"):
+    return _ACTS[act](x + b)
+
+
+def sgd_apply(p, g, lr):
+    return p - lr * g
+
+
+def model_average(a, b, w=0.5):
+    return w * a + (1.0 - w) * b
+
+
+def grad_accumulate(acc, g):
+    return acc + g

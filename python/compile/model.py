@@ -1,0 +1,36 @@
+"""L2 model registry: name -> flat-parameter `Model` (see models/common.py).
+
+This is the single place `aot.py` and the tests look models up; the Rust
+coordinator identifies models by the same names (they appear in the
+artifact filenames and `{model}_meta.json`).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from compile.models import deepfm, lenet, resnet, transformer
+from compile.models.common import Model
+
+_BUILDERS: Dict[str, Callable[[], Model]] = {
+    "lenet": lenet.build,
+    "resnet": resnet.build,
+    "deepfm": deepfm.build,
+    "transformer": transformer.build,
+    "transformer100m": transformer.build_100m,
+}
+
+#: Models lowered by a bare `make artifacts` (transformer100m is opt-in:
+#: its init vector alone is ~400 MB on disk).
+DEFAULT_MODELS = ("lenet", "resnet", "deepfm", "transformer")
+
+
+def list_models():
+    return sorted(_BUILDERS)
+
+
+def get_model(name: str) -> Model:
+    try:
+        return _BUILDERS[name]()
+    except KeyError:
+        raise KeyError(f"unknown model {name!r}; known: {list_models()}") from None

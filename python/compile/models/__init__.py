@@ -1,0 +1,6 @@
+"""L2: JAX model zoo (LeNet / ResNet-lite / DeepFM / Transformer).
+
+Every model follows the flat-parameter convention of `common.Model`:
+the Rust coordinator only ever sees `f32[P]` parameter / gradient vectors,
+and the jitted graphs do all flatten/unflatten internally.
+"""

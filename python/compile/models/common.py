@@ -1,0 +1,246 @@
+"""Flat-parameter model convention shared by every L2 model.
+
+The Rust L3 coordinator treats model state as an opaque `f32[P]` vector:
+PS state, gradients, accumulated gradients and averaged models are all flat
+vectors, which makes the PS hot path (axpy-style ops) trivial and shape-
+agnostic. The jitted train/eval graphs do flatten/unflatten internally, so
+the boundary artifacts have signatures:
+
+    train_step(params f32[P], x, y) -> (grads f32[P], loss f32[])
+    eval_step (params f32[P], x, y) -> (loss_sum f32[], correct f32[])
+
+`ParamSpec` records the parameter tree layout; `Model` bundles the specs
+with the apply/loss functions and dataset geometry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One named parameter tensor: shape + initializer family."""
+
+    name: str
+    shape: Tuple[int, ...]
+    init: str = "he"  # he | glorot | zeros | normal(0.02) | embed
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """A flat-parameter model: specs + pure apply/loss + dataset geometry."""
+
+    name: str
+    specs: Tuple[ParamSpec, ...]
+    # loss_and_metrics(params_dict, x, y) -> (mean_loss, correct_count)
+    loss_and_metrics: Callable
+    batch_size: int
+    x_shape: Tuple[int, ...]  # per-example input shape
+    x_dtype: str  # "f32" | "i32"
+    y_dtype: str  # "i32" | "f32"
+    num_classes: int  # 0 for regression-style / LM targets
+    # Extra dataset geometry the Rust data generators need (vocab sizes...).
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def param_count(self) -> int:
+        return sum(s.size for s in self.specs)
+
+    # ---- flat <-> tree -------------------------------------------------
+    def unflatten(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        out, off = {}, 0
+        for s in self.specs:
+            out[s.name] = jax.lax.dynamic_slice_in_dim(flat, off, s.size).reshape(s.shape)
+            off += s.size
+        return out
+
+    @staticmethod
+    def flatten(tree: Dict[str, jnp.ndarray], specs: Sequence[ParamSpec]) -> jnp.ndarray:
+        return jnp.concatenate([tree[s.name].reshape(-1) for s in specs])
+
+    # ---- entry points (what aot.py lowers) -----------------------------
+    def loss_flat(self, flat, x, y):
+        loss, _ = self.loss_and_metrics(self.unflatten(flat), x, y)
+        return loss
+
+    def train_step(self, flat, x, y):
+        """(params, x, y) -> (grads f32[P], loss f32[])."""
+        loss, grads = jax.value_and_grad(self.loss_flat)(flat, x, y)
+        return grads, loss
+
+    def eval_step(self, flat, x, y):
+        """(params, x, y) -> (loss_sum f32[], correct f32[])."""
+        loss, correct = self.loss_and_metrics(self.unflatten(flat), x, y)
+        b = x.shape[0]
+        return loss * b, correct
+
+    # ---- init ----------------------------------------------------------
+    def init_flat(self, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        chunks = []
+        for s in self.specs:
+            chunks.append(_init_tensor(rng, s).reshape(-1))
+        return np.concatenate(chunks).astype(np.float32)
+
+    def example_batch(self, seed: int = 0):
+        """A deterministic example batch with the right shapes/dtypes
+        (used as lowering avals and in tests)."""
+        rng = np.random.default_rng(seed + 1)
+        b = self.batch_size
+        if self.x_dtype == "f32":
+            x = rng.standard_normal((b, *self.x_shape), dtype=np.float32)
+        else:
+            highs = self.meta.get("vocab_sizes")
+            if highs is None:
+                high = self.meta.get("vocab", 2)
+                x = rng.integers(0, high, size=(b, *self.x_shape)).astype(np.int32)
+            else:
+                cols = [rng.integers(0, h, size=(b, 1)) for h in highs]
+                x = np.concatenate(cols, axis=1).astype(np.int32)
+        if self.y_dtype == "i32":
+            if self.name == "transformer" or self.meta.get("lm", False):
+                y = rng.integers(0, self.meta["vocab"], size=(b, *self.x_shape)).astype(np.int32)
+            else:
+                y = rng.integers(0, max(self.num_classes, 2), size=(b,)).astype(np.int32)
+        else:
+            y = rng.integers(0, 2, size=(b,)).astype(np.float32)
+        return x, y
+
+
+def _init_tensor(rng: np.random.Generator, s: ParamSpec) -> np.ndarray:
+    shape = s.shape
+    if s.init == "zeros":
+        return np.zeros(shape, np.float32)
+    if s.init == "normal":
+        return (0.02 * rng.standard_normal(shape)).astype(np.float32)
+    if s.init == "embed":
+        return (0.05 * rng.standard_normal(shape)).astype(np.float32)
+    if s.init == "ones":
+        return np.ones(shape, np.float32)
+    # fan-based inits: he / glorot
+    if len(shape) == 4:  # HWIO conv
+        fan_in = shape[0] * shape[1] * shape[2]
+        fan_out = shape[0] * shape[1] * shape[3]
+    elif len(shape) == 2:
+        fan_in, fan_out = shape[0], shape[1]
+    else:
+        fan_in = fan_out = max(1, int(np.prod(shape)))
+    if s.init == "glorot":
+        std = math.sqrt(2.0 / (fan_in + fan_out))
+    else:  # he
+        std = math.sqrt(2.0 / fan_in)
+    return (std * rng.standard_normal(shape)).astype(np.float32)
+
+
+# ---- shared layers ------------------------------------------------------
+#
+# Compute-path dispatch: CLOUDLESS_COMPUTE=pallas routes every matmul/conv
+# FLOP through the L1 Pallas kernels (the TPU story and what the kernel
+# test-suite exercises); CLOUDLESS_COMPUTE=xla uses the equivalent native
+# XLA ops (numerically identical — asserted by tests/test_models.py).
+#
+# Why both exist: interpret=True Pallas (the only Pallas CPU PJRT can run)
+# costs a few ms of masking/slicing machinery per pallas_call; a conv-heavy
+# backward pass makes dozens of calls, which would put the reproduction's
+# ~10^5 Rust-side training iterations out of CPU budget. The experiment
+# artifacts therefore default to the XLA path for conv models and the
+# Pallas path stays the verified TPU lowering (see DESIGN.md §Perf).
+
+import os  # noqa: E402
+
+from compile.kernels import bias_act, matmul  # noqa: E402
+
+
+def compute_mode() -> str:
+    mode = os.environ.get("CLOUDLESS_COMPUTE", "pallas")
+    if mode not in ("pallas", "xla"):
+        raise ValueError(f"CLOUDLESS_COMPUTE must be pallas|xla, got {mode!r}")
+    return mode
+
+
+_ACTS_JNP = {
+    "linear": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+    "sigmoid": jax.nn.sigmoid,
+}
+
+
+def matmul2d(a, b):
+    """Rank-2 matmul on the active compute path."""
+    if compute_mode() == "pallas":
+        return matmul(a, b)
+    return jnp.matmul(a, b)
+
+
+def dense(x, w, b, act: str = "linear"):
+    """Dense layer: matmul + fused bias+activation on the active path."""
+    if compute_mode() == "pallas":
+        return bias_act(matmul(x, w), b, act=act)
+    return _ACTS_JNP[act](jnp.matmul(x, w) + b)
+
+
+def conv2d_im2col(x, w, b, stride: int = 1, padding: str = "SAME", act: str = "linear"):
+    """2-D convolution. x: [B,H,W,Cin], w: [kh,kw,Cin,Cout] (HWIO).
+
+    Pallas path: im2col (conv_general_dilated_patches is data movement;
+    feature dim ordered (cin, kh, kw)) so all FLOPs land in the L1 matmul.
+    XLA path: native lax.conv_general_dilated.
+    """
+    if compute_mode() == "xla":
+        y = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        return _ACTS_JNP[act](y + b)
+
+    kh, kw, cin, cout = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [B, Ho, Wo, cin*kh*kw]
+    bsz, ho, wo, feat = patches.shape
+    # Match the (cin, kh, kw) feature ordering: w -> [cin, kh, kw, cout].
+    w_mat = jnp.transpose(w, (2, 0, 1, 3)).reshape(feat, cout)
+    y = matmul(patches.reshape(bsz * ho * wo, feat), w_mat)
+    y = bias_act(y, b, act=act)
+    return y.reshape(bsz, ho, wo, cout)
+
+
+def avg_pool(x, window: int = 2, stride: int = 2):
+    """Average pooling (data movement; no FLOPs to speak of)."""
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, window, window, 1), (1, stride, stride, 1), "VALID"
+    ) / float(window * window)
+
+
+def softmax_xent(logits, labels, num_classes: int):
+    """Mean cross-entropy + correct-prediction count."""
+    logp = jax.nn.log_softmax(logits)
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    loss = -jnp.mean(ll)
+    correct = jnp.sum((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+    return loss, correct
+
+
+def sigmoid_xent(logits, labels):
+    """Binary cross-entropy on logits + accuracy count (labels f32 in {0,1})."""
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    pred = (logits > 0).astype(jnp.float32)
+    correct = jnp.sum((pred == labels).astype(jnp.float32))
+    return loss, correct

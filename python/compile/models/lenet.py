@@ -1,0 +1,63 @@
+"""LeNet-5 (28x28x1 -> 10 classes), the paper's smallest workload (~61k params,
+~0.24 MB of gradients vs the paper's reported 0.4 MB TF graph).
+
+Layout: conv5x5(1->6, SAME) -> avgpool2 -> conv5x5(6->16, VALID) -> avgpool2
+-> fc 400->120 -> fc 120->84 -> fc 84->10. All conv/fc FLOPs route through
+the L1 Pallas matmul kernel (conv via im2col).
+"""
+
+from __future__ import annotations
+
+from compile.models.common import (
+    Model,
+    ParamSpec,
+    avg_pool,
+    conv2d_im2col,
+    dense,
+    softmax_xent,
+)
+
+NUM_CLASSES = 10
+X_SHAPE = (28, 28, 1)
+
+SPECS = (
+    ParamSpec("conv1_w", (5, 5, 1, 6)),
+    ParamSpec("conv1_b", (6,), "zeros"),
+    ParamSpec("conv2_w", (5, 5, 6, 16)),
+    ParamSpec("conv2_b", (16,), "zeros"),
+    ParamSpec("fc1_w", (400, 120)),
+    ParamSpec("fc1_b", (120,), "zeros"),
+    ParamSpec("fc2_w", (120, 84)),
+    ParamSpec("fc2_b", (84,), "zeros"),
+    ParamSpec("fc3_w", (84, NUM_CLASSES), "glorot"),
+    ParamSpec("fc3_b", (NUM_CLASSES,), "zeros"),
+)
+
+
+def apply(p, x):
+    """x: [B, 28, 28, 1] -> logits [B, 10]."""
+    h = conv2d_im2col(x, p["conv1_w"], p["conv1_b"], padding="SAME", act="relu")
+    h = avg_pool(h)  # 14x14x6
+    h = conv2d_im2col(h, p["conv2_w"], p["conv2_b"], padding="VALID", act="relu")
+    h = avg_pool(h)  # 5x5x16
+    h = h.reshape(h.shape[0], -1)  # 400
+    h = dense(h, p["fc1_w"], p["fc1_b"], act="relu")
+    h = dense(h, p["fc2_w"], p["fc2_b"], act="relu")
+    return dense(h, p["fc3_w"], p["fc3_b"], act="linear")
+
+
+def loss_and_metrics(p, x, y):
+    return softmax_xent(apply(p, x), y, NUM_CLASSES)
+
+
+def build(batch_size: int = 64) -> Model:
+    return Model(
+        name="lenet",
+        specs=SPECS,
+        loss_and_metrics=loss_and_metrics,
+        batch_size=batch_size,
+        x_shape=X_SHAPE,
+        x_dtype="f32",
+        y_dtype="i32",
+        num_classes=NUM_CLASSES,
+    )

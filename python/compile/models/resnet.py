@@ -1,0 +1,100 @@
+"""ResNet-lite (32x32x3 -> 10 classes) — the paper's cost-reduced ResNet18
+variant ("filters are cut down by a factor of 4"); we size the width so the
+gradient payload lands at the paper's reported ~0.6 MB (~150k f32 params).
+
+Structure: conv3x3 stem -> 3 stages x 1 basic residual block (widths w, 2w,
+4w; stride-2 downsample entering stages 2/3) -> global average pool -> fc.
+Norm-free (bias + relu, identity/projection skips): BatchNorm is stateful
+and would leak state through the flat-parameter PS boundary; at this scale
+He-init residual nets train fine without it. Convs run through the L1
+Pallas matmul via im2col.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+
+from compile.models.common import (
+    Model,
+    ParamSpec,
+    conv2d_im2col,
+    dense,
+    softmax_xent,
+)
+
+NUM_CLASSES = 10
+X_SHAPE = (32, 32, 3)
+WIDTH = 24  # ~157k params -> ~0.6 MB of f32 gradients, matching the paper
+
+
+def _specs(w: int) -> List[ParamSpec]:
+    specs = [
+        ParamSpec("stem_w", (3, 3, 3, w)),
+        ParamSpec("stem_b", (w,), "zeros"),
+    ]
+    cin = w
+    for stage, mult in enumerate((1, 2, 4)):
+        cout = w * mult
+        pre = f"s{stage}"
+        specs += [
+            ParamSpec(f"{pre}_c1_w", (3, 3, cin, cout)),
+            ParamSpec(f"{pre}_c1_b", (cout,), "zeros"),
+            # Fixup-style small init on the residual branch's second conv:
+            # without BatchNorm, He-init both convs makes the residual
+            # stream (and the gradients) blow up at depth.
+            ParamSpec(f"{pre}_c2_w", (3, 3, cout, cout), "normal"),
+            ParamSpec(f"{pre}_c2_b", (cout,), "zeros"),
+        ]
+        if cin != cout:
+            specs += [
+                ParamSpec(f"{pre}_proj_w", (1, 1, cin, cout)),
+                ParamSpec(f"{pre}_proj_b", (cout,), "zeros"),
+            ]
+        cin = cout
+    specs += [
+        # Zero-init classifier: logits start at 0, keeping the first
+        # (stale, asynchronous) updates small — with He-init here the
+        # async replicas drive each other's ReLUs dead at any usable lr.
+        ParamSpec("fc_w", (4 * w, NUM_CLASSES), "zeros"),
+        ParamSpec("fc_b", (NUM_CLASSES,), "zeros"),
+    ]
+    return specs
+
+
+SPECS = tuple(_specs(WIDTH))
+
+
+def apply(p, x):
+    """x: [B, 32, 32, 3] -> logits [B, 10]."""
+    h = conv2d_im2col(x, p["stem_w"], p["stem_b"], padding="SAME", act="relu")
+    for stage in range(3):
+        pre = f"s{stage}"
+        stride = 1 if stage == 0 else 2
+        y = conv2d_im2col(h, p[f"{pre}_c1_w"], p[f"{pre}_c1_b"], stride=stride,
+                          padding="SAME", act="relu")
+        y = conv2d_im2col(y, p[f"{pre}_c2_w"], p[f"{pre}_c2_b"], padding="SAME")
+        if f"{pre}_proj_w" in p:
+            h = conv2d_im2col(h, p[f"{pre}_proj_w"], p[f"{pre}_proj_b"], stride=stride,
+                              padding="SAME")
+        h = jnp.maximum(h + y, 0.0)
+    h = jnp.mean(h, axis=(1, 2))  # global average pool -> [B, 4w]
+    return dense(h, p["fc_w"], p["fc_b"])
+
+
+def loss_and_metrics(p, x, y):
+    return softmax_xent(apply(p, x), y, NUM_CLASSES)
+
+
+def build(batch_size: int = 32) -> Model:
+    return Model(
+        name="resnet",
+        specs=SPECS,
+        loss_and_metrics=loss_and_metrics,
+        batch_size=batch_size,
+        x_shape=X_SHAPE,
+        x_dtype="f32",
+        y_dtype="i32",
+        num_classes=NUM_CLASSES,
+    )

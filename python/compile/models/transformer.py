@@ -1,0 +1,143 @@
+"""Decoder-only transformer LM — the end-to-end validation workload
+(system-prompt requirement: train a ~100M-param transformer on a tiny
+corpus through the full stack and log the loss curve).
+
+Pre-LN GPT-style blocks; attention and MLP projections all route through
+the L1 Pallas matmul kernel. Weight-tied output head. Configurable size:
+`build()` gives the ~8M default, `build_100m()` the ~100M config
+(d=768, L=14, h=12).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from compile.models.common import Model, ParamSpec, matmul2d
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 512
+    seq: int = 128
+    d_model: int = 256
+    n_layer: int = 8
+    n_head: int = 8
+    batch_size: int = 8
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_head
+
+
+def _specs(c: TransformerConfig) -> List[ParamSpec]:
+    d = c.d_model
+    specs = [
+        ParamSpec("tok_emb", (c.vocab, d), "normal"),
+        ParamSpec("pos_emb", (c.seq, d), "normal"),
+    ]
+    for i in range(c.n_layer):
+        pre = f"l{i}"
+        specs += [
+            ParamSpec(f"{pre}_ln1_g", (d,), "ones"),
+            ParamSpec(f"{pre}_ln1_b", (d,), "zeros"),
+            ParamSpec(f"{pre}_qkv_w", (d, 3 * d), "glorot"),
+            ParamSpec(f"{pre}_qkv_b", (3 * d,), "zeros"),
+            ParamSpec(f"{pre}_proj_w", (d, d), "glorot"),
+            ParamSpec(f"{pre}_proj_b", (d,), "zeros"),
+            ParamSpec(f"{pre}_ln2_g", (d,), "ones"),
+            ParamSpec(f"{pre}_ln2_b", (d,), "zeros"),
+            ParamSpec(f"{pre}_fc1_w", (d, 4 * d), "glorot"),
+            ParamSpec(f"{pre}_fc1_b", (4 * d,), "zeros"),
+            ParamSpec(f"{pre}_fc2_w", (4 * d, d), "glorot"),
+            ParamSpec(f"{pre}_fc2_b", (d,), "zeros"),
+        ]
+    specs += [ParamSpec("lnf_g", (d,), "ones"), ParamSpec("lnf_b", (d,), "zeros")]
+    return specs
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _mm(x, w):
+    """[.., d_in] @ [d_in, d_out] on the active compute path (rank-2 collapse)."""
+    lead = x.shape[:-1]
+    y = matmul2d(x.reshape(-1, x.shape[-1]), w)
+    return y.reshape(*lead, w.shape[-1])
+
+
+def _block(c: TransformerConfig, p, pre: str, h, mask):
+    x = _layer_norm(h, p[f"{pre}_ln1_g"], p[f"{pre}_ln1_b"])
+    qkv = _mm(x, p[f"{pre}_qkv_w"]) + p[f"{pre}_qkv_b"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    b, s, d = q.shape
+    def heads(t):
+        return t.reshape(b, s, c.n_head, c.d_head).transpose(0, 2, 1, 3)
+    q, k, v = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(c.d_head))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d)
+    h = h + _mm(y, p[f"{pre}_proj_w"]) + p[f"{pre}_proj_b"]
+    x = _layer_norm(h, p[f"{pre}_ln2_g"], p[f"{pre}_ln2_b"])
+    x = jax.nn.gelu(_mm(x, p[f"{pre}_fc1_w"]) + p[f"{pre}_fc1_b"])
+    return h + _mm(x, p[f"{pre}_fc2_w"]) + p[f"{pre}_fc2_b"]
+
+
+def make_apply(c: TransformerConfig):
+    def apply(p, x):
+        """x: [B, S] int32 tokens -> logits [B, S, vocab]."""
+        h = jnp.take(p["tok_emb"], x, axis=0) + p["pos_emb"][None, : x.shape[1]]
+        mask = jnp.tril(jnp.ones((x.shape[1], x.shape[1]), bool))[None, None]
+        for i in range(c.n_layer):
+            h = _block(c, p, f"l{i}", h, mask)
+        h = _layer_norm(h, p["lnf_g"], p["lnf_b"])
+        return _mm(h, p["tok_emb"].T)  # weight-tied head
+
+    return apply
+
+
+def make_loss(c: TransformerConfig):
+    apply = make_apply(c)
+
+    def loss_and_metrics(p, x, y):
+        logits = apply(p, x)
+        logp = jax.nn.log_softmax(logits)
+        ll = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        loss = -jnp.mean(ll)
+        correct = jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.float32)) / y.shape[1]
+        return loss, correct
+
+    return loss_and_metrics
+
+
+def build_config(c: TransformerConfig, name: str = "transformer") -> Model:
+    return Model(
+        name=name,
+        specs=tuple(_specs(c)),
+        loss_and_metrics=make_loss(c),
+        batch_size=c.batch_size,
+        x_shape=(c.seq,),
+        x_dtype="i32",
+        y_dtype="i32",
+        num_classes=0,
+        meta={"vocab": c.vocab, "seq": c.seq, "lm": True,
+              "d_model": c.d_model, "n_layer": c.n_layer, "n_head": c.n_head},
+    )
+
+
+def build(batch_size: int = 8) -> Model:
+    return build_config(TransformerConfig(batch_size=batch_size))
+
+
+def build_100m(batch_size: int = 4) -> Model:
+    c = TransformerConfig(vocab=2048, seq=256, d_model=768, n_layer=14,
+                          n_head=12, batch_size=batch_size)
+    return build_config(c, name="transformer100m")

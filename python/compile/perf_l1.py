@@ -1,0 +1,93 @@
+"""L1 perf analysis: Pallas matmul block-shape sweep (EXPERIMENTS.md §Perf).
+
+interpret=True gives CPU-numpy timings, which are NOT a TPU proxy — so the
+primary outputs are *structural*: VMEM working-set bytes and MXU-lane
+utilization estimates per block configuration, for the matmul shapes the
+models actually run. Optional `--time` also measures interpret-mode
+wallclock (useful only to confirm grid-minimization on this host).
+
+Usage: python -m compile.perf_l1 [--time]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.matmul import (
+    auto_blocks,
+    matmul_pallas_raw,
+    mxu_utilization_estimate,
+    vmem_bytes,
+    VMEM_BUDGET_BYTES,
+)
+
+# The matmul shapes on the models' hot paths (M, K, N).
+SHAPES = [
+    ("lenet fc1 (B=64)", 64, 400, 120),
+    ("lenet conv2 im2col", 6400, 150, 16),
+    ("resnet stage3 im2col", 2048, 864, 96),
+    ("deepfm mlp1 (B=256)", 256, 320, 768),
+    ("deepfm mlp2", 256, 768, 384),
+    ("transformer qkv (B*S=1024)", 1024, 256, 768),
+    ("transformer mlp1", 1024, 256, 1024),
+    ("transformer head", 1024, 256, 512),
+    ("square 1024", 1024, 1024, 1024),
+]
+
+CANDIDATE_BLOCKS = [(128, 128, 128), (256, 256, 256), (512, 512, 512), (1024, 1024, 512)]
+
+
+def grid_steps(m, k, n, bm, bn, bk):
+    ceil = lambda a, b: -(-a // b)
+    return ceil(m, bm) * ceil(n, bn) * ceil(k, bk)
+
+
+def main() -> None:
+    do_time = "--time" in sys.argv[1:]
+    print(f"VMEM budget: {VMEM_BUDGET_BYTES/1e6:.1f} MB (double-buffered A/B + f32 acc)")
+    header = f"{'shape':<28} {'blocks (auto)':<18} {'grid':>5} {'VMEM':>9} {'MXU est':>8}"
+    if do_time:
+        header += f" {'t(auto)':>9} {'t(128^3)':>9}"
+    print(header)
+    for label, m, k, n in SHAPES:
+        bm, bn, bk = auto_blocks(m, k, n)
+        gs = grid_steps(m, k, n, bm, bn, bk)
+        vb = vmem_bytes(bm, bn, bk)
+        mxu = mxu_utilization_estimate(m, n, k, bm, bn, bk)
+        row = (f"{label:<28} {f'{bm}x{bn}x{bk}':<18} {gs:>5} "
+               f"{vb/1e6:>7.2f}MB {mxu:>7.1%}")
+        if do_time:
+            rng = np.random.default_rng(0)
+            a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+            b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+            def bench(fn):
+                fn(a, b).block_until_ready()
+                t0 = time.time()
+                for _ in range(3):
+                    out = fn(a, b)
+                out.block_until_ready()
+                return (time.time() - t0) / 3
+
+            t_auto = bench(jax.jit(lambda a, b: matmul_pallas_raw(a, b)))
+            t_128 = bench(jax.jit(lambda a, b: matmul_pallas_raw(a, b, bm=128, bn=128, bk=128)))
+            row += f" {t_auto*1e3:>7.1f}ms {t_128*1e3:>7.1f}ms"
+        print(row)
+
+    print("\nfixed-block comparison on square 1024 (structural):")
+    m = k = n = 1024
+    for bm, bn, bk in CANDIDATE_BLOCKS:
+        gs = grid_steps(m, k, n, bm, bn, bk)
+        vb = vmem_bytes(bm, bn, bk)
+        fits = "fits" if vb <= VMEM_BUDGET_BYTES else "OVER"
+        print(f"  {bm:>4}x{bn:<4}x{bk:<4} grid={gs:>4} vmem={vb/1e6:>6.2f}MB ({fits}) "
+              f"mxu={mxu_utilization_estimate(m, n, k, bm, bn, bk):.1%}")
+
+
+if __name__ == "__main__":
+    main()

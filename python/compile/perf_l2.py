@@ -1,0 +1,72 @@
+"""L2 perf analysis: HLO inspection of the lowered artifacts
+(EXPERIMENTS.md §Perf).
+
+Parses the HLO text under artifacts/ and reports, per entry point:
+op-category counts (dot/conv/fusion/elementwise/data-movement), parameter
+traffic, and flags possible redundant recomputation (duplicate expensive
+ops with identical shapes is a heuristic smell, not proof).
+
+Usage: python -m compile.perf_l2 [--artifacts ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+from collections import Counter
+
+EXPENSIVE = ("dot(", "dot-general(", "convolution(", "fusion(")
+
+
+def analyze(path: str) -> dict:
+    text = open(path).read()
+    ops = Counter()
+    expensive_sigs = Counter()
+    for line in text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (\S+?)\[", line)
+        if not m:
+            continue
+        # op name appears after '=' as e.g. f32[64,10]{1,0} dot(...)
+        m2 = re.search(r"\]\S*\s+([a-z\-]+)\(", line)
+        if not m2:
+            continue
+        op = m2.group(1)
+        ops[op] += 1
+        if op in ("dot", "convolution", "fusion"):
+            shape = re.match(r"(?:ROOT )?%?[\w.\-]+ = (\S+)\s", line)
+            expensive_sigs[(op, shape.group(1) if shape else "?")] += 1
+    dupes = {sig: c for sig, c in expensive_sigs.items() if c > 1}
+    return {
+        "ops": ops,
+        "total": sum(ops.values()),
+        "dupes": dupes,
+        "bytes": len(text),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+    for path in sorted(glob.glob(os.path.join(args.artifacts, "*_train_step.hlo.txt"))):
+        name = os.path.basename(path)
+        info = analyze(path)
+        ops = info["ops"]
+        interesting = {
+            k: ops[k]
+            for k in ("dot", "convolution", "fusion", "while", "add", "multiply",
+                      "transpose", "reshape", "slice", "dynamic-slice", "pad")
+            if ops.get(k)
+        }
+        print(f"{name}: {info['total']} ops, {info['bytes']/1e3:.0f} kB text")
+        print(f"  {interesting}")
+        if info["dupes"]:
+            worst = sorted(info["dupes"].items(), key=lambda kv: -kv[1])[:4]
+            print(f"  repeated expensive ops (recompute smell): {worst}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""L1 kernel correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Deterministic cases assert tight tolerances; hypothesis sweeps shapes and
+dtypes (the CORE correctness signal for the kernels that end up in the
+shipped HLO artifacts).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    bias_act,
+    grad_accumulate,
+    matmul,
+    matmul_pallas_raw,
+    model_average,
+    ref,
+    sgd_apply,
+)
+from compile.kernels.matmul import auto_blocks, mxu_utilization_estimate, vmem_bytes
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+# ---------------------------------------------------------------- matmul
+
+
+class TestMatmul:
+    def test_square(self):
+        rng = np.random.default_rng(0)
+        a, b = _rand(rng, 64, 64), _rand(rng, 64, 64)
+        np.testing.assert_allclose(matmul(a, b), ref.matmul(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_ragged_shapes(self):
+        rng = np.random.default_rng(1)
+        for m, k, n in [(1, 1, 1), (3, 5, 7), (130, 70, 10), (257, 129, 33)]:
+            a, b = _rand(rng, m, k), _rand(rng, k, n)
+            np.testing.assert_allclose(
+                matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-4,
+                err_msg=f"shape ({m},{k},{n})")
+
+    def test_explicit_blocks(self):
+        rng = np.random.default_rng(2)
+        a, b = _rand(rng, 100, 60), _rand(rng, 60, 40)
+        for blk in (16, 32, 128):
+            got = matmul_pallas_raw(a, b, bm=blk, bn=blk, bk=blk)
+            np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_grad_matches_ref(self):
+        rng = np.random.default_rng(3)
+        a, b = _rand(rng, 17, 23), _rand(rng, 23, 11)
+
+        def f_pl(a, b):
+            return jnp.sum(jnp.sin(matmul(a, b)))
+
+        def f_ref(a, b):
+            return jnp.sum(jnp.sin(ref.matmul(a, b)))
+
+        ga = jax.grad(f_pl, (0, 1))(a, b)
+        gr = jax.grad(f_ref, (0, 1))(a, b)
+        np.testing.assert_allclose(ga[0], gr[0], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(ga[1], gr[1], rtol=1e-4, atol=1e-4)
+
+    def test_bf16(self):
+        rng = np.random.default_rng(4)
+        a = _rand(rng, 32, 48).astype(jnp.bfloat16)
+        b = _rand(rng, 48, 16).astype(jnp.bfloat16)
+        got = matmul(a, b).astype(np.float32)
+        want = ref.matmul(a, b).astype(np.float32)
+        np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+    def test_rank_check(self):
+        with pytest.raises(ValueError):
+            matmul_pallas_raw(jnp.zeros((2, 2, 2)), jnp.zeros((2, 2)))
+
+    def test_contraction_check(self):
+        with pytest.raises(ValueError):
+            matmul_pallas_raw(jnp.zeros((2, 3)), jnp.zeros((4, 2)))
+
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 150),
+        k=st.integers(1, 150),
+        n=st.integers(1, 150),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes_f32(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a, b = _rand(rng, m, k), _rand(rng, k, n)
+        np.testing.assert_allclose(matmul(a, b), ref.matmul(a, b), rtol=2e-4, atol=2e-4)
+
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 64),
+        k=st.integers(1, 64),
+        n=st.integers(1, 64),
+        dtype=st.sampled_from(["float32", "bfloat16"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_dtypes(self, m, k, n, dtype, seed):
+        rng = np.random.default_rng(seed)
+        a = _rand(rng, m, k).astype(dtype)
+        b = _rand(rng, k, n).astype(dtype)
+        tol = 1e-4 if dtype == "float32" else 6e-2
+        got = matmul(a, b).astype(np.float32)
+        want = ref.matmul(a, b).astype(np.float32)
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+class TestAutoBlocks:
+    def test_small_is_single_block(self):
+        bm, bn, bk = auto_blocks(64, 64, 64)
+        assert (bm, bn, bk) == (64, 64, 64)
+
+    def test_budget_respected(self):
+        for m, k, n in [(4096, 4096, 4096), (100_000, 216, 24), (8, 10_000_000, 8)]:
+            bm, bn, bk = auto_blocks(m, k, n)
+            assert vmem_bytes(bm, bn, bk) <= 12 * 1024 * 1024, (m, k, n)
+
+    def test_blocks_are_8_aligned(self):
+        for m, k, n in [(3, 5, 7), (1000, 300, 77), (129, 257, 513)]:
+            bm, bn, bk = auto_blocks(m, k, n)
+            assert bm % 8 == 0 and bn % 8 == 0 and bk % 8 == 0
+
+    def test_mxu_estimate_bounds(self):
+        u = mxu_utilization_estimate(128, 128, 128, 128, 128, 128)
+        assert u == pytest.approx(1.0)
+        u2 = mxu_utilization_estimate(100, 100, 100, 128, 128, 128)
+        assert 0.0 < u2 < 1.0
+
+
+# ----------------------------------------------------------- elementwise
+
+
+class TestBiasAct:
+    @pytest.mark.parametrize("act", ["linear", "relu", "tanh", "gelu", "sigmoid"])
+    def test_forward(self, act):
+        rng = np.random.default_rng(5)
+        x, b = _rand(rng, 33, 17), _rand(rng, 17)
+        np.testing.assert_allclose(
+            bias_act(x, b, act), ref.bias_act(x, b, act), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("act", ["relu", "tanh", "gelu", "sigmoid"])
+    def test_grad(self, act):
+        rng = np.random.default_rng(6)
+        x, b = _rand(rng, 9, 13), _rand(rng, 13)
+        g = jax.grad(lambda x, b: jnp.sum(bias_act(x, b, act) ** 2), (0, 1))(x, b)
+        gr = jax.grad(lambda x, b: jnp.sum(ref.bias_act(x, b, act) ** 2), (0, 1))(x, b)
+        np.testing.assert_allclose(g[0], gr[0], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(g[1], gr[1], rtol=1e-4, atol=1e-4)
+
+    def test_unknown_act_raises(self):
+        with pytest.raises(ValueError):
+            bias_act(jnp.zeros((2, 2)), jnp.zeros((2,)), "swish")
+
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 300),
+        n=st.integers(1, 80),
+        act=st.sampled_from(["linear", "relu", "tanh", "gelu", "sigmoid"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, m, n, act, seed):
+        rng = np.random.default_rng(seed)
+        x, b = _rand(rng, m, n), _rand(rng, n)
+        np.testing.assert_allclose(
+            bias_act(x, b, act), ref.bias_act(x, b, act), rtol=1e-4, atol=1e-4)
+
+
+class TestVecOps:
+    def test_sgd_apply(self):
+        rng = np.random.default_rng(7)
+        p, g = _rand(rng, 10_001), _rand(rng, 10_001)
+        np.testing.assert_allclose(
+            sgd_apply(p, g, 0.05), ref.sgd_apply(p, g, 0.05), rtol=1e-6, atol=1e-6)
+
+    def test_model_average(self):
+        rng = np.random.default_rng(8)
+        a, b = _rand(rng, 4097), _rand(rng, 4097)
+        np.testing.assert_allclose(
+            model_average(a, b, 0.25), ref.model_average(a, b, 0.25), rtol=1e-6, atol=1e-6)
+
+    def test_model_average_default_half(self):
+        rng = np.random.default_rng(9)
+        a, b = _rand(rng, 100), _rand(rng, 100)
+        np.testing.assert_allclose(model_average(a, b), (a + b) / 2, rtol=1e-6, atol=1e-6)
+
+    def test_grad_accumulate(self):
+        rng = np.random.default_rng(10)
+        acc, g = _rand(rng, 777), _rand(rng, 777)
+        np.testing.assert_allclose(
+            grad_accumulate(acc, g), ref.grad_accumulate(acc, g), rtol=1e-6, atol=1e-6)
+
+    def test_accumulate_chain_equals_sum(self):
+        """ASGD-GA invariant: accumulating k gradients == their sum."""
+        rng = np.random.default_rng(11)
+        gs = [_rand(rng, 501) for _ in range(5)]
+        acc = jnp.zeros(501)
+        for g in gs:
+            acc = grad_accumulate(acc, g)
+        np.testing.assert_allclose(acc, sum(gs), rtol=1e-5, atol=1e-5)
+
+    @settings(**SETTINGS)
+    @given(n=st.integers(1, 100_000), lr=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sgd(self, n, lr, seed):
+        rng = np.random.default_rng(seed)
+        p, g = _rand(rng, n), _rand(rng, n)
+        np.testing.assert_allclose(
+            sgd_apply(p, g, lr), ref.sgd_apply(p, g, lr), rtol=1e-5, atol=1e-5)
+
+    @settings(**SETTINGS)
+    @given(n=st.integers(1, 50_000), w=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_average(self, n, w, seed):
+        rng = np.random.default_rng(seed)
+        a, b = _rand(rng, n), _rand(rng, n)
+        np.testing.assert_allclose(
+            model_average(a, b, w), ref.model_average(a, b, w), rtol=1e-5, atol=1e-5)

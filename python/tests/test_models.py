@@ -1,0 +1,130 @@
+"""L2 model checks: shapes, gradient correctness, path equivalence, learning.
+
+- every model produces finite loss + a full-length gradient vector;
+- the pallas and xla compute paths agree numerically (the property that
+  lets the artifacts ship either path, see models/common.py);
+- finite-difference gradient check on a downsized model;
+- a few SGD steps on a fixed batch reduce the loss (learnability smoke).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import DEFAULT_MODELS, get_model, list_models
+
+ALL = list(DEFAULT_MODELS)
+
+
+@pytest.fixture(autouse=True)
+def _pallas_mode():
+    """Tests default to the pallas path unless they set it themselves."""
+    old = os.environ.get("CLOUDLESS_COMPUTE")
+    os.environ["CLOUDLESS_COMPUTE"] = "pallas"
+    yield
+    if old is None:
+        os.environ.pop("CLOUDLESS_COMPUTE", None)
+    else:
+        os.environ["CLOUDLESS_COMPUTE"] = old
+
+
+def test_registry():
+    assert set(ALL) <= set(list_models())
+    with pytest.raises(KeyError):
+        get_model("nope")
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_shapes_and_finite(name):
+    m = get_model(name)
+    flat = jnp.asarray(m.init_flat(0))
+    assert flat.shape == (m.param_count,)
+    x, y = m.example_batch()
+    g, loss = jax.jit(m.train_step)(flat, x, y)
+    assert g.shape == (m.param_count,)
+    assert np.isfinite(float(loss))
+    assert np.all(np.isfinite(np.asarray(g)))
+    loss_sum, correct = jax.jit(m.eval_step)(flat, x, y)
+    assert np.isfinite(float(loss_sum))
+    assert 0.0 <= float(correct) <= m.batch_size + 1e-6
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_compute_paths_agree(name):
+    m = get_model(name)
+    flat = jnp.asarray(m.init_flat(0))
+    x, y = m.example_batch()
+    outs = {}
+    for mode in ("pallas", "xla"):
+        os.environ["CLOUDLESS_COMPUTE"] = mode
+        outs[mode] = jax.jit(m.train_step)(flat, x, y)
+    np.testing.assert_allclose(
+        outs["pallas"][1], outs["xla"][1], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        outs["pallas"][0], outs["xla"][0], rtol=5e-3, atol=1e-4)
+
+
+def test_finite_difference_grad_lenet():
+    """Spot-check d(loss)/d(param) against central differences."""
+    m = get_model("lenet")
+    flat = jnp.asarray(m.init_flat(3))
+    x, y = m.example_batch(3)
+    g, _ = jax.jit(m.train_step)(flat, x, y)
+    loss = jax.jit(m.loss_flat)
+    rng = np.random.default_rng(0)
+    idxs = rng.integers(0, m.param_count, size=6)
+    eps = 1e-3
+    for i in idxs:
+        e = jnp.zeros_like(flat).at[i].set(eps)
+        fd = (float(loss(flat + e, x, y)) - float(loss(flat - e, x, y))) / (2 * eps)
+        assert abs(fd - float(g[i])) < 5e-3, f"param {i}: fd={fd} ad={float(g[i])}"
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_sgd_reduces_loss(name):
+    """A few full-batch SGD steps on one batch must reduce the loss."""
+    os.environ["CLOUDLESS_COMPUTE"] = "xla"  # speed; equivalence tested above
+    m = get_model(name)
+    flat = jnp.asarray(m.init_flat(1))
+    x, y = m.example_batch(1)
+    step = jax.jit(m.train_step)
+    lr = {"lenet": 0.05, "resnet": 0.01, "deepfm": 0.05, "transformer": 0.05}[name]
+    g, loss0 = step(flat, x, y)
+    for _ in range(8):
+        g, loss = step(flat, x, y)
+        flat = flat - lr * g
+    _, loss1 = step(flat, x, y)
+    assert float(loss1) < float(loss0), f"{name}: {float(loss0)} -> {float(loss1)}"
+
+
+def test_param_count_matches_paper_scale():
+    """Gradient payloads should land near the paper's reported sizes."""
+    sizes = {n: get_model(n).param_count * 4 / 1e6 for n in ("lenet", "resnet", "deepfm")}
+    assert 0.1 < sizes["lenet"] < 0.5       # paper: 0.4 MB
+    assert 0.4 < sizes["resnet"] < 1.0      # paper: 0.6 MB
+    assert 1.5 < sizes["deepfm"] < 3.5      # paper: 2.4 MB
+
+
+def test_example_batch_deterministic():
+    m = get_model("lenet")
+    x1, y1 = m.example_batch(7)
+    x2, y2 = m.example_batch(7)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_unflatten_roundtrip():
+    m = get_model("lenet")
+    flat = jnp.asarray(m.init_flat(0))
+    tree = m.unflatten(flat)
+    assert set(tree) == {s.name for s in m.specs}
+    re_flat = m.flatten(tree, m.specs)
+    np.testing.assert_allclose(re_flat, flat)
+
+
+def test_transformer_100m_config_size():
+    m = get_model("transformer100m")
+    assert 80e6 < m.param_count < 130e6, m.param_count

@@ -1,0 +1,10 @@
+//! Bench: design-choice ablations beyond the paper (DESIGN.md §4):
+//! sync-frequency sweep, WAN fluctuation severity, 3-region ring,
+//! worker granularity, drop-probability failure injection.
+mod common;
+
+fn main() {
+    common::banner("ablations");
+    let coord = common::coordinator();
+    cloudless::exp::ablations::all(&coord, common::scale_from_args());
+}

@@ -1,0 +1,40 @@
+//! Shared bench plumbing (no criterion offline): each bench target is a
+//! `harness = false` binary that regenerates one paper table/figure via
+//! the `exp` drivers, plus `time_median` for the micro benches.
+
+use cloudless::coordinator::Coordinator;
+use cloudless::exp::Scale;
+
+pub fn coordinator() -> Coordinator {
+    let dir = std::env::var("CLOUDLESS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    Coordinator::new(dir).expect("PJRT runtime (run `make artifacts` first)")
+}
+
+#[allow(dead_code)]
+pub fn scale_from_args() -> Scale {
+    let full = std::env::args().any(|a| a == "--full");
+    Scale::from_flag(full)
+}
+
+/// Median wall seconds of `f` over `reps` runs (after one warmup).
+#[allow(dead_code)]
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    f();
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Pretty banner for bench output.
+#[allow(dead_code)]
+pub fn banner(name: &str) {
+    println!("\n==== bench: {name} ====");
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 10 (ASGD vs ASGD-GA vs AMA at freq {1,4,8}).
+mod common;
+
+fn main() {
+    common::banner("fig10_sync");
+    let coord = common::coordinator();
+    cloudless::exp::sync_exp::fig10(&coord, common::scale_from_args());
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 11 (+SMA on the self-hosted link, ResNet).
+mod common;
+
+fn main() {
+    common::banner("fig11_sma");
+    let coord = common::coordinator();
+    cloudless::exp::sync_exp::fig11(&coord, common::scale_from_args());
+}

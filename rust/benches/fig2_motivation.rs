@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 2 (load-imbalance motivation, LeNet).
+mod common;
+
+fn main() {
+    common::banner("fig2_motivation");
+    let coord = common::coordinator();
+    cloudless::exp::motivation::fig2(&coord, common::scale_from_args());
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate Fig 3 (WAN communication share, ResNet18 @100 Mbps).
+mod common;
+
+fn main() {
+    common::banner("fig3_wan_share");
+    cloudless::exp::motivation::fig3();
+}

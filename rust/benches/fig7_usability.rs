@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 7 (usability: Cloudless vs trivial PS, 3 models).
+mod common;
+
+fn main() {
+    common::banner("fig7_usability");
+    let coord = common::coordinator();
+    cloudless::exp::usability::fig7(&coord, common::scale_from_args());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate TABLE IV + Fig 8 + Fig 9 (elastic scheduling:
+//! plans, time/cost decomposition, accuracy convergence).
+mod common;
+
+fn main() {
+    common::banner("fig8_scheduling (+table4, fig9)");
+    let coord = common::coordinator();
+    cloudless::exp::scheduling::table4(&coord);
+    cloudless::exp::scheduling::fig8_fig9(&coord, common::scale_from_args(), true);
+}

@@ -1,0 +1,150 @@
+//! Micro benchmarks for the L3 hot paths (§Perf in EXPERIMENTS.md):
+//!
+//! - PJRT execute round-trip per model (the per-iteration floor);
+//! - PS vector ops: native Rust loops vs the Pallas/PJRT artifacts
+//!   (the `vecops_backend` ablation);
+//! - DES event throughput (events/second the engine can retire);
+//! - WAN fabric transfer scheduling throughput.
+
+mod common;
+
+use cloudless::runtime::{vecops, Tensor};
+use cloudless::sim::Sim;
+
+fn main() {
+    common::banner("perf_micro");
+    let coord = common::coordinator();
+    let rt = coord.runtime();
+
+    // ---- PJRT execute round-trips ------------------------------------
+    println!("PJRT train_step round-trip (median of 10):");
+    for model in ["lenet", "resnet", "deepfm"] {
+        let m = rt.load_model(model).unwrap();
+        let (ds, _) = cloudless::data::generate(&m.meta, m.meta.batch_size, 1, 0);
+        let idxs: Vec<usize> = (0..m.meta.batch_size).collect();
+        let (x, y) = ds.batch(&idxs, &m.meta);
+        let params = m.init_params.clone();
+        let t = common::time_median(10, || {
+            let _ = m.train_step(&params, &x, &y).unwrap();
+        });
+        println!("  {model:<8} {:>8.2} ms  ({} params)", t * 1e3, m.meta.param_count);
+    }
+
+    // ---- input-conversion share: literal args vs pre-uploaded buffers --
+    {
+        let exe = rt.compile_artifact("lenet_train_step.hlo.txt").unwrap();
+        let m = rt.load_model("lenet").unwrap();
+        let p = m.init_params.clone();
+        let x = vec![0.1f32; 64 * 784];
+        let y = vec![1i32; 64];
+        let t_lit = common::time_median(10, || {
+            let outs = exe
+                .run(&[
+                    xla::Literal::vec1(&p),
+                    xla::Literal::vec1(&x).reshape(&[64, 28, 28, 1]).unwrap(),
+                    xla::Literal::vec1(&y),
+                ])
+                .unwrap();
+            std::hint::black_box(outs.len());
+        });
+        let client = xla::PjRtClient::cpu().unwrap();
+        let proto = xla::HloModuleProto::from_text_file(
+            coord.runtime().artifacts_dir.join("lenet_train_step.hlo.txt"),
+        )
+        .unwrap();
+        let raw = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+        let bp = client.buffer_from_host_buffer(&p, &[61706], None).unwrap();
+        let bx = client.buffer_from_host_buffer(&x, &[64, 28, 28, 1], None).unwrap();
+        let by = client.buffer_from_host_buffer(&y, &[64], None).unwrap();
+        let t_buf = common::time_median(10, || {
+            let r = raw.execute_b::<&xla::PjRtBuffer>(&[&bp, &bx, &by]).unwrap();
+            std::hint::black_box(r.len());
+        });
+        println!(
+            "lenet step: literal-args(full) {:.2} ms vs pre-uploaded buffers {:.2} ms (input conv + output copy share: {:.0}%)",
+            t_lit * 1e3,
+            t_buf * 1e3,
+            (1.0 - t_buf / t_lit) * 100.0
+        );
+    }
+
+    // ---- PS vector ops: native vs PJRT(Pallas) ------------------------
+    let m = rt.load_model("deepfm").unwrap();
+    let p0 = m.init_params.clone();
+    println!("PS vecops on deepfm-sized vectors (P={}, median of 20):", p0.len());
+    let g: Vec<f32> = (0..p0.len()).map(|i| (i % 7) as f32 * 0.01).collect();
+    let t_native = common::time_median(20, || {
+        let mut p = p0.clone();
+        vecops::sgd_apply_inplace(&mut p, &g, 0.01);
+        std::hint::black_box(&p);
+    });
+    let t_pjrt = common::time_median(20, || {
+        let _ = m.sgd_apply(&p0, &g, 0.01).unwrap();
+    });
+    println!("  sgd_apply  native {:>8.3} ms   pjrt(pallas) {:>8.3} ms", t_native * 1e3, t_pjrt * 1e3);
+    let t_native_avg = common::time_median(20, || {
+        let mut a = p0.clone();
+        vecops::average_inplace(&mut a, &g, 0.5);
+        std::hint::black_box(&a);
+    });
+    let t_pjrt_avg = common::time_median(20, || {
+        let _ = m.model_average(&p0, &g, 0.5).unwrap();
+    });
+    println!("  average    native {:>8.3} ms   pjrt(pallas) {:>8.3} ms", t_native_avg * 1e3, t_pjrt_avg * 1e3);
+
+    // ---- eval round-trip ----------------------------------------------
+    let (ds, _) = cloudless::data::generate(&m.meta, m.meta.batch_size, 1, 0);
+    let idxs: Vec<usize> = (0..m.meta.batch_size).collect();
+    let (x, y) = ds.batch(&idxs, &m.meta);
+    let t_eval = common::time_median(10, || {
+        let _ = m.eval_batch(&p0, &x, &y).unwrap();
+    });
+    println!("  eval_batch(deepfm) {:.3} ms", t_eval * 1e3);
+
+    // ---- batch materialization (data hot path) ------------------------
+    let lenet = rt.load_model("lenet").unwrap();
+    let (big_ds, _) = cloudless::data::generate(&lenet.meta, 4096, 1, 0);
+    let idxs64: Vec<usize> = (0..64).collect();
+    let t_batch = common::time_median(50, || {
+        let (x, y) = big_ds.batch(&idxs64, &lenet.meta);
+        std::hint::black_box((x.num_elements(), y.num_elements()));
+    });
+    println!("  batch materialization (lenet B=64) {:.3} ms", t_batch * 1e3);
+    let _ = Tensor::f32(vec![0.0], vec![1]);
+
+    // ---- DES event throughput -----------------------------------------
+    struct W {
+        count: u64,
+    }
+    let t_des = common::time_median(5, || {
+        let mut sim: Sim<W> = Sim::new();
+        let mut w = W { count: 0 };
+        fn tick(sim: &mut Sim<W>, w: &mut W) {
+            w.count += 1;
+            if w.count % 1 != 0 || w.count < 1_000_000 {
+                if w.count < 1_000_000 {
+                    sim.schedule(0.001, tick);
+                }
+            }
+        }
+        for _ in 0..64 {
+            sim.schedule(0.0, tick);
+        }
+        sim.run(&mut w);
+        std::hint::black_box(w.count);
+    });
+    println!("DES: 1M chained events in {:.0} ms ({:.1} M events/s)", t_des * 1e3, 1.0 / t_des);
+
+    // ---- WAN fabric scheduling ----------------------------------------
+    let t_net = common::time_median(5, || {
+        let mut fabric = cloudless::net::Fabric::new(1);
+        fabric.add_duplex(0, 1, cloudless::net::LinkSpec::wan_100mbps());
+        let mut t = 0.0;
+        for i in 0..1_000_000u64 {
+            let tr = fabric.transfer((i % 2) as usize, ((i + 1) % 2) as usize, 1_000, t);
+            t = tr.start.max(t) + 1e-5;
+        }
+        std::hint::black_box(fabric.total_wan_bytes());
+    });
+    println!("WAN fabric: 1M transfers in {:.0} ms ({:.1} M transfers/s)", t_net * 1e3, 1.0 / t_net);
+}

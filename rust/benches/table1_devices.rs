@@ -1,0 +1,7 @@
+//! Bench: regenerate the paper's TABLE I (device speed quantification).
+mod common;
+
+fn main() {
+    common::banner("table1_devices");
+    cloudless::exp::motivation::table1();
+}

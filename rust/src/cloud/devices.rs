@@ -1,0 +1,215 @@
+//! Device catalog — the paper's TABLE I ("Training speed quantification of
+//! cloud resources").
+//!
+//! The paper samples cloud devices, measures ResNet18/CIFAR-10 iteration
+//! time, and normalizes: TN = TFLOPS / TFLOPS_baseline, IN = iter_baseline
+//! / iter_device (higher = faster), with Intel Xeon IceLake (2 cores) as
+//! the baseline row. The elastic scheduler quantifies per-core compute
+//! power from these measurements; following the paper's own rounding
+//! ("the ratio load power of [Cascade and Sky] is about 2:3"), the
+//! scheduler uses *class powers* (Cascade 1/3, Sky 1/2 per core), which is
+//! exactly what reproduces the paper's Table IV plans (12:8, 12:6, 12:4).
+//!
+//! Substitution note (DESIGN.md §2): GPUs don't exist in this testbed; the
+//! catalog carries the paper's published ratios so the simulator can model
+//! them in virtual time. The local CPU is calibrated as the IceLake
+//! baseline row (power 1.0 in IN units).
+
+/// CPU or accelerator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+}
+
+/// One catalog row, as published in TABLE I.
+#[derive(Debug, Clone)]
+pub struct DeviceType {
+    pub name: &'static str,
+    pub kind: DeviceKind,
+    /// Cores in the measured configuration (2 CPU cores / full CUDA count).
+    pub measured_cores: u32,
+    /// TFLOPS of the measured configuration.
+    pub tflops: f64,
+    /// Measured ResNet18 iteration time (seconds).
+    pub iter_time_s: f64,
+    /// Per-core "class power" the scheduler quantifies loads with (IN
+    /// units; GPUs are allocated whole, so class power is per device).
+    pub class_power_per_core: f64,
+    /// Price per core-hour (CPU) or device-hour (GPU), USD — cost model.
+    pub price_per_unit_hour: f64,
+}
+
+/// Baseline row constants (IceLake, 2 cores).
+pub const BASELINE_TFLOPS: f64 = 0.096;
+pub const BASELINE_ITER_S: f64 = 3.697;
+
+/// Device ids into [`catalog`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Device {
+    IceLake,
+    CascadeLake,
+    Skylake,
+    T4,
+    V100,
+}
+
+impl Device {
+    pub const ALL: [Device; 5] =
+        [Device::IceLake, Device::CascadeLake, Device::Skylake, Device::T4, Device::V100];
+
+    pub fn info(self) -> &'static DeviceType {
+        match self {
+            Device::IceLake => &ICELAKE,
+            Device::CascadeLake => &CASCADE,
+            Device::Skylake => &SKYLAKE,
+            Device::T4 => &T4,
+            Device::V100 => &V100,
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Device> {
+        match name.to_ascii_lowercase().as_str() {
+            "icelake" | "ice" => Some(Device::IceLake),
+            "cascadelake" | "cascade" | "cas" => Some(Device::CascadeLake),
+            "skylake" | "sky" => Some(Device::Skylake),
+            "t4" => Some(Device::T4),
+            "v100" => Some(Device::V100),
+            _ => None,
+        }
+    }
+
+    /// TFLOPS normalization (TN) of the measured configuration.
+    pub fn tn(self) -> f64 {
+        self.info().tflops / BASELINE_TFLOPS
+    }
+
+    /// Iteration-time normalization (IN): baseline_iter / device_iter.
+    pub fn in_norm(self) -> f64 {
+        BASELINE_ITER_S / self.info().iter_time_s
+    }
+
+    /// IN/TN ratio — the paper's "how well TFLOPS predicts speed" column.
+    pub fn in_tn_ratio(self) -> f64 {
+        self.in_norm() / self.tn()
+    }
+
+    /// Compute power (IN units) of an allocation of `units` cores (CPU) or
+    /// devices (GPU), using the scheduler's class powers.
+    pub fn power_of(self, units: u32) -> f64 {
+        self.info().class_power_per_core * units as f64
+    }
+}
+
+static ICELAKE: DeviceType = DeviceType {
+    name: "Intel Xeon IceLake",
+    kind: DeviceKind::Cpu,
+    measured_cores: 2,
+    tflops: 0.096,
+    iter_time_s: 3.697,
+    class_power_per_core: 0.5,
+    price_per_unit_hour: 0.045,
+};
+
+static CASCADE: DeviceType = DeviceType {
+    name: "Intel Xeon Cascade Lake",
+    kind: DeviceKind::Cpu,
+    measured_cores: 2,
+    tflops: 0.090,
+    iter_time_s: 5.549,
+    // Paper: Cascade:Sky class ratio "about 2:3" -> 1/3 vs 1/2 per core.
+    class_power_per_core: 1.0 / 3.0,
+    price_per_unit_hour: 0.040,
+};
+
+static SKYLAKE: DeviceType = DeviceType {
+    name: "Intel Xeon Skylake",
+    kind: DeviceKind::Cpu,
+    measured_cores: 2,
+    tflops: 0.112,
+    iter_time_s: 3.800,
+    class_power_per_core: 0.5,
+    price_per_unit_hour: 0.038,
+};
+
+static T4: DeviceType = DeviceType {
+    name: "Nvidia T4",
+    kind: DeviceKind::Gpu,
+    measured_cores: 2560,
+    tflops: 5.554,
+    iter_time_s: 0.062,
+    // GPUs allocate whole devices: class power per device = IN.
+    class_power_per_core: 59.629,
+    price_per_unit_hour: 0.80,
+};
+
+static V100: DeviceType = DeviceType {
+    name: "Nvidia V100",
+    kind: DeviceKind::Gpu,
+    measured_cores: 5120,
+    tflops: 13.345,
+    iter_time_s: 0.024,
+    class_power_per_core: 154.042,
+    price_per_unit_hour: 2.50,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_tn_values_match_paper() {
+        // Paper TABLE I column TN: 1.000, 0.938, 1.167, 57.854, 139.010.
+        assert!((Device::IceLake.tn() - 1.0).abs() < 1e-9);
+        assert!((Device::CascadeLake.tn() - 0.938).abs() < 2e-3);
+        assert!((Device::Skylake.tn() - 1.167).abs() < 2e-3);
+        assert!((Device::T4.tn() - 57.854).abs() < 2e-2);
+        assert!((Device::V100.tn() - 139.010).abs() < 2e-2);
+    }
+
+    #[test]
+    fn table1_in_values_match_paper() {
+        // Paper TABLE I column IN: 1.000, 0.666, 0.973, 59.629, 154.042.
+        assert!((Device::IceLake.in_norm() - 1.0).abs() < 1e-9);
+        assert!((Device::CascadeLake.in_norm() - 0.666).abs() < 1e-3);
+        assert!((Device::Skylake.in_norm() - 0.973).abs() < 1e-3);
+        assert!((Device::T4.in_norm() - 59.629).abs() < 5e-2);
+        assert!((Device::V100.in_norm() - 154.042).abs() < 5e-2);
+    }
+
+    #[test]
+    fn table1_ratio_column() {
+        // Paper TABLE I column IN/TN: 1.000, 0.710, 0.834, 1.031, 1.108.
+        for (d, want) in [
+            (Device::IceLake, 1.000),
+            (Device::CascadeLake, 0.710),
+            (Device::Skylake, 0.834),
+            (Device::T4, 1.031),
+            (Device::V100, 1.108),
+        ] {
+            assert!((d.in_tn_ratio() - want).abs() < 5e-3, "{d:?}: {}", d.in_tn_ratio());
+        }
+    }
+
+    #[test]
+    fn class_power_ratio_is_two_thirds() {
+        let cas = Device::CascadeLake.power_of(1);
+        let sky = Device::Skylake.power_of(1);
+        assert!((cas / sky - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_name_roundtrip() {
+        for d in Device::ALL {
+            let short = match d {
+                Device::IceLake => "ice",
+                Device::CascadeLake => "cascade",
+                Device::Skylake => "sky",
+                Device::T4 => "t4",
+                Device::V100 => "v100",
+            };
+            assert_eq!(Device::from_name(short), Some(d));
+        }
+        assert_eq!(Device::from_name("tpu"), None);
+    }
+}

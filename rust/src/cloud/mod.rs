@@ -1,0 +1,149 @@
+//! Multi-regional cloud substrate: regions, resource inventories,
+//! allocations, and dataset distribution.
+//!
+//! This is the stand-in for the paper's Tencent Cloud environment
+//! (Shanghai + Chongqing regions; self-hosted Beijing + Shanghai for
+//! Fig 11). A [`Region`] owns a device inventory and a fraction of the
+//! pre-existing training data; an [`Allocation`] is what the elastic
+//! scheduler (or the greedy baseline) decides to actually rent.
+
+pub mod cost;
+pub mod devices;
+
+use devices::Device;
+
+use crate::net::RegionId;
+
+/// A cloud region with a resource inventory and resident data.
+#[derive(Debug, Clone)]
+pub struct Region {
+    pub id: RegionId,
+    pub name: String,
+    /// Maximum rentable units per device type (cores for CPU, devices for
+    /// GPU) — the "available cloud resources" the scheduler probes.
+    pub inventory: Vec<(Device, u32)>,
+    /// Number of locally-resident training samples (the pre-existing data
+    /// distribution; moving it over the WAN is what geo-training avoids).
+    pub data_samples: usize,
+}
+
+impl Region {
+    pub fn new(id: RegionId, name: &str, inventory: Vec<(Device, u32)>, data: usize) -> Self {
+        Region { id, name: name.to_string(), inventory, data_samples: data }
+    }
+
+    pub fn max_units(&self, d: Device) -> u32 {
+        self.inventory.iter().find(|(dev, _)| *dev == d).map(|(_, n)| *n).unwrap_or(0)
+    }
+}
+
+/// Resources actually rented in one region for a training job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub region: RegionId,
+    /// (device, units) pairs; units are cores (CPU) or devices (GPU).
+    pub units: Vec<(Device, u32)>,
+}
+
+impl Allocation {
+    pub fn new(region: RegionId, units: Vec<(Device, u32)>) -> Self {
+        Allocation { region, units }
+    }
+
+    /// Total compute power in IN units (see devices::Device::power_of).
+    pub fn power(&self) -> f64 {
+        self.units.iter().map(|(d, n)| d.power_of(*n)).sum()
+    }
+
+    /// Total allocated units (for greedy-vs-elastic comparisons).
+    pub fn total_units(&self) -> u32 {
+        self.units.iter().map(|(_, n)| n).sum()
+    }
+
+    /// True if this allocation fits the region's inventory.
+    pub fn fits(&self, region: &Region) -> bool {
+        self.units.iter().all(|(d, n)| *n <= region.max_units(*d))
+    }
+}
+
+/// The full multi-cloud environment for one training job.
+#[derive(Debug, Clone)]
+pub struct CloudEnv {
+    pub regions: Vec<Region>,
+}
+
+impl CloudEnv {
+    pub fn new(regions: Vec<Region>) -> Self {
+        debug_assert!(regions.iter().enumerate().all(|(i, r)| r.id == i));
+        CloudEnv { regions }
+    }
+
+    /// The paper's evaluation setup: Shanghai (Cascade Lake) + Chongqing
+    /// (`cq_device`), 12 cores each, with a data split of
+    /// `sh_data : cq_data` samples.
+    pub fn tencent_two_region(
+        cq_device: Device,
+        sh_data: usize,
+        cq_data: usize,
+    ) -> Self {
+        CloudEnv::new(vec![
+            Region::new(0, "Shanghai", vec![(Device::CascadeLake, 12)], sh_data),
+            Region::new(1, "Chongqing", vec![(cq_device, 12)], cq_data),
+        ])
+    }
+
+    /// Greedy baseline plan: rent everything every region offers
+    /// (the paper: "all baseline experiments use a greedy strategy to
+    /// consume all available 24 CPU cores, 12 from each region").
+    pub fn greedy_plan(&self) -> Vec<Allocation> {
+        self.regions
+            .iter()
+            .map(|r| Allocation::new(r.id, r.inventory.clone()))
+            .collect()
+    }
+
+    pub fn total_samples(&self) -> usize {
+        self.regions.iter().map(|r| r.data_samples).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tencent_env_shape() {
+        let env = CloudEnv::tencent_two_region(Device::Skylake, 2000, 1000);
+        assert_eq!(env.regions.len(), 2);
+        assert_eq!(env.regions[0].name, "Shanghai");
+        assert_eq!(env.regions[0].max_units(Device::CascadeLake), 12);
+        assert_eq!(env.regions[1].max_units(Device::Skylake), 12);
+        assert_eq!(env.total_samples(), 3000);
+    }
+
+    #[test]
+    fn allocation_power_uses_class_powers() {
+        let a = Allocation::new(0, vec![(Device::CascadeLake, 12)]);
+        assert!((a.power() - 4.0).abs() < 1e-9); // 12 * 1/3
+        let b = Allocation::new(1, vec![(Device::Skylake, 8)]);
+        assert!((b.power() - 4.0).abs() < 1e-9); // 8 * 1/2 — Table IV case 1!
+    }
+
+    #[test]
+    fn greedy_takes_everything() {
+        let env = CloudEnv::tencent_two_region(Device::Skylake, 1, 1);
+        let plans = env.greedy_plan();
+        assert_eq!(plans[0].total_units(), 12);
+        assert_eq!(plans[1].total_units(), 12);
+        assert!(plans[0].fits(&env.regions[0]));
+    }
+
+    #[test]
+    fn fits_rejects_over_allocation() {
+        let env = CloudEnv::tencent_two_region(Device::Skylake, 1, 1);
+        let too_much = Allocation::new(0, vec![(Device::CascadeLake, 13)]);
+        assert!(!too_much.fits(&env.regions[0]));
+        let wrong_device = Allocation::new(0, vec![(Device::V100, 1)]);
+        assert!(!wrong_device.fits(&env.regions[0]));
+    }
+}

@@ -1,0 +1,174 @@
+//! JSON config system: declarative job + environment descriptions under
+//! `configs/`, loadable from the CLI (`cloudless train --config <file>`).
+//!
+//! Schema (all fields optional unless noted):
+//!
+//! ```json
+//! {
+//!   "model": "lenet",                  // required
+//!   "epochs": 10,
+//!   "lr": 0.03,
+//!   "seed": 42,
+//!   "n_train": 4096, "n_eval": 1024,
+//!   "strategy": "asgd-ga",             // asgd | asgd-ga | ama | sma
+//!   "sync_freq": 4,
+//!   "scheduling": "elastic",           // elastic | greedy
+//!   "worker_cores": 3,
+//!   "link": {"bandwidth_mbps": 100, "latency_ms": 15,
+//!             "fluct_sigma": 0.25, "drop_prob": 0.0},
+//!   "regions": [                        // required, >= 1
+//!     {"name": "Shanghai",  "device": "cascade", "units": 12, "data": 2048},
+//!     {"name": "Chongqing", "device": "sky",     "units": 12, "data": 1024}
+//!   ]
+//! }
+//! ```
+
+use anyhow::{Context, Result};
+
+use crate::cloud::devices::Device;
+use crate::cloud::{CloudEnv, Region};
+use crate::coordinator::{JobSpec, SchedulingMode};
+use crate::net::LinkSpec;
+use crate::sync::{Strategy, SyncConfig};
+use crate::train::TrainConfig;
+use crate::util::json::Json;
+
+/// Parse a JSON config document into a [`JobSpec`].
+pub fn parse_job(text: &str) -> Result<JobSpec> {
+    let j = Json::parse(text).context("parsing job config")?;
+
+    let model =
+        j.get("model").as_str().ok_or_else(|| anyhow::anyhow!("config missing \"model\""))?;
+
+    // regions -> CloudEnv
+    let regions_json =
+        j.get("regions").as_arr().ok_or_else(|| anyhow::anyhow!("config missing \"regions\""))?;
+    anyhow::ensure!(!regions_json.is_empty(), "need at least one region");
+    let mut regions = Vec::new();
+    for (i, r) in regions_json.iter().enumerate() {
+        let name = r.get("name").as_str().map(String::from).unwrap_or(format!("region{i}"));
+        let dev_name = r.get("device").as_str().unwrap_or("cascade");
+        let device = Device::from_name(dev_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown device {dev_name:?}"))?;
+        let units = r.get("units").as_usize().unwrap_or(12) as u32;
+        let data = r.get("data").as_usize().unwrap_or(1024);
+        regions.push(Region::new(i, &name, vec![(device, units)], data));
+    }
+    let env = CloudEnv::new(regions);
+
+    let mut train = TrainConfig::new(model);
+    if let Some(e) = j.get("epochs").as_usize() {
+        train.epochs = e;
+    }
+    if let Some(lr) = j.get("lr").as_f64() {
+        train.lr = lr as f32;
+    }
+    if let Some(s) = j.get("seed").as_f64() {
+        train.seed = s as u64;
+    }
+    if let Some(n) = j.get("n_train").as_usize() {
+        train.n_train = n;
+    }
+    if let Some(n) = j.get("n_eval").as_usize() {
+        train.n_eval = n;
+    }
+    if let Some(w) = j.get("worker_cores").as_usize() {
+        train.worker_cores = w as u32;
+    }
+    if let Some(b) = j.get("base_step_s").as_f64() {
+        train.base_step_s = b;
+    }
+    if let Some(e) = j.get("eval_every").as_usize() {
+        train.eval_every = e;
+    }
+    if j.get("skip_eval").as_bool() == Some(true) {
+        train.skip_eval = true;
+    }
+
+    let strategy_name = j.get("strategy").as_str().unwrap_or("asgd");
+    let strategy = Strategy::from_name(strategy_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown strategy {strategy_name:?}"))?;
+    let freq = j.get("sync_freq").as_usize().unwrap_or(1) as u32;
+    train.sync = SyncConfig::new(strategy, freq);
+
+    let link = j.get("link");
+    if !link.is_null() {
+        train.link = LinkSpec {
+            bandwidth_bps: link.get("bandwidth_mbps").as_f64().unwrap_or(100.0) * 1e6,
+            latency_s: link.get("latency_ms").as_f64().unwrap_or(15.0) / 1e3,
+            fluct_sigma: link.get("fluct_sigma").as_f64().unwrap_or(0.25),
+            drop_prob: link.get("drop_prob").as_f64().unwrap_or(0.0),
+            setup_s: link.get("setup_ms").as_f64().unwrap_or(90.0) / 1e3,
+        };
+    }
+
+    let scheduling = match j.get("scheduling").as_str().unwrap_or("elastic") {
+        "greedy" => SchedulingMode::Greedy,
+        "elastic" => SchedulingMode::Elastic,
+        other => anyhow::bail!("unknown scheduling mode {other:?}"),
+    };
+
+    Ok(JobSpec { env, train, scheduling })
+}
+
+/// Load a job config from a file path.
+pub fn load_job(path: impl AsRef<std::path::Path>) -> Result<JobSpec> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse_job(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = r#"{
+        "model": "resnet", "epochs": 7, "lr": 0.02, "seed": 9,
+        "n_train": 1000, "n_eval": 100, "strategy": "ama", "sync_freq": 8,
+        "scheduling": "greedy", "worker_cores": 4,
+        "link": {"bandwidth_mbps": 50, "latency_ms": 30, "fluct_sigma": 0.1},
+        "regions": [
+            {"name": "A", "device": "cascade", "units": 12, "data": 600},
+            {"name": "B", "device": "v100", "units": 2, "data": 400}
+        ]
+    }"#;
+
+    #[test]
+    fn full_config_parses() {
+        let spec = parse_job(FULL).unwrap();
+        assert_eq!(spec.train.model, "resnet");
+        assert_eq!(spec.train.epochs, 7);
+        assert_eq!(spec.train.sync.freq, 8);
+        assert_eq!(spec.train.sync.strategy, Strategy::Ama);
+        assert_eq!(spec.scheduling, SchedulingMode::Greedy);
+        assert_eq!(spec.env.regions.len(), 2);
+        assert_eq!(spec.env.regions[1].max_units(Device::V100), 2);
+        assert!((spec.train.link.bandwidth_bps - 50e6).abs() < 1.0);
+        assert!((spec.train.link.latency_s - 0.03).abs() < 1e-9);
+    }
+
+    #[test]
+    fn minimal_config_defaults() {
+        let spec = parse_job(
+            r#"{"model":"lenet","regions":[{"name":"X","device":"sky","units":6,"data":100}]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.scheduling, SchedulingMode::Elastic);
+        assert_eq!(spec.train.sync.strategy, Strategy::Asgd);
+        assert_eq!(spec.train.sync.freq, 1);
+    }
+
+    #[test]
+    fn errors_are_descriptive() {
+        assert!(parse_job(r#"{"regions":[]}"#).is_err());
+        assert!(parse_job(r#"{"model":"lenet","regions":[]}"#).is_err());
+        assert!(parse_job(
+            r#"{"model":"lenet","regions":[{"device":"tpu9000","units":1,"data":1}]}"#
+        )
+        .is_err());
+        assert!(parse_job(
+            r#"{"model":"lenet","strategy":"nope","regions":[{"device":"sky","units":1,"data":1}]}"#
+        )
+        .is_err());
+    }
+}

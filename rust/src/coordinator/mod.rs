@@ -1,0 +1,108 @@
+//! The Cloudless-Training coordinator — the user-facing control plane.
+//!
+//! This is the paper's "logical view": users submit a training job (model
+//! definition name + training configuration + the multi-cloud
+//! environment); the control plane probes resources, runs the scheduling
+//! strategy (elastic by default, greedy as the paper's baseline), and
+//! launches the physical training plane (per-cloud serverless workflows)
+//! through the DES engine.
+//!
+//! ```no_run
+//! use cloudless::coordinator::{Coordinator, JobSpec, SchedulingMode};
+//! use cloudless::cloud::{CloudEnv, devices::Device};
+//!
+//! let coord = Coordinator::new("artifacts").unwrap();
+//! let env = CloudEnv::tencent_two_region(Device::Skylake, 2048, 1024);
+//! let spec = JobSpec::new("lenet", env);
+//! let report = coord.submit(&spec).unwrap();
+//! println!("{}", report.summary());
+//! ```
+
+use anyhow::Result;
+
+use crate::cloud::{Allocation, CloudEnv};
+use crate::runtime::PjrtRuntime;
+use crate::sched::{optimal_matching, Plan};
+use crate::train::{run_geo_training, TrainConfig, TrainReport};
+
+/// How the control plane provisions resources.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulingMode {
+    /// The paper's baseline: consume every available unit in each region.
+    Greedy,
+    /// The elastic scheduling strategy (Algorithm 1 / Optimal Matching).
+    Elastic,
+}
+
+/// A complete training-job submission.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub env: CloudEnv,
+    pub train: TrainConfig,
+    pub scheduling: SchedulingMode,
+}
+
+impl JobSpec {
+    pub fn new(model: &str, env: CloudEnv) -> JobSpec {
+        JobSpec { env, train: TrainConfig::new(model), scheduling: SchedulingMode::Elastic }
+    }
+}
+
+/// The control plane: owns the PJRT runtime and the scheduler function.
+pub struct Coordinator {
+    rt: PjrtRuntime,
+}
+
+impl Coordinator {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Coordinator> {
+        Ok(Coordinator { rt: PjrtRuntime::new(artifacts_dir)? })
+    }
+
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.rt
+    }
+
+    /// The scheduler function: probe the environment and produce the
+    /// elastic resourcing plan.
+    pub fn plan(&self, env: &CloudEnv) -> Plan {
+        optimal_matching(env)
+    }
+
+    /// Resolve a job's allocations per its scheduling mode.
+    pub fn allocations_for(&self, spec: &JobSpec) -> Vec<Allocation> {
+        match spec.scheduling {
+            SchedulingMode::Greedy => spec.env.greedy_plan(),
+            SchedulingMode::Elastic => self.plan(&spec.env).allocations,
+        }
+    }
+
+    /// Submit a job: schedule, deploy workflows, train, report.
+    pub fn submit(&self, spec: &JobSpec) -> Result<TrainReport> {
+        let allocations = self.allocations_for(spec);
+        run_geo_training(&self.rt, &spec.env, allocations, spec.train.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::devices::Device;
+
+    #[test]
+    fn allocations_follow_mode() {
+        // Coordinator::new needs PJRT; test plan logic via free functions.
+        let env = CloudEnv::tencent_two_region(Device::Skylake, 2000, 1000);
+        let greedy = env.greedy_plan();
+        assert_eq!(greedy[1].total_units(), 12);
+        let elastic = optimal_matching(&env).allocations;
+        assert_eq!(elastic[1].total_units(), 4);
+    }
+
+    #[test]
+    fn job_spec_defaults() {
+        let env = CloudEnv::tencent_two_region(Device::Skylake, 1, 1);
+        let spec = JobSpec::new("lenet", env);
+        assert_eq!(spec.scheduling, SchedulingMode::Elastic);
+        assert_eq!(spec.train.model, "lenet");
+    }
+}

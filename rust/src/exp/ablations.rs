@@ -1,0 +1,238 @@
+//! Ablations beyond the paper — design-choice sensitivity studies called
+//! out in DESIGN.md:
+//!
+//! - sync-frequency sweep (1..32): where does the comm-relief saturate?
+//! - WAN fluctuation severity: how noisy links distort training time;
+//! - topology: ring vs pairwise exchange at 3 regions;
+//! - worker granularity (cores per worker function): staleness vs
+//!   parallelism;
+//! - failure injection: drop-prob sensitivity (retry path).
+
+use crate::cloud::devices::Device;
+use crate::cloud::{CloudEnv, Region};
+use crate::coordinator::Coordinator;
+use crate::exp::{print_table, save_result, Scale};
+use crate::net::LinkSpec;
+use crate::sync::{Strategy, SyncConfig};
+use crate::train::TrainConfig;
+use crate::util::json::Json;
+
+fn base_cfg(model: &str, scale: Scale) -> (CloudEnv, TrainConfig) {
+    let (n_train, n_eval) = crate::data::default_sizes(model);
+    let env = CloudEnv::tencent_two_region(Device::Skylake, n_train / 2, n_train - n_train / 2);
+    let mut cfg = TrainConfig::new(model);
+    cfg.epochs = scale.epochs(model).min(6);
+    cfg.n_train = n_train;
+    cfg.n_eval = n_eval;
+    cfg.skip_eval = true;
+    (env, cfg)
+}
+
+/// Sync-frequency sweep: time + WAN bytes vs frequency (LeNet, ASGD-GA).
+pub fn freq_sweep(coord: &Coordinator, scale: Scale) -> Json {
+    println!("Ablation: sync-frequency sweep (LeNet, ASGD-GA)");
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for freq in [1u32, 2, 4, 8, 16, 32] {
+        let (env, mut cfg) = base_cfg("lenet", scale);
+        cfg.sync = SyncConfig::new(Strategy::AsgdGa, freq);
+        let r = crate::train::run_geo_training(coord.runtime(), &env, env.greedy_plan(), cfg)
+            .expect("freq sweep run");
+        rows.push(vec![
+            format!("{freq}"),
+            format!("{:.0}s", r.total_time),
+            format!("{:.0}s", r.total_comm_wait()),
+            format!("{:.1}MB", r.wan_bytes as f64 / 1e6),
+            format!("{}", r.wan_transfers),
+        ]);
+        out.push(Json::obj(vec![
+            ("freq", Json::num(freq as f64)),
+            ("time", Json::num(r.total_time)),
+            ("comm_wait", Json::num(r.total_comm_wait())),
+            ("wan_bytes", Json::num(r.wan_bytes as f64)),
+        ]));
+    }
+    print_table(&["freq", "time", "comm wait", "WAN", "transfers"], &rows);
+    let doc = Json::obj(vec![("rows", Json::arr(out))]);
+    save_result("ablation_freq_sweep", &doc);
+    doc
+}
+
+/// WAN fluctuation severity sweep (LeNet, ASGD-GA f4).
+pub fn fluctuation_sweep(coord: &Coordinator, scale: Scale) -> Json {
+    println!("Ablation: WAN fluctuation severity (LeNet, ASGD-GA f4)");
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for sigma in [0.0, 0.1, 0.25, 0.5, 0.8] {
+        let (env, mut cfg) = base_cfg("lenet", scale);
+        cfg.sync = SyncConfig::new(Strategy::AsgdGa, 4);
+        cfg.link = LinkSpec { fluct_sigma: sigma, ..LinkSpec::wan_100mbps() };
+        let r = crate::train::run_geo_training(coord.runtime(), &env, env.greedy_plan(), cfg)
+            .expect("fluct sweep run");
+        rows.push(vec![
+            format!("{sigma:.2}"),
+            format!("{:.1}s", r.total_time),
+            format!("{:.1}s", r.total_comm_wait()),
+        ]);
+        out.push(Json::obj(vec![
+            ("sigma", Json::num(sigma)),
+            ("time", Json::num(r.total_time)),
+            ("comm_wait", Json::num(r.total_comm_wait())),
+        ]));
+    }
+    print_table(&["fluct sigma", "time", "comm wait"], &rows);
+    let doc = Json::obj(vec![("rows", Json::arr(out))]);
+    save_result("ablation_fluctuation", &doc);
+    doc
+}
+
+/// Ring topology at 3 regions (beyond the paper's 2-region evaluation).
+pub fn three_region_ring(coord: &Coordinator, scale: Scale) -> Json {
+    println!("Ablation: 3-region ring topology (LeNet, ASGD-GA f4)");
+    let n = 4096;
+    let env = CloudEnv::new(vec![
+        Region::new(0, "Shanghai", vec![(Device::CascadeLake, 12)], n / 3),
+        Region::new(1, "Chongqing", vec![(Device::Skylake, 12)], n / 3),
+        Region::new(2, "Beijing", vec![(Device::Skylake, 12)], n - 2 * (n / 3)),
+    ]);
+    let mut cfg = TrainConfig::new("lenet");
+    cfg.epochs = scale.epochs("lenet");
+    cfg.n_train = n;
+    cfg.sync = SyncConfig::new(Strategy::AsgdGa, 4);
+    let r = crate::train::run_geo_training(coord.runtime(), &env, env.greedy_plan(), cfg)
+        .expect("3-region run");
+    let rows = vec![vec![
+        "3-region ring".to_string(),
+        format!("{:.0}s", r.total_time),
+        format!("{:.4}", r.final_accuracy),
+        format!("{:.1}MB", r.wan_bytes as f64 / 1e6),
+    ]];
+    print_table(&["topology", "time", "final acc", "WAN"], &rows);
+    let doc = Json::obj(vec![
+        ("time", Json::num(r.total_time)),
+        ("final_acc", Json::num(r.final_accuracy)),
+        ("wan_bytes", Json::num(r.wan_bytes as f64)),
+    ]);
+    save_result("ablation_three_region", &doc);
+    doc
+}
+
+/// Worker granularity: cores per worker function.
+pub fn worker_granularity(coord: &Coordinator, scale: Scale) -> Json {
+    println!("Ablation: worker granularity (LeNet, cores per worker fn)");
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for wc in [1u32, 2, 3, 6, 12] {
+        let (env, mut cfg) = base_cfg("lenet", scale);
+        cfg.skip_eval = false;
+        cfg.worker_cores = wc;
+        cfg.sync = SyncConfig::new(Strategy::AsgdGa, 4);
+        let r = crate::train::run_geo_training(coord.runtime(), &env, env.greedy_plan(), cfg)
+            .expect("granularity run");
+        let stal = crate::util::mean(
+            &r.partitions.iter().map(|p| p.mean_staleness).collect::<Vec<_>>(),
+        );
+        rows.push(vec![
+            format!("{wc}"),
+            format!("{:.0}s", r.total_time),
+            format!("{:.2}", stal),
+            format!("{:.4}", r.final_accuracy),
+        ]);
+        out.push(Json::obj(vec![
+            ("worker_cores", Json::num(wc as f64)),
+            ("time", Json::num(r.total_time)),
+            ("staleness", Json::num(stal)),
+            ("final_acc", Json::num(r.final_accuracy)),
+        ]));
+    }
+    print_table(&["cores/worker", "time", "staleness", "final acc"], &rows);
+    let doc = Json::obj(vec![("rows", Json::arr(out))]);
+    save_result("ablation_worker_granularity", &doc);
+    doc
+}
+
+/// Failure injection: transfer drop probability (retry path exercised).
+pub fn drop_sensitivity(coord: &Coordinator, scale: Scale) -> Json {
+    println!("Ablation: WAN drop probability (LeNet, ASGD-GA f4)");
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for drop in [0.0, 0.05, 0.2] {
+        let (env, mut cfg) = base_cfg("lenet", scale);
+        cfg.sync = SyncConfig::new(Strategy::AsgdGa, 4);
+        cfg.link = LinkSpec { drop_prob: drop, ..LinkSpec::wan_100mbps() };
+        let r = crate::train::run_geo_training(coord.runtime(), &env, env.greedy_plan(), cfg)
+            .expect("drop run");
+        rows.push(vec![
+            format!("{drop:.2}"),
+            format!("{:.0}s", r.total_time),
+            format!("{}", r.wan_transfers),
+        ]);
+        out.push(Json::obj(vec![
+            ("drop_prob", Json::num(drop)),
+            ("time", Json::num(r.total_time)),
+            ("transfers", Json::num(r.wan_transfers as f64)),
+        ]));
+    }
+    print_table(&["drop prob", "time", "transfers"], &rows);
+    let doc = Json::obj(vec![("rows", Json::arr(out))]);
+    save_result("ablation_drop", &doc);
+    doc
+}
+
+/// Compression vs frequency reduction (extension; the paper's §II.C
+/// surveys compression but adopts frequency reduction — here we compare
+/// both on the comm-heavy DeepFM workload).
+pub fn compression_vs_frequency(coord: &Coordinator, scale: Scale) -> Json {
+    use crate::sync::Compression;
+    println!("Ablation: compression vs frequency reduction (DeepFM)");
+    let settings: Vec<(&str, SyncConfig)> = vec![
+        ("ASGD f1 (baseline)", SyncConfig::baseline()),
+        ("ASGD-GA f8", SyncConfig::new(Strategy::AsgdGa, 8)),
+        ("ASGD f1 + top-10%", SyncConfig::baseline()
+            .with_compression(Compression::TopK { ratio: 0.10 })),
+        ("ASGD f1 + q8", SyncConfig::baseline().with_compression(Compression::Q8)),
+        ("GA f8 + top-10%", SyncConfig::new(Strategy::AsgdGa, 8)
+            .with_compression(Compression::TopK { ratio: 0.10 })),
+    ];
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for (label, sync) in settings {
+        let (n_train, n_eval) = crate::data::default_sizes("deepfm");
+        let env = CloudEnv::tencent_two_region(Device::Skylake, n_train / 2, n_train / 2);
+        let mut cfg = TrainConfig::new("deepfm");
+        cfg.epochs = scale.epochs("deepfm");
+        cfg.n_train = n_train;
+        cfg.n_eval = n_eval;
+        cfg.sync = sync;
+        let r = crate::train::run_geo_training(coord.runtime(), &env, env.greedy_plan(), cfg)
+            .expect("compression run");
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.0}s", r.total_time),
+            format!("{:.1}MB", r.wan_bytes as f64 / 1e6),
+            format!("{:.0}s", r.total_wan_time()),
+            format!("{:.4}", r.final_accuracy),
+        ]);
+        out.push(Json::obj(vec![
+            ("setting", Json::str(label)),
+            ("time", Json::num(r.total_time)),
+            ("wan_bytes", Json::num(r.wan_bytes as f64)),
+            ("wan_time", Json::num(r.total_wan_time())),
+            ("final_acc", Json::num(r.final_accuracy)),
+        ]));
+    }
+    print_table(&["setting", "time", "WAN", "comm time", "final acc"], &rows);
+    let doc = Json::obj(vec![("rows", Json::arr(out))]);
+    save_result("ablation_compression", &doc);
+    doc
+}
+
+/// Run every ablation.
+pub fn all(coord: &Coordinator, scale: Scale) {
+    freq_sweep(coord, scale);
+    fluctuation_sweep(coord, scale);
+    three_region_ring(coord, scale);
+    worker_granularity(coord, scale);
+    drop_sensitivity(coord, scale);
+    compression_vs_frequency(coord, scale);
+}

@@ -1,0 +1,185 @@
+//! Motivation experiments: TABLE I, Fig 2, Fig 3.
+
+use crate::cloud::devices::{Device, BASELINE_ITER_S};
+use crate::cloud::{CloudEnv, Region};
+use crate::coordinator::Coordinator;
+use crate::exp::{print_table, save_result, Scale};
+use crate::sync::{Strategy, SyncConfig};
+use crate::train::TrainConfig;
+use crate::util::json::Json;
+
+/// TABLE I — training speed quantification of cloud resources.
+/// Regenerates every row (TN / IN / IN-over-TN) from the device catalog
+/// and prints the paper's published values alongside.
+pub fn table1() -> Json {
+    println!("TABLE I: Training speed quantification of cloud resources");
+    let paper: &[(&str, f64, f64, f64)] = &[
+        ("IceLake", 1.000, 1.000, 1.000),
+        ("CascadeLake", 0.938, 0.666, 0.710),
+        ("Skylake", 1.167, 0.973, 0.834),
+        ("T4", 57.854, 59.629, 1.031),
+        ("V100", 139.010, 154.042, 1.108),
+    ];
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for (d, (pname, ptn, pin, pratio)) in Device::ALL.iter().zip(paper) {
+        let info = d.info();
+        rows.push(vec![
+            info.name.to_string(),
+            format!("{}", info.measured_cores),
+            format!("{:.3}", info.tflops),
+            format!("{:.3} ({ptn:.3})", d.tn()),
+            format!("{:.3}s", info.iter_time_s),
+            format!("{:.3} ({pin:.3})", d.in_norm()),
+            format!("{:.3} ({pratio:.3})", d.in_tn_ratio()),
+        ]);
+        out.push(Json::obj(vec![
+            ("device", Json::str(*pname)),
+            ("tn", Json::num(d.tn())),
+            ("in", Json::num(d.in_norm())),
+            ("in_tn", Json::num(d.in_tn_ratio())),
+            ("paper_tn", Json::num(*ptn)),
+            ("paper_in", Json::num(*pin)),
+            ("paper_in_tn", Json::num(*pratio)),
+        ]));
+    }
+    print_table(
+        &["device", "cores", "TFLOPS", "TN (paper)", "iter", "IN (paper)", "IN/TN (paper)"],
+        &rows,
+    );
+    let doc = Json::obj(vec![("rows", Json::arr(out))]);
+    save_result("table1", &doc);
+    doc
+}
+
+/// Fig 2 — the load-imbalance motivation: training LeNet under various
+/// heterogeneous allocations and uneven data distributions; the waiting
+/// share grows with the mismatch.
+pub fn fig2(coord: &Coordinator, scale: Scale) -> Json {
+    println!("Fig 2: time proportion of training LeNet under heterogeneous allocations");
+    let cases: &[(&str, Device, usize, usize)] = &[
+        // label, CQ device, SH data, CQ data
+        ("even data, same CPUs", Device::CascadeLake, 2048, 2048),
+        ("2:1 data, same CPUs", Device::CascadeLake, 2731, 1365),
+        ("even data, Cas/Sky", Device::Skylake, 2048, 2048),
+        ("2:1 data, Cas/Sky", Device::Skylake, 2731, 1365),
+    ];
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for (label, cq_dev, sh, cq) in cases {
+        let env = CloudEnv::tencent_two_region(*cq_dev, *sh, *cq);
+        let mut cfg = TrainConfig::new("lenet");
+        cfg.epochs = scale.epochs("lenet").min(6);
+        cfg.n_train = sh + cq;
+        cfg.sync = SyncConfig::new(Strategy::AsgdGa, 4);
+        cfg.skip_eval = true;
+        let report = crate::train::run_geo_training(
+            coord.runtime(),
+            &env,
+            env.greedy_plan(),
+            cfg,
+        )
+        .expect("fig2 run failed");
+        for p in &report.partitions {
+            let share = if report.total_time > 0.0 { p.waiting / report.total_time } else { 0.0 };
+            rows.push(vec![
+                label.to_string(),
+                p.region.clone(),
+                format!("{:.1}s", report.total_time),
+                format!("{:.1}s", p.waiting),
+                format!("{:.1}%", share * 100.0),
+            ]);
+            out.push(Json::obj(vec![
+                ("case", Json::str(*label)),
+                ("region", Json::str(&p.region)),
+                ("total_s", Json::num(report.total_time)),
+                ("waiting_s", Json::num(p.waiting)),
+                ("waiting_share", Json::num(share)),
+            ]));
+        }
+    }
+    print_table(&["case", "region", "total", "waiting", "waiting %"], &rows);
+    println!("  (paper: mismatched cases waste up to ~25% of one region's resources)");
+    let doc = Json::obj(vec![("rows", Json::arr(out))]);
+    save_result("fig2", &doc);
+    doc
+}
+
+/// Fig 3 — WAN communication share of training ResNet18 (48 MB model) at
+/// 100 Mbps, CPU vs GPU. Analytic: per-iteration compute time from the
+/// device catalog vs payload serialization on the link model.
+///
+/// Calibration: the CPU row divides the catalog's 2-core iteration time
+/// across 12 cores with a 0.45 parallel-scaling efficiency (PS-worker
+/// scaling is sub-linear); the GPU row is the catalog's T4 measurement.
+pub fn fig3() -> Json {
+    println!("Fig 3: WAN communication share training ResNet18 (48MB) @ 100 Mbps");
+    let payload_bytes = 48_000_000.0f64;
+    let t_comm = payload_bytes * 8.0 / 100e6 + 0.015;
+
+    let cpu_iter = Device::CascadeLake.info().iter_time_s * (2.0 / 12.0) / 0.45;
+    let gpu_iter = Device::T4.info().iter_time_s;
+    let rows_src: &[(&str, f64, f64)] = &[
+        ("CPU (Cascade, 12 cores)", cpu_iter, 0.649),
+        ("GPU (T4)", gpu_iter, 0.984),
+    ];
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for (label, t_compute, paper_share) in rows_src {
+        let share = t_comm / (t_comm + t_compute);
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.3}s", t_compute),
+            format!("{:.3}s", t_comm),
+            format!("{:.1}%", share * 100.0),
+            format!("{:.1}%", paper_share * 100.0),
+        ]);
+        out.push(Json::obj(vec![
+            ("config", Json::str(*label)),
+            ("t_compute_s", Json::num(*t_compute)),
+            ("t_comm_s", Json::num(t_comm)),
+            ("comm_share", Json::num(share)),
+            ("paper_comm_share", Json::num(*paper_share)),
+        ]));
+    }
+    print_table(&["config", "compute/iter", "WAN/sync", "comm share", "paper"], &rows);
+    let _ = BASELINE_ITER_S; // catalog anchor, referenced for the record
+    let doc = Json::obj(vec![("rows", Json::arr(out))]);
+    save_result("fig3", &doc);
+    doc
+}
+
+/// Single-region helper used by several experiments.
+pub fn single_region_env(device: Device, units: u32, data: usize) -> CloudEnv {
+    CloudEnv::new(vec![Region::new(0, "Shanghai", vec![(device, units)], data)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_matches_paper_shape() {
+        let doc = fig3();
+        let rows = doc.get("rows").as_arr().unwrap();
+        let cpu = rows[0].get("comm_share").as_f64().unwrap();
+        let gpu = rows[1].get("comm_share").as_f64().unwrap();
+        // Paper: 64.9% (CPU), 98.4% (GPU).
+        assert!((cpu - 0.649).abs() < 0.05, "cpu share {cpu}");
+        assert!((gpu - 0.984).abs() < 0.01, "gpu share {gpu}");
+        assert!(gpu > cpu);
+    }
+
+    #[test]
+    fn table1_reproduces_all_rows() {
+        let doc = table1();
+        for row in doc.get("rows").as_arr().unwrap() {
+            let tn = row.get("tn").as_f64().unwrap();
+            let ptn = row.get("paper_tn").as_f64().unwrap();
+            assert!((tn - ptn).abs() / ptn < 0.01, "{row:?}");
+            let inn = row.get("in").as_f64().unwrap();
+            let pin = row.get("paper_in").as_f64().unwrap();
+            assert!((inn - pin).abs() / pin < 0.01, "{row:?}");
+        }
+    }
+}

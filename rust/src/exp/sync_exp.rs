@@ -1,0 +1,146 @@
+//! Fig 10 + Fig 11 — synchronization strategy evaluation.
+//!
+//! Fig 10: baseline ASGD (freq 1) vs ASGD-GA and AMA at sync frequency
+//! {4, 8}, on the Tencent 100 Mbps WAN, for all three models: training
+//! time, WAN communication time, and accuracy convergence.
+//!
+//! Fig 11: adds SMA (synchronous model averaging) on the self-hosted
+//! Beijing–Shanghai link profile (the paper moved SMA off the public
+//! cloud for cost reasons): SMA is slowest but most accurate.
+
+use crate::cloud::devices::Device;
+use crate::cloud::CloudEnv;
+use crate::coordinator::Coordinator;
+use crate::exp::{print_table, save_result, Scale};
+use crate::net::LinkSpec;
+use crate::sync::{Strategy, SyncConfig};
+use crate::train::{TrainConfig, TrainReport};
+use crate::util::json::Json;
+
+fn settings_fig10() -> Vec<(&'static str, SyncConfig)> {
+    vec![
+        ("ASGD f1", SyncConfig::baseline()),
+        ("ASGD-GA f4", SyncConfig::new(Strategy::AsgdGa, 4)),
+        ("ASGD-GA f8", SyncConfig::new(Strategy::AsgdGa, 8)),
+        ("AMA f4", SyncConfig::new(Strategy::Ama, 4)),
+        ("AMA f8", SyncConfig::new(Strategy::Ama, 8)),
+    ]
+}
+
+fn run_one(
+    coord: &Coordinator,
+    model: &str,
+    scale: Scale,
+    sync: SyncConfig,
+    link: LinkSpec,
+) -> TrainReport {
+    let (n_train, n_eval) = crate::data::default_sizes(model);
+    let env = CloudEnv::tencent_two_region(Device::Skylake, n_train / 2, n_train - n_train / 2);
+    let mut cfg = TrainConfig::new(model);
+    cfg.epochs = scale.epochs(model);
+    cfg.n_train = n_train;
+    cfg.n_eval = n_eval;
+    cfg.sync = sync;
+    cfg.link = link;
+    crate::train::run_geo_training(coord.runtime(), &env, env.greedy_plan(), cfg)
+        .unwrap_or_else(|e| panic!("{model} {}: {e}", sync.strategy.name()))
+}
+
+fn report_fields(label: &str, r: &TrainReport, baseline: &TrainReport) -> (Vec<String>, Json) {
+    let speedup = baseline.total_time / r.total_time;
+    let comm_red = if baseline.total_wan_time() > 0.0 {
+        1.0 - r.total_wan_time() / baseline.total_wan_time()
+    } else {
+        0.0
+    };
+    let row = vec![
+        r.model.clone(),
+        label.to_string(),
+        format!("{:.0}s", r.total_time),
+        format!("{:.2}x", speedup),
+        format!("{:.0}s", r.total_wan_time()),
+        format!("{:.1}%", comm_red * 100.0),
+        format!("{:.1}MB", r.wan_bytes as f64 / 1e6),
+        format!("{:.4}", r.final_accuracy),
+    ];
+    let json = Json::obj(vec![
+        ("model", Json::str(&r.model)),
+        ("setting", Json::str(label)),
+        ("strategy", Json::str(&r.strategy)),
+        ("freq", Json::num(r.sync_freq as f64)),
+        ("total_time", Json::num(r.total_time)),
+        ("speedup", Json::num(speedup)),
+        ("comm_wait", Json::num(r.total_comm_wait())),
+        ("wan_time", Json::num(r.total_wan_time())),
+        ("comm_reduction", Json::num(comm_red)),
+        ("wan_bytes", Json::num(r.wan_bytes as f64)),
+        ("final_acc", Json::num(r.final_accuracy)),
+        (
+            "curve",
+            Json::arr(r.curve.iter().map(|e| {
+                Json::obj(vec![
+                    ("epoch", Json::num(e.epoch as f64)),
+                    ("t", Json::num(e.t)),
+                    ("acc", Json::num(e.accuracy)),
+                ])
+            })),
+        ),
+    ]);
+    (row, json)
+}
+
+/// Fig 10 — ASGD vs ASGD-GA vs AMA at freq {1, 4, 8}.
+pub fn fig10(coord: &Coordinator, scale: Scale) -> Json {
+    println!("Fig 10: synchronization strategies on the 100 Mbps WAN");
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for model in scale.models() {
+        let mut baseline: Option<TrainReport> = None;
+        for (label, sync) in settings_fig10() {
+            let r = run_one(coord, model, scale, sync, LinkSpec::wan_100mbps());
+            let base = baseline.get_or_insert_with(|| r.clone());
+            let (row, json) = report_fields(label, &r, base);
+            rows.push(row);
+            out.push(json);
+        }
+    }
+    print_table(
+        &["model", "setting", "time", "speedup", "comm", "comm red.", "WAN", "final acc"],
+        &rows,
+    );
+    println!("  (paper: speedups up to 1.2x lenet/resnet, 1.7x deepfm;");
+    println!("   comm time -48..58% at f4, -57..73% at f8)");
+    let doc = Json::obj(vec![("rows", Json::arr(out))]);
+    save_result("fig10", &doc);
+    doc
+}
+
+/// Fig 11 — adds SMA on the self-hosted link (ResNet, as in the paper).
+pub fn fig11(coord: &Coordinator, scale: Scale) -> Json {
+    println!("Fig 11: + SMA in the self-hosted environment (ResNet)");
+    let model = "resnet";
+    let settings: Vec<(&str, SyncConfig)> = vec![
+        ("ASGD f1", SyncConfig::baseline()),
+        ("ASGD-GA f8", SyncConfig::new(Strategy::AsgdGa, 8)),
+        ("AMA f8", SyncConfig::new(Strategy::Ama, 8)),
+        ("SMA f8", SyncConfig::new(Strategy::Sma, 8)),
+    ];
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    let mut baseline: Option<TrainReport> = None;
+    for (label, sync) in settings {
+        let r = run_one(coord, model, scale, sync, LinkSpec::self_hosted());
+        let base = baseline.get_or_insert_with(|| r.clone());
+        let (row, json) = report_fields(label, &r, base);
+        rows.push(row);
+        out.push(json);
+    }
+    print_table(
+        &["model", "setting", "time", "speedup", "comm", "comm red.", "WAN", "final acc"],
+        &rows,
+    );
+    println!("  (paper: SMA slowest (≈baseline time) but best accuracy)");
+    let doc = Json::obj(vec![("rows", Json::arr(out))]);
+    save_result("fig11", &doc);
+    doc
+}

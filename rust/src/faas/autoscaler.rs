@@ -1,0 +1,133 @@
+//! Replica autoscaling policies for the FaaS substrate.
+//!
+//! OpenFaaS scales functions on invocation pressure; Cloudless-Training's
+//! training plane additionally scales *by plan* (the elastic scheduler
+//! decides worker counts) and scales-to-zero on local finish. This module
+//! provides both policies over the runtime's replica primitives, plus the
+//! pressure-based policy for the control-plane functions.
+
+use super::{FaasRuntime, ReplicaId, ReplicaState};
+use crate::sim::Time;
+
+/// Scaling decision for one reconciliation tick.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Spawn this many new replicas.
+    Up(u32),
+    /// Terminate these replicas.
+    Down(Vec<ReplicaId>),
+    Hold,
+}
+
+/// Plan-driven policy: keep exactly `target` ready-or-starting replicas
+/// (what the elastic scheduler's resourcing plan dictates per cloud).
+pub fn reconcile_to_target(rt: &FaasRuntime, key: &str, target: u32) -> ScaleAction {
+    let live: Vec<_> = rt
+        .replicas_of(key)
+        .into_iter()
+        .filter(|r| r.state != ReplicaState::Terminated)
+        .collect();
+    let n = live.len() as u32;
+    if n < target {
+        ScaleAction::Up(target - n)
+    } else if n > target {
+        // Terminate the youngest first (they have the least warm state).
+        let mut extra: Vec<_> = live.into_iter().collect();
+        extra.sort_by(|a, b| b.started_at.partial_cmp(&a.started_at).unwrap());
+        ScaleAction::Down(extra.into_iter().take((n - target) as usize).map(|r| r.id).collect())
+    } else {
+        ScaleAction::Hold
+    }
+}
+
+/// Pressure policy for stateless control-plane functions: one replica per
+/// `per_replica` in-flight invocations, within [1, max].
+pub fn pressure_target(in_flight: u32, per_replica: u32, max: u32) -> u32 {
+    in_flight.div_ceil(per_replica.max(1)).clamp(1, max)
+}
+
+/// Apply a decision against the runtime at `now`; returns spawned ids.
+pub fn apply(
+    rt: &mut FaasRuntime,
+    key: &str,
+    action: &ScaleAction,
+    now: Time,
+) -> anyhow::Result<Vec<ReplicaId>> {
+    match action {
+        ScaleAction::Hold => Ok(Vec::new()),
+        ScaleAction::Up(n) => {
+            let mut spawned = Vec::new();
+            for _ in 0..*n {
+                let (id, _) = rt.scale_up(key, now)?;
+                spawned.push(id);
+            }
+            Ok(spawned)
+        }
+        ScaleAction::Down(ids) => {
+            for id in ids {
+                rt.terminate(*id, now);
+            }
+            Ok(Vec::new())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faas::{FunctionKind, FunctionSpec};
+
+    fn rt_with_workers(n: u32) -> (FaasRuntime, String) {
+        let mut rt = FaasRuntime::new();
+        let key = rt.register(FunctionSpec::new("w", "c0", FunctionKind::Worker, 0));
+        for i in 0..n {
+            let (id, _) = rt.scale_up(&key, i as f64).unwrap();
+            rt.mark_ready(id);
+        }
+        (rt, key)
+    }
+
+    #[test]
+    fn reconcile_scales_up_to_plan() {
+        let (mut rt, key) = rt_with_workers(2);
+        let action = reconcile_to_target(&rt, &key, 5);
+        assert_eq!(action, ScaleAction::Up(3));
+        let spawned = apply(&mut rt, &key, &action, 10.0).unwrap();
+        assert_eq!(spawned.len(), 3);
+        assert_eq!(reconcile_to_target(&rt, &key, 5), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn reconcile_scales_down_youngest_first() {
+        let (mut rt, key) = rt_with_workers(4);
+        let action = reconcile_to_target(&rt, &key, 2);
+        match &action {
+            ScaleAction::Down(ids) => {
+                assert_eq!(ids.len(), 2);
+                // youngest two were started at t=2 and t=3
+                for id in ids {
+                    assert!(rt.replica(*id).unwrap().started_at >= 2.0);
+                }
+            }
+            other => panic!("expected Down, got {other:?}"),
+        }
+        apply(&mut rt, &key, &action, 20.0).unwrap();
+        assert_eq!(rt.ready_replicas_of(&key).len(), 2);
+    }
+
+    #[test]
+    fn terminated_replicas_dont_count() {
+        let (mut rt, key) = rt_with_workers(3);
+        let ids: Vec<_> = rt.ready_replicas_of(&key).iter().map(|r| r.id).collect();
+        rt.terminate(ids[0], 5.0);
+        assert_eq!(reconcile_to_target(&rt, &key, 3), ScaleAction::Up(1));
+    }
+
+    #[test]
+    fn pressure_targets() {
+        assert_eq!(pressure_target(0, 10, 8), 1);
+        assert_eq!(pressure_target(25, 10, 8), 3);
+        assert_eq!(pressure_target(1000, 10, 8), 8);
+        assert_eq!(pressure_target(5, 0, 8), 5); // degenerate per_replica clamps to 1
+    }
+}

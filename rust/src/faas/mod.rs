@@ -1,0 +1,426 @@
+//! Serverless (FaaS) substrate — the stand-in for the paper's customized
+//! OpenFaaS deployment.
+//!
+//! The paper extends OpenFaaS in exactly two ways (§IMPLEMENTATION):
+//!   1. a *workflow* entity — a DAG of functions the gateway can deploy
+//!      and invoke as a unit (see [`workflow`]);
+//!   2. *function addressing* — a table mapping each function replica's
+//!      identity to its (possibly dynamic) endpoint, kept fresh as
+//!      replicas churn, plus WAN identities assigned by the global
+//!      communicator so PS communicators in different clouds can reach
+//!      each other.
+//!
+//! This module provides both, plus the base runtime pieces they sit on:
+//! function specs, replicas with lifecycle (cold start -> ready ->
+//! terminated), a gateway that routes invocations, and replica scaling
+//! (training workers are "terminated immediately after the local training
+//! finishes" — that release is what the cost model bills).
+
+pub mod autoscaler;
+pub mod workflow;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::net::RegionId;
+use crate::sim::Time;
+
+/// Role a function plays in the Cloudless-Training topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FunctionKind {
+    /// Control plane: loads the scheduling strategy, generates plans.
+    Scheduler,
+    /// Control plane: assigns WAN identities to PS communicators.
+    GlobalCommunicator,
+    /// Physical plane: stateful parameter server (one per cloud).
+    ParameterServer,
+    /// Physical plane: gRPC sender/receiver bridging a PS onto the WAN.
+    PsCommunicator,
+    /// Physical plane: training worker (pull, SGD, push).
+    Worker,
+    /// Anything else.
+    Generic,
+}
+
+/// Static description of a deployable function.
+#[derive(Debug, Clone)]
+pub struct FunctionSpec {
+    pub name: String,
+    pub namespace: String,
+    pub kind: FunctionKind,
+    pub region: RegionId,
+    /// Cold-start latency when a replica must be spawned to serve an
+    /// invocation (OpenFaaS pulls + starts the container).
+    pub cold_start_s: Time,
+}
+
+impl FunctionSpec {
+    pub fn new(name: &str, namespace: &str, kind: FunctionKind, region: RegionId) -> Self {
+        // Defaults reflect measured OpenFaaS cold starts (sub-second for
+        // warm images; training workers carry heavier images).
+        let cold_start_s = match kind {
+            FunctionKind::Worker => 2.5,
+            FunctionKind::ParameterServer => 2.0,
+            _ => 0.8,
+        };
+        FunctionSpec { name: name.into(), namespace: namespace.into(), kind, region, cold_start_s }
+    }
+
+    pub fn key(&self) -> String {
+        format!("{}/{}", self.namespace, self.name)
+    }
+}
+
+/// A network endpoint. Cluster-local endpoints are 10.x addresses; WAN
+/// identities (assigned by the global communicator) are public.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Endpoint {
+    pub ip: [u8; 4],
+    pub port: u16,
+}
+
+impl fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}.{}.{}.{}:{}", self.ip[0], self.ip[1], self.ip[2], self.ip[3], self.port)
+    }
+}
+
+pub type ReplicaId = u64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    Starting,
+    Ready,
+    Terminated,
+}
+
+/// A live function replica.
+#[derive(Debug, Clone)]
+pub struct Replica {
+    pub id: ReplicaId,
+    pub function: String, // spec key
+    pub region: RegionId,
+    pub endpoint: Endpoint,
+    pub state: ReplicaState,
+    pub started_at: Time,
+    pub ready_at: Time,
+    pub terminated_at: Option<Time>,
+}
+
+impl Replica {
+    /// Seconds this replica held resources in [start, end-of-life|now].
+    pub fn held_seconds(&self, now: Time) -> Time {
+        self.terminated_at.unwrap_or(now) - self.started_at
+    }
+}
+
+/// The function addressing table — the paper's second OpenFaaS extension.
+/// Identity -> endpoint, with live remapping ("the endpoint of functions
+/// can be dynamic, the mapping should also be updated in real-time").
+#[derive(Debug, Default)]
+pub struct AddressingTable {
+    entries: BTreeMap<ReplicaId, Endpoint>,
+    /// WAN identities assigned by the global communicator (replica ->
+    /// public endpoint). Only PS communicators get one.
+    wan_identities: BTreeMap<ReplicaId, Endpoint>,
+    remaps: u64,
+}
+
+impl AddressingTable {
+    pub fn bind(&mut self, replica: ReplicaId, ep: Endpoint) {
+        if let Some(old) = self.entries.insert(replica, ep) {
+            if old != ep {
+                self.remaps += 1;
+            }
+        }
+    }
+
+    pub fn lookup(&self, replica: ReplicaId) -> Option<Endpoint> {
+        self.entries.get(&replica).copied()
+    }
+
+    pub fn assign_wan_identity(&mut self, replica: ReplicaId, ep: Endpoint) {
+        self.wan_identities.insert(replica, ep);
+    }
+
+    pub fn wan_identity(&self, replica: ReplicaId) -> Option<Endpoint> {
+        self.wan_identities.get(&replica).copied()
+    }
+
+    pub fn remap_count(&self) -> u64 {
+        self.remaps
+    }
+
+    pub fn unbind(&mut self, replica: ReplicaId) {
+        self.entries.remove(&replica);
+        self.wan_identities.remove(&replica);
+    }
+}
+
+/// Outcome of routing an invocation through the gateway.
+#[derive(Debug, Clone, Copy)]
+pub struct Invocation {
+    pub replica: ReplicaId,
+    /// Delay before the function body runs (0 for a warm replica; cold
+    /// start otherwise).
+    pub dispatch_delay: Time,
+    pub cold: bool,
+}
+
+/// The FaaS runtime for one federation of clusters: function registry +
+/// replica lifecycle + gateway routing + addressing.
+pub struct FaasRuntime {
+    specs: BTreeMap<String, FunctionSpec>,
+    replicas: BTreeMap<ReplicaId, Replica>,
+    by_function: BTreeMap<String, Vec<ReplicaId>>,
+    pub addressing: AddressingTable,
+    next_replica: ReplicaId,
+    next_port: u16,
+    rr_counters: BTreeMap<String, usize>,
+    invocations: u64,
+    cold_starts: u64,
+}
+
+impl Default for FaasRuntime {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FaasRuntime {
+    pub fn new() -> Self {
+        FaasRuntime {
+            specs: BTreeMap::new(),
+            replicas: BTreeMap::new(),
+            by_function: BTreeMap::new(),
+            addressing: AddressingTable::default(),
+            next_replica: 1,
+            next_port: 31000,
+            rr_counters: BTreeMap::new(),
+            invocations: 0,
+            cold_starts: 0,
+        }
+    }
+
+    /// Register (deploy) a function. Idempotent on the key.
+    pub fn register(&mut self, spec: FunctionSpec) -> String {
+        let key = spec.key();
+        self.specs.entry(key.clone()).or_insert(spec);
+        self.by_function.entry(key.clone()).or_default();
+        key
+    }
+
+    pub fn spec(&self, key: &str) -> Option<&FunctionSpec> {
+        self.specs.get(key)
+    }
+
+    fn alloc_endpoint(&mut self, region: RegionId) -> Endpoint {
+        let port = self.next_port;
+        self.next_port = self.next_port.wrapping_add(1).max(31000);
+        // Cluster-local address space per region: 10.<region>.0.x
+        Endpoint { ip: [10, region as u8, 0, (port % 250) as u8 + 1], port }
+    }
+
+    /// Spawn a replica of `key` at `now`; it becomes Ready after the
+    /// function's cold start. Returns the replica id and its ready time.
+    pub fn scale_up(&mut self, key: &str, now: Time) -> anyhow::Result<(ReplicaId, Time)> {
+        let spec = self
+            .specs
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("unknown function {key}"))?
+            .clone();
+        let id = self.next_replica;
+        self.next_replica += 1;
+        let ep = self.alloc_endpoint(spec.region);
+        let ready_at = now + spec.cold_start_s;
+        self.replicas.insert(
+            id,
+            Replica {
+                id,
+                function: key.to_string(),
+                region: spec.region,
+                endpoint: ep,
+                state: ReplicaState::Starting,
+                started_at: now,
+                ready_at,
+                terminated_at: None,
+            },
+        );
+        self.by_function.get_mut(key).unwrap().push(id);
+        self.addressing.bind(id, ep);
+        self.cold_starts += 1;
+        Ok((id, ready_at))
+    }
+
+    /// Mark a starting replica ready (the trainer calls this when the sim
+    /// clock reaches `ready_at`).
+    pub fn mark_ready(&mut self, id: ReplicaId) {
+        if let Some(r) = self.replicas.get_mut(&id) {
+            r.state = ReplicaState::Ready;
+        }
+    }
+
+    /// Terminate a replica, releasing its resources at `now` (serverless
+    /// scale-to-zero when local training finishes).
+    pub fn terminate(&mut self, id: ReplicaId, now: Time) {
+        if let Some(r) = self.replicas.get_mut(&id) {
+            if r.state != ReplicaState::Terminated {
+                r.state = ReplicaState::Terminated;
+                r.terminated_at = Some(now);
+                self.addressing.unbind(id);
+            }
+        }
+    }
+
+    /// Simulate a replica being rescheduled onto a new node: its endpoint
+    /// changes and the addressing table must follow (the paper's
+    /// "difficulty": dynamic endpoints).
+    pub fn reschedule(&mut self, id: ReplicaId) -> Option<Endpoint> {
+        let region = self.replicas.get(&id)?.region;
+        let ep = self.alloc_endpoint(region);
+        let r = self.replicas.get_mut(&id)?;
+        r.endpoint = ep;
+        self.addressing.bind(id, ep);
+        Some(ep)
+    }
+
+    pub fn replica(&self, id: ReplicaId) -> Option<&Replica> {
+        self.replicas.get(&id)
+    }
+
+    pub fn replicas_of(&self, key: &str) -> Vec<&Replica> {
+        self.by_function
+            .get(key)
+            .map(|ids| ids.iter().filter_map(|id| self.replicas.get(id)).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn ready_replicas_of(&self, key: &str) -> Vec<&Replica> {
+        self.replicas_of(key)
+            .into_iter()
+            .filter(|r| r.state == ReplicaState::Ready)
+            .collect()
+    }
+
+    /// Gateway: route an invocation to a ready replica (round-robin), or
+    /// cold-start one if none exists.
+    pub fn invoke(&mut self, key: &str, now: Time) -> anyhow::Result<Invocation> {
+        self.invocations += 1;
+        let ready: Vec<ReplicaId> =
+            self.ready_replicas_of(key).into_iter().map(|r| r.id).collect();
+        if !ready.is_empty() {
+            let ctr = self.rr_counters.entry(key.to_string()).or_insert(0);
+            let replica = ready[*ctr % ready.len()];
+            *ctr += 1;
+            return Ok(Invocation { replica, dispatch_delay: 0.0, cold: false });
+        }
+        // Cold start path.
+        let (id, ready_at) = self.scale_up(key, now)?;
+        Ok(Invocation { replica: id, dispatch_delay: ready_at - now, cold: true })
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.invocations, self.cold_starts)
+    }
+
+    /// Total held core-seconds proxy: seconds each non-control replica of
+    /// `key` was alive in [0, now].
+    pub fn held_seconds_of(&self, key: &str, now: Time) -> Time {
+        self.replicas_of(key).iter().map(|r| r.held_seconds(now)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt_with(name: &str, kind: FunctionKind) -> (FaasRuntime, String) {
+        let mut rt = FaasRuntime::new();
+        let key = rt.register(FunctionSpec::new(name, "train", kind, 0));
+        (rt, key)
+    }
+
+    #[test]
+    fn cold_start_then_warm() {
+        let (mut rt, key) = rt_with("worker", FunctionKind::Worker);
+        let inv1 = rt.invoke(&key, 0.0).unwrap();
+        assert!(inv1.cold);
+        assert!((inv1.dispatch_delay - 2.5).abs() < 1e-9);
+        rt.mark_ready(inv1.replica);
+        let inv2 = rt.invoke(&key, 3.0).unwrap();
+        assert!(!inv2.cold);
+        assert_eq!(inv2.dispatch_delay, 0.0);
+        assert_eq!(inv2.replica, inv1.replica);
+        assert_eq!(rt.stats(), (2, 1));
+    }
+
+    #[test]
+    fn round_robin_across_ready_replicas() {
+        let (mut rt, key) = rt_with("ps", FunctionKind::ParameterServer);
+        let (a, _) = rt.scale_up(&key, 0.0).unwrap();
+        let (b, _) = rt.scale_up(&key, 0.0).unwrap();
+        rt.mark_ready(a);
+        rt.mark_ready(b);
+        let r1 = rt.invoke(&key, 5.0).unwrap().replica;
+        let r2 = rt.invoke(&key, 5.0).unwrap().replica;
+        let r3 = rt.invoke(&key, 5.0).unwrap().replica;
+        assert_ne!(r1, r2);
+        assert_eq!(r1, r3);
+    }
+
+    #[test]
+    fn addressing_follows_reschedule() {
+        let (mut rt, key) = rt_with("ps-comm", FunctionKind::PsCommunicator);
+        let (id, _) = rt.scale_up(&key, 0.0).unwrap();
+        let ep0 = rt.addressing.lookup(id).unwrap();
+        let ep1 = rt.reschedule(id).unwrap();
+        assert_ne!(ep0, ep1);
+        assert_eq!(rt.addressing.lookup(id), Some(ep1));
+        assert_eq!(rt.addressing.remap_count(), 1);
+    }
+
+    #[test]
+    fn wan_identity_assignment() {
+        let (mut rt, key) = rt_with("ps-comm", FunctionKind::PsCommunicator);
+        let (id, _) = rt.scale_up(&key, 0.0).unwrap();
+        assert_eq!(rt.addressing.wan_identity(id), None);
+        let wan = Endpoint { ip: [101, 32, 4, 7], port: 443 };
+        rt.addressing.assign_wan_identity(id, wan);
+        assert_eq!(rt.addressing.wan_identity(id), Some(wan));
+    }
+
+    #[test]
+    fn terminate_releases_and_unbinds() {
+        let (mut rt, key) = rt_with("worker", FunctionKind::Worker);
+        let (id, ready_at) = rt.scale_up(&key, 1.0).unwrap();
+        rt.mark_ready(id);
+        rt.terminate(id, 11.0);
+        let r = rt.replica(id).unwrap();
+        assert_eq!(r.state, ReplicaState::Terminated);
+        assert!((r.held_seconds(99.0) - 10.0).abs() < 1e-9);
+        assert_eq!(rt.addressing.lookup(id), None);
+        assert!(ready_at > 1.0);
+        // terminated replicas never serve invocations
+        let inv = rt.invoke(&key, 12.0).unwrap();
+        assert!(inv.cold);
+        assert_ne!(inv.replica, id);
+    }
+
+    #[test]
+    fn unknown_function_errors() {
+        let mut rt = FaasRuntime::new();
+        assert!(rt.invoke("train/nope", 0.0).is_err());
+        assert!(rt.scale_up("train/nope", 0.0).is_err());
+    }
+
+    #[test]
+    fn endpoints_are_region_scoped() {
+        let mut rt = FaasRuntime::new();
+        let k0 = rt.register(FunctionSpec::new("a", "ns", FunctionKind::Generic, 0));
+        let k1 = rt.register(FunctionSpec::new("b", "ns", FunctionKind::Generic, 3));
+        let (r0, _) = rt.scale_up(&k0, 0.0).unwrap();
+        let (r1, _) = rt.scale_up(&k1, 0.0).unwrap();
+        assert_eq!(rt.replica(r0).unwrap().endpoint.ip[1], 0);
+        assert_eq!(rt.replica(r1).unwrap().endpoint.ip[1], 3);
+    }
+}

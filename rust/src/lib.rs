@@ -1,0 +1,37 @@
+//! # Cloudless-Training
+//!
+//! A from-scratch reproduction of *Cloudless-Training: A Framework to
+//! Improve Efficiency of Geo-Distributed ML Training* (Tan, Shi, Lv, Zhao
+//! — CS.DC 2023) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the serverless geo-distributed training
+//!   coordinator: control plane (elastic scheduler + global communicator
+//!   addressing), physical training plane (per-cloud PS workflows), WAN
+//!   synchronization strategies (ASGD / ASGD-GA / AMA / SMA), and every
+//!   substrate they need (FaaS runtime, WAN fabric, cloud/device/cost
+//!   models, discrete-event simulator).
+//! - **L2** — JAX models (LeNet / ResNet-lite / DeepFM / Transformer),
+//!   AOT-lowered to HLO text under `artifacts/` (`make artifacts`).
+//! - **L1** — Pallas kernels (tiled matmul, fused bias+act, PS vector
+//!   ops) called from L2.
+//!
+//! Python never runs on the training path: the `runtime` module loads the
+//! HLO artifacts through PJRT (`xla` crate) and executes them natively.
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod cloud;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod faas;
+pub mod net;
+pub mod prop;
+pub mod ps;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod sync;
+pub mod train;
+pub mod util;

@@ -1,0 +1,206 @@
+//! `cloudless` — the Cloudless-Training command-line launcher.
+//!
+//! ```text
+//! cloudless train   [--config <file>] [--model lenet] [--strategy asgd-ga]
+//!                   [--freq 4] [--epochs 8] [--scheduling elastic|greedy]
+//!                   [--seed 42] [--json]
+//! cloudless plan    [--config <file>]          print the elastic plan
+//! cloudless exp     --id <table1|fig2|fig3|fig7|table4|fig8|fig9|fig10|
+//!                         fig11|ablations|all> [--full]
+//! cloudless devices                            print the device catalog
+//! cloudless check                              verify artifacts load + run
+//! ```
+
+use cloudless::cloud::devices::Device;
+use cloudless::cloud::CloudEnv;
+use cloudless::config;
+use cloudless::coordinator::{Coordinator, JobSpec, SchedulingMode};
+use cloudless::exp::{self, Scale};
+use cloudless::sync::{Strategy, SyncConfig};
+use cloudless::util::args::Args;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("CLOUDLESS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+const USAGE: &str = "\
+cloudless — serverless geo-distributed ML training (paper reproduction)
+
+USAGE:
+  cloudless train   [--config f] [--model m] [--strategy s] [--freq n]
+                    [--epochs n] [--scheduling elastic|greedy] [--seed n]
+                    [--n-train n] [--n-eval n] [--json]
+  cloudless plan    [--config f]
+  cloudless exp     --id <table1|fig2|fig3|fig7|table4|fig8|fig9|fig10|fig11|ablations|compression|all> [--full]
+  cloudless devices
+  cloudless check
+";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("devices") => cmd_devices(),
+        Some("check") => cmd_check(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn job_from_args(args: &Args) -> anyhow::Result<JobSpec> {
+    if let Some(path) = args.get("config") {
+        return config::load_job(path);
+    }
+    let model = args.get_or("model", "lenet").to_string();
+    let (n_train_default, n_eval_default) = cloudless::data::default_sizes(&model);
+    let env = CloudEnv::tencent_two_region(
+        Device::from_name(args.get_or("cq-device", "sky"))
+            .ok_or_else(|| anyhow::anyhow!("unknown --cq-device"))?,
+        args.usize("sh-data", n_train_default / 2),
+        args.usize("cq-data", n_train_default - n_train_default / 2),
+    );
+    let mut spec = JobSpec::new(&model, env);
+    spec.train.epochs = args.usize("epochs", 8);
+    spec.train.seed = args.u64("seed", 42);
+    spec.train.n_train = args.usize("n-train", n_train_default);
+    spec.train.n_eval = args.usize("n-eval", n_eval_default);
+    spec.train.lr = args.f64("lr", spec.train.lr as f64) as f32;
+    let strategy = Strategy::from_name(args.get_or("strategy", "asgd-ga"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --strategy"))?;
+    spec.train.sync = SyncConfig::new(strategy, args.usize("freq", 4) as u32);
+    spec.scheduling = match args.get_or("scheduling", "elastic") {
+        "greedy" => SchedulingMode::Greedy,
+        "elastic" => SchedulingMode::Elastic,
+        other => anyhow::bail!("unknown --scheduling {other}"),
+    };
+    if args.flag("skip-eval") {
+        spec.train.skip_eval = true;
+    }
+    Ok(spec)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let spec = job_from_args(args)?;
+    let coord = Coordinator::new(artifacts_dir())?;
+    let report = coord.submit(&spec)?;
+    if args.flag("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!("{}", report.summary());
+        for pt in &report.curve {
+            println!(
+                "  epoch {:>3}  t={:>8.1}s  acc={:.4}  loss={:.4}",
+                pt.epoch, pt.t, pt.accuracy, pt.loss
+            );
+        }
+        for p in &report.partitions {
+            println!(
+                "  {:<10} units={:<2} steps={:<6} finish={:.1}s wait={:.1}s comm={:.1}s staleness={:.2}",
+                p.region, p.units, p.steps, p.local_finish, p.waiting, p.comm_wait, p.mean_staleness
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let spec = job_from_args(args)?;
+    let plan = cloudless::sched::optimal_matching(&spec.env);
+    println!("elastic resourcing plan (straggler: {}):", spec.env.regions[plan.straggler].name);
+    for (alloc, region) in plan.allocations.iter().zip(&spec.env.regions) {
+        println!(
+            "  {:<12} {:?}  LP full={:.6} planned={:.6}",
+            region.name, alloc.units, plan.full_lp[region.id], plan.planned_lp[region.id]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let id = args.get_or("id", "all").to_string();
+    let scale = Scale::from_flag(args.flag("full"));
+    let coord = Coordinator::new(artifacts_dir())?;
+    let run = |id: &str, coord: &Coordinator| -> anyhow::Result<()> {
+        match id {
+            "table1" => {
+                exp::motivation::table1();
+            }
+            "fig2" => {
+                exp::motivation::fig2(coord, scale);
+            }
+            "fig3" => {
+                exp::motivation::fig3();
+            }
+            "fig7" => {
+                exp::usability::fig7(coord, scale);
+            }
+            "table4" => {
+                exp::scheduling::table4(coord);
+            }
+            "fig8" => {
+                exp::scheduling::fig8_fig9(coord, scale, false);
+            }
+            "fig9" | "fig8_fig9" => {
+                exp::scheduling::fig8_fig9(coord, scale, true);
+            }
+            "fig10" => {
+                exp::sync_exp::fig10(coord, scale);
+            }
+            "fig11" => {
+                exp::sync_exp::fig11(coord, scale);
+            }
+            "ablations" => exp::ablations::all(coord, scale),
+            "compression" => {
+                exp::ablations::compression_vs_frequency(coord, scale);
+            }
+            other => anyhow::bail!("unknown experiment id {other:?}"),
+        }
+        Ok(())
+    };
+    if id == "all" {
+        for id in ["table1", "fig3", "fig2", "table4", "fig7", "fig9", "fig10", "fig11"] {
+            println!("\n=== {id} ===");
+            run(id, &coord)?;
+        }
+    } else {
+        run(&id, &coord)?;
+    }
+    Ok(())
+}
+
+fn cmd_devices() -> anyhow::Result<()> {
+    exp::motivation::table1();
+    Ok(())
+}
+
+fn cmd_check() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    let rt = cloudless::runtime::PjrtRuntime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    for model in ["lenet", "resnet", "deepfm", "transformer"] {
+        match rt.load_model(model) {
+            Ok(m) => {
+                // one real step to prove executability
+                let (ds, _) = cloudless::data::generate(&m.meta, m.meta.batch_size, 1, 0);
+                let idxs: Vec<usize> = (0..m.meta.batch_size).collect();
+                let (x, y) = ds.batch(&idxs, &m.meta);
+                let (g, loss) = m.train_step(&m.init_params, &x, &y)?;
+                println!(
+                    "  {model:<12} OK  P={:<9} loss={loss:.4} |g|={:.4} compute={}",
+                    m.meta.param_count,
+                    cloudless::runtime::vecops::l2_norm(&g),
+                    m.meta.compute,
+                );
+            }
+            Err(e) => println!("  {model:<12} FAILED: {e}"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,322 @@
+//! WAN/LAN network substrate.
+//!
+//! Models the inter-cloud links the paper trains over: Shanghai–Chongqing
+//! at 100 Mbps (Tencent Cloud's maximum inter-region setting) with the
+//! bandwidth fluctuations the paper repeatedly blames for noisy declines
+//! ("since the fluctuations in WAN, the decline is not as twice as
+//! expected"). A transfer on a directed link serializes FIFO behind earlier
+//! transfers (PS communicators send over one connection), takes
+//! `bytes*8 / (bandwidth * fluct)` to serialize plus propagation latency,
+//! and can be failure-injected (drop probability, outage windows).
+//!
+//! All stochasticity comes from a per-link PCG stream seeded from the
+//! experiment seed, so runs replay deterministically.
+
+use std::collections::BTreeMap;
+
+use crate::sim::Time;
+use crate::util::rng::Pcg32;
+
+/// Region identifier (index into the cloud's region table).
+pub type RegionId = usize;
+
+/// Static description of a directed link.
+#[derive(Debug, Clone)]
+pub struct LinkSpec {
+    /// Nominal bandwidth in bits/second.
+    pub bandwidth_bps: f64,
+    /// One-way propagation latency in seconds.
+    pub latency_s: f64,
+    /// Sigma of the mean-1 lognormal bandwidth fluctuation multiplier
+    /// (0.0 = perfectly stable link).
+    pub fluct_sigma: f64,
+    /// Probability a transfer is dropped (failure injection; retried by
+    /// the communicator layer).
+    pub drop_prob: f64,
+    /// Fixed per-transfer setup cost (TCP slow-start / gRPC framing):
+    /// small payloads on a long-RTT WAN never reach line rate, so each
+    /// transfer pays this before streaming at `bandwidth_bps`.
+    pub setup_s: f64,
+}
+
+impl LinkSpec {
+    /// The paper's evaluation WAN: 100 Mbps, ~30 ms cross-China RTT/2,
+    /// visible fluctuation.
+    pub fn wan_100mbps() -> Self {
+        LinkSpec {
+            bandwidth_bps: 100e6,
+            latency_s: 0.015,
+            fluct_sigma: 0.25,
+            drop_prob: 0.0,
+            setup_s: 0.09, // ~3 RTT of cwnd ramp on the cross-China path
+        }
+    }
+
+    /// Intra-cloud LAN: >=10 Gbps, sub-ms latency, stable
+    /// (the paper: WAN is "at least 50 times slower than LAN").
+    pub fn lan() -> Self {
+        LinkSpec { bandwidth_bps: 10e9, latency_s: 0.0005, fluct_sigma: 0.0, drop_prob: 0.0, setup_s: 0.0 }
+    }
+
+    /// The self-hosted Beijing–Shanghai cluster pair used for SMA (Fig 11):
+    /// dedicated link, steadier than the public-cloud WAN.
+    pub fn self_hosted() -> Self {
+        LinkSpec { bandwidth_bps: 300e6, latency_s: 0.012, fluct_sigma: 0.1, drop_prob: 0.0, setup_s: 0.05 }
+    }
+}
+
+/// Outcome of scheduling one transfer on a link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    /// When serialization began (>= submit time; queued behind FIFO).
+    pub start: Time,
+    /// When the last byte left the sender.
+    pub done: Time,
+    /// When the payload is available at the receiver.
+    pub arrival: Time,
+    /// True if the transfer was dropped (arrival/done are then meaningless).
+    pub dropped: bool,
+}
+
+impl Transfer {
+    /// Queueing + serialization + propagation as seen by the sender.
+    pub fn total_delay(&self, submitted: Time) -> Time {
+        self.arrival - submitted
+    }
+}
+
+/// One directed link with live state.
+#[derive(Debug)]
+struct Link {
+    spec: LinkSpec,
+    busy_until: Time,
+    rng: Pcg32,
+    // stats
+    bytes: u64,
+    transfers: u64,
+    drops: u64,
+    busy_time: Time,
+    queue_delay: Time,
+    /// Outage windows (failure injection): transfers cannot start inside.
+    outages: Vec<(Time, Time)>,
+}
+
+/// Per-link statistics snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkStats {
+    pub bytes: u64,
+    pub transfers: u64,
+    pub drops: u64,
+    pub busy_time: Time,
+    pub queue_delay: Time,
+}
+
+/// The network fabric: directed (from, to) -> link.
+pub struct Fabric {
+    links: BTreeMap<(RegionId, RegionId), Link>,
+    default_lan: LinkSpec,
+    seed: u64,
+}
+
+impl Fabric {
+    pub fn new(seed: u64) -> Self {
+        Fabric { links: BTreeMap::new(), default_lan: LinkSpec::lan(), seed }
+    }
+
+    /// Install a directed link. For a symmetric WAN install both directions
+    /// (they fluctuate independently, as real paths do).
+    pub fn add_link(&mut self, from: RegionId, to: RegionId, spec: LinkSpec) {
+        let stream = 0x11AA ^ ((from as u64) << 32) ^ to as u64;
+        self.links.insert(
+            (from, to),
+            Link {
+                spec,
+                busy_until: 0.0,
+                rng: Pcg32::new(self.seed, stream),
+                bytes: 0,
+                transfers: 0,
+                drops: 0,
+                busy_time: 0.0,
+                queue_delay: 0.0,
+                outages: Vec::new(),
+            },
+        );
+    }
+
+    /// Install the same spec in both directions.
+    pub fn add_duplex(&mut self, a: RegionId, b: RegionId, spec: LinkSpec) {
+        self.add_link(a, b, spec.clone());
+        self.add_link(b, a, spec);
+    }
+
+    /// Inject an outage window on a directed link.
+    pub fn add_outage(&mut self, from: RegionId, to: RegionId, from_t: Time, to_t: Time) {
+        if let Some(l) = self.links.get_mut(&(from, to)) {
+            l.outages.push((from_t, to_t));
+        }
+    }
+
+    fn ensure_link(&mut self, from: RegionId, to: RegionId) -> &mut Link {
+        if !self.links.contains_key(&(from, to)) {
+            let spec = self.default_lan.clone();
+            self.add_link(from, to, spec);
+        }
+        self.links.get_mut(&(from, to)).unwrap()
+    }
+
+    /// Schedule a transfer of `bytes` submitted at `now`; returns its timing.
+    pub fn transfer(&mut self, from: RegionId, to: RegionId, bytes: u64, now: Time) -> Transfer {
+        let link = self.ensure_link(from, to);
+        link.transfers += 1;
+
+        if link.spec.drop_prob > 0.0 && (link.rng.f64() as f64) < link.spec.drop_prob {
+            link.drops += 1;
+            return Transfer { start: now, done: now, arrival: f64::INFINITY, dropped: true };
+        }
+
+        let mut start = now.max(link.busy_until);
+        // Outage windows push the start past the window end.
+        for &(o_from, o_to) in &link.outages {
+            if start >= o_from && start < o_to {
+                start = o_to;
+            }
+        }
+        let fluct = if link.spec.fluct_sigma > 0.0 {
+            link.rng.lognormal_mean1(link.spec.fluct_sigma)
+        } else {
+            1.0
+        };
+        let ser = link.spec.setup_s + (bytes as f64) * 8.0 / (link.spec.bandwidth_bps * fluct);
+        let done = start + ser;
+        let arrival = done + link.spec.latency_s;
+
+        link.queue_delay += start - now;
+        link.busy_time += ser;
+        link.busy_until = done;
+        link.bytes += bytes;
+        Transfer { start, done, arrival, dropped: false }
+    }
+
+    /// Pure estimate (no state change): expected transfer seconds at
+    /// nominal bandwidth. Used by analytic experiments (Fig 3).
+    pub fn estimate(&self, from: RegionId, to: RegionId, bytes: u64) -> Time {
+        let spec = self
+            .links
+            .get(&(from, to))
+            .map(|l| l.spec.clone())
+            .unwrap_or_else(|| self.default_lan.clone());
+        spec.setup_s + (bytes as f64) * 8.0 / spec.bandwidth_bps + spec.latency_s
+    }
+
+    pub fn stats(&self, from: RegionId, to: RegionId) -> Option<LinkStats> {
+        self.links.get(&(from, to)).map(|l| LinkStats {
+            bytes: l.bytes,
+            transfers: l.transfers,
+            drops: l.drops,
+            busy_time: l.busy_time,
+            queue_delay: l.queue_delay,
+        })
+    }
+
+    /// Total bytes carried on all inter-region links (WAN traffic for the
+    /// cost model).
+    pub fn total_wan_bytes(&self) -> u64 {
+        self.links
+            .iter()
+            .filter(|((a, b), _)| a != b)
+            .map(|(_, l)| l.bytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stable_wan() -> LinkSpec {
+        LinkSpec { bandwidth_bps: 100e6, latency_s: 0.015, fluct_sigma: 0.0, drop_prob: 0.0, setup_s: 0.0 }
+    }
+
+    #[test]
+    fn serialization_time_exact_when_stable() {
+        let mut f = Fabric::new(1);
+        f.add_link(0, 1, stable_wan());
+        // 48 MB at 100 Mbps = 3.84 s  (the paper's ResNet18 sync payload)
+        let t = f.transfer(0, 1, 48_000_000, 0.0);
+        assert!((t.done - 3.84).abs() < 1e-9, "{t:?}");
+        assert!((t.arrival - 3.855).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifo_queueing() {
+        let mut f = Fabric::new(1);
+        f.add_link(0, 1, stable_wan());
+        let t1 = f.transfer(0, 1, 12_500_000, 0.0); // 1.0 s
+        let t2 = f.transfer(0, 1, 12_500_000, 0.2); // queued behind t1
+        assert!((t1.done - 1.0).abs() < 1e-9);
+        assert!((t2.start - 1.0).abs() < 1e-9);
+        assert!((t2.done - 2.0).abs() < 1e-9);
+        let st = f.stats(0, 1).unwrap();
+        assert!((st.queue_delay - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn directions_are_independent() {
+        let mut f = Fabric::new(1);
+        f.add_duplex(0, 1, stable_wan());
+        let fwd = f.transfer(0, 1, 12_500_000, 0.0);
+        let rev = f.transfer(1, 0, 12_500_000, 0.0);
+        assert!((fwd.start - 0.0).abs() < 1e-12);
+        assert!((rev.start - 0.0).abs() < 1e-12, "reverse path must not queue behind forward");
+    }
+
+    #[test]
+    fn fluctuation_changes_times_but_is_deterministic() {
+        let run = |seed| {
+            let mut f = Fabric::new(seed);
+            f.add_link(0, 1, LinkSpec::wan_100mbps());
+            (0..10).map(|i| f.transfer(0, 1, 1_000_000, i as f64 * 10.0).done).collect::<Vec<_>>()
+        };
+        let a = run(7);
+        let b = run(7);
+        let c = run(8);
+        assert_eq!(a, b, "same seed must replay identically");
+        assert_ne!(a, c, "different seed should differ");
+        // Mean-1 fluctuation: average serialization near nominal (incl. setup).
+        let nominal = 1_000_000.0 * 8.0 / 100e6 + LinkSpec::wan_100mbps().setup_s;
+        let avg: f64 =
+            a.iter().zip(0..).map(|(d, i)| d - (i as f64 * 10.0)).sum::<f64>() / a.len() as f64;
+        assert!((avg - nominal).abs() < nominal, "avg {avg} vs nominal {nominal}");
+    }
+
+    #[test]
+    fn default_lan_for_unknown_pairs() {
+        let mut f = Fabric::new(1);
+        let t = f.transfer(3, 3, 10_000_000, 0.0);
+        assert!(t.done < 0.01, "LAN transfer should be fast: {t:?}");
+    }
+
+    #[test]
+    fn drops_and_outages() {
+        let mut f = Fabric::new(1);
+        f.add_link(0, 1, LinkSpec { drop_prob: 1.0, ..stable_wan() });
+        let t = f.transfer(0, 1, 1000, 0.0);
+        assert!(t.dropped);
+        assert_eq!(f.stats(0, 1).unwrap().drops, 1);
+
+        let mut f2 = Fabric::new(1);
+        f2.add_link(0, 1, stable_wan());
+        f2.add_outage(0, 1, 0.0, 5.0);
+        let t2 = f2.transfer(0, 1, 1000, 1.0);
+        assert!(t2.start >= 5.0, "transfer must wait out the outage: {t2:?}");
+    }
+
+    #[test]
+    fn wan_bytes_excludes_intra_region() {
+        let mut f = Fabric::new(1);
+        f.add_link(0, 1, stable_wan());
+        f.transfer(0, 1, 500, 0.0);
+        f.transfer(2, 2, 999, 0.0);
+        assert_eq!(f.total_wan_bytes(), 500);
+    }
+}

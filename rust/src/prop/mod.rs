@@ -1,0 +1,73 @@
+//! Minimal property-based testing framework (no proptest offline).
+//!
+//! `forall(cases, gen, check)` draws `cases` random inputs from `gen`
+//! (seeded deterministically, streams decorrelated per case) and asserts
+//! `check` on each; failures report the case seed so they replay exactly:
+//!
+//! ```no_run
+//! use cloudless::prop::forall;
+//! forall(200, |r| (r.below(100), r.below(100)), |&(a, b)| {
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// Base seed; override with CLOUDLESS_PROP_SEED for exploration.
+fn base_seed() -> u64 {
+    std::env::var("CLOUDLESS_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC10D)
+}
+
+/// Run `check` against `cases` generated inputs.
+pub fn forall<T, G, C>(cases: usize, mut gen: G, mut check: C)
+where
+    G: FnMut(&mut Pcg32) -> T,
+    C: FnMut(&T),
+    T: std::fmt::Debug,
+{
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = Pcg32::new(seed, case as u64);
+        let input = gen(&mut rng);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| check(&input)));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed on case {case} (CLOUDLESS_PROP_SEED={seed}):\n  input: {input:?}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random f32 vector in [-1, 1).
+pub fn vec_f32(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall(50, |r| r.below(10), |_| {});
+        forall(50, |r| r.below(10), |_| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall(50, |r| r.below(10), |&x| assert!(x < 5));
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        forall(20, |r| r.next_u64(), |&x| a.push(x));
+        forall(20, |r| r.next_u64(), |&x| b.push(x));
+        assert_eq!(a, b);
+    }
+}

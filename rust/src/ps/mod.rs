@@ -1,0 +1,189 @@
+//! Parameter-server state — the stateful PS function at the heart of each
+//! cloud-level training partition.
+//!
+//! Workers pull the latest local model, compute SGD gradients (real PJRT
+//! compute), and push them back; the PS applies them immediately
+//! (asynchronous local update, as in the paper's ElasticDL-derived
+//! training plane) while maintaining the *accumulated gradient* that the
+//! gradient-based WAN strategies (ASGD / ASGD-GA) ship to peer clouds.
+//!
+//! Versioning counts every parameter mutation so gradient staleness
+//! (worker pulled at version v, pushed at version v') is measurable — the
+//! paper argues elastic scheduling improves accuracy precisely by
+//! reducing staleness.
+
+use crate::runtime::vecops;
+
+/// The mutable state of one cloud's parameter server.
+#[derive(Debug, Clone)]
+pub struct PsState {
+    /// Current model parameters (flat f32, the runtime convention).
+    pub params: Vec<f32>,
+    /// Gradient accumulated since the last WAN sync (ASGD/ASGD-GA payload).
+    pub accum: Vec<f32>,
+    /// Number of gradients merged into `accum` since the last sync.
+    pub accum_steps: u32,
+    /// Local SGD updates applied since the last WAN sync.
+    pub updates_since_sync: u32,
+    /// Total local updates ever applied.
+    pub total_updates: u64,
+    /// Parameter version: bumped by every mutation (local or remote).
+    pub version: u64,
+    /// Learning rate used for local and remote-gradient application.
+    pub lr: f32,
+    // --- statistics ---
+    pub sends: u64,
+    pub recvs: u64,
+    /// Sum + count of observed staleness (version delta between pull and
+    /// push) for averaging.
+    pub staleness_sum: u64,
+    pub staleness_n: u64,
+}
+
+impl PsState {
+    pub fn new(init_params: Vec<f32>, lr: f32) -> PsState {
+        let n = init_params.len();
+        PsState {
+            params: init_params,
+            accum: vec![0.0; n],
+            accum_steps: 0,
+            updates_since_sync: 0,
+            total_updates: 0,
+            version: 0,
+            lr,
+            sends: 0,
+            recvs: 0,
+            staleness_sum: 0,
+            staleness_n: 0,
+        }
+    }
+
+    /// Worker pull: snapshot of the current model + its version.
+    pub fn pull(&self) -> (Vec<f32>, u64) {
+        (self.params.clone(), self.version)
+    }
+
+    /// Worker push: apply the gradient locally (async SGD) and merge it
+    /// into the accumulator. `pulled_version` is what the worker trained
+    /// against (staleness accounting).
+    pub fn push_gradient(&mut self, grad: &[f32], pulled_version: u64) {
+        vecops::sgd_apply_inplace(&mut self.params, grad, self.lr);
+        vecops::accumulate_inplace(&mut self.accum, grad);
+        self.accum_steps += 1;
+        self.updates_since_sync += 1;
+        self.total_updates += 1;
+        self.staleness_sum += self.version - pulled_version;
+        self.staleness_n += 1;
+        self.version += 1;
+    }
+
+    /// Take the accumulated gradient for a WAN send, resetting it.
+    pub fn take_accumulated(&mut self) -> (Vec<f32>, u32) {
+        let steps = self.accum_steps;
+        let grad = std::mem::replace(&mut self.accum, vec![0.0; self.params.len()]);
+        self.accum_steps = 0;
+        self.updates_since_sync = 0;
+        self.sends += 1;
+        (grad, steps)
+    }
+
+    /// Snapshot parameters for a model-averaging send.
+    pub fn snapshot_params(&mut self) -> Vec<f32> {
+        self.updates_since_sync = 0;
+        self.sends += 1;
+        self.params.clone()
+    }
+
+    /// Apply a remote accumulated gradient (receiver side of ASGD/ASGD-GA).
+    pub fn apply_remote_gradient(&mut self, grad: &[f32]) {
+        vecops::sgd_apply_inplace(&mut self.params, grad, self.lr);
+        self.version += 1;
+        self.recvs += 1;
+    }
+
+    /// Average with remote parameters (receiver side of AMA/SMA);
+    /// `w` is the local weight.
+    pub fn average_with(&mut self, remote: &[f32], w: f32) {
+        vecops::average_inplace(&mut self.params, remote, w);
+        self.version += 1;
+        self.recvs += 1;
+    }
+
+    /// Mean observed gradient staleness.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.staleness_n == 0 {
+            0.0
+        } else {
+            self.staleness_sum as f64 / self.staleness_n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ps() -> PsState {
+        PsState::new(vec![1.0, 2.0, 3.0], 0.1)
+    }
+
+    #[test]
+    fn push_applies_sgd_and_accumulates() {
+        let mut s = ps();
+        s.push_gradient(&[1.0, 0.0, -1.0], 0);
+        assert_eq!(s.params, vec![0.9, 2.0, 3.1]);
+        assert_eq!(s.accum, vec![1.0, 0.0, -1.0]);
+        s.push_gradient(&[1.0, 1.0, 1.0], 1);
+        assert_eq!(s.accum, vec![2.0, 1.0, 0.0]);
+        assert_eq!(s.accum_steps, 2);
+        assert_eq!(s.version, 2);
+        assert_eq!(s.total_updates, 2);
+    }
+
+    #[test]
+    fn take_accumulated_resets() {
+        let mut s = ps();
+        s.push_gradient(&[1.0, 1.0, 1.0], 0);
+        s.push_gradient(&[0.5, 0.5, 0.5], 1);
+        let (g, steps) = s.take_accumulated();
+        assert_eq!(g, vec![1.5, 1.5, 1.5]);
+        assert_eq!(steps, 2);
+        assert_eq!(s.accum, vec![0.0, 0.0, 0.0]);
+        assert_eq!(s.accum_steps, 0);
+        assert_eq!(s.updates_since_sync, 0);
+        assert_eq!(s.sends, 1);
+    }
+
+    #[test]
+    fn staleness_tracking() {
+        let mut s = ps();
+        s.push_gradient(&[0.0; 3], 0); // version 0 -> staleness 0
+        s.push_gradient(&[0.0; 3], 0); // pulled at 0, version now 1 -> staleness 1
+        s.push_gradient(&[0.0; 3], 1); // staleness 1
+        assert!((s.mean_staleness() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn remote_gradient_application() {
+        let mut s = ps();
+        s.apply_remote_gradient(&[1.0, -1.0, 0.0]);
+        assert_eq!(s.params, vec![0.9, 2.1, 3.0]);
+        assert_eq!(s.recvs, 1);
+        assert_eq!(s.version, 1);
+    }
+
+    #[test]
+    fn model_average_with_remote() {
+        let mut s = ps();
+        s.average_with(&[3.0, 4.0, 5.0], 0.5);
+        assert_eq!(s.params, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn pull_snapshots_do_not_alias() {
+        let mut s = ps();
+        let (snap, v) = s.pull();
+        s.push_gradient(&[1.0, 1.0, 1.0], v);
+        assert_eq!(snap, vec![1.0, 2.0, 3.0], "snapshot must be stable");
+    }
+}

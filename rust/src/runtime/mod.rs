@@ -1,0 +1,323 @@
+//! PJRT runtime: loads the AOT artifacts (`make artifacts`) and executes
+//! them on the request path — Python is never involved here.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax
+//! >= 0.5 emits serialized protos with 64-bit instruction ids that the
+//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see python/compile/aot.py and
+//! /opt/xla-example/README.md).
+//!
+//! A [`ModelRuntime`] bundles one model's executables (train_step, eval,
+//! and the Pallas-lowered PS vector ops) with its metadata and initial
+//! parameters. All tensors cross the boundary as flat buffers; shapes come
+//! from `{model}_meta.json`.
+
+pub mod vecops;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Flat tensor crossing the Rust<->PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, dims: Vec<i64>) -> Tensor {
+        debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
+        Tensor::F32 { data, dims }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: Vec<i64>) -> Tensor {
+        debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
+        Tensor::I32 { data, dims }
+    }
+
+    pub fn num_elements(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Tensor::F32 { data, dims } => xla::Literal::vec1(data).reshape(dims)?,
+            Tensor::I32 { data, dims } => xla::Literal::vec1(data).reshape(dims)?,
+        })
+    }
+}
+
+/// Parsed `{model}_meta.json`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub param_count: usize,
+    pub batch_size: usize,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: String,
+    pub y_dtype: String,
+    pub num_classes: usize,
+    /// Per-field vocab sizes (DeepFM-style models).
+    pub vocab_sizes: Vec<usize>,
+    /// LM vocab (transformer models); 0 otherwise.
+    pub vocab: usize,
+    /// Which compute path the train/eval graphs were lowered with.
+    pub compute: String,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let j = Json::parse(text).context("parsing model meta json")?;
+        let req_usize = |k: &str| {
+            j.get(k).as_usize().ok_or_else(|| anyhow::anyhow!("meta missing field {k}"))
+        };
+        let inner = j.get("meta");
+        Ok(ModelMeta {
+            name: j.get("name").as_str().unwrap_or_default().to_string(),
+            param_count: req_usize("param_count")?,
+            batch_size: req_usize("batch_size")?,
+            x_shape: j
+                .get("x_shape")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
+            x_dtype: j.get("x_dtype").as_str().unwrap_or("f32").to_string(),
+            y_dtype: j.get("y_dtype").as_str().unwrap_or("i32").to_string(),
+            num_classes: j.get("num_classes").as_usize().unwrap_or(0),
+            vocab_sizes: inner
+                .get("vocab_sizes")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
+            vocab: inner.get("vocab").as_usize().unwrap_or(0),
+            compute: j.get("compute").as_str().unwrap_or("unknown").to_string(),
+        })
+    }
+
+    /// Per-example input element count.
+    pub fn x_elems_per_example(&self) -> usize {
+        self.x_shape.iter().product::<usize>().max(1)
+    }
+
+    /// Gradient payload size in bytes (what a sync puts on the WAN).
+    pub fn payload_bytes(&self) -> u64 {
+        (self.param_count * 4) as u64
+    }
+
+    /// Batch input dims (leading batch dimension).
+    pub fn x_dims(&self) -> Vec<i64> {
+        let mut dims = vec![self.batch_size as i64];
+        dims.extend(self.x_shape.iter().map(|&d| d as i64));
+        dims
+    }
+
+    pub fn y_dims(&self) -> Vec<i64> {
+        // LM models label every token; classifiers label the example.
+        if self.vocab > 0 {
+            self.x_dims()
+        } else {
+            vec![self.batch_size as i64]
+        }
+    }
+}
+
+/// One compiled HLO entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; unpacks the `return_tuple=True` tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let results = self.exe.execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        anyhow::ensure!(!results.is_empty() && !results[0].is_empty(), "no outputs");
+        let lit = results[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// A loaded model: metadata + compiled entry points + initial params.
+pub struct ModelRuntime {
+    pub meta: ModelMeta,
+    pub init_params: Vec<f32>,
+    train: Executable,
+    eval: Executable,
+    sgd: Executable,
+    avg: Executable,
+    acc: Executable,
+    /// Cumulative PJRT executions for perf accounting.
+    pub exec_counts: std::cell::Cell<u64>,
+}
+
+/// The PJRT client wrapper; load models through this.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client, artifacts_dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text artifact.
+    pub fn compile_artifact(&self, file: &str) -> Result<Executable> {
+        let path = self.artifacts_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("loading {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Executable { exe, name: file.to_string() })
+    }
+
+    /// Load a model bundle (meta + init + all 5 entry points).
+    pub fn load_model(&self, model: &str) -> Result<ModelRuntime> {
+        let meta_text = std::fs::read_to_string(self.artifacts_dir.join(format!("{model}_meta.json")))
+            .with_context(|| format!("reading {model}_meta.json — run `make artifacts` first"))?;
+        let meta = ModelMeta::parse(&meta_text)?;
+        let init_params =
+            crate::util::read_f32_file(&self.artifacts_dir.join(format!("{model}_init.bin")))?;
+        anyhow::ensure!(
+            init_params.len() == meta.param_count,
+            "init.bin length {} != param_count {}",
+            init_params.len(),
+            meta.param_count
+        );
+        Ok(ModelRuntime {
+            meta,
+            init_params,
+            train: self.compile_artifact(&format!("{model}_train_step.hlo.txt"))?,
+            eval: self.compile_artifact(&format!("{model}_eval.hlo.txt"))?,
+            sgd: self.compile_artifact(&format!("{model}_sgd_apply.hlo.txt"))?,
+            avg: self.compile_artifact(&format!("{model}_avg.hlo.txt"))?,
+            acc: self.compile_artifact(&format!("{model}_acc.hlo.txt"))?,
+            exec_counts: std::cell::Cell::new(0),
+        })
+    }
+}
+
+impl ModelRuntime {
+    fn params_literal(&self, params: &[f32]) -> Result<xla::Literal> {
+        anyhow::ensure!(
+            params.len() == self.meta.param_count,
+            "params length {} != {}",
+            params.len(),
+            self.meta.param_count
+        );
+        Ok(xla::Literal::vec1(params))
+    }
+
+    fn bump(&self) {
+        self.exec_counts.set(self.exec_counts.get() + 1);
+    }
+
+    /// One SGD gradient computation: (params, batch) -> (grads, loss).
+    pub fn train_step(&self, params: &[f32], x: &Tensor, y: &Tensor) -> Result<(Vec<f32>, f32)> {
+        self.bump();
+        let outs =
+            self.train.run(&[self.params_literal(params)?, x.to_literal()?, y.to_literal()?])?;
+        anyhow::ensure!(outs.len() == 2, "train_step returned {} outputs", outs.len());
+        let grads = outs[0].to_vec::<f32>()?;
+        let loss = outs[1].get_first_element::<f32>()?;
+        Ok((grads, loss))
+    }
+
+    /// One eval batch: (params, batch) -> (loss_sum, correct_count).
+    pub fn eval_batch(&self, params: &[f32], x: &Tensor, y: &Tensor) -> Result<(f32, f32)> {
+        self.bump();
+        let outs =
+            self.eval.run(&[self.params_literal(params)?, x.to_literal()?, y.to_literal()?])?;
+        anyhow::ensure!(outs.len() == 2, "eval returned {} outputs", outs.len());
+        Ok((outs[0].get_first_element::<f32>()?, outs[1].get_first_element::<f32>()?))
+    }
+
+    /// PS vector ops through the Pallas-lowered artifacts (the PJRT
+    /// backend; the native backend lives in [`vecops`]).
+    pub fn sgd_apply(&self, p: &[f32], g: &[f32], lr: f32) -> Result<Vec<f32>> {
+        self.bump();
+        let outs = self.sgd.run(&[
+            self.params_literal(p)?,
+            self.params_literal(g)?,
+            xla::Literal::scalar(lr),
+        ])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    pub fn model_average(&self, a: &[f32], b: &[f32], w: f32) -> Result<Vec<f32>> {
+        self.bump();
+        let outs = self.avg.run(&[
+            self.params_literal(a)?,
+            self.params_literal(b)?,
+            xla::Literal::scalar(w),
+        ])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    pub fn grad_accumulate(&self, acc: &[f32], g: &[f32]) -> Result<Vec<f32>> {
+        self.bump();
+        let outs = self.acc.run(&[self.params_literal(acc)?, self.params_literal(g)?])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses() {
+        let text = r#"{"name":"m","param_count":10,"batch_size":4,
+            "x_shape":[2,3],"x_dtype":"f32","y_dtype":"i32","num_classes":5,
+            "meta":{"vocab_sizes":[7,7]},"compute":"xla"}"#;
+        let m = ModelMeta::parse(text).unwrap();
+        assert_eq!(m.param_count, 10);
+        assert_eq!(m.x_dims(), vec![4, 2, 3]);
+        assert_eq!(m.y_dims(), vec![4]);
+        assert_eq!(m.x_elems_per_example(), 6);
+        assert_eq!(m.payload_bytes(), 40);
+        assert_eq!(m.vocab_sizes, vec![7, 7]);
+        assert_eq!(m.compute, "xla");
+    }
+
+    #[test]
+    fn lm_meta_labels_every_token() {
+        let text = r#"{"name":"t","param_count":1,"batch_size":2,
+            "x_shape":[16],"x_dtype":"i32","y_dtype":"i32","num_classes":0,
+            "meta":{"vocab":512}}"#;
+        let m = ModelMeta::parse(text).unwrap();
+        assert_eq!(m.y_dims(), vec![2, 16]);
+        assert_eq!(m.vocab, 512);
+    }
+
+    #[test]
+    fn meta_missing_fields_error() {
+        assert!(ModelMeta::parse(r#"{"name":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn tensor_dims_check() {
+        let t = Tensor::f32(vec![0.0; 6], vec![2, 3]);
+        assert_eq!(t.num_elements(), 6);
+        let t2 = Tensor::i32(vec![1, 2], vec![2]);
+        assert_eq!(t2.num_elements(), 2);
+    }
+}

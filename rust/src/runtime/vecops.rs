@@ -1,0 +1,127 @@
+//! Native f32 vector ops for the PS hot path.
+//!
+//! The PS-side update rules (SGD apply, gradient accumulation, model
+//! averaging) are memory-bound axpy-style loops over the flat parameter
+//! vector. They exist in two implementations: these native Rust loops
+//! (default on the hot path — no PJRT round-trip for a 2 MB vector) and
+//! the Pallas-lowered HLO artifacts (`{model}_sgd_apply.hlo.txt`...)
+//! executed via `ModelRuntime` (kept numerically equivalent; the
+//! `vecops_backend` ablation bench compares both).
+//!
+//! Loops are written over exact-size chunks so LLVM auto-vectorizes them.
+
+/// p -= lr * g  (SGD application).
+pub fn sgd_apply_inplace(p: &mut [f32], g: &[f32], lr: f32) {
+    assert_eq!(p.len(), g.len(), "param/grad length mismatch");
+    for (pi, gi) in p.iter_mut().zip(g.iter()) {
+        *pi -= lr * *gi;
+    }
+}
+
+/// acc += g  (gradient accumulation, ASGD-GA's local merge).
+pub fn accumulate_inplace(acc: &mut [f32], g: &[f32]) {
+    assert_eq!(acc.len(), g.len());
+    for (ai, gi) in acc.iter_mut().zip(g.iter()) {
+        *ai += *gi;
+    }
+}
+
+/// a = w*a + (1-w)*b  (inter-PS model averaging).
+pub fn average_inplace(a: &mut [f32], b: &[f32], w: f32) {
+    assert_eq!(a.len(), b.len());
+    let wb = 1.0 - w;
+    for (ai, bi) in a.iter_mut().zip(b.iter()) {
+        *ai = w * *ai + wb * *bi;
+    }
+}
+
+/// Element-wise mean of several vectors (SMA's global average).
+pub fn mean_of(vs: &[&[f32]]) -> Vec<f32> {
+    assert!(!vs.is_empty());
+    let n = vs[0].len();
+    assert!(vs.iter().all(|v| v.len() == n), "length mismatch");
+    let scale = 1.0 / vs.len() as f32;
+    let mut out = vec![0.0f32; n];
+    for v in vs {
+        for (oi, vi) in out.iter_mut().zip(v.iter()) {
+            *oi += *vi;
+        }
+    }
+    for oi in out.iter_mut() {
+        *oi *= scale;
+    }
+    out
+}
+
+/// Zero a vector in place (accumulator reset after a sync).
+pub fn zero(v: &mut [f32]) {
+    v.iter_mut().for_each(|x| *x = 0.0);
+}
+
+/// L2 norm (metrics / divergence monitoring).
+pub fn l2_norm(v: &[f32]) -> f32 {
+    v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_apply() {
+        let mut p = vec![1.0, 2.0, 3.0];
+        sgd_apply_inplace(&mut p, &[0.5, -1.0, 0.0], 0.1);
+        assert_eq!(p, vec![0.95, 2.1, 3.0]);
+    }
+
+    #[test]
+    fn accumulate_is_sum() {
+        let mut acc = vec![0.0; 4];
+        for g in [[1.0f32, 2.0, 3.0, 4.0], [0.5, 0.5, 0.5, 0.5]] {
+            accumulate_inplace(&mut acc, &g);
+        }
+        assert_eq!(acc, vec![1.5, 2.5, 3.5, 4.5]);
+    }
+
+    #[test]
+    fn average_half() {
+        let mut a = vec![2.0, 4.0];
+        average_inplace(&mut a, &[4.0, 0.0], 0.5);
+        assert_eq!(a, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn average_weighted_preserves_endpoints() {
+        let mut a = vec![1.0, 5.0];
+        let b = vec![3.0, -5.0];
+        let orig = a.clone();
+        average_inplace(&mut a, &b, 1.0);
+        assert_eq!(a, orig);
+        let mut a2 = vec![1.0, 5.0];
+        average_inplace(&mut a2, &b, 0.0);
+        assert_eq!(a2, b);
+    }
+
+    #[test]
+    fn mean_of_many() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let c = [5.0f32, 6.0];
+        assert_eq!(mean_of(&[&a, &b, &c]), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn norm_and_zero() {
+        let mut v = vec![3.0, 4.0];
+        assert!((l2_norm(&v) - 5.0).abs() < 1e-6);
+        zero(&mut v);
+        assert_eq!(v, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        let mut p = vec![1.0];
+        sgd_apply_inplace(&mut p, &[1.0, 2.0], 0.1);
+    }
+}

@@ -1,0 +1,243 @@
+//! Elastic scheduling strategy — the paper's §III.B.
+//!
+//! Load modeling: divided by WAN sync moments, each partition repeats
+//! `T_process = T_load + T_train`, and `T_train ∝ S_data / C_device`. The
+//! *load power* of cloud i (formula (1)) is
+//!
+//! ```text
+//! LP_i = ( Σ_m N_cpu,m · P_m  +  Σ_n N_gpu,n · P_n ) / S_data,i
+//! ```
+//!
+//! i.e. compute power per resident sample. A higher LP finishes its local
+//! epoch sooner; the straggler is the minimum-LP cloud *at full (greedy)
+//! allocation*.
+//!
+//! Algorithm 1 (TABLE II, "Optimal Matching"): compute every cloud's
+//! full-allocation LP, take the minimum as the reference, then for each
+//! cloud brute-force the smallest allocation whose LP still ≥ the
+//! reference — the straggler keeps everything, every other cloud releases
+//! the cores it would only have spent waiting with. This module
+//! reproduces the paper's TABLE IV plans exactly (tested below).
+
+use crate::cloud::devices::Device;
+use crate::cloud::{Allocation, CloudEnv};
+
+/// The load power of an allocation against a data size (formula (1)).
+pub fn load_power(alloc: &Allocation, data_samples: usize) -> f64 {
+    assert!(data_samples > 0, "LP undefined for empty data");
+    alloc.power() / data_samples as f64
+}
+
+/// A resourcing plan: one allocation per cloud + diagnostics.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub allocations: Vec<Allocation>,
+    /// Full-allocation LP per cloud (the inputs to the matching).
+    pub full_lp: Vec<f64>,
+    /// Planned LP per cloud (after cutting down).
+    pub planned_lp: Vec<f64>,
+    /// Index of the straggler cloud (the reference).
+    pub straggler: usize,
+}
+
+/// Run Algorithm 1 over the environment. `Res[N]` is each region's full
+/// inventory; `S_data[N]` the per-region sample counts.
+pub fn optimal_matching(env: &CloudEnv) -> Plan {
+    assert!(!env.regions.is_empty());
+    let full: Vec<Allocation> = env.greedy_plan();
+    let full_lp: Vec<f64> =
+        full.iter().zip(&env.regions).map(|(a, r)| load_power(a, r.data_samples)).collect();
+    let (straggler, &min_lp) = full_lp
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .expect("non-empty");
+
+    let allocations: Vec<Allocation> = env
+        .regions
+        .iter()
+        .enumerate()
+        .map(|(i, region)| {
+            if i == straggler {
+                full[i].clone()
+            } else {
+                search_optimal_plan(&full[i], region.data_samples, min_lp)
+            }
+        })
+        .collect();
+    let planned_lp: Vec<f64> = allocations
+        .iter()
+        .zip(&env.regions)
+        .map(|(a, r)| load_power(a, r.data_samples))
+        .collect();
+    Plan { allocations, full_lp, planned_lp, straggler }
+}
+
+/// Brute-force the smallest allocation (by total units, then by power)
+/// with LP >= `target_lp` — the paper's `search_optimal_plan`.
+///
+/// The search enumerates unit counts per device type (inventories are
+/// tens of units, so exhaustive enumeration is exact and instant).
+fn search_optimal_plan(full: &Allocation, data_samples: usize, target_lp: f64) -> Allocation {
+    // Tolerance: allocations are integral, target comes from f64 math.
+    const EPS: f64 = 1e-9;
+    let target_power = target_lp * data_samples as f64;
+
+    let devices: Vec<(Device, u32)> = full.units.clone();
+    let mut best: Option<(u32, f64, Vec<(Device, u32)>)> = None;
+
+    // Enumerate the cartesian product of 0..=max units per device type.
+    fn rec(
+        devices: &[(Device, u32)],
+        idx: usize,
+        current: &mut Vec<(Device, u32)>,
+        target_power: f64,
+        best: &mut Option<(u32, f64, Vec<(Device, u32)>)>,
+    ) {
+        if idx == devices.len() {
+            let power: f64 = current.iter().map(|(d, n)| d.power_of(*n)).sum();
+            if power + 1e-12 >= target_power - 1e-9 {
+                let units: u32 = current.iter().map(|(_, n)| *n).sum();
+                let better = match best {
+                    None => true,
+                    Some((bu, bp, _)) => units < *bu || (units == *bu && power < *bp),
+                };
+                if better {
+                    *best = Some((units, power, current.clone()));
+                }
+            }
+            return;
+        }
+        let (dev, max) = devices[idx];
+        for n in 0..=max {
+            current.push((dev, n));
+            rec(devices, idx + 1, current, target_power, best);
+            current.pop();
+        }
+    }
+    rec(&devices, 0, &mut Vec::new(), target_power - EPS, &mut best);
+
+    let chosen = best.map(|(_, _, units)| units).unwrap_or_else(|| devices.clone());
+    // Drop zero-unit entries for readability.
+    let units: Vec<(Device, u32)> = chosen.into_iter().filter(|(_, n)| *n > 0).collect();
+    Allocation::new(full.region, units)
+}
+
+/// Relative imbalance of a plan: max(LP)/min(LP) - 1. The elastic plan
+/// drives this toward 0; greedy plans can be badly imbalanced.
+pub fn imbalance(lps: &[f64]) -> f64 {
+    let max = lps.iter().cloned().fold(f64::MIN, f64::max);
+    let min = lps.iter().cloned().fold(f64::MAX, f64::min);
+    if min <= 0.0 {
+        return f64::INFINITY;
+    }
+    max / min - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Region;
+
+    /// Paper TABLE IV case 1: data 1:1, SH=Cascade12, CQ=Sky12 -> 12:8.
+    #[test]
+    fn table4_case1() {
+        let env = CloudEnv::tencent_two_region(Device::Skylake, 1000, 1000);
+        let plan = optimal_matching(&env);
+        assert_eq!(plan.straggler, 0, "Cascade region is the straggler");
+        assert_eq!(plan.allocations[0].total_units(), 12);
+        assert_eq!(plan.allocations[1].total_units(), 8);
+    }
+
+    /// TABLE IV case 2: data 2:1, Cascade/Cascade 12:12 -> 12:6.
+    #[test]
+    fn table4_case2() {
+        let env = CloudEnv::new(vec![
+            Region::new(0, "Shanghai", vec![(Device::CascadeLake, 12)], 2000),
+            Region::new(1, "Chongqing", vec![(Device::CascadeLake, 12)], 1000),
+        ]);
+        let plan = optimal_matching(&env);
+        assert_eq!(plan.straggler, 0);
+        assert_eq!(plan.allocations[0].total_units(), 12);
+        assert_eq!(plan.allocations[1].total_units(), 6);
+    }
+
+    /// TABLE IV case 3: data 2:1, Cascade/Sky 12:12 -> 12:4.
+    #[test]
+    fn table4_case3() {
+        let env = CloudEnv::tencent_two_region(Device::Skylake, 2000, 1000);
+        let plan = optimal_matching(&env);
+        assert_eq!(plan.straggler, 0);
+        assert_eq!(plan.allocations[0].total_units(), 12);
+        assert_eq!(plan.allocations[1].total_units(), 4);
+    }
+
+    #[test]
+    fn straggler_keeps_full_allocation() {
+        let env = CloudEnv::tencent_two_region(Device::Skylake, 3000, 100);
+        let plan = optimal_matching(&env);
+        // SH has far more data -> lowest LP -> straggler keeps 12 cores.
+        assert_eq!(plan.straggler, 0);
+        assert_eq!(plan.allocations[0], env.greedy_plan()[0]);
+    }
+
+    #[test]
+    fn plan_lp_at_least_straggler_lp() {
+        for (sh, cq) in [(1000, 1000), (2000, 1000), (1000, 2000), (500, 1500)] {
+            let env = CloudEnv::tencent_two_region(Device::Skylake, sh, cq);
+            let plan = optimal_matching(&env);
+            let min_full = plan.full_lp[plan.straggler];
+            for (i, lp) in plan.planned_lp.iter().enumerate() {
+                assert!(
+                    *lp + 1e-9 >= min_full,
+                    "cloud {i} planned below the straggler: {lp} < {min_full}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_reduces_imbalance() {
+        let env = CloudEnv::tencent_two_region(Device::Skylake, 2000, 1000);
+        let plan = optimal_matching(&env);
+        assert!(imbalance(&plan.planned_lp) <= imbalance(&plan.full_lp) + 1e-9);
+        assert!(imbalance(&plan.planned_lp) < 0.35, "{:?}", plan.planned_lp);
+    }
+
+    #[test]
+    fn plans_fit_inventories() {
+        let env = CloudEnv::tencent_two_region(Device::Skylake, 1234, 777);
+        let plan = optimal_matching(&env);
+        for (a, r) in plan.allocations.iter().zip(&env.regions) {
+            assert!(a.fits(r));
+        }
+    }
+
+    #[test]
+    fn gpu_cloud_matches_cpu_straggler() {
+        // A V100 cloud paired with a CPU cloud: the CPU side is the
+        // straggler and the GPU side needs only its 1 device (can't go
+        // below 1 without dropping to zero power).
+        let env = CloudEnv::new(vec![
+            Region::new(0, "cpu", vec![(Device::CascadeLake, 12)], 1000),
+            Region::new(1, "gpu", vec![(Device::V100, 4)], 1000),
+        ]);
+        let plan = optimal_matching(&env);
+        assert_eq!(plan.straggler, 0);
+        assert_eq!(plan.allocations[1].total_units(), 1);
+    }
+
+    #[test]
+    fn mixed_inventory_search() {
+        // Region with two device classes: search picks the cheapest mix.
+        let env = CloudEnv::new(vec![
+            Region::new(0, "a", vec![(Device::CascadeLake, 12)], 2000),
+            Region::new(1, "b", vec![(Device::CascadeLake, 6), (Device::Skylake, 6)], 1000),
+        ]);
+        let plan = optimal_matching(&env);
+        // target power = LP_a * 1000 = (12/3/2000)*1000 = 2.0
+        let power: f64 = plan.allocations[1].power();
+        assert!(power + 1e-9 >= 2.0);
+        assert_eq!(plan.allocations[1].total_units(), 4, "{:?}", plan.allocations[1]);
+    }
+}

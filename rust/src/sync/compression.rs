@@ -1,0 +1,241 @@
+//! Gradient compression — the *other* family of WAN-synchronization
+//! optimizations the paper surveys (§II.C: "compressing data size of
+//! synchronization, like DGC, top-K") but does not adopt. Implemented
+//! here as an extension so the ablation bench can compare *compression*
+//! against the paper's *frequency reduction* on the same link model.
+//!
+//! Two codecs:
+//! - [`TopK`]: keep the k largest-magnitude coordinates (DGC-style
+//!   sparsification, error feedback left to the caller via residuals);
+//! - [`QuantQ8`]: linear int8 quantization with per-chunk scales.
+//!
+//! Both encode to a compact wire format (what the WAN fabric bills) and
+//! decode back to a dense vector.
+
+use crate::util::rng::Pcg32;
+
+/// A compressed gradient on the wire.
+#[derive(Debug, Clone)]
+pub enum Compressed {
+    /// (indices, values, original length)
+    Sparse { idx: Vec<u32>, val: Vec<f32>, len: usize },
+    /// (per-chunk scales, int8 payload, original length, chunk size)
+    Quant { scales: Vec<f32>, data: Vec<i8>, len: usize, chunk: usize },
+}
+
+impl Compressed {
+    /// Bytes this payload occupies on the WAN (plus a small header).
+    pub fn wire_bytes(&self) -> u64 {
+        let body = match self {
+            Compressed::Sparse { idx, val, .. } => idx.len() * 4 + val.len() * 4,
+            Compressed::Quant { scales, data, .. } => scales.len() * 4 + data.len(),
+        };
+        body as u64 + 64
+    }
+
+    /// Decode back to a dense vector.
+    pub fn decode(&self) -> Vec<f32> {
+        match self {
+            Compressed::Sparse { idx, val, len } => {
+                let mut out = vec![0.0f32; *len];
+                for (&i, &v) in idx.iter().zip(val.iter()) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+            Compressed::Quant { scales, data, len, chunk } => {
+                let mut out = Vec::with_capacity(*len);
+                for (ci, block) in data.chunks(*chunk).enumerate() {
+                    let s = scales[ci];
+                    for &q in block {
+                        out.push(q as f32 * s);
+                    }
+                }
+                out.truncate(*len);
+                out
+            }
+        }
+    }
+}
+
+/// Top-k magnitude sparsification. Returns the compressed payload and the
+/// residual (what error feedback re-accumulates locally, DGC-style).
+pub struct TopK {
+    /// Fraction of coordinates kept (0 < ratio <= 1).
+    pub ratio: f64,
+}
+
+impl TopK {
+    pub fn new(ratio: f64) -> TopK {
+        assert!(ratio > 0.0 && ratio <= 1.0, "ratio must be in (0, 1]");
+        TopK { ratio }
+    }
+
+    pub fn encode(&self, g: &[f32]) -> (Compressed, Vec<f32>) {
+        let len = g.len();
+        let k = ((len as f64 * self.ratio).ceil() as usize).clamp(1, len);
+        // Threshold selection via partial sort of magnitudes.
+        let mut order: Vec<u32> = (0..len as u32).collect();
+        order.select_nth_unstable_by(k - 1, |&a, &b| {
+            g[b as usize]
+                .abs()
+                .partial_cmp(&g[a as usize].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut idx: Vec<u32> = order[..k].to_vec();
+        idx.sort_unstable();
+        let val: Vec<f32> = idx.iter().map(|&i| g[i as usize]).collect();
+        let mut residual = g.to_vec();
+        for &i in &idx {
+            residual[i as usize] = 0.0;
+        }
+        (Compressed::Sparse { idx, val, len }, residual)
+    }
+}
+
+/// Linear int8 quantization with per-chunk max-abs scaling.
+pub struct QuantQ8 {
+    pub chunk: usize,
+}
+
+impl Default for QuantQ8 {
+    fn default() -> Self {
+        QuantQ8 { chunk: 2048 }
+    }
+}
+
+impl QuantQ8 {
+    pub fn encode(&self, g: &[f32]) -> Compressed {
+        let chunk = self.chunk.max(1);
+        let mut scales = Vec::with_capacity(g.len().div_ceil(chunk));
+        let mut data = Vec::with_capacity(g.len());
+        for block in g.chunks(chunk) {
+            let max = block.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            let scale = if max > 0.0 { max / 127.0 } else { 1.0 };
+            scales.push(scale);
+            for &x in block {
+                data.push((x / scale).round().clamp(-127.0, 127.0) as i8);
+            }
+        }
+        Compressed::Quant { scales, data, len: g.len(), chunk }
+    }
+}
+
+/// Stochastic top-k sampling baseline (for comparison against exact
+/// top-k): keeps k uniformly random coordinates.
+pub fn random_k(g: &[f32], ratio: f64, rng: &mut Pcg32) -> (Compressed, Vec<f32>) {
+    let len = g.len();
+    let k = ((len as f64 * ratio).ceil() as usize).clamp(1, len);
+    let mut order: Vec<u32> = (0..len as u32).collect();
+    rng.shuffle(&mut order);
+    let mut idx: Vec<u32> = order[..k].to_vec();
+    idx.sort_unstable();
+    let val: Vec<f32> = idx.iter().map(|&i| g[i as usize]).collect();
+    let mut residual = g.to_vec();
+    for &i in &idx {
+        residual[i as usize] = 0.0;
+    }
+    (Compressed::Sparse { idx, val, len }, residual)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i as f32 * 0.37).sin()) * (1.0 + (i % 17) as f32)).collect()
+    }
+
+    #[test]
+    fn topk_keeps_largest_and_residual_complements() {
+        let g = grad(1000);
+        let (c, residual) = TopK::new(0.1).encode(&g);
+        let decoded = c.decode();
+        // decoded + residual == g exactly
+        for i in 0..g.len() {
+            assert_eq!(decoded[i] + residual[i], g[i]);
+        }
+        // kept values dominate dropped values in magnitude
+        let kept_min = decoded
+            .iter()
+            .filter(|v| **v != 0.0)
+            .map(|v| v.abs())
+            .fold(f32::MAX, f32::min);
+        let dropped_max = residual.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+        assert!(kept_min >= dropped_max, "{kept_min} < {dropped_max}");
+        // 10% of 1000 = 100 coordinates
+        match &c {
+            Compressed::Sparse { idx, .. } => assert_eq!(idx.len(), 100),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn topk_wire_savings() {
+        let g = grad(10_000);
+        let dense_bytes = (g.len() * 4) as u64;
+        let (c, _) = TopK::new(0.01).encode(&g);
+        assert!(c.wire_bytes() < dense_bytes / 10, "{} vs {}", c.wire_bytes(), dense_bytes);
+    }
+
+    #[test]
+    fn topk_ratio_one_is_lossless() {
+        let g = grad(64);
+        let (c, residual) = TopK::new(1.0).encode(&g);
+        assert_eq!(c.decode(), g);
+        assert!(residual.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn quant_roundtrip_error_bounded() {
+        let g = grad(5000);
+        let c = QuantQ8::default().encode(&g);
+        let decoded = c.decode();
+        assert_eq!(decoded.len(), g.len());
+        for block in g.chunks(2048).zip(decoded.chunks(2048)) {
+            let max = block.0.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            let step = max / 127.0;
+            for (a, b) in block.0.iter().zip(block.1.iter()) {
+                assert!((a - b).abs() <= step * 0.5 + 1e-6, "{a} vs {b} (step {step})");
+            }
+        }
+        // ~4x smaller than dense f32
+        assert!(c.wire_bytes() < (g.len() as u64 * 4) / 3);
+    }
+
+    #[test]
+    fn quant_handles_zeros_and_tail() {
+        let c = QuantQ8 { chunk: 8 }.encode(&[0.0; 20]);
+        assert_eq!(c.decode(), vec![0.0; 20]);
+        let g = grad(13); // non-multiple of chunk
+        let c2 = QuantQ8 { chunk: 8 }.encode(&g);
+        assert_eq!(c2.decode().len(), 13);
+    }
+
+    #[test]
+    fn random_k_residual_complements() {
+        let g = grad(200);
+        let mut rng = Pcg32::new(1, 2);
+        let (c, residual) = random_k(&g, 0.25, &mut rng);
+        let decoded = c.decode();
+        for i in 0..g.len() {
+            assert_eq!(decoded[i] + residual[i], g[i]);
+        }
+    }
+
+    #[test]
+    fn topk_beats_random_k_in_captured_energy() {
+        let g = grad(2000);
+        let energy = |v: &[f32]| v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
+        let (top, _) = TopK::new(0.05).encode(&g);
+        let mut rng = Pcg32::new(3, 4);
+        let (rnd, _) = random_k(&g, 0.05, &mut rng);
+        assert!(energy(&top.decode()) > energy(&rnd.decode()) * 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_ratio_rejected() {
+        TopK::new(0.0);
+    }
+}

@@ -1,0 +1,310 @@
+//! WAN model-synchronization strategies — the paper's §III.C.
+//!
+//! Four strategies over the basic WAN sync mechanism (each PS sends its
+//! state to exactly **one** peer PS per sync; the global communicator
+//! plans the topology):
+//!
+//! | strategy | condition        | payload              | pattern      | receiver update |
+//! |----------|------------------|----------------------|--------------|-----------------|
+//! | ASGD     | every update     | accumulated gradient | asynchronous | SGD             |
+//! | ASGD-GA  | every F updates  | accumulated gradient | asynchronous | SGD             |
+//! | AMA      | every F updates  | model parameters     | asynchronous | averaging       |
+//! | SMA      | every F updates  | model parameters     | barrier      | averaging       |
+//!
+//! ASGD (freq=1) is the paper's baseline — "a simple multi-regional cloud
+//! variant of trivial ML training". ASGD-GA keeps merging local gradients
+//! between syncs so no information is lost, only freshness. MA variants
+//! ship parameters and average on receipt (w=0.5 between two clouds).
+
+pub mod compression;
+
+use compression::{Compressed, QuantQ8, TopK};
+
+use crate::ps::PsState;
+
+/// Which of the paper's strategies to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Baseline: asynchronous SGD, sync every local update.
+    Asgd,
+    /// Asynchronous SGD with gradient accumulation (sync every `freq`).
+    AsgdGa,
+    /// Inter-PS model averaging, asynchronous pattern.
+    Ama,
+    /// Inter-PS model averaging, synchronous (barrier) pattern.
+    Sma,
+}
+
+impl Strategy {
+    pub fn from_name(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "asgd" | "baseline" => Some(Strategy::Asgd),
+            "asgd-ga" | "asgd_ga" | "ga" => Some(Strategy::AsgdGa),
+            "ama" => Some(Strategy::Ama),
+            "sma" => Some(Strategy::Sma),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Asgd => "ASGD",
+            Strategy::AsgdGa => "ASGD-GA",
+            Strategy::Ama => "AMA",
+            Strategy::Sma => "SMA",
+        }
+    }
+
+    /// True for barrier-style strategies.
+    pub fn is_synchronous(&self) -> bool {
+        matches!(self, Strategy::Sma)
+    }
+
+    /// True if the payload is a gradient (vs model parameters).
+    pub fn sends_gradient(&self) -> bool {
+        matches!(self, Strategy::Asgd | Strategy::AsgdGa)
+    }
+}
+
+/// Optional gradient compression (extension beyond the paper; see
+/// [`compression`]). Applies to gradient payloads only — MA ships full
+/// parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Compression {
+    None,
+    /// DGC-style top-k sparsification with error feedback; keeps `ratio`
+    /// of coordinates.
+    TopK { ratio: f64 },
+    /// Linear int8 quantization (per-2048-chunk scales).
+    Q8,
+}
+
+/// Full synchronization configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SyncConfig {
+    pub strategy: Strategy,
+    /// Synchronization frequency in local updates (ASGD pins this to 1).
+    pub freq: u32,
+    /// Local weight for model averaging (0.5 between two clouds).
+    pub avg_weight: f32,
+    /// Gradient compression codec (extension; default None).
+    pub compression: Compression,
+}
+
+impl SyncConfig {
+    pub fn new(strategy: Strategy, freq: u32) -> SyncConfig {
+        let freq = if strategy == Strategy::Asgd { 1 } else { freq.max(1) };
+        SyncConfig { strategy, freq, avg_weight: 0.5, compression: Compression::None }
+    }
+
+    pub fn with_compression(mut self, c: Compression) -> SyncConfig {
+        self.compression = c;
+        self
+    }
+
+    pub fn baseline() -> SyncConfig {
+        SyncConfig::new(Strategy::Asgd, 1)
+    }
+
+    /// The synchronization condition: sync after this local update?
+    pub fn should_sync(&self, ps: &PsState) -> bool {
+        ps.updates_since_sync >= self.freq
+    }
+}
+
+/// What travels over the WAN between PS communicators.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Accumulated gradient + how many worker steps it merged.
+    Gradient { grad: Vec<f32>, steps: u32 },
+    /// Compressed accumulated gradient (extension codecs).
+    CompressedGradient { packed: Compressed, steps: u32 },
+    /// Model parameters for averaging.
+    Params(Vec<f32>),
+}
+
+impl Payload {
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::Gradient { grad, .. } => (grad.len() * 4) as u64 + 64,
+            Payload::CompressedGradient { packed, .. } => packed.wire_bytes(),
+            Payload::Params(p) => (p.len() * 4) as u64 + 64,
+        }
+    }
+}
+
+/// Build the payload this strategy sends (mutates PS send-side state).
+pub fn make_payload(cfg: &SyncConfig, ps: &mut PsState) -> Payload {
+    if cfg.strategy.sends_gradient() {
+        let (grad, steps) = ps.take_accumulated();
+        match cfg.compression {
+            Compression::None => Payload::Gradient { grad, steps },
+            Compression::TopK { ratio } => {
+                let (packed, residual) = TopK::new(ratio).encode(&grad);
+                // DGC error feedback: the dropped mass re-enters the
+                // accumulator and ships with a later sync.
+                crate::runtime::vecops::accumulate_inplace(&mut ps.accum, &residual);
+                Payload::CompressedGradient { packed, steps }
+            }
+            Compression::Q8 => {
+                let packed = QuantQ8::default().encode(&grad);
+                Payload::CompressedGradient { packed, steps }
+            }
+        }
+    } else {
+        Payload::Params(ps.snapshot_params())
+    }
+}
+
+/// Apply a received payload per the strategy's update rule.
+pub fn apply_payload(cfg: &SyncConfig, ps: &mut PsState, payload: &Payload) {
+    match payload {
+        Payload::Gradient { grad, .. } => ps.apply_remote_gradient(grad),
+        Payload::CompressedGradient { packed, .. } => {
+            ps.apply_remote_gradient(&packed.decode())
+        }
+        Payload::Params(remote) => ps.average_with(remote, cfg.avg_weight),
+    }
+}
+
+/// Plan the sync topology: each PS sends to exactly one peer per sync.
+/// For 2 clouds this is a pairwise exchange; for N > 2 a ring — both
+/// satisfy the paper's "only one other PS each time" traffic cap.
+pub fn plan_topology(n: usize) -> Vec<usize> {
+    assert!(n >= 1);
+    (0..n).map(|i| (i + 1) % n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ps_with_updates(k: u32) -> PsState {
+        let mut ps = PsState::new(vec![0.0; 4], 0.1);
+        for i in 0..k {
+            ps.push_gradient(&[1.0, 1.0, 1.0, 1.0], i as u64);
+        }
+        ps
+    }
+
+    #[test]
+    fn asgd_forces_freq_one() {
+        let cfg = SyncConfig::new(Strategy::Asgd, 8);
+        assert_eq!(cfg.freq, 1);
+        assert!(cfg.should_sync(&ps_with_updates(1)));
+    }
+
+    #[test]
+    fn asgd_ga_condition_counts_updates() {
+        let cfg = SyncConfig::new(Strategy::AsgdGa, 4);
+        assert!(!cfg.should_sync(&ps_with_updates(3)));
+        assert!(cfg.should_sync(&ps_with_updates(4)));
+        assert!(cfg.should_sync(&ps_with_updates(5)));
+    }
+
+    #[test]
+    fn gradient_payload_is_accumulated_sum() {
+        let cfg = SyncConfig::new(Strategy::AsgdGa, 4);
+        let mut ps = ps_with_updates(4);
+        match make_payload(&cfg, &mut ps) {
+            Payload::Gradient { grad, steps } => {
+                assert_eq!(steps, 4);
+                assert_eq!(grad, vec![4.0; 4], "GA must merge all 4 gradients");
+            }
+            _ => panic!("ASGD-GA sends gradients"),
+        }
+        assert_eq!(ps.updates_since_sync, 0, "condition resets after send");
+    }
+
+    #[test]
+    fn ma_payload_is_params() {
+        let cfg = SyncConfig::new(Strategy::Ama, 4);
+        let mut ps = ps_with_updates(4);
+        let expect = ps.params.clone();
+        match make_payload(&cfg, &mut ps) {
+            Payload::Params(p) => assert_eq!(p, expect),
+            _ => panic!("MA sends params"),
+        }
+    }
+
+    #[test]
+    fn receiver_updates_follow_strategy() {
+        let ga = SyncConfig::new(Strategy::AsgdGa, 2);
+        let mut ps = PsState::new(vec![1.0, 1.0], 0.5);
+        apply_payload(&ga, &mut ps, &Payload::Gradient { grad: vec![1.0, -1.0], steps: 2 });
+        assert_eq!(ps.params, vec![0.5, 1.5]); // p -= lr*g
+
+        let ma = SyncConfig::new(Strategy::Ama, 2);
+        let mut ps2 = PsState::new(vec![1.0, 3.0], 0.5);
+        apply_payload(&ma, &mut ps2, &Payload::Params(vec![3.0, 1.0]));
+        assert_eq!(ps2.params, vec![2.0, 2.0]); // 0.5/0.5 average
+    }
+
+    #[test]
+    fn payload_wire_bytes() {
+        let p = Payload::Params(vec![0.0; 1000]);
+        assert_eq!(p.wire_bytes(), 4064);
+    }
+
+    #[test]
+    fn topology_is_single_peer_ring() {
+        assert_eq!(plan_topology(2), vec![1, 0]); // pairwise exchange
+        assert_eq!(plan_topology(4), vec![1, 2, 3, 0]); // ring
+        // every node sends to exactly one, receives from exactly one
+        let topo = plan_topology(5);
+        let mut recv_counts = vec![0; 5];
+        for &to in &topo {
+            recv_counts[to] += 1;
+        }
+        assert!(recv_counts.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn compressed_payload_roundtrip_and_feedback() {
+        let cfg = SyncConfig::new(Strategy::AsgdGa, 4)
+            .with_compression(Compression::TopK { ratio: 0.25 });
+        let mut ps = PsState::new(vec![0.0; 8], 0.1);
+        ps.push_gradient(&[8.0, 1.0, -6.0, 0.5, 0.25, -0.1, 7.0, 2.0], 0);
+        let payload = make_payload(&cfg, &mut ps);
+        match &payload {
+            Payload::CompressedGradient { packed, steps } => {
+                assert_eq!(*steps, 1);
+                let dense = packed.decode();
+                // 25% of 8 = 2 largest coordinates kept: 8.0 and 7.0
+                assert_eq!(dense.iter().filter(|v| **v != 0.0).count(), 2);
+                assert_eq!(dense[0], 8.0);
+                assert_eq!(dense[6], 7.0);
+            }
+            other => panic!("expected compressed payload, got {other:?}"),
+        }
+        // error feedback: dropped coordinates live on in the accumulator
+        assert!(ps.accum[2] != 0.0 && ps.accum[0] == 0.0);
+        // receiver applies the sparse gradient via SGD
+        let mut peer = PsState::new(vec![0.0; 8], 0.1);
+        apply_payload(&cfg, &mut peer, &payload);
+        assert!((peer.params[0] + 0.8).abs() < 1e-6);
+        assert_eq!(peer.params[1], 0.0);
+    }
+
+    #[test]
+    fn q8_payload_is_smaller_on_wire() {
+        let cfg = SyncConfig::new(Strategy::AsgdGa, 1).with_compression(Compression::Q8);
+        let mut ps = PsState::new(vec![0.0; 10_000], 0.1);
+        let g: Vec<f32> = (0..10_000).map(|i| (i as f32 * 0.01).sin()).collect();
+        ps.push_gradient(&g, 0);
+        let packed = make_payload(&cfg, &mut ps);
+        let dense = Payload::Gradient { grad: g, steps: 1 };
+        assert!(packed.wire_bytes() * 3 < dense.wire_bytes());
+    }
+
+    #[test]
+    fn strategy_properties() {
+        assert!(Strategy::Sma.is_synchronous());
+        assert!(!Strategy::Ama.is_synchronous());
+        assert!(Strategy::Asgd.sends_gradient());
+        assert!(Strategy::AsgdGa.sends_gradient());
+        assert!(!Strategy::Ama.sends_gradient());
+        assert_eq!(Strategy::from_name("asgd-ga"), Some(Strategy::AsgdGa));
+        assert_eq!(Strategy::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,215 @@
+//! PS checkpointing — the fault-tolerance piece a deployable framework
+//! needs (the paper builds on ElasticDL, whose pitch is Kubernetes-native
+//! fault tolerance; our serverless PS functions are stateful and must
+//! survive replica reschedules).
+//!
+//! A checkpoint is a directory with one `{region}.ckpt` per partition
+//! (binary: header + flat f32 params + accumulator) plus `manifest.json`
+//! describing the job. Atomic via write-to-temp + rename.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::ps::PsState;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"CLDLSSv1";
+
+/// Serialized form of one PS's recoverable state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PsCheckpoint {
+    pub params: Vec<f32>,
+    pub accum: Vec<f32>,
+    pub accum_steps: u32,
+    pub total_updates: u64,
+    pub version: u64,
+}
+
+impl PsCheckpoint {
+    pub fn capture(ps: &PsState) -> PsCheckpoint {
+        PsCheckpoint {
+            params: ps.params.clone(),
+            accum: ps.accum.clone(),
+            accum_steps: ps.accum_steps,
+            total_updates: ps.total_updates,
+            version: ps.version,
+        }
+    }
+
+    /// Restore into a fresh PsState with the given learning rate.
+    pub fn restore(&self, lr: f32) -> PsState {
+        let mut ps = PsState::new(self.params.clone(), lr);
+        ps.accum = self.accum.clone();
+        ps.accum_steps = self.accum_steps;
+        ps.total_updates = self.total_updates;
+        ps.version = self.version;
+        ps
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let n = self.params.len();
+        let mut out = Vec::with_capacity(8 + 8 + 4 + 8 + 8 + n * 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(n as u64).to_le_bytes());
+        out.extend_from_slice(&self.accum_steps.to_le_bytes());
+        out.extend_from_slice(&self.total_updates.to_le_bytes());
+        out.extend_from_slice(&self.version.to_le_bytes());
+        for x in &self.params {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        for x in &self.accum {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(bytes: &[u8]) -> Result<PsCheckpoint> {
+        anyhow::ensure!(bytes.len() >= 36 && &bytes[..8] == MAGIC, "bad checkpoint header");
+        let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let accum_steps = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        let total_updates = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+        let version = u64::from_le_bytes(bytes[28..36].try_into().unwrap());
+        anyhow::ensure!(bytes.len() == 36 + n * 8, "truncated checkpoint (n={n})");
+        let f32_at = |off: usize, len: usize| -> Vec<f32> {
+            bytes[off..off + len * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        };
+        Ok(PsCheckpoint {
+            params: f32_at(36, n),
+            accum: f32_at(36 + n * 4, n),
+            accum_steps,
+            total_updates,
+            version,
+        })
+    }
+}
+
+/// A job-level checkpoint directory.
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: impl AsRef<Path>) -> Result<CheckpointStore> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        Ok(CheckpointStore { dir: dir.as_ref().to_path_buf() })
+    }
+
+    fn path_for(&self, region: &str) -> PathBuf {
+        self.dir.join(format!("{region}.ckpt"))
+    }
+
+    /// Atomically persist one partition's PS state.
+    pub fn save(&self, region: &str, ckpt: &PsCheckpoint) -> Result<()> {
+        let tmp = self.dir.join(format!(".{region}.ckpt.tmp"));
+        std::fs::write(&tmp, ckpt.encode())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, self.path_for(region))?;
+        Ok(())
+    }
+
+    pub fn load(&self, region: &str) -> Result<PsCheckpoint> {
+        let path = self.path_for(region);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        PsCheckpoint::decode(&bytes)
+    }
+
+    pub fn exists(&self, region: &str) -> bool {
+        self.path_for(region).exists()
+    }
+
+    /// Write the job manifest (model name, step counts) for operators.
+    pub fn write_manifest(&self, model: &str, regions: &[(&str, u64)]) -> Result<()> {
+        let j = Json::obj(vec![
+            ("model", Json::str(model)),
+            (
+                "partitions",
+                Json::arr(regions.iter().map(|(r, steps)| {
+                    Json::obj(vec![
+                        ("region", Json::str(*r)),
+                        ("updates", Json::num(*steps as f64)),
+                    ])
+                })),
+            ),
+        ]);
+        std::fs::write(self.dir.join("manifest.json"), j.to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cloudless_ckpt_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn ps_with_state() -> PsState {
+        let mut ps = PsState::new(vec![1.0, -2.0, 3.5, 0.25], 0.1);
+        ps.push_gradient(&[0.1, 0.2, -0.3, 0.0], 0);
+        ps.push_gradient(&[0.5, -0.5, 0.5, 1.0], 1);
+        ps
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let dir = temp_dir("rt");
+        let store = CheckpointStore::new(&dir).unwrap();
+        let ps = ps_with_state();
+        let ckpt = PsCheckpoint::capture(&ps);
+        store.save("Shanghai", &ckpt).unwrap();
+        let loaded = store.load("Shanghai").unwrap();
+        assert_eq!(loaded, ckpt);
+        let restored = loaded.restore(0.1);
+        assert_eq!(restored.params, ps.params);
+        assert_eq!(restored.accum, ps.accum);
+        assert_eq!(restored.accum_steps, ps.accum_steps);
+        assert_eq!(restored.version, ps.version);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restored_ps_continues_training() {
+        let ps = ps_with_state();
+        let mut restored = PsCheckpoint::capture(&ps).restore(0.1);
+        restored.push_gradient(&[1.0, 1.0, 1.0, 1.0], restored.version);
+        assert_eq!(restored.total_updates, 3);
+        assert_eq!(restored.accum_steps, 3, "accumulator carries across restarts");
+    }
+
+    #[test]
+    fn corrupt_files_rejected() {
+        let dir = temp_dir("bad");
+        let store = CheckpointStore::new(&dir).unwrap();
+        std::fs::write(dir.join("X.ckpt"), b"garbage").unwrap();
+        assert!(store.load("X").is_err());
+        // truncated but valid header
+        let ckpt = PsCheckpoint::capture(&ps_with_state());
+        let mut bytes = ckpt.encode();
+        bytes.truncate(bytes.len() - 4);
+        std::fs::write(dir.join("Y.ckpt"), &bytes).unwrap();
+        assert!(store.load("Y").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn exists_and_manifest() {
+        let dir = temp_dir("mf");
+        let store = CheckpointStore::new(&dir).unwrap();
+        assert!(!store.exists("A"));
+        store.save("A", &PsCheckpoint::capture(&ps_with_state())).unwrap();
+        assert!(store.exists("A"));
+        store.write_manifest("lenet", &[("A", 42)]).unwrap();
+        let manifest =
+            Json::parse(&std::fs::read_to_string(dir.join("manifest.json")).unwrap()).unwrap();
+        assert_eq!(manifest.get("model").as_str().unwrap(), "lenet");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

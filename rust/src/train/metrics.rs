@@ -1,0 +1,218 @@
+//! Metrics collected from a geo-distributed training run.
+//!
+//! Everything the paper's figures plot comes out of this report: time
+//! decomposition (execution vs waiting, Fig 2/8), WAN communication time
+//! (Fig 3/10), monetary cost (Fig 8 d-f), accuracy/loss convergence
+//! curves (Fig 7/9/10/11), plus diagnostics (staleness, sync counts,
+//! cold starts) used by the ablations.
+
+use crate::sim::Time;
+use crate::util::json::Json;
+
+/// One point on the accuracy/loss convergence curve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalPoint {
+    /// Virtual time of the evaluation.
+    pub t: Time,
+    /// Epoch index (partition-0 local epochs).
+    pub epoch: usize,
+    pub loss: f64,
+    pub accuracy: f64,
+}
+
+/// Per-partition outcome.
+#[derive(Debug, Clone, Default)]
+pub struct PartitionReport {
+    pub region: String,
+    pub units: u32,
+    pub power: f64,
+    pub steps: u64,
+    pub local_updates: u64,
+    /// Virtual time this partition finished its local epochs.
+    pub local_finish: Time,
+    /// global_end - local_finish: resources held idle waiting for
+    /// stragglers (the paper's "waiting time").
+    pub waiting: Time,
+    /// Time workers sat blocked on the PS communicator (WAN backpressure)
+    /// + barrier waits.
+    pub comm_wait: Time,
+    /// Total WAN communication time attributable to this partition:
+    /// `comm_wait` + its outgoing link's serialization busy time (the
+    /// paper's "communication time on WAN").
+    pub wan_time: Time,
+    pub syncs_sent: u64,
+    pub syncs_received: u64,
+    pub mean_staleness: f64,
+    pub cold_start_time: Time,
+}
+
+/// Full run report.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub model: String,
+    pub strategy: String,
+    pub sync_freq: u32,
+    /// Virtual end-to-end training time (startup through last partition).
+    pub total_time: Time,
+    /// Virtual time spent in control-plane startup (scheduling,
+    /// addressing, cold starts) before training began.
+    pub startup_time: Time,
+    pub partitions: Vec<PartitionReport>,
+    pub curve: Vec<EvalPoint>,
+    pub final_loss: f64,
+    pub final_accuracy: f64,
+    pub wan_bytes: u64,
+    pub wan_transfers: u64,
+    /// Monetary cost (USD): compute held to global end + WAN traffic.
+    pub cost: f64,
+    /// Compute-only component (instance-seconds billed to global end) —
+    /// the paper's "training cost" headline compares this.
+    pub compute_cost: f64,
+    /// WAN-traffic component.
+    pub wan_cost: f64,
+    /// Real wall-clock seconds the simulation took (diagnostic).
+    pub wall_seconds: f64,
+    /// PJRT executions (diagnostic / perf accounting).
+    pub pjrt_executions: u64,
+}
+
+impl TrainReport {
+    /// Total waiting time across partitions (Fig 8's shrinking bar).
+    pub fn total_waiting(&self) -> Time {
+        self.partitions.iter().map(|p| p.waiting).sum()
+    }
+
+    /// Total communication-blocked time across partitions.
+    pub fn total_comm_wait(&self) -> Time {
+        self.partitions.iter().map(|p| p.comm_wait).sum()
+    }
+
+    /// Total WAN communication time across partitions (Fig 10's comm-time
+    /// series: blocked time + serialization time).
+    pub fn total_wan_time(&self) -> Time {
+        self.partitions.iter().map(|p| p.wan_time).sum()
+    }
+
+    /// Waiting share of (waiting + execution) summed over partitions —
+    /// the Fig 2 bar decomposition.
+    pub fn waiting_share(&self) -> f64 {
+        let total: f64 = self.partitions.len() as f64 * self.total_time;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.total_waiting() / total
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("strategy", Json::str(&self.strategy)),
+            ("sync_freq", Json::num(self.sync_freq as f64)),
+            ("total_time_s", Json::num(self.total_time)),
+            ("startup_time_s", Json::num(self.startup_time)),
+            ("final_loss", Json::num(self.final_loss)),
+            ("final_accuracy", Json::num(self.final_accuracy)),
+            ("wan_bytes", Json::num(self.wan_bytes as f64)),
+            ("wan_transfers", Json::num(self.wan_transfers as f64)),
+            ("cost_usd", Json::num(self.cost)),
+            ("compute_cost_usd", Json::num(self.compute_cost)),
+            ("wan_cost_usd", Json::num(self.wan_cost)),
+            ("total_waiting_s", Json::num(self.total_waiting())),
+            ("total_comm_wait_s", Json::num(self.total_comm_wait())),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+            ("pjrt_executions", Json::num(self.pjrt_executions as f64)),
+            (
+                "partitions",
+                Json::arr(self.partitions.iter().map(|p| {
+                    Json::obj(vec![
+                        ("region", Json::str(&p.region)),
+                        ("units", Json::num(p.units as f64)),
+                        ("power", Json::num(p.power)),
+                        ("steps", Json::num(p.steps as f64)),
+                        ("local_finish_s", Json::num(p.local_finish)),
+                        ("waiting_s", Json::num(p.waiting)),
+                        ("comm_wait_s", Json::num(p.comm_wait)),
+                        ("wan_time_s", Json::num(p.wan_time)),
+                        ("syncs_sent", Json::num(p.syncs_sent as f64)),
+                        ("syncs_received", Json::num(p.syncs_received as f64)),
+                        ("mean_staleness", Json::num(p.mean_staleness)),
+                        ("cold_start_s", Json::num(p.cold_start_time)),
+                    ])
+                })),
+            ),
+            (
+                "curve",
+                Json::arr(self.curve.iter().map(|e| {
+                    Json::obj(vec![
+                        ("t", Json::num(e.t)),
+                        ("epoch", Json::num(e.epoch as f64)),
+                        ("loss", Json::num(e.loss)),
+                        ("accuracy", Json::num(e.accuracy)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} [{} f={}] time={:.1}s acc={:.4} loss={:.4} cost=${:.4} wan={:.1}MB wait={:.1}s comm={:.1}s",
+            self.model,
+            self.strategy,
+            self.sync_freq,
+            self.total_time,
+            self.final_accuracy,
+            self.final_loss,
+            self.cost,
+            self.wan_bytes as f64 / 1e6,
+            self.total_waiting(),
+            self.total_comm_wait(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> TrainReport {
+        TrainReport {
+            model: "lenet".into(),
+            strategy: "ASGD-GA".into(),
+            sync_freq: 4,
+            total_time: 100.0,
+            partitions: vec![
+                PartitionReport { waiting: 0.0, comm_wait: 5.0, ..Default::default() },
+                PartitionReport { waiting: 30.0, comm_wait: 2.0, ..Default::default() },
+            ],
+            final_accuracy: 0.9,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = report();
+        assert_eq!(r.total_waiting(), 30.0);
+        assert_eq!(r.total_comm_wait(), 7.0);
+        assert!((r.waiting_share() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let r = report();
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("model").as_str().unwrap(), "lenet");
+        assert_eq!(parsed.get("partitions").as_arr().unwrap().len(), 2);
+        assert!((parsed.get("total_waiting_s").as_f64().unwrap() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let s = report().summary();
+        assert!(s.contains("lenet") && s.contains("ASGD-GA") && s.contains("f=4"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Training engines: the DES-driven geo-distributed trainer (`geo`),
+//! compute-time calibration (`calib`), and run reports (`metrics`).
+
+pub mod calib;
+pub mod checkpoint;
+pub mod geo;
+pub mod metrics;
+
+pub use geo::{default_lr, run_geo_training, TrainConfig};
+pub use metrics::{EvalPoint, PartitionReport, TrainReport};

@@ -1,0 +1,115 @@
+//! Tiny CLI argument parser (no clap offline): subcommand + `--key value` /
+//! `--flag` options with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first bare word becomes the subcommand; later
+    /// bare words are positional. `--key value` and `--key=value` both work;
+    /// a `--key` followed by another option (or end) is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let items: Vec<String> = argv.into_iter().collect();
+        let mut a = Args {
+            subcommand: None,
+            positional: Vec::new(),
+            opts: BTreeMap::new(),
+            flags: Vec::new(),
+        };
+        let mut i = 0;
+        while i < items.len() {
+            let it = &items[i];
+            if let Some(name) = it.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    a.opts.insert(name.to_string(), items[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(name.to_string());
+                }
+            } else if a.subcommand.is_none() && a.positional.is_empty() {
+                a.subcommand = Some(it.clone());
+            } else {
+                a.positional.push(it.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.get(key) == Some("true")
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}"))).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}"))).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}"))).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train extra --model lenet --epochs 10 --quick");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("lenet"));
+        assert_eq!(a.usize("epochs", 1), 10);
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("exp --id=fig8 --scale=0.5");
+        assert_eq!(a.get("id"), Some("fig8"));
+        assert_eq!(a.f64("scale", 1.0), 0.5);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("plan");
+        assert_eq!(a.usize("epochs", 7), 7);
+        assert!(!a.flag("quick"));
+        assert_eq!(a.get_or("model", "lenet"), "lenet");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("train --verbose");
+        assert!(a.flag("verbose"));
+    }
+}

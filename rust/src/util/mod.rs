@@ -1,0 +1,88 @@
+//! Foundation utilities built in-tree (this environment vendors no crates
+//! beyond `xla`/`anyhow`): deterministic PRNG, JSON, CLI args, f32 binary
+//! I/O, and simple stat helpers.
+
+pub mod args;
+pub mod json;
+pub mod rng;
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Read a little-endian f32 binary file (the `{model}_init.bin` format).
+pub fn read_f32_file(path: &Path) -> anyhow::Result<Vec<f32>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?
+        .read_to_end(&mut bytes)?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{}: length not a multiple of 4", path.display());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a little-endian f32 binary file.
+pub fn write_f32_file(path: &Path, data: &[f32]) -> anyhow::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile (nearest-rank) of an unsorted slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("cloudless_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.bin");
+        let data = vec![1.0f32, -2.5, 3.25, f32::MIN_POSITIVE];
+        write_f32_file(&path, &data).unwrap();
+        assert_eq!(read_f32_file(&path).unwrap(), data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.118033988749895).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+}

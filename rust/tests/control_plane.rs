@@ -1,0 +1,154 @@
+//! Integration tests over the serverless control plane: workflow
+//! deployment, addressing, autoscaling lifecycle, and config-driven job
+//! construction. Pure logic — no PJRT required.
+
+use cloudless::cloud::devices::Device;
+use cloudless::config;
+use cloudless::coordinator::SchedulingMode;
+use cloudless::faas::workflow::{WorkflowDef, WorkflowInstance};
+use cloudless::faas::{Endpoint, FaasRuntime, FunctionKind, FunctionSpec};
+use cloudless::sync::Strategy;
+
+/// Build the full Cloudless-Training startup workflow the trainer deploys
+/// (control plane + one sub-workflow per cloud) and walk it to completion.
+#[test]
+fn training_startup_workflow_walks_to_completion() {
+    let mut rt = FaasRuntime::new();
+
+    let mut wf = WorkflowDef::new("cloudless-startup");
+    let sched = wf.add(FunctionSpec::new("scheduler", "ctl", FunctionKind::Scheduler, 0), vec![]);
+    let comm = wf.add(
+        FunctionSpec::new("global-comm", "ctl", FunctionKind::GlobalCommunicator, 0),
+        vec![sched],
+    );
+    let mut ps_nodes = Vec::new();
+    for cloud in 0..2 {
+        let ps = wf.add(
+            FunctionSpec::new("ps", &format!("c{cloud}"), FunctionKind::ParameterServer, cloud),
+            vec![comm],
+        );
+        let ps_comm = wf.add(
+            FunctionSpec::new("ps-comm", &format!("c{cloud}"), FunctionKind::PsCommunicator, cloud),
+            vec![ps],
+        );
+        for w in 0..3 {
+            wf.add(
+                FunctionSpec::new(&format!("worker{w}"), &format!("c{cloud}"), FunctionKind::Worker, cloud),
+                vec![ps_comm],
+            );
+        }
+        ps_nodes.push(ps);
+    }
+
+    let mut inst = WorkflowInstance::deploy(wf, &mut rt).unwrap();
+    let mut done = 0;
+    let total = inst.def.nodes.len();
+    // Drive nodes in waves until the whole DAG completes.
+    while !inst.all_done() {
+        let ready = inst.ready_nodes();
+        assert!(!ready.is_empty(), "DAG stalled with {done}/{total} done");
+        for node in ready {
+            inst.start(node);
+            // every function is really registered and invocable
+            let key = inst.keys[node].clone();
+            let inv = rt.invoke(&key, done as f64).unwrap();
+            rt.mark_ready(inv.replica);
+            inst.complete(node);
+            done += 1;
+        }
+    }
+    assert_eq!(done, total);
+    let (invocations, cold) = rt.stats();
+    assert_eq!(invocations as usize, total);
+    assert_eq!(cold as usize, total, "first invocation of each function is cold");
+}
+
+#[test]
+fn wan_identities_only_for_ps_communicators() {
+    let mut rt = FaasRuntime::new();
+    let ps_comm = rt.register(FunctionSpec::new("ps-comm", "c0", FunctionKind::PsCommunicator, 0));
+    let worker = rt.register(FunctionSpec::new("w", "c0", FunctionKind::Worker, 0));
+    let (comm_rep, _) = rt.scale_up(&ps_comm, 0.0).unwrap();
+    let (worker_rep, _) = rt.scale_up(&worker, 0.0).unwrap();
+
+    // Global communicator behavior: map each PS communicator's serverless
+    // identity to a public <IP, Port>.
+    rt.addressing.assign_wan_identity(comm_rep, Endpoint { ip: [101, 6, 0, 10], port: 7000 });
+    assert!(rt.addressing.wan_identity(comm_rep).is_some());
+    assert!(rt.addressing.wan_identity(worker_rep).is_none());
+}
+
+#[test]
+fn addressing_survives_replica_churn() {
+    let mut rt = FaasRuntime::new();
+    let key = rt.register(FunctionSpec::new("ps", "c0", FunctionKind::ParameterServer, 0));
+    let (rep, _) = rt.scale_up(&key, 0.0).unwrap();
+    rt.mark_ready(rep);
+    let before = rt.addressing.lookup(rep).unwrap();
+    // Reschedule the replica several times; the table must follow.
+    let mut last = before;
+    for _ in 0..5 {
+        let ep = rt.reschedule(rep).unwrap();
+        assert_ne!(ep, last);
+        assert_eq!(rt.addressing.lookup(rep), Some(ep));
+        last = ep;
+    }
+    assert_eq!(rt.addressing.remap_count(), 5);
+}
+
+#[test]
+fn worker_scale_to_zero_releases_resources() {
+    let mut rt = FaasRuntime::new();
+    let key = rt.register(FunctionSpec::new("worker", "c1", FunctionKind::Worker, 1));
+    let mut reps = Vec::new();
+    for _ in 0..4 {
+        let (rep, _) = rt.scale_up(&key, 10.0).unwrap();
+        rt.mark_ready(rep);
+        reps.push(rep);
+    }
+    assert_eq!(rt.ready_replicas_of(&key).len(), 4);
+    // local training finishes at t=110: everything terminates
+    for rep in &reps {
+        rt.terminate(*rep, 110.0);
+    }
+    assert!(rt.ready_replicas_of(&key).is_empty());
+    let held = rt.held_seconds_of(&key, 500.0);
+    assert!((held - 400.0).abs() < 1e-9, "4 workers x 100 s, got {held}");
+}
+
+// ------------------------------------------------------------- config
+
+#[test]
+fn config_files_in_repo_parse() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut count = 0;
+    for entry in std::fs::read_dir(&dir).expect("configs/ exists") {
+        let path = entry.unwrap().path();
+        if path.extension().map_or(false, |e| e == "json") {
+            let spec = config::load_job(&path)
+                .unwrap_or_else(|e| panic!("{} failed to parse: {e}", path.display()));
+            assert!(!spec.env.regions.is_empty());
+            count += 1;
+        }
+    }
+    assert!(count >= 4, "expected the shipped config set, found {count}");
+}
+
+#[test]
+fn config_drives_scheduling_and_strategy() {
+    let spec = config::parse_job(
+        r#"{
+            "model": "lenet", "strategy": "sma", "sync_freq": 16,
+            "scheduling": "greedy",
+            "regions": [
+                {"name": "a", "device": "cascade", "units": 4, "data": 100},
+                {"name": "b", "device": "t4", "units": 1, "data": 100}
+            ]
+        }"#,
+    )
+    .unwrap();
+    assert_eq!(spec.scheduling, SchedulingMode::Greedy);
+    assert_eq!(spec.train.sync.strategy, Strategy::Sma);
+    assert_eq!(spec.train.sync.freq, 16);
+    assert_eq!(spec.env.regions[1].max_units(Device::T4), 1);
+}

@@ -1,0 +1,106 @@
+//! Failure-injection integration tests: the training engine must survive
+//! dropped transfers, link outages, and extreme fluctuation without
+//! losing correctness (training completes, accuracy unharmed by retries).
+//! Requires artifacts (PJRT runs the real numerics).
+
+use cloudless::cloud::devices::Device;
+use cloudless::cloud::CloudEnv;
+use cloudless::net::LinkSpec;
+use cloudless::runtime::PjrtRuntime;
+use cloudless::sync::{Strategy, SyncConfig};
+use cloudless::train::{run_geo_training, TrainConfig};
+
+fn rt() -> PjrtRuntime {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    PjrtRuntime::new(dir).expect("PJRT CPU client")
+}
+
+fn cfg_with_link(link: LinkSpec) -> TrainConfig {
+    let mut cfg = TrainConfig::new("lenet");
+    cfg.epochs = 3;
+    cfg.n_train = 1024;
+    cfg.n_eval = 256;
+    cfg.sync = SyncConfig::new(Strategy::AsgdGa, 4);
+    cfg.link = link;
+    cfg.skip_eval = true;
+    cfg
+}
+
+#[test]
+fn survives_heavy_drop_rates() {
+    let env = CloudEnv::tencent_two_region(Device::Skylake, 512, 512);
+    let clean = run_geo_training(
+        &rt(),
+        &env,
+        env.greedy_plan(),
+        cfg_with_link(LinkSpec::wan_100mbps()),
+    )
+    .unwrap();
+    let lossy = run_geo_training(
+        &rt(),
+        &env,
+        env.greedy_plan(),
+        cfg_with_link(LinkSpec { drop_prob: 0.3, ..LinkSpec::wan_100mbps() }),
+    )
+    .unwrap();
+    // Training still completes every step on both sides.
+    assert_eq!(
+        lossy.partitions.iter().map(|p| p.steps).sum::<u64>(),
+        clean.partitions.iter().map(|p| p.steps).sum::<u64>(),
+    );
+    // Some syncs were dropped -> fewer bytes actually carried.
+    assert!(lossy.wan_bytes < clean.wan_bytes, "{} vs {}", lossy.wan_bytes, clean.wan_bytes);
+}
+
+#[test]
+fn survives_total_blackout() {
+    // 100% drop: partitions train fully isolated (degenerates to local
+    // training; the engine must not deadlock waiting for receives).
+    let env = CloudEnv::tencent_two_region(Device::Skylake, 512, 512);
+    let report = run_geo_training(
+        &rt(),
+        &env,
+        env.greedy_plan(),
+        cfg_with_link(LinkSpec { drop_prob: 1.0, ..LinkSpec::wan_100mbps() }),
+    )
+    .unwrap();
+    assert_eq!(report.wan_bytes, 0);
+    assert!(report.partitions.iter().all(|p| p.syncs_received == 0));
+    assert!(report.total_time > 0.0);
+}
+
+#[test]
+fn extreme_fluctuation_slows_but_completes() {
+    let env = CloudEnv::tencent_two_region(Device::Skylake, 512, 512);
+    let stable = run_geo_training(
+        &rt(),
+        &env,
+        env.greedy_plan(),
+        cfg_with_link(LinkSpec { fluct_sigma: 0.0, ..LinkSpec::wan_100mbps() }),
+    )
+    .unwrap();
+    let wild = run_geo_training(
+        &rt(),
+        &env,
+        env.greedy_plan(),
+        cfg_with_link(LinkSpec { fluct_sigma: 1.0, ..LinkSpec::wan_100mbps() }),
+    )
+    .unwrap();
+    assert!(wild.total_time.is_finite());
+    assert_eq!(
+        wild.partitions.iter().map(|p| p.steps).sum::<u64>(),
+        stable.partitions.iter().map(|p| p.steps).sum::<u64>(),
+    );
+}
+
+#[test]
+fn sma_with_drops_does_not_deadlock() {
+    // Barrier strategy + lossy link: exchanges retry until they land;
+    // the barrier must still release.
+    let env = CloudEnv::tencent_two_region(Device::Skylake, 384, 384);
+    let mut cfg = cfg_with_link(LinkSpec { drop_prob: 0.4, ..LinkSpec::self_hosted() });
+    cfg.sync = SyncConfig::new(Strategy::Sma, 8);
+    let report = run_geo_training(&rt(), &env, env.greedy_plan(), cfg).unwrap();
+    assert!(report.total_time.is_finite());
+    assert!(report.partitions.iter().all(|p| p.steps > 0));
+}

@@ -1,0 +1,386 @@
+//! Property-based tests over the coordinator's pure logic: scheduler
+//! invariants, sync-strategy invariants, network invariants, data
+//! sharding invariants, and JSON round-trips. No PJRT needed — these run
+//! in milliseconds.
+
+use cloudless::cloud::devices::Device;
+use cloudless::cloud::{Allocation, CloudEnv, Region};
+use cloudless::net::{Fabric, LinkSpec};
+use cloudless::prop::{forall, vec_f32};
+use cloudless::ps::PsState;
+use cloudless::runtime::vecops;
+use cloudless::sched::{imbalance, load_power, optimal_matching};
+use cloudless::sync::{
+    apply_payload, make_payload, plan_topology, Payload, Strategy, SyncConfig,
+};
+use cloudless::util::json::Json;
+use cloudless::util::rng::Pcg32;
+
+const CPUS: [Device; 3] = [Device::IceLake, Device::CascadeLake, Device::Skylake];
+
+fn random_env(rng: &mut Pcg32) -> CloudEnv {
+    let n = 2 + rng.usize_below(3); // 2..4 regions
+    let regions = (0..n)
+        .map(|i| {
+            let dev = CPUS[rng.usize_below(3)];
+            let units = 2 + rng.below(23);
+            let data = 100 + rng.usize_below(5000);
+            Region::new(i, &format!("r{i}"), vec![(dev, units)], data)
+        })
+        .collect();
+    CloudEnv::new(regions)
+}
+
+// -------------------------------------------------------------- scheduler
+
+#[test]
+fn prop_plan_fits_inventory_and_is_nonempty() {
+    forall(
+        150,
+        |r| random_env(r),
+        |env| {
+            let plan = optimal_matching(env);
+            for (alloc, region) in plan.allocations.iter().zip(&env.regions) {
+                assert!(alloc.fits(region), "plan over-allocates {region:?}");
+                assert!(alloc.power() > 0.0, "plan gave {} zero power", region.name);
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_straggler_keeps_greedy_allocation() {
+    forall(
+        150,
+        |r| random_env(r),
+        |env| {
+            let plan = optimal_matching(env);
+            let greedy = env.greedy_plan();
+            assert_eq!(
+                plan.allocations[plan.straggler], greedy[plan.straggler],
+                "the reference straggler must not be cut"
+            );
+        },
+    );
+}
+
+#[test]
+fn prop_planned_lp_never_below_straggler() {
+    forall(
+        150,
+        |r| random_env(r),
+        |env| {
+            let plan = optimal_matching(env);
+            let floor = plan.full_lp[plan.straggler];
+            for lp in &plan.planned_lp {
+                assert!(*lp + 1e-9 >= floor, "planned LP {lp} below straggler {floor}");
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_plan_never_increases_imbalance_or_units() {
+    forall(
+        150,
+        |r| random_env(r),
+        |env| {
+            let plan = optimal_matching(env);
+            let greedy = env.greedy_plan();
+            assert!(
+                imbalance(&plan.planned_lp) <= imbalance(&plan.full_lp) + 1e-9,
+                "plan worsened imbalance"
+            );
+            let planned_units: u32 = plan.allocations.iter().map(|a| a.total_units()).sum();
+            let greedy_units: u32 = greedy.iter().map(|a| a.total_units()).sum();
+            assert!(planned_units <= greedy_units);
+        },
+    );
+}
+
+#[test]
+fn prop_load_power_monotone_in_units_and_data() {
+    forall(
+        200,
+        |r| (CPUS[r.usize_below(3)], 1 + r.below(23), 1 + r.usize_below(10_000)),
+        |&(dev, units, data)| {
+            let a = Allocation::new(0, vec![(dev, units)]);
+            let b = Allocation::new(0, vec![(dev, units + 1)]);
+            assert!(load_power(&b, data) > load_power(&a, data));
+            assert!(load_power(&a, data + 1) < load_power(&a, data));
+        },
+    );
+}
+
+// ------------------------------------------------------------------ sync
+
+#[test]
+fn prop_accumulated_gradient_equals_sum() {
+    forall(
+        100,
+        |r| {
+            let n = 1 + r.usize_below(200);
+            let k = 1 + r.usize_below(10);
+            let grads: Vec<Vec<f32>> = (0..k).map(|_| vec_f32(r, n)).collect();
+            grads
+        },
+        |grads| {
+            let n = grads[0].len();
+            let mut ps = PsState::new(vec![0.0; n], 0.1);
+            let mut expect = vec![0.0f32; n];
+            for g in grads {
+                ps.push_gradient(g, 0);
+                vecops::accumulate_inplace(&mut expect, g);
+            }
+            let cfg = SyncConfig::new(Strategy::AsgdGa, grads.len() as u32);
+            match make_payload(&cfg, &mut ps) {
+                Payload::Gradient { grad, steps } => {
+                    assert_eq!(steps as usize, grads.len());
+                    for i in 0..n {
+                        assert!((grad[i] - expect[i]).abs() < 1e-4, "accum mismatch at {i}");
+                    }
+                }
+                _ => panic!("GA sends gradients"),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_model_average_is_midpoint_and_bounded() {
+    forall(
+        100,
+        |r| {
+            let n = 1 + r.usize_below(300);
+            (vec_f32(r, n), vec_f32(r, n))
+        },
+        |(a, b)| {
+            let mut ps = PsState::new(a.clone(), 0.1);
+            let cfg = SyncConfig::new(Strategy::Ama, 4);
+            apply_payload(&cfg, &mut ps, &Payload::Params(b.clone()));
+            for i in 0..a.len() {
+                let lo = a[i].min(b[i]) - 1e-6;
+                let hi = a[i].max(b[i]) + 1e-6;
+                assert!(ps.params[i] >= lo && ps.params[i] <= hi, "avg out of bounds at {i}");
+                assert!((ps.params[i] - (a[i] + b[i]) / 2.0).abs() < 1e-5);
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sync_semantics_commute_with_accumulation_order() {
+    // Applying k remote gradients one by one == applying their sum once
+    // (SGD linearity — the invariant ASGD-GA relies on for correctness).
+    forall(
+        100,
+        |r| {
+            let n = 1 + r.usize_below(100);
+            let k = 2 + r.usize_below(6);
+            let init = vec_f32(r, n);
+            let grads: Vec<Vec<f32>> = (0..k).map(|_| vec_f32(r, n)).collect();
+            (init, grads)
+        },
+        |(init, grads)| {
+            let n = init.len();
+            let mut one_by_one = PsState::new(init.clone(), 0.05);
+            for g in grads {
+                one_by_one.apply_remote_gradient(g);
+            }
+            let mut summed = PsState::new(init.clone(), 0.05);
+            let mut total = vec![0.0f32; n];
+            for g in grads {
+                vecops::accumulate_inplace(&mut total, g);
+            }
+            summed.apply_remote_gradient(&total);
+            for i in 0..n {
+                assert!((one_by_one.params[i] - summed.params[i]).abs() < 1e-4);
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_topology_is_permutation_with_no_self_loops() {
+    forall(
+        50,
+        |r| 2 + r.usize_below(16),
+        |&n| {
+            let topo = plan_topology(n);
+            assert_eq!(topo.len(), n);
+            let mut seen = vec![false; n];
+            for (i, &t) in topo.iter().enumerate() {
+                assert_ne!(i, t, "self-loop at {i}");
+                assert!(!seen[t], "node {t} receives twice");
+                seen[t] = true;
+            }
+        },
+    );
+}
+
+// --------------------------------------------------------------- network
+
+#[test]
+fn prop_link_fifo_and_nonnegative() {
+    forall(
+        100,
+        |r| {
+            let n = 1 + r.usize_below(50);
+            let submits: Vec<(f64, u64)> = (0..n)
+                .map(|_| (r.range_f64(0.0, 100.0), 1 + r.next_u32() as u64 % 5_000_000))
+                .collect();
+            submits
+        },
+        |submits| {
+            let mut sorted = submits.clone();
+            sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let mut fabric = Fabric::new(9);
+            fabric.add_link(0, 1, LinkSpec::wan_100mbps());
+            let mut last_done = 0.0f64;
+            for (at, bytes) in sorted {
+                let t = fabric.transfer(0, 1, bytes, at);
+                assert!(!t.dropped);
+                assert!(t.start + 1e-12 >= at, "transfer started before submit");
+                assert!(t.start + 1e-12 >= last_done, "FIFO violated");
+                assert!(t.done > t.start && t.arrival > t.done);
+                last_done = t.done;
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_transfer_time_scales_with_bytes() {
+    forall(
+        100,
+        |r| (1 + r.next_u32() as u64 % 10_000_000, 1 + r.next_u32() as u64 % 10_000_000),
+        |&(a, b)| {
+            let spec =
+                LinkSpec { fluct_sigma: 0.0, setup_s: 0.0, ..LinkSpec::wan_100mbps() };
+            let mut f1 = Fabric::new(1);
+            f1.add_link(0, 1, spec.clone());
+            let mut f2 = Fabric::new(1);
+            f2.add_link(0, 1, spec);
+            let ta = f1.transfer(0, 1, a, 0.0);
+            let tb = f2.transfer(0, 1, b, 0.0);
+            if a < b {
+                assert!(ta.done <= tb.done + 1e-12);
+            } else {
+                assert!(tb.done <= ta.done + 1e-12);
+            }
+        },
+    );
+}
+
+// ------------------------------------------------------------------ data
+
+#[test]
+fn prop_shards_partition_the_dataset() {
+    forall(
+        100,
+        |r| {
+            let n = 10 + r.usize_below(5000);
+            let k = 1 + r.usize_below(5);
+            let fractions: Vec<f64> = (0..k).map(|_| 0.1 + r.f64()).collect();
+            (n, fractions)
+        },
+        |(n, fractions)| {
+            let shards = cloudless::data::shard_by_fraction(*n, fractions, 3);
+            let mut all: Vec<usize> =
+                shards.iter().flat_map(|s| s.indices.iter().copied()).collect();
+            all.sort();
+            assert_eq!(all, (0..*n).collect::<Vec<_>>(), "shards must partition [0, n)");
+        },
+    );
+}
+
+#[test]
+fn prop_shard_epoch_covers_every_index() {
+    forall(
+        50,
+        |r| (1 + r.usize_below(500), 1 + r.usize_below(64)),
+        |&(n, b)| {
+            let mut shard = cloudless::data::Shard::new((0..n).collect(), 7, 0);
+            let steps = shard.steps_per_epoch(b);
+            let mut seen = vec![0u32; n];
+            for _ in 0..steps {
+                for idx in shard.next_batch(b) {
+                    seen[idx] += 1;
+                }
+            }
+            // every index appears at least once per epoch (tail wraps may
+            // duplicate a few)
+            assert!(seen.iter().all(|&c| c >= 1), "epoch missed an index");
+        },
+    );
+}
+
+// ------------------------------------------------------------------ json
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Pcg32, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.f64() * 2000.0 - 1000.0 * 0.0).round()),
+            3 => {
+                let len = rng.usize_below(12);
+                Json::Str(
+                    (0..len)
+                        .map(|_| char::from_u32(0x20 + rng.below(0x50)).unwrap())
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.usize_below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.usize_below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(
+        200,
+        |r| random_json(r, 3),
+        |j| {
+            let compact = Json::parse(&j.to_string_compact()).unwrap();
+            assert_eq!(&compact, j);
+            let pretty = Json::parse(&j.to_string_pretty()).unwrap();
+            assert_eq!(&pretty, j);
+        },
+    );
+}
+
+// ---------------------------------------------------------------- vecops
+
+#[test]
+fn prop_vecops_algebra() {
+    forall(
+        150,
+        |r| {
+            let n = 1 + r.usize_below(1000);
+            (vec_f32(r, n), vec_f32(r, n), r.f32())
+        },
+        |(p, g, lr)| {
+            // sgd(p, g, lr) == p - lr*g elementwise
+            let mut out = p.clone();
+            vecops::sgd_apply_inplace(&mut out, g, *lr);
+            for i in 0..p.len() {
+                assert!((out[i] - (p[i] - lr * g[i])).abs() <= 1e-5);
+            }
+            // average(x, x) == x
+            let mut same = p.clone();
+            vecops::average_inplace(&mut same, p, 0.5);
+            for i in 0..p.len() {
+                assert!((same[i] - p[i]).abs() <= 1e-6);
+            }
+            // mean_of is permutation-invariant
+            let m1 = vecops::mean_of(&[p, g]);
+            let m2 = vecops::mean_of(&[g, p]);
+            for i in 0..p.len() {
+                assert!((m1[i] - m2[i]).abs() <= 1e-6);
+            }
+        },
+    );
+}

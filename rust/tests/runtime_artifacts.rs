@@ -1,0 +1,132 @@
+//! Integration: the Rust runtime loads and executes real AOT artifacts.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! These tests are the proof that the three layers compose: Pallas (L1)
+//! lowered inside JAX graphs (L2) executed from Rust via PJRT (L3).
+
+use cloudless::runtime::{vecops, PjrtRuntime, Tensor};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> PjrtRuntime {
+    PjrtRuntime::new(artifacts_dir()).expect("PJRT CPU client")
+}
+
+#[test]
+fn pallas_matmul_kernel_executes() {
+    // kernel_matmul.hlo.txt is the raw L1 Pallas kernel (256x256x256).
+    let rt = runtime();
+    let exe = rt.compile_artifact("kernel_matmul.hlo.txt").unwrap();
+    let n = 256usize;
+    // a = I, b = arbitrary -> a@b == b.
+    let mut a = vec![0f32; n * n];
+    for i in 0..n {
+        a[i * n + i] = 1.0;
+    }
+    let b: Vec<f32> = (0..n * n).map(|i| (i % 97) as f32 * 0.25).collect();
+    let lit_a = xla::Literal::vec1(&a).reshape(&[n as i64, n as i64]).unwrap();
+    let lit_b = xla::Literal::vec1(&b).reshape(&[n as i64, n as i64]).unwrap();
+    let outs = exe.run(&[lit_a, lit_b]).unwrap();
+    let got = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(got.len(), n * n);
+    for i in 0..n * n {
+        assert!((got[i] - b[i]).abs() < 1e-5, "mismatch at {i}: {} vs {}", got[i], b[i]);
+    }
+}
+
+#[test]
+fn lenet_train_step_runs_and_learns() {
+    let rt = runtime();
+    let m = rt.load_model("lenet").unwrap();
+    assert_eq!(m.meta.name, "lenet");
+    let b = m.meta.batch_size;
+    let xelem = m.meta.x_elems_per_example();
+
+    // Deterministic toy batch: two blobby "classes".
+    let x: Vec<f32> = (0..b * xelem)
+        .map(|i| if (i / xelem) % 2 == 0 { 0.5 } else { -0.5 })
+        .collect();
+    let y: Vec<i32> = (0..b as i32).map(|i| i % 2).collect();
+    let xt = Tensor::f32(x, m.meta.x_dims());
+    let yt = Tensor::i32(y, m.meta.y_dims());
+
+    let mut params = m.init_params.clone();
+    let (grads, loss0) = m.train_step(&params, &xt, &yt).unwrap();
+    assert_eq!(grads.len(), m.meta.param_count);
+    assert!(loss0.is_finite() && loss0 > 0.0, "loss0={loss0}");
+
+    // A few SGD steps on the fixed batch must reduce the loss.
+    let mut loss = loss0;
+    for _ in 0..10 {
+        let (g, l) = m.train_step(&params, &xt, &yt).unwrap();
+        vecops::sgd_apply_inplace(&mut params, &g, 0.05);
+        loss = l;
+    }
+    assert!(loss < loss0 * 0.9, "no learning: {loss0} -> {loss}");
+
+    // Eval agrees on shapes and counts.
+    let (loss_sum, correct) = m.eval_batch(&params, &xt, &yt).unwrap();
+    assert!(loss_sum.is_finite());
+    assert!((0.0..=b as f32).contains(&correct));
+}
+
+#[test]
+fn pjrt_vecops_match_native() {
+    let rt = runtime();
+    let m = rt.load_model("lenet").unwrap();
+    let p0 = m.init_params.clone();
+    let n = p0.len();
+    let g: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
+
+    // sgd_apply
+    let via_pjrt = m.sgd_apply(&p0, &g, 0.1).unwrap();
+    let mut via_native = p0.clone();
+    vecops::sgd_apply_inplace(&mut via_native, &g, 0.1);
+    for i in 0..n {
+        assert!((via_pjrt[i] - via_native[i]).abs() < 1e-6, "sgd mismatch at {i}");
+    }
+
+    // average
+    let avg_pjrt = m.model_average(&p0, &g, 0.5).unwrap();
+    let mut avg_native = p0.clone();
+    vecops::average_inplace(&mut avg_native, &g, 0.5);
+    for i in 0..n {
+        assert!((avg_pjrt[i] - avg_native[i]).abs() < 1e-6, "avg mismatch at {i}");
+    }
+
+    // accumulate
+    let acc_pjrt = m.grad_accumulate(&p0, &g).unwrap();
+    for i in 0..n {
+        assert!((acc_pjrt[i] - (p0[i] + g[i])).abs() < 1e-6, "acc mismatch at {i}");
+    }
+}
+
+#[test]
+fn all_default_models_load() {
+    let rt = runtime();
+    for name in ["lenet", "resnet", "deepfm", "transformer"] {
+        let m = rt.load_model(name).unwrap_or_else(|e| panic!("loading {name}: {e}"));
+        assert!(m.meta.param_count > 0);
+        assert_eq!(m.init_params.len(), m.meta.param_count);
+    }
+}
+
+#[test]
+fn deepfm_pallas_artifact_runs() {
+    // DeepFM's train graph is the Pallas-path lowering (meta.compute):
+    // executing it exercises interpret-mode Pallas HLO through PJRT.
+    let rt = runtime();
+    let m = rt.load_model("deepfm").unwrap();
+    assert_eq!(m.meta.compute, "pallas");
+    let b = m.meta.batch_size;
+    let fields = m.meta.vocab_sizes.len();
+    let x: Vec<i32> = (0..b * fields).map(|i| (i % m.meta.vocab_sizes[0]) as i32).collect();
+    let y: Vec<f32> = (0..b).map(|i| (i % 2) as f32).collect();
+    let xt = Tensor::i32(x, m.meta.x_dims());
+    let yt = Tensor::f32(y, m.meta.y_dims());
+    let (grads, loss) = m.train_step(&m.init_params, &xt, &yt).unwrap();
+    assert!(loss.is_finite());
+    assert!(grads.iter().any(|g| *g != 0.0));
+}
