@@ -1,0 +1,9 @@
+//! Bench: compare Ring vs Hierarchical vs BandwidthTree sync topologies
+//! (wall-clock + WAN bytes) on a 4-cloud heterogeneous WAN.
+mod common;
+
+fn main() {
+    common::banner("topologies");
+    let coord = common::coordinator();
+    cloudless::exp::topology_exp::topology_compare(&coord, common::scale_from_args());
+}

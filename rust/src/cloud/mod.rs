@@ -92,6 +92,20 @@ impl CloudEnv {
         ])
     }
 
+    /// An N-region environment from `(name, device, units, data)` rows —
+    /// the N-cloud scenarios the engine's pluggable sync topologies open
+    /// up (region ids follow row order).
+    pub fn multi_region(rows: Vec<(&str, Device, u32, usize)>) -> Self {
+        CloudEnv::new(
+            rows.into_iter()
+                .enumerate()
+                .map(|(i, (name, dev, units, data))| {
+                    Region::new(i, name, vec![(dev, units)], data)
+                })
+                .collect(),
+        )
+    }
+
     /// Greedy baseline plan: rent everything every region offers
     /// (the paper: "all baseline experiments use a greedy strategy to
     /// consume all available 24 CPU cores, 12 from each region").
@@ -127,6 +141,20 @@ mod tests {
         assert!((a.power() - 4.0).abs() < 1e-9); // 12 * 1/3
         let b = Allocation::new(1, vec![(Device::Skylake, 8)]);
         assert!((b.power() - 4.0).abs() < 1e-9); // 8 * 1/2 — Table IV case 1!
+    }
+
+    #[test]
+    fn multi_region_builder() {
+        let env = CloudEnv::multi_region(vec![
+            ("SH", Device::CascadeLake, 12, 1000),
+            ("CQ", Device::Skylake, 12, 1000),
+            ("BJ", Device::Skylake, 8, 500),
+            ("GZ", Device::IceLake, 6, 500),
+        ]);
+        assert_eq!(env.regions.len(), 4);
+        assert_eq!(env.regions[2].id, 2);
+        assert_eq!(env.regions[3].name, "GZ");
+        assert_eq!(env.total_samples(), 3000);
     }
 
     #[test]

@@ -10,8 +10,9 @@
 //!   "lr": 0.03,
 //!   "seed": 42,
 //!   "n_train": 4096, "n_eval": 1024,
-//!   "strategy": "asgd-ga",             // asgd | asgd-ga | ama | sma
+//!   "strategy": "asgd-ga",             // asgd | asgd-ga | ama | ma | sma
 //!   "sync_freq": 4,
+//!   "topology": "ring",                // ring | hierarchical | bandwidth-tree
 //!   "scheduling": "elastic",           // elastic | greedy
 //!   "worker_cores": 3,
 //!   "link": {"bandwidth_mbps": 100, "latency_ms": 15,
@@ -28,6 +29,7 @@ use anyhow::{Context, Result};
 use crate::cloud::devices::Device;
 use crate::cloud::{CloudEnv, Region};
 use crate::coordinator::{JobSpec, SchedulingMode};
+use crate::engine::TopologyKind;
 use crate::net::LinkSpec;
 use crate::sync::{Strategy, SyncConfig};
 use crate::train::TrainConfig;
@@ -86,10 +88,16 @@ pub fn parse_job(text: &str) -> Result<JobSpec> {
     }
 
     let strategy_name = j.get("strategy").as_str().unwrap_or("asgd");
-    let strategy = Strategy::from_name(strategy_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown strategy {strategy_name:?}"))?;
+    let strategy = Strategy::from_name(strategy_name).map_err(|e| anyhow::anyhow!(e))?;
     let freq = j.get("sync_freq").as_usize().unwrap_or(1) as u32;
     train.sync = SyncConfig::new(strategy, freq);
+    let topology = j.get("topology");
+    if !topology.is_null() {
+        let t = topology
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("\"topology\" must be a string (e.g. \"ring\")"))?;
+        train.topology = TopologyKind::from_name(t).map_err(|e| anyhow::anyhow!(e))?;
+    }
 
     let link = j.get("link");
     if !link.is_null() {
@@ -156,6 +164,28 @@ mod tests {
         assert_eq!(spec.scheduling, SchedulingMode::Elastic);
         assert_eq!(spec.train.sync.strategy, Strategy::Asgd);
         assert_eq!(spec.train.sync.freq, 1);
+    }
+
+    #[test]
+    fn topology_and_ma_alias_parse() {
+        let spec = parse_job(
+            r#"{"model":"lenet","strategy":"ma","topology":"hierarchical",
+                "regions":[{"name":"X","device":"sky","units":6,"data":100},
+                           {"name":"Y","device":"sky","units":6,"data":100},
+                           {"name":"Z","device":"sky","units":6,"data":100}]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.train.sync.strategy, Strategy::Ama, "\"ma\" aliases AMA");
+        assert_eq!(spec.train.topology, TopologyKind::Hierarchical);
+        assert!(parse_job(
+            r#"{"model":"lenet","topology":"mesh","regions":[{"device":"sky","units":1,"data":1}]}"#
+        )
+        .is_err());
+        // Wrong JSON type must error, not silently fall back to ring.
+        assert!(parse_job(
+            r#"{"model":"lenet","topology":2,"regions":[{"device":"sky","units":1,"data":1}]}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! The WAN communicator layer — payload planning, send-slot backpressure,
+//! and delivery, reproducing the paper's §III.C sync mechanism (each PS
+//! communicator is one gRPC sender; a due sync blocks the partition's
+//! workers while the slot is busy — the effect that makes the freq-1 ASGD
+//! baseline communication-bound in Fig 10).
+//!
+//! Generalization over the seed: a sync event ships one payload along
+//! *every* outgoing edge of the partition's [`SyncPlan`] (a single edge
+//! for [`Ring`](super::topology::Ring), a fan-out for a hierarchical
+//! hub), and each model-averaging payload is applied at the receiver with
+//! its edge's in-degree-derived weight instead of a hardcoded 0.5.
+
+use std::rc::Rc;
+
+use crate::sim::{Sim, Time};
+use crate::sync::{apply_payload, make_payload, Payload};
+
+use super::driver::{self, World};
+use super::partition::Gate;
+use super::topology::PlanEdge;
+
+/// The PS communicator's send slot: busy until the previous payload has
+/// fully serialized and been acknowledged; workers block behind it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SendSlot {
+    /// Virtual time the slot frees (serialization + ack RTT).
+    pub free_at: Time,
+    /// When the partition entered `Gate::CommBlocked`.
+    pub blocked_since: Time,
+    /// Accumulated blocked time (backpressure + barrier waits) — the
+    /// report's `comm_wait`.
+    pub waited: Time,
+}
+
+impl SendSlot {
+    /// Is the slot free at `now` (tolerant of f64 event-time jitter)?
+    pub fn is_free(&self, now: Time) -> bool {
+        now + 1e-12 >= self.free_at
+    }
+}
+
+/// Asynchronous strategies: send now if the communicator is free,
+/// otherwise block the partition until it is (backpressure).
+pub(crate) fn trigger_async_sync(sim: &mut Sim<World>, w: &mut World, p: usize) {
+    let now = sim.now();
+    if w.parts[p].slot.is_free(now) {
+        perform_send(sim, w, p);
+    } else if w.parts[p].gate == Gate::Running {
+        let part = &mut w.parts[p];
+        part.gate = Gate::CommBlocked;
+        part.slot.blocked_since = now;
+        let free_at = part.slot.free_at;
+        sim.schedule_at(free_at, move |sim, w: &mut World| {
+            unblock_comm(sim, w, p);
+        });
+    }
+}
+
+/// The send slot freed: account the blocked time, flush any still-due
+/// sync, and restart the idled workers.
+pub(crate) fn unblock_comm(sim: &mut Sim<World>, w: &mut World, p: usize) {
+    let now = sim.now();
+    {
+        let part = &mut w.parts[p];
+        if part.gate != Gate::CommBlocked {
+            return;
+        }
+        part.slot.waited += now - part.slot.blocked_since;
+        part.gate = Gate::Running;
+    }
+    if w.cfg.sync.should_sync(&w.parts[p].ps) {
+        perform_send(sim, w, p);
+    }
+    // Restart idle workers.
+    let idle = w.parts[p].idle_workers();
+    for _ in 0..idle {
+        driver::start_worker_iteration(sim, w, p);
+    }
+    if w.parts[p].local_done() && w.parts[p].in_flight == 0 {
+        driver::finish_partition(sim, w, p);
+    }
+}
+
+/// Pack the payload and put it on the WAN along every planned edge.
+///
+/// Gradient payloads (ASGD/ASGD-GA) carry the sender's *local*
+/// accumulated gradient only — remote gradients influence peers through
+/// the receiver's parameters (its next local gradients are taken at the
+/// updated model), not by re-forwarding, exactly as in the paper's
+/// two-cloud design. Model-averaging payloads mix directly, which is why
+/// AMA/SMA are the primary strategies for the fan-in N-cloud topologies.
+pub(crate) fn perform_send(sim: &mut Sim<World>, w: &mut World, p: usize) {
+    let edges: Vec<PlanEdge> = w.plan.outgoing(p).to_vec();
+    if edges.is_empty() {
+        return; // single-partition job: nothing to sync with
+    }
+    let payload = Rc::new(make_payload(&w.cfg.sync, &mut w.parts[p].ps));
+    let bytes = payload.wire_bytes();
+    let now = sim.now();
+    let mut ack_at: Option<Time> = None;
+    let mut any_dropped = false;
+    for e in &edges {
+        let (from, to) = (w.parts[p].region, w.parts[e.to].region);
+        let t = w.fabric.transfer(from, to, bytes, now);
+        if t.dropped {
+            any_dropped = true;
+            continue;
+        }
+        // The gRPC send slot frees when this edge's payload lands AND its
+        // ack returns (one edge-specific RTT; overrides may differ from
+        // the uniform mesh latency).
+        let latency = w.fabric.link_latency(from, to).unwrap_or(w.cfg.link.latency_s);
+        let ack = t.arrival + latency;
+        ack_at = Some(ack_at.map_or(ack, |a: Time| a.max(ack)));
+        let (peer, weight, pl) = (e.to, e.weight, Rc::clone(&payload));
+        sim.schedule_at(t.arrival, move |sim, w: &mut World| {
+            receive_payload(sim, w, peer, &pl, weight);
+        });
+    }
+    // The PS communicator is a request/response sender: its send slot
+    // stays busy until the last ack returns (serialization + RTT).
+    if let Some(a) = ack_at {
+        w.parts[p].slot.free_at = a;
+    }
+    if any_dropped {
+        // Failure injection path: a dropped edge's payload is lost, as a
+        // timed-out gRPC request would be. The retry is a re-armed sync
+        // trigger, not a redelivery: it fires only if the sync condition
+        // holds again (fresh accumulated state, all planned edges), so a
+        // fully-blacked-out link cannot spin the event loop forever and
+        // healthy edges never miss an accumulated payload.
+        sim.schedule(1.0, move |sim, w: &mut World| {
+            if w.cfg.sync.should_sync(&w.parts[p].ps) {
+                perform_send(sim, w, p);
+            }
+        });
+    }
+}
+
+/// Synchronous (barrier) exchange: every active partition ships its
+/// payload along its plan edges at the barrier instant; returns the
+/// release time (the latest arrival — a true barrier).
+pub(crate) fn barrier_exchange(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    active: &[usize],
+    now: Time,
+) -> Time {
+    let mut release_at = now;
+    let mut arrivals: Vec<(Time, usize, Rc<Payload>, f32)> = Vec::new();
+    for &p in active {
+        let edges: Vec<PlanEdge> = w.plan.outgoing(p).to_vec();
+        if edges.is_empty() {
+            continue;
+        }
+        let payload = Rc::new(make_payload(&w.cfg.sync, &mut w.parts[p].ps));
+        let bytes = payload.wire_bytes();
+        let mut slot_busy: Option<Time> = None;
+        for e in &edges {
+            let (from, to) = (w.parts[p].region, w.parts[e.to].region);
+            let t = w.fabric.transfer(from, to, bytes, now);
+            if t.dropped {
+                // Lossy link: this edge's payload is lost; the barrier
+                // still releases (the receiver keeps its local model).
+                continue;
+            }
+            slot_busy = Some(slot_busy.map_or(t.done, |s: Time| s.max(t.done)));
+            release_at = release_at.max(t.arrival);
+            arrivals.push((t.arrival, e.to, Rc::clone(&payload), e.weight));
+        }
+        if let Some(s) = slot_busy {
+            w.parts[p].slot.free_at = s;
+        }
+    }
+    for (at, peer, payload, weight) in arrivals {
+        sim.schedule_at(at, move |sim, w: &mut World| {
+            receive_payload(sim, w, peer, &payload, weight);
+        });
+    }
+    release_at
+}
+
+/// A payload landed: apply it per the strategy's update rule, weighting
+/// model-averaging payloads by the edge's receiver-side weight.
+pub(crate) fn receive_payload(
+    _sim: &mut Sim<World>,
+    w: &mut World,
+    p: usize,
+    payload: &Payload,
+    remote_weight: f32,
+) {
+    let cfg = w.cfg.sync;
+    apply_payload(&cfg, &mut w.parts[p].ps, payload, remote_weight);
+}

@@ -1,0 +1,34 @@
+//! The geo-distributed training engine — the layered successor of the
+//! seed's `train/geo.rs` monolith.
+//!
+//! ```text
+//! driver    discrete-event loop over sim::Sim     (paper §III.A plane)
+//!   │          barriers, epochs, eval, reports
+//!   ▼
+//! partition  per-cloud actor: worker gating, PS   (paper §III.A pods)
+//!   │          state, step accounting
+//!   ▼
+//! comm       WAN communicator: payload planning,  (paper §III.C mech)
+//!   │          send-slot backpressure, delivery
+//!   ▼
+//! topology   pluggable N-cloud sync shapes with   (paper §III.C + GeoMX
+//!   │          in-degree-derived avg weights        HiPS, arXiv 2404.11352)
+//!   ▼
+//! net::Fabric  link model (serialization, FIFO, fluctuation)
+//! ```
+//!
+//! The public entry point is [`driver::run_geo_training`] (re-exported
+//! through `train::geo` for source compatibility with the seed). The
+//! topology layer is the new extension axis: implement [`Topology`] to
+//! plug in a custom N-cloud sync shape, or pick one of [`Ring`],
+//! [`Hierarchical`], [`BandwidthTree`] via [`TopologyKind`].
+
+pub mod comm;
+pub mod driver;
+pub mod partition;
+pub mod topology;
+
+pub use driver::{default_lr, run_geo_training, TrainConfig};
+pub use topology::{
+    BandwidthTree, Hierarchical, PlanEdge, Ring, SyncPlan, Topology, TopologyKind,
+};

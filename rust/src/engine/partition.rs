@@ -1,0 +1,132 @@
+//! The per-cloud training partition — the stateful actor behind one
+//! region's serverless training workflow (PS + PS-communicator + worker
+//! functions), reproducing the paper's §III.A physical training plane.
+//!
+//! A [`Partition`] owns the region's PS state, its worker-pool gating
+//! (the paper's ElasticDL-derived pods), and step/epoch accounting. The
+//! WAN side of the actor (send slot, backpressure clock) lives in
+//! [`super::comm::SendSlot`]; the event loop that drives it lives in
+//! [`super::driver`].
+
+use crate::cloud::Allocation;
+use crate::data::Shard;
+use crate::faas::ReplicaId;
+use crate::ps::PsState;
+use crate::sim::Time;
+use crate::util::rng::Pcg32;
+
+use super::comm::SendSlot;
+
+/// What a partition's worker pool is currently allowed to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gate {
+    /// Workers iterate freely (asynchronous local SGD).
+    Running,
+    /// Blocked on the PS communicator's send slot (WAN backpressure).
+    CommBlocked,
+    /// Waiting at a synchronous-strategy barrier (SMA).
+    AtBarrier,
+    /// All local epochs done; worker functions terminated.
+    Finished,
+}
+
+/// One cloud-level training partition (the seed's `Part`, extracted).
+pub struct Partition {
+    /// Region / partition index (identical by construction).
+    pub region: usize,
+    pub region_name: String,
+    pub alloc: Allocation,
+    pub shard: Shard,
+    pub ps: PsState,
+    /// Concurrent worker functions (ElasticDL pod granularity).
+    pub workers: usize,
+    /// Modeled seconds per worker iteration (calibrated).
+    pub t_iter: f64,
+    pub steps_total: u64,
+    pub steps_started: u64,
+    pub steps_completed: u64,
+    pub epoch_steps: u64,
+    pub epochs_done: usize,
+    pub gate: Gate,
+    /// Worker iterations currently in flight.
+    pub in_flight: usize,
+    /// The PS communicator's send slot (backpressure state).
+    pub slot: SendSlot,
+    pub local_finish: Option<Time>,
+    pub barrier_arrived: bool,
+    pub barrier_entry: Time,
+    pub cold_start_time: Time,
+    pub worker_replicas: Vec<ReplicaId>,
+    /// Deterministic per-partition jitter stream.
+    pub rng: Pcg32,
+}
+
+impl Partition {
+    /// True once every planned local step has been started.
+    pub fn local_done(&self) -> bool {
+        self.steps_started >= self.steps_total
+    }
+
+    /// Workers currently idle (available to restart after an unblock).
+    pub fn idle_workers(&self) -> usize {
+        self.workers - self.in_flight
+    }
+
+    /// True when the just-completed step closed a local epoch.
+    pub fn at_epoch_boundary(&self) -> bool {
+        self.epoch_steps > 0 && self.steps_completed % self.epoch_steps == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part() -> Partition {
+        Partition {
+            region: 0,
+            region_name: "test".into(),
+            alloc: Allocation::new(0, vec![]),
+            shard: Shard::new(vec![0, 1, 2, 3], 1, 0),
+            ps: PsState::new(vec![0.0; 4], 0.1),
+            workers: 4,
+            t_iter: 1.0,
+            steps_total: 8,
+            steps_started: 0,
+            steps_completed: 0,
+            epoch_steps: 4,
+            epochs_done: 0,
+            gate: Gate::Running,
+            in_flight: 0,
+            slot: SendSlot::default(),
+            local_finish: None,
+            barrier_arrived: false,
+            barrier_entry: 0.0,
+            cold_start_time: 0.0,
+            worker_replicas: Vec::new(),
+            rng: Pcg32::new(1, 0),
+        }
+    }
+
+    #[test]
+    fn step_accounting() {
+        let mut p = part();
+        assert!(!p.local_done());
+        assert_eq!(p.idle_workers(), 4);
+        p.steps_started = 8;
+        p.in_flight = 3;
+        assert!(p.local_done());
+        assert_eq!(p.idle_workers(), 1);
+    }
+
+    #[test]
+    fn epoch_boundary_detection() {
+        let mut p = part();
+        p.steps_completed = 3;
+        assert!(!p.at_epoch_boundary());
+        p.steps_completed = 4;
+        assert!(p.at_epoch_boundary());
+        p.steps_completed = 8;
+        assert!(p.at_epoch_boundary());
+    }
+}

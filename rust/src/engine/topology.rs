@@ -1,0 +1,487 @@
+//! Sync-topology planning — generalizes the paper's §III.C "each PS sends
+//! its state to exactly one other PS" rule to pluggable N-cloud shapes.
+//!
+//! The paper evaluates on a fixed two-cloud pair, where "the topology" is
+//! just a pairwise exchange with a hardcoded 0.5 averaging weight. This
+//! layer makes topology a first-class axis: a [`Topology`] produces a
+//! [`SyncPlan`] — per-partition outgoing edges, each carrying the
+//! averaging weight the *receiver* applies to the incoming model — so the
+//! engine's communicator ([`super::comm`]) never special-cases the region
+//! count.
+//!
+//! Three shapes are provided:
+//!
+//! - [`Ring`] — the seed behavior: every region sends to `(i+1) % n`; a
+//!   pairwise exchange for 2 clouds (bit-identical to the pre-engine
+//!   `run_geo_training`), a ring beyond that.
+//! - [`Hierarchical`] — HiPS-style (GeoMX) two-stage aggregation: every
+//!   leaf syncs to a hub region which averages and fans back out. The hub
+//!   defaults to the region with the highest aggregate outgoing WAN
+//!   bandwidth.
+//! - [`BandwidthTree`] — a greedy maximum-bandwidth spanning tree over the
+//!   [`Fabric`] link specs (network-aware aggregation trees, arXiv
+//!   2404.11352): payloads travel both directions along tree edges, so
+//!   slow links are bypassed entirely.
+//!
+//! **Averaging weights.** A receiver with in-degree `d` assigns each
+//! incoming model weight `1/(d+1)` and keeps `1 - 1/(d+1)` for its local
+//! model, so incoming weights at every receiver sum to `d/(d+1) < 1`.
+//! For two clouds this reduces to the paper's 0.5/0.5 average; for any
+//! `N`, consensus (all models equal) is a fixed point, which is what the
+//! paper's model-correctness guarantee rests on. (Payloads are applied
+//! sequentially on arrival, so a fan-in receiver's *effective* mix is
+//! order-dependent; see `tests/ncloud_averaging.rs` for the measured
+//! consequences.)
+//!
+//! Weights apply to model-averaging payloads (AMA/SMA). Gradient
+//! strategies (ASGD/ASGD-GA) ship only the sender's local accumulated
+//! gradient one hop — peers beyond a hop are influenced through the
+//! receiver's updated parameters, as in the paper's two-cloud design —
+//! so AMA/SMA are the primary strategies for fan-in topologies.
+
+use crate::net::{Fabric, RegionId};
+
+/// One directed sync edge: when `from` syncs, it ships its payload to
+/// `to`, and `to` averages it in with weight `weight` (model-averaging
+/// strategies; gradient strategies apply the payload via SGD instead).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanEdge {
+    pub from: RegionId,
+    pub to: RegionId,
+    /// The remote-model weight applied at the receiver (`1/(in_degree+1)`).
+    pub weight: f32,
+}
+
+/// A planned sync topology over `n` partitions: for every partition, the
+/// edges it sends on whenever its sync condition fires.
+#[derive(Debug, Clone)]
+pub struct SyncPlan {
+    n: usize,
+    outgoing: Vec<Vec<PlanEdge>>,
+}
+
+impl SyncPlan {
+    /// Build a plan from raw directed edges, deriving each edge's weight
+    /// from its receiver's in-degree (`weight = 1/(in_degree+1)`).
+    ///
+    /// Panics on self-loops, out-of-range endpoints, or duplicate edges —
+    /// a topology that plans those is a bug, not an input error.
+    pub fn from_directed_edges(n: usize, edges: &[(RegionId, RegionId)]) -> SyncPlan {
+        assert!(n >= 1, "a plan needs at least one partition");
+        let mut in_degree = vec![0usize; n];
+        for &(from, to) in edges {
+            assert!(from < n && to < n, "edge ({from},{to}) out of range for n={n}");
+            assert_ne!(from, to, "self-loop at {from}");
+            in_degree[to] += 1;
+        }
+        let mut outgoing: Vec<Vec<PlanEdge>> = vec![Vec::new(); n];
+        for &(from, to) in edges {
+            let weight = 1.0 / (in_degree[to] as f32 + 1.0);
+            assert!(
+                !outgoing[from].iter().any(|e| e.to == to),
+                "duplicate edge ({from},{to})"
+            );
+            outgoing[from].push(PlanEdge { from, to, weight });
+        }
+        SyncPlan { n, outgoing }
+    }
+
+    /// Number of partitions the plan covers.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The edges partition `i` sends on when it syncs.
+    pub fn outgoing(&self, i: RegionId) -> &[PlanEdge] {
+        &self.outgoing[i]
+    }
+
+    /// Number of distinct senders shipping into partition `i`.
+    pub fn in_degree(&self, i: RegionId) -> usize {
+        self.outgoing
+            .iter()
+            .map(|es| es.iter().filter(|e| e.to == i).count())
+            .sum()
+    }
+
+    /// Every directed edge in the plan, in deterministic order.
+    pub fn edges(&self) -> impl Iterator<Item = &PlanEdge> {
+        self.outgoing.iter().flatten()
+    }
+
+    /// The undirected support of the plan: normalized `(min, max)` pairs.
+    pub fn undirected_support(&self) -> Vec<(RegionId, RegionId)> {
+        let mut pairs: Vec<(RegionId, RegionId)> = self
+            .edges()
+            .map(|e| (e.from.min(e.to), e.from.max(e.to)))
+            .collect();
+        pairs.sort_unstable();
+        pairs.dedup();
+        pairs
+    }
+
+    /// True when every partition can reach every other over the undirected
+    /// support (payloads eventually mix every region's model).
+    pub fn is_connected(&self) -> bool {
+        if self.n <= 1 {
+            return true;
+        }
+        let mut adj: Vec<Vec<RegionId>> = vec![Vec::new(); self.n];
+        for (a, b) in self.undirected_support() {
+            adj[a].push(b);
+            adj[b].push(a);
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(v) = stack.pop() {
+            for &u in &adj[v] {
+                if !seen[u] {
+                    seen[u] = true;
+                    stack.push(u);
+                }
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+
+    /// True when the undirected support is a spanning tree (connected and
+    /// acyclic) — the invariant for [`Hierarchical`] and [`BandwidthTree`].
+    pub fn is_tree(&self) -> bool {
+        self.is_connected() && self.undirected_support().len() == self.n.saturating_sub(1)
+    }
+}
+
+/// A pluggable sync-topology strategy: given the partition count and the
+/// WAN fabric, plan who sends to whom with what averaging weight.
+pub trait Topology {
+    /// Stable name (CLI / config / checkpoint metadata).
+    fn name(&self) -> &'static str;
+    /// Plan the per-sync edges over `n` partitions.
+    fn plan(&self, n: usize, fabric: &Fabric) -> SyncPlan;
+}
+
+/// Symmetric nominal bandwidth between two regions (0 when no link is
+/// installed in either direction) — the metric the bandwidth-aware
+/// topologies optimize.
+fn pair_bandwidth(fabric: &Fabric, a: RegionId, b: RegionId) -> f64 {
+    let fwd = fabric.link_bandwidth(a, b).unwrap_or(0.0);
+    let rev = fabric.link_bandwidth(b, a).unwrap_or(0.0);
+    (fwd + rev) / 2.0
+}
+
+/// Region with the largest aggregate bandwidth to all others (ties break
+/// toward the lowest index, so planning is deterministic).
+fn best_connected(n: usize, fabric: &Fabric) -> RegionId {
+    let mut best = 0usize;
+    let mut best_sum = f64::MIN;
+    for i in 0..n {
+        let sum: f64 = (0..n).filter(|&j| j != i).map(|j| pair_bandwidth(fabric, i, j)).sum();
+        if sum > best_sum {
+            best_sum = sum;
+            best = i;
+        }
+    }
+    best
+}
+
+/// The seed topology: partition `i` sends to `(i+1) % n`. A pairwise
+/// exchange at `n = 2` (the paper's exact setting), a ring beyond that.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Ring;
+
+impl Topology for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn plan(&self, n: usize, _fabric: &Fabric) -> SyncPlan {
+        assert!(n >= 1);
+        let edges: Vec<(RegionId, RegionId)> =
+            if n == 1 { Vec::new() } else { (0..n).map(|i| (i, (i + 1) % n)).collect() };
+        SyncPlan::from_directed_edges(n, &edges)
+    }
+}
+
+/// HiPS-style hierarchical aggregation (GeoMX): leaves sync to a hub
+/// region which averages and fans back out on its own sync cadence. Each
+/// arriving leaf model is folded into the hub at weight `1/n` (payloads
+/// apply sequentially as they land, so the effective mix favors later
+/// arrivals — the "hub authority" drift noted in ROADMAP.md); every leaf
+/// receives the hub's model at weight `1/2`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Hierarchical {
+    /// Fixed hub region; `None` picks the best-connected region.
+    pub hub: Option<RegionId>,
+}
+
+impl Topology for Hierarchical {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+
+    fn plan(&self, n: usize, fabric: &Fabric) -> SyncPlan {
+        assert!(n >= 1);
+        let hub = match self.hub {
+            Some(h) => {
+                assert!(h < n, "hub {h} out of range for n={n}");
+                h
+            }
+            None => best_connected(n, fabric),
+        };
+        let mut edges = Vec::new();
+        for leaf in 0..n {
+            if leaf != hub {
+                edges.push((leaf, hub));
+                edges.push((hub, leaf));
+            }
+        }
+        SyncPlan::from_directed_edges(n, &edges)
+    }
+}
+
+/// Network-aware aggregation tree: a greedy maximum-bandwidth spanning
+/// tree (Prim) over the fabric's link specs, rooted at the best-connected
+/// region. Payloads travel both directions along every tree edge, so the
+/// slowest links carry no sync traffic at all.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BandwidthTree;
+
+impl Topology for BandwidthTree {
+    fn name(&self) -> &'static str {
+        "bandwidth-tree"
+    }
+
+    fn plan(&self, n: usize, fabric: &Fabric) -> SyncPlan {
+        assert!(n >= 1);
+        if n == 1 {
+            return SyncPlan::from_directed_edges(1, &[]);
+        }
+        let root = best_connected(n, fabric);
+        // Prim's algorithm, maximizing bandwidth of the connecting edge.
+        let mut in_tree = vec![false; n];
+        in_tree[root] = true;
+        let mut tree_pairs: Vec<(RegionId, RegionId)> = Vec::new();
+        for _ in 1..n {
+            let mut best: Option<(f64, RegionId, RegionId)> = None; // (bw, tree node, new node)
+            for u in 0..n {
+                if !in_tree[u] {
+                    continue;
+                }
+                for v in 0..n {
+                    if in_tree[v] {
+                        continue;
+                    }
+                    let bw = pair_bandwidth(fabric, u, v);
+                    let better = match best {
+                        None => true,
+                        // Strict > keeps ties at the earliest (u, v) in scan
+                        // order — deterministic planning.
+                        Some((bb, _, _)) => bw > bb,
+                    };
+                    if better {
+                        best = Some((bw, u, v));
+                    }
+                }
+            }
+            let (_, u, v) = best.expect("n >= 2 leaves a node to attach");
+            in_tree[v] = true;
+            tree_pairs.push((u, v));
+        }
+        let mut edges = Vec::new();
+        for (u, v) in tree_pairs {
+            edges.push((u, v));
+            edges.push((v, u));
+        }
+        SyncPlan::from_directed_edges(n, &edges)
+    }
+}
+
+/// Topology selector for configs, the CLI, and checkpoint metadata.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    Ring,
+    Hierarchical,
+    BandwidthTree,
+}
+
+impl TopologyKind {
+    /// Parse a topology name; the error lists every valid name.
+    pub fn from_name(s: &str) -> Result<TopologyKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "ring" => Ok(TopologyKind::Ring),
+            "hierarchical" | "hier" | "hips" | "star" => Ok(TopologyKind::Hierarchical),
+            "bandwidth-tree" | "bwtree" | "tree" => Ok(TopologyKind::BandwidthTree),
+            other => Err(format!(
+                "unknown topology {other:?} (valid: ring, hierarchical, bandwidth-tree)"
+            )),
+        }
+    }
+
+    /// Stable name (inverse of [`TopologyKind::from_name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Ring => "ring",
+            TopologyKind::Hierarchical => "hierarchical",
+            TopologyKind::BandwidthTree => "bandwidth-tree",
+        }
+    }
+
+    /// Instantiate the topology strategy.
+    pub fn build(&self) -> Box<dyn Topology> {
+        match self {
+            TopologyKind::Ring => Box::new(Ring),
+            TopologyKind::Hierarchical => Box::new(Hierarchical::default()),
+            TopologyKind::BandwidthTree => Box::new(BandwidthTree),
+        }
+    }
+
+    /// Plan edges over `n` partitions against the given fabric.
+    pub fn plan(&self, n: usize, fabric: &Fabric) -> SyncPlan {
+        self.build().plan(n, fabric)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkSpec;
+
+    fn uniform_fabric(n: usize) -> Fabric {
+        let mut f = Fabric::new(7);
+        for a in 0..n {
+            for b in 0..n {
+                if a != b {
+                    f.add_link(a, b, LinkSpec::wan_100mbps());
+                }
+            }
+        }
+        f
+    }
+
+    fn wan_at(mbps: f64) -> LinkSpec {
+        LinkSpec { bandwidth_bps: mbps * 1e6, ..LinkSpec::wan_100mbps() }
+    }
+
+    #[test]
+    fn ring_matches_seed_behavior() {
+        let f = uniform_fabric(4);
+        let plan = Ring.plan(4, &f);
+        for i in 0..4 {
+            let out = plan.outgoing(i);
+            assert_eq!(out.len(), 1, "ring: one outgoing edge per region");
+            assert_eq!(out[0].to, (i + 1) % 4);
+            assert_eq!(out[0].weight, 0.5, "in-degree 1 -> remote weight 1/2");
+        }
+        assert!(plan.is_connected());
+    }
+
+    #[test]
+    fn two_cloud_ring_is_pairwise_exchange() {
+        let f = uniform_fabric(2);
+        let plan = Ring.plan(2, &f);
+        assert_eq!(plan.outgoing(0)[0].to, 1);
+        assert_eq!(plan.outgoing(1)[0].to, 0);
+        // The paper's hardcoded 0.5 falls out of the in-degree rule.
+        assert_eq!(plan.outgoing(0)[0].weight, 0.5);
+    }
+
+    #[test]
+    fn single_partition_plans_no_edges() {
+        let f = uniform_fabric(1);
+        for kind in [TopologyKind::Ring, TopologyKind::Hierarchical, TopologyKind::BandwidthTree] {
+            let plan = kind.plan(1, &f);
+            assert_eq!(plan.edges().count(), 0, "{kind:?}");
+            assert!(plan.is_connected());
+        }
+    }
+
+    #[test]
+    fn hierarchical_is_a_star_with_in_degree_weights() {
+        let f = uniform_fabric(5);
+        let plan = Hierarchical { hub: Some(2) }.plan(5, &f);
+        assert!(plan.is_tree());
+        assert_eq!(plan.in_degree(2), 4, "hub receives from every leaf");
+        for leaf in [0usize, 1, 3, 4] {
+            assert_eq!(plan.outgoing(leaf).len(), 1);
+            assert_eq!(plan.outgoing(leaf)[0].to, 2);
+            assert!((plan.outgoing(leaf)[0].weight - 0.2).abs() < 1e-6, "1/(4+1)");
+            assert_eq!(plan.in_degree(leaf), 1);
+        }
+        // Hub fans back out to every leaf at weight 1/2.
+        assert_eq!(plan.outgoing(2).len(), 4);
+        assert!(plan.outgoing(2).iter().all(|e| (e.weight - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn hierarchical_auto_hub_prefers_bandwidth() {
+        // Region 1 has fat pipes to everyone; it should be chosen as hub.
+        let mut f = Fabric::new(1);
+        for a in 0..4usize {
+            for b in 0..4usize {
+                if a != b {
+                    let spec = if a == 1 || b == 1 { wan_at(500.0) } else { wan_at(50.0) };
+                    f.add_link(a, b, spec);
+                }
+            }
+        }
+        let plan = Hierarchical::default().plan(4, &f);
+        assert_eq!(plan.in_degree(1), 3, "best-connected region becomes the hub");
+    }
+
+    #[test]
+    fn bandwidth_tree_avoids_slow_links() {
+        // Chain of fat links 0-1-2-3; every other pair is thin. The max
+        // spanning tree must be exactly the chain.
+        let mut f = Fabric::new(1);
+        for a in 0..4usize {
+            for b in 0..4usize {
+                if a != b {
+                    let fat = matches!(
+                        (a.min(b), a.max(b)),
+                        (0, 1) | (1, 2) | (2, 3)
+                    );
+                    f.add_link(a, b, if fat { wan_at(400.0) } else { wan_at(10.0) });
+                }
+            }
+        }
+        let plan = BandwidthTree.plan(4, &f);
+        assert!(plan.is_tree());
+        assert_eq!(plan.undirected_support(), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn weights_follow_in_degree_everywhere() {
+        let f = uniform_fabric(6);
+        for kind in [TopologyKind::Ring, TopologyKind::Hierarchical, TopologyKind::BandwidthTree] {
+            let plan = kind.plan(6, &f);
+            for e in plan.edges() {
+                let d = plan.in_degree(e.to) as f32;
+                assert!(
+                    (e.weight - 1.0 / (d + 1.0)).abs() < 1e-6,
+                    "{kind:?}: edge ({},{}) weight {} vs in-degree {d}",
+                    e.from,
+                    e.to,
+                    e.weight
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for kind in [TopologyKind::Ring, TopologyKind::Hierarchical, TopologyKind::BandwidthTree] {
+            assert_eq!(TopologyKind::from_name(kind.name()), Ok(kind));
+        }
+        assert_eq!(TopologyKind::from_name("hips"), Ok(TopologyKind::Hierarchical));
+        assert_eq!(TopologyKind::from_name("tree"), Ok(TopologyKind::BandwidthTree));
+        let err = TopologyKind::from_name("mesh").unwrap_err();
+        assert!(err.contains("ring") && err.contains("hierarchical"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn self_loops_rejected() {
+        SyncPlan::from_directed_edges(3, &[(0, 0)]);
+    }
+}

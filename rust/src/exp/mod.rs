@@ -15,11 +15,16 @@
 //! | fig9   | accuracy with vs without elastic       | scheduling  |
 //! | fig10  | sync strategies (ASGD/GA/AMA) time+acc | sync_exp    |
 //! | fig11  | + SMA on self-hosted link              | sync_exp    |
+//!
+//! Beyond the paper: `topology` compares the engine's N-cloud sync
+//! topologies (ring / hierarchical / bandwidth-tree) on a 4-cloud WAN
+//! (module `topology_exp`).
 
 pub mod ablations;
 pub mod motivation;
 pub mod scheduling;
 pub mod sync_exp;
+pub mod topology_exp;
 pub mod usability;
 
 use std::path::PathBuf;

@@ -6,10 +6,11 @@
 //!
 //! - **L3 (this crate)** — the serverless geo-distributed training
 //!   coordinator: control plane (elastic scheduler + global communicator
-//!   addressing), physical training plane (per-cloud PS workflows), WAN
-//!   synchronization strategies (ASGD / ASGD-GA / AMA / SMA), and every
-//!   substrate they need (FaaS runtime, WAN fabric, cloud/device/cost
-//!   models, discrete-event simulator).
+//!   addressing), the layered training [`engine`] (driver → partition →
+//!   comm → topology; per-cloud PS workflows with pluggable N-cloud sync
+//!   topologies), WAN synchronization strategies (ASGD / ASGD-GA / AMA /
+//!   SMA), and every substrate they need (FaaS runtime, WAN fabric,
+//!   cloud/device/cost models, discrete-event simulator).
 //! - **L2** — JAX models (LeNet / ResNet-lite / DeepFM / Transformer),
 //!   AOT-lowered to HLO text under `artifacts/` (`make artifacts`).
 //! - **L1** — Pallas kernels (tiled matmul, fused bias+act, PS vector
@@ -24,6 +25,7 @@ pub mod cloud;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod exp;
 pub mod faas;
 pub mod net;

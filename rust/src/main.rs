@@ -2,11 +2,11 @@
 //!
 //! ```text
 //! cloudless train   [--config <file>] [--model lenet] [--strategy asgd-ga]
-//!                   [--freq 4] [--epochs 8] [--scheduling elastic|greedy]
-//!                   [--seed 42] [--json]
+//!                   [--topology ring] [--freq 4] [--epochs 8]
+//!                   [--scheduling elastic|greedy] [--seed 42] [--json]
 //! cloudless plan    [--config <file>]          print the elastic plan
 //! cloudless exp     --id <table1|fig2|fig3|fig7|table4|fig8|fig9|fig10|
-//!                         fig11|ablations|all> [--full]
+//!                         fig11|topology|ablations|all> [--full]
 //! cloudless devices                            print the device catalog
 //! cloudless check                              verify artifacts load + run
 //! ```
@@ -15,6 +15,7 @@ use cloudless::cloud::devices::Device;
 use cloudless::cloud::CloudEnv;
 use cloudless::config;
 use cloudless::coordinator::{Coordinator, JobSpec, SchedulingMode};
+use cloudless::engine::TopologyKind;
 use cloudless::exp::{self, Scale};
 use cloudless::sync::{Strategy, SyncConfig};
 use cloudless::util::args::Args;
@@ -29,13 +30,16 @@ const USAGE: &str = "\
 cloudless — serverless geo-distributed ML training (paper reproduction)
 
 USAGE:
-  cloudless train   [--config f] [--model m] [--strategy s] [--freq n]
-                    [--epochs n] [--scheduling elastic|greedy] [--seed n]
-                    [--n-train n] [--n-eval n] [--json]
+  cloudless train   [--config f] [--model m] [--strategy s] [--topology t]
+                    [--freq n] [--epochs n] [--scheduling elastic|greedy]
+                    [--seed n] [--n-train n] [--n-eval n] [--json]
   cloudless plan    [--config f]
-  cloudless exp     --id <table1|fig2|fig3|fig7|table4|fig8|fig9|fig10|fig11|ablations|compression|all> [--full]
+  cloudless exp     --id <table1|fig2|fig3|fig7|table4|fig8|fig9|fig10|fig11|topology|ablations|compression|all> [--full]
   cloudless devices
   cloudless check
+
+  strategies: asgd (baseline), asgd-ga, ama (alias: ma), sma
+  topologies: ring (default), hierarchical, bandwidth-tree
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -71,9 +75,9 @@ fn job_from_args(args: &Args) -> anyhow::Result<JobSpec> {
     spec.train.n_train = args.usize("n-train", n_train_default);
     spec.train.n_eval = args.usize("n-eval", n_eval_default);
     spec.train.lr = args.f64("lr", spec.train.lr as f64) as f32;
-    let strategy = Strategy::from_name(args.get_or("strategy", "asgd-ga"))
-        .ok_or_else(|| anyhow::anyhow!("unknown --strategy"))?;
+    let strategy = args.parsed("strategy", "asgd-ga", Strategy::from_name)?;
     spec.train.sync = SyncConfig::new(strategy, args.usize("freq", 4) as u32);
+    spec.train.topology = args.parsed("topology", "ring", TopologyKind::from_name)?;
     spec.scheduling = match args.get_or("scheduling", "elastic") {
         "greedy" => SchedulingMode::Greedy,
         "elastic" => SchedulingMode::Elastic,
@@ -155,6 +159,9 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             "fig11" => {
                 exp::sync_exp::fig11(coord, scale);
             }
+            "topology" => {
+                exp::topology_exp::topology_compare(coord, scale);
+            }
             "ablations" => exp::ablations::all(coord, scale),
             "compression" => {
                 exp::ablations::compression_vs_frequency(coord, scale);
@@ -164,7 +171,7 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         Ok(())
     };
     if id == "all" {
-        for id in ["table1", "fig3", "fig2", "table4", "fig7", "fig9", "fig10", "fig11"] {
+        for id in ["table1", "fig3", "fig2", "table4", "fig7", "fig9", "fig10", "fig11", "topology"] {
             println!("\n=== {id} ===");
             run(id, &coord)?;
         }

@@ -208,6 +208,19 @@ impl Fabric {
         spec.setup_s + (bytes as f64) * 8.0 / spec.bandwidth_bps + spec.latency_s
     }
 
+    /// Nominal bandwidth (bits/s) of an installed directed link — the
+    /// planning input for bandwidth-aware sync topologies
+    /// (`engine::topology`). `None` when no link has been installed.
+    pub fn link_bandwidth(&self, from: RegionId, to: RegionId) -> Option<f64> {
+        self.links.get(&(from, to)).map(|l| l.spec.bandwidth_bps)
+    }
+
+    /// One-way propagation latency of an installed directed link (the
+    /// communicator's ack-RTT share). `None` when no link is installed.
+    pub fn link_latency(&self, from: RegionId, to: RegionId) -> Option<f64> {
+        self.links.get(&(from, to)).map(|l| l.spec.latency_s)
+    }
+
     pub fn stats(&self, from: RegionId, to: RegionId) -> Option<LinkStats> {
         self.links.get(&(from, to)).map(|l| LinkStats {
             bytes: l.bytes,

@@ -172,6 +172,36 @@ mod tests {
         assert_eq!(plan.allocations[1].total_units(), 4);
     }
 
+    /// Beyond the paper's two clouds: Algorithm 1 is region-count
+    /// agnostic, and the engine's N-cloud topologies consume its plans
+    /// directly — every non-straggler region must shed units down to the
+    /// straggler's load power.
+    #[test]
+    fn four_region_plan_matches_straggler() {
+        let env = CloudEnv::multi_region(vec![
+            ("SH", Device::CascadeLake, 12, 2000),
+            ("CQ", Device::Skylake, 12, 1000),
+            ("BJ", Device::Skylake, 12, 500),
+            ("GZ", Device::IceLake, 12, 500),
+        ]);
+        let plan = optimal_matching(&env);
+        // SH: most data per unit power -> lowest LP -> straggler.
+        assert_eq!(plan.straggler, 0);
+        assert_eq!(plan.allocations[0].total_units(), 12);
+        let floor = plan.full_lp[0];
+        for (i, lp) in plan.planned_lp.iter().enumerate() {
+            assert!(*lp + 1e-9 >= floor, "region {i} planned below straggler");
+        }
+        // Every non-straggler region releases units it would idle on.
+        for i in 1..4 {
+            assert!(
+                plan.allocations[i].total_units() < 12,
+                "region {i} should shed units: {:?}",
+                plan.allocations[i]
+            );
+        }
+    }
+
     #[test]
     fn straggler_keeps_full_allocation() {
         let env = CloudEnv::tencent_two_region(Device::Skylake, 3000, 100);

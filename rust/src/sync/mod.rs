@@ -14,7 +14,9 @@
 //! ASGD (freq=1) is the paper's baseline — "a simple multi-regional cloud
 //! variant of trivial ML training". ASGD-GA keeps merging local gradients
 //! between syncs so no information is lost, only freshness. MA variants
-//! ship parameters and average on receipt (w=0.5 between two clouds).
+//! ship parameters and average on receipt; the averaging weight comes
+//! from the sync topology's per-edge plan (`engine::topology`, in-degree
+//! derived — 0.5 between two clouds, matching the paper's setting).
 
 pub mod compression;
 
@@ -36,13 +38,19 @@ pub enum Strategy {
 }
 
 impl Strategy {
-    pub fn from_name(s: &str) -> Option<Strategy> {
+    /// Parse a strategy name (case-insensitive); `"ma"` is accepted as an
+    /// alias for the asynchronous model-averaging variant. The error
+    /// message lists every valid name, so CLI/config callers can surface
+    /// it verbatim.
+    pub fn from_name(s: &str) -> Result<Strategy, String> {
         match s.to_ascii_lowercase().as_str() {
-            "asgd" | "baseline" => Some(Strategy::Asgd),
-            "asgd-ga" | "asgd_ga" | "ga" => Some(Strategy::AsgdGa),
-            "ama" => Some(Strategy::Ama),
-            "sma" => Some(Strategy::Sma),
-            _ => None,
+            "asgd" | "baseline" => Ok(Strategy::Asgd),
+            "asgd-ga" | "asgd_ga" | "ga" => Ok(Strategy::AsgdGa),
+            "ama" | "ma" => Ok(Strategy::Ama),
+            "sma" => Ok(Strategy::Sma),
+            other => Err(format!(
+                "unknown sync strategy {other:?} (valid: asgd, asgd-ga, ama, ma, sma)"
+            )),
         }
     }
 
@@ -79,14 +87,14 @@ pub enum Compression {
     Q8,
 }
 
-/// Full synchronization configuration.
+/// Full synchronization configuration. (Averaging weights are no longer
+/// part of this config: they are planned per edge by the sync topology —
+/// see `engine::topology`.)
 #[derive(Debug, Clone, Copy)]
 pub struct SyncConfig {
     pub strategy: Strategy,
     /// Synchronization frequency in local updates (ASGD pins this to 1).
     pub freq: u32,
-    /// Local weight for model averaging (0.5 between two clouds).
-    pub avg_weight: f32,
     /// Gradient compression codec (extension; default None).
     pub compression: Compression,
 }
@@ -94,7 +102,7 @@ pub struct SyncConfig {
 impl SyncConfig {
     pub fn new(strategy: Strategy, freq: u32) -> SyncConfig {
         let freq = if strategy == Strategy::Asgd { 1 } else { freq.max(1) };
-        SyncConfig { strategy, freq, avg_weight: 0.5, compression: Compression::None }
+        SyncConfig { strategy, freq, compression: Compression::None }
     }
 
     pub fn with_compression(mut self, c: Compression) -> SyncConfig {
@@ -157,19 +165,29 @@ pub fn make_payload(cfg: &SyncConfig, ps: &mut PsState) -> Payload {
 }
 
 /// Apply a received payload per the strategy's update rule.
-pub fn apply_payload(cfg: &SyncConfig, ps: &mut PsState, payload: &Payload) {
+///
+/// `remote_weight` is the weight given to the incoming model for
+/// averaging payloads (the receiver keeps `1 - remote_weight` of its
+/// local model); it comes from the topology plan's edge (in-degree
+/// derived — 0.5 between two clouds). Gradient payloads ignore it.
+pub fn apply_payload(cfg: &SyncConfig, ps: &mut PsState, payload: &Payload, remote_weight: f32) {
     match payload {
         Payload::Gradient { grad, .. } => ps.apply_remote_gradient(grad),
         Payload::CompressedGradient { packed, .. } => {
             ps.apply_remote_gradient(&packed.decode())
         }
-        Payload::Params(remote) => ps.average_with(remote, cfg.avg_weight),
+        Payload::Params(remote) => ps.average_with(remote, 1.0 - remote_weight),
     }
 }
 
-/// Plan the sync topology: each PS sends to exactly one peer per sync.
-/// For 2 clouds this is a pairwise exchange; for N > 2 a ring — both
-/// satisfy the paper's "only one other PS each time" traffic cap.
+/// Plan the seed's single-peer ring: each PS sends to exactly one peer
+/// per sync. For 2 clouds this is a pairwise exchange; for N > 2 a ring —
+/// both satisfy the paper's "only one other PS each time" traffic cap.
+///
+/// Compatibility helper: richer N-cloud shapes (hierarchical hub,
+/// bandwidth-aware trees) live in `engine::topology` and carry per-edge
+/// averaging weights; this remains for callers that only need the peer
+/// permutation.
 pub fn plan_topology(n: usize) -> Vec<usize> {
     assert!(n >= 1);
     (0..n).map(|i| (i + 1) % n).collect()
@@ -231,13 +249,19 @@ mod tests {
     fn receiver_updates_follow_strategy() {
         let ga = SyncConfig::new(Strategy::AsgdGa, 2);
         let mut ps = PsState::new(vec![1.0, 1.0], 0.5);
-        apply_payload(&ga, &mut ps, &Payload::Gradient { grad: vec![1.0, -1.0], steps: 2 });
+        apply_payload(&ga, &mut ps, &Payload::Gradient { grad: vec![1.0, -1.0], steps: 2 }, 0.5);
         assert_eq!(ps.params, vec![0.5, 1.5]); // p -= lr*g
 
         let ma = SyncConfig::new(Strategy::Ama, 2);
         let mut ps2 = PsState::new(vec![1.0, 3.0], 0.5);
-        apply_payload(&ma, &mut ps2, &Payload::Params(vec![3.0, 1.0]));
+        apply_payload(&ma, &mut ps2, &Payload::Params(vec![3.0, 1.0]), 0.5);
         assert_eq!(ps2.params, vec![2.0, 2.0]); // 0.5/0.5 average
+
+        // In-degree-derived weights: a hub receiving from 3 leaves gives
+        // each remote model 1/4 (keeps 3/4 locally).
+        let mut hub = PsState::new(vec![4.0, 4.0], 0.5);
+        apply_payload(&ma, &mut hub, &Payload::Params(vec![0.0, 8.0]), 0.25);
+        assert_eq!(hub.params, vec![3.0, 5.0]);
     }
 
     #[test]
@@ -281,7 +305,7 @@ mod tests {
         assert!(ps.accum[2] != 0.0 && ps.accum[0] == 0.0);
         // receiver applies the sparse gradient via SGD
         let mut peer = PsState::new(vec![0.0; 8], 0.1);
-        apply_payload(&cfg, &mut peer, &payload);
+        apply_payload(&cfg, &mut peer, &payload, 0.5);
         assert!((peer.params[0] + 0.8).abs() < 1e-6);
         assert_eq!(peer.params[1], 0.0);
     }
@@ -304,7 +328,13 @@ mod tests {
         assert!(Strategy::Asgd.sends_gradient());
         assert!(Strategy::AsgdGa.sends_gradient());
         assert!(!Strategy::Ama.sends_gradient());
-        assert_eq!(Strategy::from_name("asgd-ga"), Some(Strategy::AsgdGa));
-        assert_eq!(Strategy::from_name("nope"), None);
+        assert_eq!(Strategy::from_name("asgd-ga"), Ok(Strategy::AsgdGa));
+        assert_eq!(Strategy::from_name("ma"), Ok(Strategy::Ama), "\"ma\" aliases AMA");
+        assert_eq!(Strategy::from_name("MA"), Ok(Strategy::Ama));
+        let err = Strategy::from_name("nope").unwrap_err();
+        assert!(
+            err.contains("asgd-ga") && err.contains("sma") && err.contains("nope"),
+            "error must list valid names: {err}"
+        );
     }
 }

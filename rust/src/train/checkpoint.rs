@@ -122,10 +122,20 @@ impl CheckpointStore {
         self.path_for(region).exists()
     }
 
-    /// Write the job manifest (model name, step counts) for operators.
-    pub fn write_manifest(&self, model: &str, regions: &[(&str, u64)]) -> Result<()> {
+    /// Write the job manifest (model, sync strategy, topology, step
+    /// counts) for operators — and for the resume-compatibility check
+    /// ([`ensure_run_compatible`]).
+    pub fn write_manifest(
+        &self,
+        model: &str,
+        strategy: &str,
+        topology: &str,
+        regions: &[(&str, u64)],
+    ) -> Result<()> {
         let j = Json::obj(vec![
             ("model", Json::str(model)),
+            ("strategy", Json::str(strategy)),
+            ("topology", Json::str(topology)),
             (
                 "partitions",
                 Json::arr(regions.iter().map(|(r, steps)| {
@@ -139,6 +149,42 @@ impl CheckpointStore {
         std::fs::write(self.dir.join("manifest.json"), j.to_string_pretty())?;
         Ok(())
     }
+}
+
+/// Refuse to resume into a checkpoint directory written by an
+/// incompatible run: averaging fixed points depend on the sync strategy
+/// and topology, so silently mixing them corrupts a resumed model. A
+/// missing directory or manifest is fine (fresh run); manifest fields a
+/// pre-topology checkpoint lacks are skipped.
+pub fn ensure_run_compatible(
+    dir: impl AsRef<Path>,
+    model: &str,
+    strategy: &str,
+    topology: &str,
+) -> Result<()> {
+    let path = dir.as_ref().join("manifest.json");
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        // No prior manifest: fresh run, nothing to conflict with. Any
+        // other I/O failure must NOT silently disable the gate.
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => {
+            return Err(anyhow::anyhow!("unreadable manifest {}: {e}", path.display()));
+        }
+    };
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("unreadable manifest {}: {e:?}", path.display()))?;
+    for (key, ours) in [("model", model), ("strategy", strategy), ("topology", topology)] {
+        if let Some(theirs) = j.get(key).as_str() {
+            anyhow::ensure!(
+                theirs == ours,
+                "checkpoint dir {} holds a {key}={theirs} run; refusing to resume with \
+                 {key}={ours} (use a fresh directory or match the original run)",
+                dir.as_ref().display(),
+            );
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -206,10 +252,33 @@ mod tests {
         assert!(!store.exists("A"));
         store.save("A", &PsCheckpoint::capture(&ps_with_state())).unwrap();
         assert!(store.exists("A"));
-        store.write_manifest("lenet", &[("A", 42)]).unwrap();
+        store.write_manifest("lenet", "SMA", "ring", &[("A", 42)]).unwrap();
         let manifest =
             Json::parse(&std::fs::read_to_string(dir.join("manifest.json")).unwrap()).unwrap();
         assert_eq!(manifest.get("model").as_str().unwrap(), "lenet");
+        assert_eq!(manifest.get("strategy").as_str().unwrap(), "SMA");
+        assert_eq!(manifest.get("topology").as_str().unwrap(), "ring");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_compat_gate() {
+        let dir = temp_dir("compat");
+        // No directory / manifest yet: any run may start.
+        assert!(ensure_run_compatible(&dir, "lenet", "SMA", "ring").is_ok());
+        let store = CheckpointStore::new(&dir).unwrap();
+        store.write_manifest("lenet", "SMA", "ring", &[("A", 1)]).unwrap();
+        // Matching run resumes fine.
+        assert!(ensure_run_compatible(&dir, "lenet", "SMA", "ring").is_ok());
+        // Mismatched topology / strategy / model all refuse, descriptively.
+        let e = ensure_run_compatible(&dir, "lenet", "SMA", "hierarchical").unwrap_err();
+        assert!(e.to_string().contains("topology=ring"), "{e}");
+        assert!(ensure_run_compatible(&dir, "lenet", "AMA", "ring").is_err());
+        assert!(ensure_run_compatible(&dir, "resnet", "SMA", "ring").is_err());
+        // Pre-topology manifests (missing fields) stay resumable.
+        std::fs::write(dir.join("manifest.json"), r#"{"model": "lenet"}"#).unwrap();
+        assert!(ensure_run_compatible(&dir, "lenet", "SMA", "ring").is_ok());
+        assert!(ensure_run_compatible(&dir, "resnet", "SMA", "ring").is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

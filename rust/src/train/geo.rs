@@ -1,725 +1,20 @@
-//! The geo-distributed training engine: real numerics on a virtual clock.
+//! Compatibility shim — the geo-distributed training engine now lives in
+//! [`crate::engine`], decomposed into explicit layers:
 //!
-//! Every training partition executes **real** PJRT train steps (so the
-//! accuracy/loss curves are genuine), while the discrete-event simulator
-//! advances virtual time by *modeled* durations:
+//! - [`crate::engine::driver`] — the discrete-event loop (`World`,
+//!   [`run_geo_training`], barriers, eval, reporting);
+//! - [`crate::engine::partition`] — the per-cloud actor (worker gating,
+//!   PS state, step accounting; the seed's `Part`);
+//! - [`crate::engine::comm`] — the WAN communicator (payload planning,
+//!   send-slot backpressure, delivery);
+//! - [`crate::engine::topology`] — pluggable N-cloud sync topologies
+//!   (Ring / Hierarchical / BandwidthTree) with in-degree-derived
+//!   averaging weights.
 //!
-//! - compute: `T_iter = base_step / worker_class_power` (device catalog,
-//!   see `calib`), with a small deterministic jitter;
-//! - WAN: the `net::Fabric` link model (serialization, FIFO queueing,
-//!   fluctuation, latency);
-//! - serverless startup: FaaS cold starts for the control-plane and
-//!   per-cloud training workflows.
-//!
-//! Gradient staleness is physically real here: a worker trains on the
-//! snapshot it pulled at iteration start; PS state moves on (local pushes
-//! and WAN arrivals interleave in virtual-time order) before the push
-//! lands.
-//!
-//! Backpressure: each PS has one communicator function (a gRPC sender).
-//! While it is still serializing a previous payload, a due sync blocks
-//! the partition's workers (`Gate::CommBlocked`) until the send slot
-//! frees — this is what makes sync frequency 1 (the ASGD baseline)
-//! communication-bound and what ASGD-GA/AMA relieve (Fig 10).
+//! This module re-exports the engine's public surface so seed-era call
+//! sites (`crate::train::run_geo_training`, `crate::train::TrainConfig`)
+//! keep working unchanged. New code should prefer `crate::engine`
+//! directly.
 
-use std::rc::Rc;
-
-use anyhow::Result;
-
-use crate::cloud::cost::{BilledAllocation, CostModel};
-use crate::cloud::devices::DeviceKind;
-use crate::cloud::{Allocation, CloudEnv};
-use crate::data::{shard_by_fraction, Dataset, Shard};
-use crate::faas::workflow::{WorkflowDef, WorkflowInstance};
-use crate::faas::{FaasRuntime, FunctionKind, FunctionSpec, ReplicaId};
-use crate::net::{Fabric, LinkSpec};
-use crate::ps::PsState;
-use crate::runtime::{ModelRuntime, PjrtRuntime};
-use crate::sim::{Sim, Time};
-use crate::sync::{apply_payload, make_payload, plan_topology, Payload, SyncConfig};
-use crate::train::calib;
-use crate::train::metrics::{EvalPoint, PartitionReport, TrainReport};
-use crate::util::rng::Pcg32;
-
-/// Configuration for one geo-distributed training job.
-#[derive(Debug, Clone)]
-pub struct TrainConfig {
-    pub model: String,
-    /// Local epochs each partition trains over its shard.
-    pub epochs: usize,
-    pub lr: f32,
-    pub sync: SyncConfig,
-    pub seed: u64,
-    /// Total train/eval samples (split across regions by data ratio).
-    pub n_train: usize,
-    pub n_eval: usize,
-    /// CPU cores per worker function (ElasticDL pod granularity).
-    pub worker_cores: u32,
-    /// Measured base step seconds (0.0 = use calib defaults).
-    pub base_step_s: f64,
-    /// WAN link spec between distinct regions.
-    pub link: LinkSpec,
-    /// Evaluate every this many partition-0 epochs.
-    pub eval_every: usize,
-    /// Skip accuracy evaluation entirely (timing-only experiments).
-    pub skip_eval: bool,
-    /// Checkpoint PS state here at every partition-0 epoch boundary
-    /// (None = checkpointing off).
-    pub checkpoint_dir: Option<std::path::PathBuf>,
-}
-
-impl TrainConfig {
-    pub fn new(model: &str) -> TrainConfig {
-        let (n_train, n_eval) = crate::data::default_sizes(model);
-        TrainConfig {
-            model: model.to_string(),
-            epochs: 4,
-            lr: default_lr(model),
-            sync: SyncConfig::baseline(),
-            seed: 42,
-            n_train,
-            n_eval,
-            worker_cores: 3,
-            base_step_s: 0.0,
-            link: LinkSpec::wan_100mbps(),
-            eval_every: 1,
-            skip_eval: false,
-            checkpoint_dir: None,
-        }
-    }
-}
-
-/// Default SGD learning rates per model (validated by the usability exp).
-pub fn default_lr(model: &str) -> f32 {
-    match model {
-        "lenet" => 0.03,
-        "resnet" => 0.015,
-        "deepfm" => 0.1,
-        _ => 0.02, // transformers
-    }
-}
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Gate {
-    Running,
-    CommBlocked,
-    AtBarrier,
-    Finished,
-}
-
-struct Part {
-    region: usize,
-    region_name: String,
-    alloc: Allocation,
-    shard: Shard,
-    ps: PsState,
-    workers: usize,
-    t_iter: f64,
-    steps_total: u64,
-    steps_started: u64,
-    steps_completed: u64,
-    epoch_steps: u64,
-    epochs_done: usize,
-    gate: Gate,
-    in_flight: usize,
-    comm_free_at: Time,
-    blocked_since: Time,
-    comm_wait: Time,
-    local_finish: Option<Time>,
-    barrier_arrived: bool,
-    barrier_entry: Time,
-    cold_start_time: Time,
-    worker_replicas: Vec<ReplicaId>,
-    rng: Pcg32,
-}
-
-struct World {
-    cfg: TrainConfig,
-    model: Rc<ModelRuntime>,
-    train_ds: Rc<Dataset>,
-    eval_ds: Rc<Dataset>,
-    parts: Vec<Part>,
-    fabric: Fabric,
-    faas: FaasRuntime,
-    topo: Vec<usize>,
-    n_finished: usize,
-    global_end: Option<Time>,
-    curve: Vec<EvalPoint>,
-    train_start: Time,
-}
-
-impl World {
-    fn all_arrived(&self) -> bool {
-        self.parts.iter().all(|p| p.barrier_arrived || p.gate == Gate::Finished)
-    }
-}
-
-/// Run one geo-distributed training job and return its report.
-///
-/// `allocations` is the resourcing plan (greedy or elastic); data is
-/// sharded by the regions' `data_samples` ratio.
-pub fn run_geo_training(
-    rt: &PjrtRuntime,
-    env: &CloudEnv,
-    allocations: Vec<Allocation>,
-    cfg: TrainConfig,
-) -> Result<TrainReport> {
-    let wall0 = std::time::Instant::now();
-    anyhow::ensure!(allocations.len() == env.regions.len(), "one allocation per region");
-    let model = Rc::new(rt.load_model(&cfg.model)?);
-    let base_step = if cfg.base_step_s > 0.0 {
-        cfg.base_step_s
-    } else {
-        calib::default_base_step_s(&cfg.model)
-    };
-
-    // ---- data ----
-    let (train_ds, eval_ds) = crate::data::generate(&model.meta, cfg.n_train, cfg.n_eval, cfg.seed);
-    let fractions: Vec<f64> = env.regions.iter().map(|r| r.data_samples.max(1) as f64).collect();
-    let shards = shard_by_fraction(cfg.n_train, &fractions, cfg.seed);
-
-    // ---- network ----
-    let mut fabric = Fabric::new(cfg.seed);
-    for a in 0..env.regions.len() {
-        for b in 0..env.regions.len() {
-            if a != b {
-                fabric.add_link(a, b, cfg.link.clone());
-            }
-        }
-    }
-
-    // ---- serverless control plane + training workflows ----
-    let mut faas = FaasRuntime::new();
-    let mut sim: Sim<World> = Sim::new();
-    let mut startup_done: Time = 0.0;
-
-    // Control plane: scheduler -> global communicator (workflow on cloud 0).
-    let mut control = WorkflowDef::new("control-plane");
-    let sched_node = control.add(
-        FunctionSpec::new("scheduler", "cloudless", FunctionKind::Scheduler, 0),
-        vec![],
-    );
-    control.add(
-        FunctionSpec::new("global-communicator", "cloudless", FunctionKind::GlobalCommunicator, 0),
-        vec![sched_node],
-    );
-    let mut control_inst = WorkflowInstance::deploy(control, &mut faas)?;
-    // scheduler function cold start + plan generation
-    let inv = faas.invoke("cloudless/scheduler", 0.0)?;
-    faas.mark_ready(inv.replica);
-    let t_sched = inv.dispatch_delay + 0.05; // plan generation latency
-    control_inst.start(sched_node);
-    control_inst.complete(sched_node);
-    // global communicator starts after the scheduler
-    let inv_comm = faas.invoke("cloudless/global-communicator", t_sched)?;
-    faas.mark_ready(inv_comm.replica);
-    let t_comm_ready = t_sched + inv_comm.dispatch_delay;
-
-    // Physical plane: one sub-workflow per cloud (PS -> PS-comm -> workers).
-    let mut parts: Vec<Part> = Vec::new();
-    for (i, (alloc, shard)) in allocations.into_iter().zip(shards).enumerate() {
-        let region = &env.regions[i];
-        let is_gpu = alloc
-            .units
-            .first()
-            .map(|(d, _)| d.info().kind == DeviceKind::Gpu)
-            .unwrap_or(false);
-        let workers = calib::worker_count(alloc.total_units(), is_gpu, cfg.worker_cores);
-        let power = alloc.power();
-        anyhow::ensure!(power > 0.0, "region {} has an empty allocation", region.name);
-        let w_power = calib::worker_power(power, workers);
-        let t_iter = calib::iter_time(base_step, w_power);
-
-        let mut wf = WorkflowDef::new(&format!("train-{}", region.name));
-        let ps_node =
-            wf.add(FunctionSpec::new("ps", &format!("cloud{i}"), FunctionKind::ParameterServer, i), vec![]);
-        let comm_node = wf.add(
-            FunctionSpec::new("ps-comm", &format!("cloud{i}"), FunctionKind::PsCommunicator, i),
-            vec![ps_node],
-        );
-        let mut worker_nodes = Vec::new();
-        for wi in 0..workers {
-            worker_nodes.push(wf.add(
-                FunctionSpec::new(&format!("worker-{wi}"), &format!("cloud{i}"), FunctionKind::Worker, i),
-                vec![comm_node],
-            ));
-        }
-        let _inst = WorkflowInstance::deploy(wf, &mut faas)?;
-
-        // Spawn replicas following the DAG: PS, then communicator, then workers.
-        let (ps_rep, ps_ready) = faas.scale_up(&format!("cloud{i}/ps"), t_comm_ready)?;
-        faas.mark_ready(ps_rep);
-        let (comm_rep, comm_ready) = faas.scale_up(&format!("cloud{i}/ps-comm"), ps_ready)?;
-        faas.mark_ready(comm_rep);
-        // Global communicator assigns the WAN identity once the PS comm is up.
-        let wan_ep = crate::faas::Endpoint { ip: [101, 6, i as u8, 10], port: 7000 + i as u16 };
-        faas.addressing.assign_wan_identity(comm_rep, wan_ep);
-        let mut worker_replicas = Vec::new();
-        let mut workers_ready = comm_ready;
-        for wi in 0..workers {
-            let (rep, ready) = faas.scale_up(&format!("cloud{i}/worker-{wi}"), comm_ready)?;
-            faas.mark_ready(rep);
-            worker_replicas.push(rep);
-            workers_ready = workers_ready.max(ready);
-        }
-        startup_done = startup_done.max(workers_ready);
-
-        let steps_per_epoch = shard.steps_per_epoch(model.meta.batch_size) as u64;
-        parts.push(Part {
-            region: i,
-            region_name: region.name.clone(),
-            alloc,
-            shard,
-            ps: PsState::new(model.init_params.clone(), cfg.lr),
-            workers,
-            t_iter,
-            steps_total: steps_per_epoch * cfg.epochs as u64,
-            steps_started: 0,
-            steps_completed: 0,
-            epoch_steps: steps_per_epoch,
-            epochs_done: 0,
-            gate: Gate::Running,
-            in_flight: 0,
-            comm_free_at: 0.0,
-            blocked_since: 0.0,
-            comm_wait: 0.0,
-            local_finish: None,
-            barrier_arrived: false,
-            barrier_entry: 0.0,
-            cold_start_time: workers_ready - t_comm_ready,
-            worker_replicas,
-            rng: Pcg32::new(cfg.seed ^ 0x7A27, i as u64),
-        });
-    }
-
-    let n_parts = parts.len();
-    let mut world = World {
-        topo: plan_topology(n_parts),
-        cfg,
-        model,
-        train_ds: Rc::new(train_ds),
-        eval_ds: Rc::new(eval_ds),
-        parts,
-        fabric,
-        faas,
-        n_finished: 0,
-        global_end: None,
-        curve: Vec::new(),
-        train_start: startup_done,
-    };
-
-    // Kick off every worker loop at training start.
-    for p in 0..n_parts {
-        let workers = world.parts[p].workers;
-        for _ in 0..workers {
-            sim.schedule_at(startup_done, move |sim, w: &mut World| {
-                start_worker_iteration(sim, w, p);
-            });
-        }
-    }
-
-    let drained = sim.run_with_limit(&mut world, 200_000_000);
-    anyhow::ensure!(drained, "simulation exceeded event limit — runaway loop?");
-    let global_end = world.global_end.unwrap_or_else(|| sim.now());
-
-    // Final evaluation on partition 0's model.
-    let (final_loss, final_acc) = if world.cfg.skip_eval {
-        (f64::NAN, f64::NAN)
-    } else {
-        evaluate(&world, 0)
-    };
-
-    // ---- report ----
-    let cost_model = CostModel::default();
-    let mut billed = Vec::new();
-    let mut partitions = Vec::new();
-    for (pi, part) in world.parts.iter().enumerate() {
-        for &(dev, n) in &part.alloc.units {
-            billed.push(BilledAllocation { device: dev, units: n, held_s: global_end });
-        }
-        // Outgoing-link serialization time (the on-the-wire share of the
-        // paper's "communication time on WAN").
-        let peer = world.topo[pi];
-        let wire_time = if peer != pi {
-            world
-                .fabric
-                .stats(part.region, world.parts[peer].region)
-                .map(|s| s.busy_time)
-                .unwrap_or(0.0)
-        } else {
-            0.0
-        };
-        partitions.push(PartitionReport {
-            region: part.region_name.clone(),
-            units: part.alloc.total_units(),
-            power: part.alloc.power(),
-            steps: part.steps_completed,
-            local_updates: part.ps.total_updates,
-            local_finish: part.local_finish.unwrap_or(global_end),
-            waiting: global_end - part.local_finish.unwrap_or(global_end),
-            comm_wait: part.comm_wait,
-            wan_time: part.comm_wait + wire_time,
-            syncs_sent: part.ps.sends,
-            syncs_received: part.ps.recvs,
-            mean_staleness: part.ps.mean_staleness(),
-            cold_start_time: part.cold_start_time,
-        });
-    }
-    let wan_bytes = world.fabric.total_wan_bytes();
-    let wan_transfers: u64 = (0..n_parts)
-        .map(|p| {
-            world
-                .fabric
-                .stats(world.parts[p].region, world.parts[world.topo[p]].region)
-                .map(|s| s.transfers)
-                .unwrap_or(0)
-        })
-        .sum();
-    let report = TrainReport {
-        model: world.cfg.model.clone(),
-        strategy: world.cfg.sync.strategy.name().to_string(),
-        sync_freq: world.cfg.sync.freq,
-        total_time: global_end,
-        startup_time: world.train_start,
-        partitions,
-        curve: world.curve.clone(),
-        final_loss,
-        final_accuracy: final_acc,
-        wan_bytes,
-        wan_transfers,
-        cost: cost_model.total(&billed, wan_bytes),
-        compute_cost: billed.iter().map(|a| cost_model.compute_cost(a)).sum(),
-        wan_cost: cost_model.wan_cost(wan_bytes),
-        wall_seconds: wall0.elapsed().as_secs_f64(),
-        pjrt_executions: world.model.exec_counts.get(),
-    };
-    Ok(report)
-}
-
-// ---------------------------------------------------------------- events
-
-fn start_worker_iteration(sim: &mut Sim<World>, w: &mut World, p: usize) {
-    let b = w.model.meta.batch_size;
-    let part = &mut w.parts[p];
-    if part.gate != Gate::Running || part.steps_started >= part.steps_total {
-        return;
-    }
-    part.steps_started += 1;
-    part.in_flight += 1;
-    let (snapshot, version) = part.ps.pull();
-    let batch = part.shard.next_batch(b);
-    // Deterministic ±25% iteration jitter: serverless pods see real
-    // variance (co-tenancy, GC, batch content), and that variance is what
-    // makes send slots collide under frequent sync.
-    let jitter = 0.75 + 0.5 * part.rng.f64();
-    let t_iter = part.t_iter * jitter;
-    sim.schedule(t_iter, move |sim, w: &mut World| {
-        finish_worker_iteration(sim, w, p, snapshot, version, batch);
-    });
-}
-
-fn finish_worker_iteration(
-    sim: &mut Sim<World>,
-    w: &mut World,
-    p: usize,
-    snapshot: Vec<f32>,
-    version: u64,
-    batch: Vec<usize>,
-) {
-    // Real compute: gradient of the model at the pulled snapshot.
-    let (x, y) = w.train_ds.batch(&batch, &w.model.meta);
-    let (grads, _loss) = w
-        .model
-        .train_step(&snapshot, &x, &y)
-        .expect("PJRT train_step failed mid-simulation");
-    {
-        let part = &mut w.parts[p];
-        part.in_flight -= 1;
-        part.steps_completed += 1;
-        part.ps.push_gradient(&grads, version);
-    }
-
-    // Epoch boundary bookkeeping (+ eval on partition 0).
-    let crossed_epoch = {
-        let part = &mut w.parts[p];
-        if part.steps_completed % part.epoch_steps == 0 {
-            part.epochs_done += 1;
-            true
-        } else {
-            false
-        }
-    };
-    if crossed_epoch && p == 0 && !w.cfg.skip_eval {
-        let every = w.cfg.eval_every.max(1);
-        if w.parts[0].epochs_done % every == 0 {
-            let (loss, acc) = evaluate(w, 0);
-            let epoch = w.parts[0].epochs_done;
-            w.curve.push(EvalPoint { t: sim.now(), epoch, loss, accuracy: acc });
-        }
-    }
-    if crossed_epoch && p == 0 {
-        if let Some(dir) = w.cfg.checkpoint_dir.clone() {
-            checkpoint_all(w, &dir);
-        }
-    }
-
-    // Synchronization condition.
-    if w.cfg.sync.should_sync(&w.parts[p].ps) && w.parts[p].gate != Gate::Finished {
-        if w.cfg.sync.strategy.is_synchronous() {
-            enter_barrier(sim, w, p);
-        } else {
-            trigger_async_sync(sim, w, p);
-        }
-    }
-
-    // Continue, block, or finish.
-    match w.parts[p].gate {
-        Gate::Running => {
-            if w.parts[p].steps_started < w.parts[p].steps_total {
-                start_worker_iteration(sim, w, p);
-            } else if w.parts[p].in_flight == 0 {
-                finish_partition(sim, w, p);
-            }
-        }
-        Gate::AtBarrier => {
-            if w.parts[p].in_flight == 0 {
-                w.parts[p].barrier_arrived = true;
-                w.parts[p].barrier_entry = sim.now();
-                try_release_barrier(sim, w);
-            }
-        }
-        Gate::CommBlocked | Gate::Finished => {}
-    }
-}
-
-/// Asynchronous strategies: send now if the communicator is free,
-/// otherwise block the partition until it is (backpressure).
-fn trigger_async_sync(sim: &mut Sim<World>, w: &mut World, p: usize) {
-    let now = sim.now();
-    if now + 1e-12 >= w.parts[p].comm_free_at {
-        perform_send(sim, w, p);
-    } else if w.parts[p].gate == Gate::Running {
-        let part = &mut w.parts[p];
-        part.gate = Gate::CommBlocked;
-        part.blocked_since = now;
-        let free_at = part.comm_free_at;
-        sim.schedule_at(free_at, move |sim, w: &mut World| {
-            unblock_comm(sim, w, p);
-        });
-    }
-}
-
-fn unblock_comm(sim: &mut Sim<World>, w: &mut World, p: usize) {
-    let now = sim.now();
-    {
-        let part = &mut w.parts[p];
-        if part.gate != Gate::CommBlocked {
-            return;
-        }
-        part.comm_wait += now - part.blocked_since;
-        part.gate = Gate::Running;
-    }
-    if w.cfg.sync.should_sync(&w.parts[p].ps) {
-        perform_send(sim, w, p);
-    }
-    // Restart idle workers.
-    let idle = w.parts[p].workers - w.parts[p].in_flight;
-    for _ in 0..idle {
-        start_worker_iteration(sim, w, p);
-    }
-    if w.parts[p].steps_started >= w.parts[p].steps_total && w.parts[p].in_flight == 0 {
-        finish_partition(sim, w, p);
-    }
-}
-
-/// Pack the payload and put it on the WAN toward this partition's peer.
-fn perform_send(sim: &mut Sim<World>, w: &mut World, p: usize) {
-    let peer = w.topo[p];
-    if peer == p {
-        return; // single-partition job: nothing to sync with
-    }
-    let payload = make_payload(&w.cfg.sync, &mut w.parts[p].ps);
-    let bytes = payload.wire_bytes();
-    let (from, to) = (w.parts[p].region, w.parts[peer].region);
-    let t = w.fabric.transfer(from, to, bytes, sim.now());
-    if t.dropped {
-        // Failure injection path: retry after a timeout with fresh state.
-        sim.schedule(1.0, move |sim, w: &mut World| {
-            if w.cfg.sync.should_sync(&w.parts[p].ps) {
-                perform_send(sim, w, p);
-            }
-        });
-        return;
-    }
-    // The PS communicator is a gRPC request/response sender: its send
-    // slot stays busy until the payload lands AND the ack returns
-    // (serialization + one RTT), not merely until the last byte leaves.
-    w.parts[p].comm_free_at = t.arrival + w.cfg.link.latency_s;
-    sim.schedule_at(t.arrival, move |sim, w: &mut World| {
-        receive_payload(sim, w, peer, payload);
-    });
-}
-
-fn receive_payload(_sim: &mut Sim<World>, w: &mut World, p: usize, payload: Payload) {
-    let cfg = w.cfg.sync;
-    apply_payload(&cfg, &mut w.parts[p].ps, &payload);
-}
-
-// ------------------------------------------------------------- barrier
-
-fn enter_barrier(sim: &mut Sim<World>, w: &mut World, p: usize) {
-    let part = &mut w.parts[p];
-    if part.gate != Gate::Running {
-        return;
-    }
-    part.gate = Gate::AtBarrier;
-    if part.in_flight == 0 {
-        part.barrier_arrived = true;
-        part.barrier_entry = sim.now();
-        try_release_barrier(sim, w);
-    }
-    // else: the last in-flight completion marks arrival.
-}
-
-fn try_release_barrier(sim: &mut Sim<World>, w: &mut World) {
-    if !w.all_arrived() {
-        return;
-    }
-    let now = sim.now();
-    let active: Vec<usize> =
-        (0..w.parts.len()).filter(|&i| w.parts[i].gate == Gate::AtBarrier).collect();
-    if active.is_empty() {
-        return;
-    }
-    // Exchange parameters along the topology; everyone resumes at the
-    // latest arrival (a true barrier).
-    let mut release_at = now;
-    let mut arrivals = Vec::new();
-    for &p in &active {
-        let peer = w.topo[p];
-        if peer == p {
-            continue;
-        }
-        let payload = make_payload(&w.cfg.sync, &mut w.parts[p].ps);
-        let bytes = payload.wire_bytes();
-        let (from, to) = (w.parts[p].region, w.parts[peer].region);
-        let t = w.fabric.transfer(from, to, bytes, now);
-        if t.dropped {
-            // Lossy link: the exchange payload is lost; the barrier must
-            // still release (the receiver simply keeps its local model).
-            continue;
-        }
-        w.parts[p].comm_free_at = t.done;
-        release_at = release_at.max(t.arrival);
-        arrivals.push((t.arrival, peer, payload));
-    }
-    for (at, peer, payload) in arrivals {
-        sim.schedule_at(at, move |sim, w: &mut World| {
-            receive_payload(sim, w, peer, payload);
-        });
-    }
-    for &p in &active {
-        let entry = w.parts[p].barrier_entry;
-        w.parts[p].comm_wait += release_at - entry;
-        w.parts[p].barrier_arrived = false;
-        sim.schedule_at(release_at, move |sim, w: &mut World| {
-            resume_from_barrier(sim, w, p);
-        });
-    }
-}
-
-fn resume_from_barrier(sim: &mut Sim<World>, w: &mut World, p: usize) {
-    if w.parts[p].gate != Gate::AtBarrier {
-        return;
-    }
-    w.parts[p].gate = Gate::Running;
-    if w.parts[p].steps_started >= w.parts[p].steps_total {
-        if w.parts[p].in_flight == 0 {
-            finish_partition(sim, w, p);
-        }
-        return;
-    }
-    let idle = w.parts[p].workers - w.parts[p].in_flight;
-    for _ in 0..idle {
-        start_worker_iteration(sim, w, p);
-    }
-}
-
-// ------------------------------------------------------------- finish
-
-fn finish_partition(sim: &mut Sim<World>, w: &mut World, p: usize) {
-    let now = sim.now();
-    if w.parts[p].gate == Gate::Finished {
-        return;
-    }
-    // Ship any residual accumulated state before shutting down workers.
-    if w.parts[p].ps.updates_since_sync > 0 && w.topo[p] != p {
-        perform_send(sim, w, p);
-    }
-    let part = &mut w.parts[p];
-    part.gate = Gate::Finished;
-    part.local_finish = Some(now);
-    // Serverless: worker functions terminate immediately on local finish.
-    let reps = part.worker_replicas.clone();
-    for r in reps {
-        w.faas.terminate(r, now);
-    }
-    w.n_finished += 1;
-    if w.n_finished == w.parts.len() {
-        w.global_end = Some(now);
-    } else if w.cfg.sync.strategy.is_synchronous() {
-        // A finished partition no longer blocks the barrier.
-        try_release_barrier(sim, w);
-    }
-}
-
-// --------------------------------------------------------- checkpoints
-
-/// Persist every partition's PS state (fault-tolerance; see
-/// `train::checkpoint`). Failures are logged, not fatal — a missed
-/// checkpoint must never kill training.
-fn checkpoint_all(w: &World, dir: &std::path::Path) {
-    use crate::train::checkpoint::{CheckpointStore, PsCheckpoint};
-    match CheckpointStore::new(dir) {
-        Ok(store) => {
-            for part in &w.parts {
-                let ckpt = PsCheckpoint::capture(&part.ps);
-                if let Err(e) = store.save(&part.region_name, &ckpt) {
-                    eprintln!("checkpoint {} failed: {e}", part.region_name);
-                }
-            }
-            let regions: Vec<(&str, u64)> =
-                w.parts.iter().map(|p| (p.region_name.as_str(), p.ps.total_updates)).collect();
-            let _ = store.write_manifest(&w.cfg.model, &regions);
-        }
-        Err(e) => eprintln!("checkpoint store: {e}"),
-    }
-}
-
-// --------------------------------------------------------------- eval
-
-/// Evaluate partition `p`'s model over the eval set (real compute;
-/// measurement only, takes no virtual time).
-fn evaluate(w: &World, p: usize) -> (f64, f64) {
-    let meta = &w.model.meta;
-    let b = meta.batch_size;
-    let n = w.eval_ds.n;
-    let params = &w.parts[p].ps.params;
-    let mut loss_sum = 0.0f64;
-    let mut correct = 0.0f64;
-    let mut counted = 0usize;
-    let mut i = 0;
-    while i < n {
-        let idxs: Vec<usize> = (i..i + b).map(|j| j % n).collect();
-        let take = b.min(n - i);
-        let (x, y) = w.eval_ds.batch(&idxs, meta);
-        let (ls, c) = w.model.eval_batch(params, &x, &y).expect("eval failed");
-        // full batches only contribute `take` examples' worth: the wrap
-        // tail double-counts a few examples; acceptable for curves.
-        loss_sum += ls as f64 * take as f64 / b as f64;
-        correct += c as f64 * take as f64 / b as f64;
-        counted += take;
-        i += b;
-    }
-    (loss_sum / counted as f64, correct / counted as f64)
-}
+pub use crate::engine::driver::{default_lr, run_geo_training, TrainConfig};
+pub use crate::engine::topology::TopologyKind;

@@ -51,6 +51,8 @@ pub struct PartitionReport {
 pub struct TrainReport {
     pub model: String,
     pub strategy: String,
+    /// Sync topology the run was planned with (`engine::topology` name).
+    pub topology: String,
     pub sync_freq: u32,
     /// Virtual end-to-end training time (startup through last partition).
     pub total_time: Time,
@@ -108,6 +110,7 @@ impl TrainReport {
         Json::obj(vec![
             ("model", Json::str(&self.model)),
             ("strategy", Json::str(&self.strategy)),
+            ("topology", Json::str(&self.topology)),
             ("sync_freq", Json::num(self.sync_freq as f64)),
             ("total_time_s", Json::num(self.total_time)),
             ("startup_time_s", Json::num(self.startup_time)),

@@ -6,5 +6,5 @@ pub mod checkpoint;
 pub mod geo;
 pub mod metrics;
 
-pub use geo::{default_lr, run_geo_training, TrainConfig};
+pub use geo::{default_lr, run_geo_training, TopologyKind, TrainConfig};
 pub use metrics::{EvalPoint, PartitionReport, TrainReport};

@@ -72,6 +72,19 @@ impl Args {
     pub fn f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}"))).unwrap_or(default)
     }
+
+    /// Run `--key` (or `default` when absent) through a domain parser,
+    /// surfacing the parser's own message as a `--key: ...` CLI error —
+    /// so enum options like `--strategy` fail with the list of valid
+    /// names instead of a bare "unknown" or a silent `None`.
+    pub fn parsed<T, E: std::fmt::Display>(
+        &self,
+        key: &str,
+        default: &str,
+        parse: impl FnOnce(&str) -> Result<T, E>,
+    ) -> anyhow::Result<T> {
+        parse(self.get_or(key, default)).map_err(|e| anyhow::anyhow!("--{key}: {e}"))
+    }
 }
 
 #[cfg(test)]
@@ -111,5 +124,16 @@ mod tests {
     fn trailing_flag() {
         let a = parse("train --verbose");
         assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn parsed_surfaces_domain_errors() {
+        let ok = |s: &str| -> Result<usize, String> { Ok(s.len()) };
+        let bad = |s: &str| -> Result<usize, String> { Err(format!("{s:?} is not valid")) };
+        let a = parse("train --mode fast");
+        assert_eq!(a.parsed("mode", "slow", ok).unwrap(), 4);
+        assert_eq!(a.parsed("missing", "xx", ok).unwrap(), 2, "default goes through parser");
+        let err = a.parsed("mode", "slow", bad).unwrap_err().to_string();
+        assert!(err.contains("--mode") && err.contains("\"fast\" is not valid"), "{err}");
     }
 }

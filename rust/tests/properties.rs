@@ -5,6 +5,7 @@
 
 use cloudless::cloud::devices::Device;
 use cloudless::cloud::{Allocation, CloudEnv, Region};
+use cloudless::engine::{SyncPlan, TopologyKind};
 use cloudless::net::{Fabric, LinkSpec};
 use cloudless::prop::{forall, vec_f32};
 use cloudless::ps::PsState;
@@ -157,7 +158,7 @@ fn prop_model_average_is_midpoint_and_bounded() {
         |(a, b)| {
             let mut ps = PsState::new(a.clone(), 0.1);
             let cfg = SyncConfig::new(Strategy::Ama, 4);
-            apply_payload(&cfg, &mut ps, &Payload::Params(b.clone()));
+            apply_payload(&cfg, &mut ps, &Payload::Params(b.clone()), 0.5);
             for i in 0..a.len() {
                 let lo = a[i].min(b[i]) - 1e-6;
                 let hi = a[i].max(b[i]) + 1e-6;
@@ -213,6 +214,117 @@ fn prop_topology_is_permutation_with_no_self_loops() {
                 assert_ne!(i, t, "self-loop at {i}");
                 assert!(!seen[t], "node {t} receives twice");
                 seen[t] = true;
+            }
+        },
+    );
+}
+
+// ------------------------------------------------------ engine topology
+
+/// A fully-meshed fabric with per-link bandwidths drawn from the rng, so
+/// the bandwidth-aware topologies see a non-trivial planning input.
+fn random_mesh(rng: &mut Pcg32, n: usize) -> Fabric {
+    let mut f = Fabric::new(5);
+    for a in 0..n {
+        for b in 0..n {
+            if a != b {
+                let mbps = 20.0 + rng.range_f64(0.0, 480.0);
+                f.add_link(
+                    a,
+                    b,
+                    LinkSpec { bandwidth_bps: mbps * 1e6, ..LinkSpec::wan_100mbps() },
+                );
+            }
+        }
+    }
+    f
+}
+
+const KINDS: [TopologyKind; 3] =
+    [TopologyKind::Ring, TopologyKind::Hierarchical, TopologyKind::BandwidthTree];
+
+fn check_weights_sum(plan: &SyncPlan) {
+    // Per-edge weights at every receiver: each incoming edge carries
+    // 1/(d+1), so they sum to d/(d+1) and the receiver's residual local
+    // share stays positive.
+    for r in 0..plan.n() {
+        let d = plan.in_degree(r);
+        let incoming: f32 = (0..plan.n())
+            .flat_map(|s| plan.outgoing(s).iter())
+            .filter(|e| e.to == r)
+            .map(|e| e.weight)
+            .sum();
+        let expect = d as f32 / (d as f32 + 1.0);
+        assert!(
+            (incoming - expect).abs() < 1e-5,
+            "receiver {r}: incoming weights {incoming} != {expect} (d={d})"
+        );
+    }
+}
+
+#[test]
+fn prop_ring_plans_one_outgoing_edge_per_region() {
+    for n in 2..=16usize {
+        let fabric = random_mesh(&mut Pcg32::new(n as u64, 1), n);
+        let plan = TopologyKind::Ring.plan(n, &fabric);
+        for i in 0..n {
+            assert_eq!(plan.outgoing(i).len(), 1, "ring n={n}: region {i}");
+            assert_eq!(plan.in_degree(i), 1);
+        }
+        assert!(plan.is_connected(), "ring n={n} must be connected");
+        check_weights_sum(&plan);
+    }
+}
+
+#[test]
+fn prop_no_topology_plans_self_loops_or_duplicates() {
+    forall(
+        60,
+        |r| (2 + r.usize_below(15), r.next_u64()),
+        |&(n, seed)| {
+            let fabric = random_mesh(&mut Pcg32::new(seed, 2), n);
+            for kind in KINDS {
+                let plan = kind.plan(n, &fabric);
+                let mut seen = std::collections::BTreeSet::new();
+                for e in plan.edges() {
+                    assert_ne!(e.from, e.to, "{kind:?} n={n}: self-loop at {}", e.from);
+                    assert!(e.from < n && e.to < n);
+                    assert!(seen.insert((e.from, e.to)), "{kind:?} n={n}: duplicate edge");
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_hierarchical_and_tree_plans_are_spanning_trees() {
+    forall(
+        60,
+        |r| (2 + r.usize_below(15), r.next_u64()),
+        |&(n, seed)| {
+            let fabric = random_mesh(&mut Pcg32::new(seed, 3), n);
+            for kind in [TopologyKind::Hierarchical, TopologyKind::BandwidthTree] {
+                let plan = kind.plan(n, &fabric);
+                assert!(plan.is_connected(), "{kind:?} n={n} must be connected");
+                assert!(
+                    plan.is_tree(),
+                    "{kind:?} n={n} must be acyclic (undirected support size {})",
+                    plan.undirected_support().len()
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_per_edge_weights_sum_at_every_receiver() {
+    forall(
+        60,
+        |r| (2 + r.usize_below(15), r.next_u64()),
+        |&(n, seed)| {
+            let fabric = random_mesh(&mut Pcg32::new(seed, 4), n);
+            for kind in KINDS {
+                check_weights_sum(&kind.plan(n, &fabric));
             }
         },
     );
