@@ -1,0 +1,13 @@
+//! Bench: static vs elastic re-scheduling under injected mid-run resource
+//! churn and WAN bandwidth fluctuation on a 4-cloud heterogeneous WAN.
+mod common;
+
+fn main() {
+    common::banner("elastic");
+    let coord = common::coordinator();
+    let model = std::env::args()
+        .skip_while(|a| a != "--model")
+        .nth(1)
+        .unwrap_or_else(|| "lenet".to_string());
+    cloudless::exp::elastic_exp::elastic_compare(&coord, common::scale_from_args(), &model);
+}

@@ -14,6 +14,9 @@
 //!   "sync_freq": 4,
 //!   "topology": "ring",                // ring | hierarchical | bandwidth-tree
 //!   "scheduling": "elastic",           // elastic | greedy
+//!   "elastic": {"enabled": true,       // live re-scheduling control loop
+//!               "interval_s": 60, "hysteresis": 0.2,
+//!               "bw_threshold": 0.5, "smoothing": 0.5},
 //!   "worker_cores": 3,
 //!   "link": {"bandwidth_mbps": 100, "latency_ms": 15,
 //!             "fluct_sigma": 0.25, "drop_prob": 0.0},
@@ -116,6 +119,30 @@ pub fn parse_job(text: &str) -> Result<JobSpec> {
         other => anyhow::bail!("unknown scheduling mode {other:?}"),
     };
 
+    let elastic = j.get("elastic");
+    if !elastic.is_null() {
+        anyhow::ensure!(
+            elastic.as_obj().is_some(),
+            "\"elastic\" must be an object (e.g. {{\"enabled\": true}})"
+        );
+        if let Some(e) = elastic.get("enabled").as_bool() {
+            train.elastic.enabled = e;
+        }
+        if let Some(v) = elastic.get("interval_s").as_f64() {
+            train.elastic.interval_s = v;
+        }
+        if let Some(v) = elastic.get("hysteresis").as_f64() {
+            train.elastic.hysteresis = v;
+        }
+        if let Some(v) = elastic.get("bw_threshold").as_f64() {
+            train.elastic.bw_threshold = v;
+        }
+        if let Some(v) = elastic.get("smoothing").as_f64() {
+            train.elastic.smoothing = v;
+        }
+        train.elastic.validate().map_err(|e| anyhow::anyhow!(e))?;
+    }
+
     Ok(JobSpec { env, train, scheduling })
 }
 
@@ -184,6 +211,44 @@ mod tests {
         // Wrong JSON type must error, not silently fall back to ring.
         assert!(parse_job(
             r#"{"model":"lenet","topology":2,"regions":[{"device":"sky","units":1,"data":1}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn elastic_block_parses() {
+        let spec = parse_job(
+            r#"{"model":"lenet",
+                "elastic":{"enabled":true,"interval_s":30,"hysteresis":0.1,
+                           "bw_threshold":0.4,"smoothing":0.7},
+                "regions":[{"name":"X","device":"sky","units":6,"data":100}]}"#,
+        )
+        .unwrap();
+        assert!(spec.train.elastic.enabled);
+        assert!((spec.train.elastic.interval_s - 30.0).abs() < 1e-12);
+        assert!((spec.train.elastic.hysteresis - 0.1).abs() < 1e-12);
+        assert!((spec.train.elastic.bw_threshold - 0.4).abs() < 1e-12);
+        assert!((spec.train.elastic.smoothing - 0.7).abs() < 1e-12);
+        // Default: the control loop is off.
+        let off = parse_job(
+            r#"{"model":"lenet","regions":[{"name":"X","device":"sky","units":6,"data":100}]}"#,
+        )
+        .unwrap();
+        assert!(!off.train.elastic.enabled);
+        // Wrong JSON type errors rather than being silently ignored.
+        assert!(parse_job(
+            r#"{"model":"lenet","elastic":true,"regions":[{"device":"sky","units":1,"data":1}]}"#
+        )
+        .is_err());
+        // smoothing=0 would make an enabled loop silently inert: reject.
+        assert!(parse_job(
+            r#"{"model":"lenet","elastic":{"enabled":true,"smoothing":0},
+                "regions":[{"device":"sky","units":1,"data":1}]}"#
+        )
+        .is_err());
+        assert!(parse_job(
+            r#"{"model":"lenet","elastic":{"interval_s":-5},
+                "regions":[{"device":"sky","units":1,"data":1}]}"#
         )
         .is_err());
     }

@@ -39,7 +39,8 @@ pub fn default_sizes(model: &str) -> (usize, usize) {
         "lenet" => (4096, 1024),
         "resnet" => (2048, 512),
         "deepfm" => (16384, 4096),
-        _ => (1024, 256), // transformer windows
+        "synthetic" => (512, 128), // CI smoke: milliseconds end to end
+        _ => (1024, 256),          // transformer windows
     }
 }
 

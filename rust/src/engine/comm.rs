@@ -7,8 +7,10 @@
 //! Generalization over the seed: a sync event ships one payload along
 //! *every* outgoing edge of the partition's [`SyncPlan`] (a single edge
 //! for [`Ring`](super::topology::Ring), a fan-out for a hierarchical
-//! hub), and each model-averaging payload is applied at the receiver with
-//! its edge's in-degree-derived weight instead of a hardcoded 0.5.
+//! hub), and each model-averaging payload is applied at the receiver
+//! with its edge's Metropolis weight — compensated for sequential
+//! arrival ([`super::topology::sequential_weight`]) — instead of a
+//! hardcoded 0.5.
 
 use std::rc::Rc;
 
@@ -140,6 +142,12 @@ pub(crate) fn perform_send(sim: &mut Sim<World>, w: &mut World, p: usize) {
 /// Synchronous (barrier) exchange: every active partition ships its
 /// payload along its plan edges at the barrier instant; returns the
 /// release time (the latest arrival — a true barrier).
+///
+/// Each scheduled arrival carries the receiver's total incoming weight
+/// *as of this exchange* alongside its edge weight: the compensation in
+/// [`receive_payload`] must telescope against the plan the round was
+/// planned with, even if the elastic loop swaps `World::plan` while
+/// payloads are still on the wire.
 pub(crate) fn barrier_exchange(
     sim: &mut Sim<World>,
     w: &mut World,
@@ -147,7 +155,7 @@ pub(crate) fn barrier_exchange(
     now: Time,
 ) -> Time {
     let mut release_at = now;
-    let mut arrivals: Vec<(Time, usize, Rc<Payload>, f32)> = Vec::new();
+    let mut arrivals: Vec<(Time, usize, Rc<Payload>, f32, f32)> = Vec::new();
     for &p in active {
         let edges: Vec<PlanEdge> = w.plan.outgoing(p).to_vec();
         if edges.is_empty() {
@@ -166,22 +174,27 @@ pub(crate) fn barrier_exchange(
             }
             slot_busy = Some(slot_busy.map_or(t.done, |s: Time| s.max(t.done)));
             release_at = release_at.max(t.arrival);
-            arrivals.push((t.arrival, e.to, Rc::clone(&payload), e.weight));
+            let incoming = w.plan.incoming_weight(e.to);
+            arrivals.push((t.arrival, e.to, Rc::clone(&payload), e.weight, incoming));
         }
         if let Some(s) = slot_busy {
             w.parts[p].slot.free_at = s;
         }
     }
-    for (at, peer, payload, weight) in arrivals {
+    for (at, peer, payload, weight, incoming) in arrivals {
         sim.schedule_at(at, move |sim, w: &mut World| {
-            receive_payload(sim, w, peer, &payload, weight);
+            receive_sync_payload(sim, w, peer, &payload, weight, incoming);
         });
     }
     release_at
 }
 
-/// A payload landed: apply it per the strategy's update rule, weighting
-/// model-averaging payloads by the edge's receiver-side weight.
+/// An asynchronous payload landed: apply it per the strategy's update
+/// rule at its raw edge weight. Asynchronous averaging (AMA) has no
+/// round structure — a fast sender's payload would be up-weighted
+/// whenever slower peers miss the window — so sequential compensation
+/// is reserved for the barrier path ([`receive_sync_payload`]); gradient
+/// payloads ignore weights entirely.
 pub(crate) fn receive_payload(
     _sim: &mut Sim<World>,
     w: &mut World,
@@ -191,4 +204,32 @@ pub(crate) fn receive_payload(
 ) {
     let cfg = w.cfg.sync;
     apply_payload(&cfg, &mut w.parts[p].ps, payload, remote_weight);
+}
+
+/// A barrier-round payload landed. Under the synchronous strategy (SMA)
+/// every planned payload lands exactly once between receiver snapshots,
+/// so the effective weight is run through
+/// [`super::topology::sequential_weight`] — compensated against
+/// `incoming_total`, the receiver's planned incoming weight captured *at
+/// the exchange instant* (not re-read from the live plan, which the
+/// elastic loop may have re-planned while this payload was on the wire)
+/// — and a full round reconstructs the synchronous doubly-stochastic mix
+/// order-independently.
+pub(crate) fn receive_sync_payload(
+    _sim: &mut Sim<World>,
+    w: &mut World,
+    p: usize,
+    payload: &Payload,
+    remote_weight: f32,
+    incoming_total: f32,
+) {
+    let cfg = w.cfg.sync;
+    let eff = if matches!(payload, Payload::Params(_)) {
+        let applied = w.parts[p].ps.applied_weight_since_snapshot;
+        w.parts[p].ps.note_applied_weight(remote_weight);
+        super::topology::sequential_weight(remote_weight, incoming_total, applied)
+    } else {
+        remote_weight
+    };
+    apply_payload(&cfg, &mut w.parts[p].ps, payload, eff);
 }

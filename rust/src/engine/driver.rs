@@ -31,19 +31,34 @@ use crate::cloud::devices::DeviceKind;
 use crate::cloud::{Allocation, CloudEnv};
 use crate::data::{shard_by_fraction, Dataset};
 use crate::faas::workflow::{WorkflowDef, WorkflowInstance};
-use crate::faas::{FaasRuntime, FunctionKind, FunctionSpec};
+use crate::faas::{autoscaler, FaasRuntime, FunctionKind, FunctionSpec};
 use crate::net::{Fabric, LinkSpec};
 use crate::ps::PsState;
 use crate::runtime::{ModelRuntime, PjrtRuntime};
+use crate::sched::elastic::{ElasticConfig, ElasticController, MonitorSample, ReplanDecision};
 use crate::sim::{Sim, Time};
 use crate::sync::SyncConfig;
 use crate::train::calib;
-use crate::train::metrics::{EvalPoint, PartitionReport, TrainReport};
+use crate::train::metrics::{EvalPoint, PartitionReport, ReplanEvent, TrainReport};
 use crate::util::rng::Pcg32;
 
 use super::comm::{self, SendSlot};
 use super::partition::{Gate, Partition};
 use super::topology::{SyncPlan, TopologyKind};
+
+/// A resource/WAN churn injection — what the elastic control loop exists
+/// to absorb. Events fire on the virtual clock mid-run (benches and the
+/// `exp --id elastic` driver inject these; real deployments observe the
+/// same effects from co-tenancy and WAN weather).
+#[derive(Debug, Clone)]
+pub enum ChurnEvent {
+    /// At time `t`, region `region`'s effective compute power is
+    /// multiplied down to `factor` of catalog (0.35 = the cloud lost 65%
+    /// of its delivered compute).
+    PowerFactor { t: Time, region: usize, factor: f64 },
+    /// At time `t`, the directed link's nominal bandwidth becomes `bps`.
+    LinkBandwidth { t: Time, from: usize, to: usize, bps: f64 },
+}
 
 /// Configuration for one geo-distributed training job.
 #[derive(Debug, Clone)]
@@ -76,6 +91,11 @@ pub struct TrainConfig {
     /// Checkpoint PS state here at every partition-0 epoch boundary
     /// (None = checkpointing off).
     pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Elastic re-scheduling control loop (off by default — the static
+    /// one-shot plan is the paper's §III.B behavior).
+    pub elastic: ElasticConfig,
+    /// Injected resource/WAN churn events (empty = a calm run).
+    pub churn: Vec<ChurnEvent>,
 }
 
 impl TrainConfig {
@@ -97,6 +117,8 @@ impl TrainConfig {
             eval_every: 1,
             skip_eval: false,
             checkpoint_dir: None,
+            elastic: ElasticConfig::default(),
+            churn: Vec::new(),
         }
     }
 }
@@ -125,6 +147,22 @@ pub(crate) struct World {
     pub(crate) global_end: Option<Time>,
     pub(crate) curve: Vec<EvalPoint>,
     pub(crate) train_start: Time,
+    /// Calibrated base step seconds (monitor + re-plan recompute t_iter).
+    pub(crate) base_step: f64,
+    /// Per-partition FaaS worker-pool function key (one function per
+    /// cloud, scaled to N replicas — the autoscaler's resize unit).
+    pub(crate) worker_keys: Vec<String>,
+    /// The elastic re-scheduler, when `cfg.elastic.enabled`.
+    pub(crate) controller: Option<ElasticController>,
+    /// Committed re-plan events (copied into the report).
+    pub(crate) replans: Vec<ReplanEvent>,
+    /// Per-directed-link (bytes, stream_time) at the last monitor tick,
+    /// so bandwidth samples are window deltas, not run-lifetime averages
+    /// (a late-run collapse must still register).
+    pub(crate) mon_link_last: std::collections::BTreeMap<(usize, usize), (u64, f64)>,
+    /// Billing segments closed by mid-run re-plans (released/replaced
+    /// allocations billed up to their release instant).
+    pub(crate) closed_billing: Vec<BilledAllocation>,
 }
 
 impl World {
@@ -206,8 +244,13 @@ pub fn run_geo_training(
     faas.mark_ready(inv_comm.replica);
     let t_comm_ready = t_sched + inv_comm.dispatch_delay;
 
-    // Physical plane: one sub-workflow per cloud (PS -> PS-comm -> workers).
+    // Physical plane: one sub-workflow per cloud (PS -> PS-comm -> worker
+    // pool). Workers share ONE function key per cloud scaled to N
+    // replicas, so the elastic control loop can resize the pool through
+    // the plan-driven autoscaler.
+    let initial_allocations = allocations.clone();
     let mut parts: Vec<Partition> = Vec::new();
+    let mut worker_keys: Vec<String> = Vec::new();
     for (i, (alloc, shard)) in allocations.into_iter().zip(shards).enumerate() {
         let region = &env.regions[i];
         let is_gpu = alloc
@@ -228,14 +271,12 @@ pub fn run_geo_training(
             FunctionSpec::new("ps-comm", &format!("cloud{i}"), FunctionKind::PsCommunicator, i),
             vec![ps_node],
         );
-        let mut worker_nodes = Vec::new();
-        for wi in 0..workers {
-            worker_nodes.push(wf.add(
-                FunctionSpec::new(&format!("worker-{wi}"), &format!("cloud{i}"), FunctionKind::Worker, i),
-                vec![comm_node],
-            ));
-        }
+        wf.add(
+            FunctionSpec::new("worker", &format!("cloud{i}"), FunctionKind::Worker, i),
+            vec![comm_node],
+        );
         let _inst = WorkflowInstance::deploy(wf, &mut faas)?;
+        let worker_key = format!("cloud{i}/worker");
 
         // Spawn replicas following the DAG: PS, then communicator, then workers.
         let (ps_rep, ps_ready) = faas.scale_up(&format!("cloud{i}/ps"), t_comm_ready)?;
@@ -247,13 +288,14 @@ pub fn run_geo_training(
         faas.addressing.assign_wan_identity(comm_rep, wan_ep);
         let mut worker_replicas = Vec::new();
         let mut workers_ready = comm_ready;
-        for wi in 0..workers {
-            let (rep, ready) = faas.scale_up(&format!("cloud{i}/worker-{wi}"), comm_ready)?;
+        for _ in 0..workers {
+            let (rep, ready) = faas.scale_up(&worker_key, comm_ready)?;
             faas.mark_ready(rep);
             worker_replicas.push(rep);
             workers_ready = workers_ready.max(ready);
         }
         startup_done = startup_done.max(workers_ready);
+        worker_keys.push(worker_key);
 
         let steps_per_epoch = shard.steps_per_epoch(model.meta.batch_size) as u64;
         parts.push(Partition {
@@ -264,6 +306,7 @@ pub fn run_geo_training(
             ps: PsState::new(model.init_params.clone(), cfg.lr),
             workers,
             t_iter,
+            power_factor: 1.0,
             steps_total: steps_per_epoch * cfg.epochs as u64,
             steps_started: 0,
             steps_completed: 0,
@@ -277,11 +320,31 @@ pub fn run_geo_training(
             barrier_entry: 0.0,
             cold_start_time: workers_ready - t_comm_ready,
             worker_replicas,
+            alloc_since: 0.0,
+            mon_last_t: startup_done,
+            mon_last_steps: 0,
+            mon_last_waited: 0.0,
             rng: Pcg32::new(cfg.seed ^ 0x7A27, i as u64),
         });
     }
 
     let n_parts = parts.len();
+    // Elastic control loop: the controller sees the launch plan and the
+    // bandwidths the initial sync topology was planned against.
+    let controller = if cfg.elastic.enabled {
+        let nominal_bw: Vec<(usize, usize, f64)> = (0..n_parts)
+            .flat_map(|a| (0..n_parts).filter(move |b| *b != a).map(move |b| (a, b)))
+            .filter_map(|(a, b)| fabric.link_bandwidth(a, b).map(|bw| (a, b, bw)))
+            .collect();
+        Some(ElasticController::new(
+            cfg.elastic.clone(),
+            env.clone(),
+            &initial_allocations,
+            nominal_bw,
+        ))
+    } else {
+        None
+    };
     let mut world = World {
         plan: cfg.topology.plan(n_parts, &fabric),
         cfg,
@@ -295,6 +358,12 @@ pub fn run_geo_training(
         global_end: None,
         curve: Vec::new(),
         train_start: startup_done,
+        base_step,
+        worker_keys,
+        controller,
+        replans: Vec::new(),
+        mon_link_last: std::collections::BTreeMap::new(),
+        closed_billing: Vec::new(),
     };
 
     // Kick off every worker loop at training start.
@@ -305,6 +374,37 @@ pub fn run_geo_training(
                 start_worker_iteration(sim, w, p);
             });
         }
+    }
+
+    // Inject resource/WAN churn on the virtual clock.
+    for ev in world.cfg.churn.clone() {
+        match ev {
+            ChurnEvent::PowerFactor { t, region, factor } => {
+                sim.schedule_at(t.max(startup_done), move |_, w: &mut World| {
+                    if region < w.parts.len() {
+                        w.parts[region].power_factor = factor.max(1e-3);
+                    }
+                });
+            }
+            ChurnEvent::LinkBandwidth { t, from, to, bps } => {
+                sim.schedule_at(t.max(0.0), move |_, w: &mut World| {
+                    w.fabric.set_bandwidth(from, to, bps);
+                });
+            }
+        }
+    }
+
+    // First monitor tick one interval into training. Monitoring windows
+    // open at the true (global) training start, not each region's own
+    // deploy completion.
+    if world.controller.is_some() {
+        for part in &mut world.parts {
+            part.mon_last_t = startup_done;
+        }
+        let interval = world.cfg.elastic.interval_s.max(1e-3);
+        sim.schedule_at(startup_done + interval, move |sim, w: &mut World| {
+            monitor_tick(sim, w);
+        });
     }
 
     let drained = sim.run_with_limit(&mut world, 200_000_000);
@@ -320,11 +420,18 @@ pub fn run_geo_training(
 
     // ---- report ----
     let cost_model = CostModel::default();
-    let mut billed = Vec::new();
+    // Billing is segment-based: allocations released or replaced by a
+    // mid-run re-plan were closed at their release instant
+    // (`closed_billing`); whatever is still held bills to global end.
+    let mut billed = world.closed_billing.clone();
     let mut partitions = Vec::new();
     for (pi, part) in world.parts.iter().enumerate() {
         for &(dev, n) in &part.alloc.units {
-            billed.push(BilledAllocation { device: dev, units: n, held_s: global_end });
+            billed.push(BilledAllocation {
+                device: dev,
+                units: n,
+                held_s: global_end - part.alloc_since,
+            });
         }
         // Outgoing-link serialization time (the on-the-wire share of the
         // paper's "communication time on WAN"), summed over this
@@ -384,6 +491,7 @@ pub fn run_geo_training(
         wan_cost: cost_model.wan_cost(wan_bytes),
         wall_seconds: wall0.elapsed().as_secs_f64(),
         pjrt_executions: world.model.exec_counts.get(),
+        replan_events: world.replans.clone(),
     };
     Ok(report)
 }
@@ -402,9 +510,10 @@ pub(crate) fn start_worker_iteration(sim: &mut Sim<World>, w: &mut World, p: usi
     let batch = part.shard.next_batch(b);
     // Deterministic ±25% iteration jitter: serverless pods see real
     // variance (co-tenancy, GC, batch content), and that variance is what
-    // makes send slots collide under frequent sync.
+    // makes send slots collide under frequent sync. `power_factor` is the
+    // injected churn: a slowed cloud's every iteration stretches.
     let jitter = 0.75 + 0.5 * part.rng.f64();
-    let t_iter = part.t_iter * jitter;
+    let t_iter = part.t_iter * jitter / part.power_factor;
     sim.schedule(t_iter, move |sim, w: &mut World| {
         finish_worker_iteration(sim, w, p, snapshot, version, batch);
     });
@@ -464,11 +573,15 @@ fn finish_worker_iteration(
         }
     }
 
-    // Continue, block, or finish.
+    // Continue, block, or finish. A worker only restarts while the pool
+    // has room — after an elastic downsize the surplus in-flight
+    // iterations drain here instead of respawning.
     match w.parts[p].gate {
         Gate::Running => {
             if !w.parts[p].local_done() {
-                start_worker_iteration(sim, w, p);
+                if w.parts[p].in_flight < w.parts[p].workers {
+                    start_worker_iteration(sim, w, p);
+                }
             } else if w.parts[p].in_flight == 0 {
                 finish_partition(sim, w, p);
             }
@@ -565,6 +678,190 @@ pub(crate) fn finish_partition(sim: &mut Sim<World>, w: &mut World, p: usize) {
     } else if w.cfg.sync.strategy.is_synchronous() {
         // A finished partition no longer blocks the barrier.
         try_release_barrier(sim, w);
+    }
+}
+
+// ---------------------------------------------------- elastic control loop
+
+/// One control-loop tick: sample the running system, feed the controller,
+/// apply whatever re-plan it commits, and re-arm the next tick (the loop
+/// stops once the job completes).
+pub(crate) fn monitor_tick(sim: &mut Sim<World>, w: &mut World) {
+    if w.global_end.is_some() {
+        return; // job done — let the event heap drain
+    }
+    let sample = collect_sample(sim.now(), w);
+    let decision = match w.controller.as_mut() {
+        Some(ctrl) => ctrl.observe(&sample),
+        None => None,
+    };
+    if let Some(dec) = decision {
+        apply_replan(sim, w, &dec);
+    }
+    let interval = w.cfg.elastic.interval_s.max(1e-3);
+    sim.schedule(interval, move |sim, w: &mut World| {
+        monitor_tick(sim, w);
+    });
+}
+
+/// Build the monitoring sample: per-cloud effective step time over the
+/// window (excluding time the partition sat blocked on the WAN, so
+/// comm backpressure is not misread as compute loss) and per-planned-link
+/// delivered bandwidth from the fabric's transfer statistics.
+fn collect_sample(now: Time, w: &mut World) -> MonitorSample {
+    let mut power_scale = Vec::with_capacity(w.parts.len());
+    let finished: Vec<bool> = w.parts.iter().map(|p| p.gate == Gate::Finished).collect();
+    for part in &mut w.parts {
+        let dt = now - part.mon_last_t;
+        let steps = part.steps_completed.saturating_sub(part.mon_last_steps);
+        let blocked = (part.slot.waited - part.mon_last_waited).clamp(0.0, dt);
+        // Only a freely-running, not-yet-draining partition carries a
+        // clean compute signal: gated windows hide unrecorded wait time
+        // and wind-down windows (all steps started) read as slowdowns.
+        let scale = if part.gate != Gate::Running || part.local_done() || steps == 0 || dt <= 0.0
+        {
+            None
+        } else {
+            // Steady state: `workers` concurrent loops complete one step
+            // every observed step time; compare against the catalog
+            // expectation for the current allocation.
+            let active = (dt - blocked).max(dt * 0.01);
+            let observed_step = active * part.workers.max(1) as f64 / steps as f64;
+            Some(part.t_iter / observed_step)
+        };
+        power_scale.push(scale);
+        part.mon_last_t = now;
+        part.mon_last_steps = part.steps_completed;
+        part.mon_last_waited = part.slot.waited;
+    }
+    // Delivered bandwidth per planned edge over THIS window: byte and
+    // stream-time deltas since the previous tick (setup overhead is
+    // excluded so small payloads still read the line rate, and window
+    // deltas — unlike run-lifetime averages — register a late-run
+    // collapse immediately; the controller's EWMA smooths fluctuation
+    // noise). Quiet windows produce no sample.
+    let mut link_bw = Vec::new();
+    for p in 0..w.parts.len() {
+        for e in w.plan.outgoing(p) {
+            let (from, to) = (w.parts[p].region, w.parts[e.to].region);
+            if let Some(s) = w.fabric.stats(from, to) {
+                let last = w.mon_link_last.insert((from, to), (s.bytes, s.stream_time));
+                let (b0, t0) = last.unwrap_or((0, 0.0));
+                let (db, dt_s) = (s.bytes.saturating_sub(b0), s.stream_time - t0);
+                if db > 0 && dt_s > 1e-12 {
+                    link_bw.push((from, to, db as f64 * 8.0 / dt_s));
+                }
+            }
+        }
+    }
+    MonitorSample { t: now, power_scale, finished, link_bw }
+}
+
+/// Apply a committed re-plan mid-run: resize every changed partition's
+/// worker pool through the FaaS autoscaler (billing released and spawned
+/// replicas at this instant), retime its iterations, and — when the
+/// observed WAN diverged — re-plan the sync topology against the
+/// controller's bandwidth view.
+fn apply_replan(sim: &mut Sim<World>, w: &mut World, dec: &ReplanDecision) {
+    let now = sim.now();
+    let mut load_changed = false;
+    if dec.plan_delta > 0.0 {
+        for p in 0..w.parts.len() {
+            if w.parts[p].gate == Gate::Finished {
+                continue;
+            }
+            let new_alloc = dec.allocations[p].clone();
+            if new_alloc.units == w.parts[p].alloc.units {
+                continue;
+            }
+            load_changed = true;
+            // Close the billing segment of the outgoing allocation.
+            let since = w.parts[p].alloc_since;
+            for &(dev, n) in &w.parts[p].alloc.units {
+                w.closed_billing.push(BilledAllocation {
+                    device: dev,
+                    units: n,
+                    held_s: now - since,
+                });
+            }
+            let is_gpu = new_alloc
+                .units
+                .first()
+                .map(|(d, _)| d.info().kind == DeviceKind::Gpu)
+                .unwrap_or(false);
+            let workers =
+                calib::worker_count(new_alloc.total_units(), is_gpu, w.cfg.worker_cores);
+            // Resize the serverless pool (spawned replicas cold-start;
+            // released ones terminate now and stop billing).
+            let key = w.worker_keys[p].clone();
+            let (spawned, live) = autoscaler::resize_pool(&mut w.faas, &key, workers as u32, now)
+                .expect("worker pool registered at deploy time");
+            let mut ready_at = now;
+            for id in &spawned {
+                if let Some(r) = w.faas.replica(*id) {
+                    ready_at = ready_at.max(r.ready_at);
+                }
+                w.faas.mark_ready(*id);
+            }
+            let part = &mut w.parts[p];
+            part.worker_replicas = live;
+            part.workers = workers;
+            let w_power = calib::worker_power(new_alloc.power(), workers);
+            part.t_iter = calib::iter_time(w.base_step, w_power);
+            part.alloc = new_alloc;
+            part.alloc_since = now;
+            // Retime the monitoring window: the old expectation no
+            // longer applies to the new pool.
+            part.mon_last_t = now;
+            part.mon_last_steps = part.steps_completed;
+            part.mon_last_waited = part.slot.waited;
+            if !spawned.is_empty() {
+                // Newly-spawned workers join the loop after cold start.
+                sim.schedule_at(ready_at, move |sim, w: &mut World| {
+                    kick_idle_workers(sim, w, p);
+                });
+            }
+        }
+    }
+    let mut topology_replanned = false;
+    if dec.replan_topology {
+        // Re-plan who-talks-to-whom against the *observed* WAN: a scratch
+        // fabric carrying the controller's bandwidth view feeds the same
+        // planner the run launched with.
+        let mut observed = Fabric::new(w.cfg.seed);
+        for &(from, to, bps) in &dec.bw_view {
+            observed.add_link(from, to, LinkSpec { bandwidth_bps: bps, ..w.cfg.link.clone() });
+        }
+        w.plan = w.cfg.topology.plan(w.parts.len(), &observed);
+        topology_replanned = true;
+    }
+    if !load_changed && !topology_replanned {
+        return;
+    }
+    let cause = match (load_changed, topology_replanned) {
+        (true, true) => "load+bandwidth",
+        (true, false) => "load",
+        _ => "bandwidth",
+    };
+    w.replans.push(ReplanEvent {
+        t: now,
+        cause: cause.to_string(),
+        plan_delta: dec.plan_delta,
+        straggler: dec.straggler,
+        units: w.parts.iter().map(|p| p.alloc.total_units()).collect(),
+        topology_replanned,
+    });
+}
+
+/// Start worker loops on any idle pool slots (used after an elastic
+/// scale-up once the new replicas finish cold-starting).
+pub(crate) fn kick_idle_workers(sim: &mut Sim<World>, w: &mut World, p: usize) {
+    if w.parts[p].gate != Gate::Running || w.parts[p].local_done() {
+        return;
+    }
+    let idle = w.parts[p].idle_workers();
+    for _ in 0..idle {
+        start_worker_iteration(sim, w, p);
     }
 }
 

@@ -28,7 +28,8 @@ pub mod driver;
 pub mod partition;
 pub mod topology;
 
-pub use driver::{default_lr, run_geo_training, TrainConfig};
+pub use driver::{default_lr, run_geo_training, ChurnEvent, TrainConfig};
 pub use topology::{
-    BandwidthTree, Hierarchical, PlanEdge, Ring, SyncPlan, Topology, TopologyKind,
+    sequential_weight, BandwidthTree, Hierarchical, PlanEdge, Ring, SyncPlan, Topology,
+    TopologyKind,
 };

@@ -38,10 +38,17 @@ pub struct Partition {
     pub alloc: Allocation,
     pub shard: Shard,
     pub ps: PsState,
-    /// Concurrent worker functions (ElasticDL pod granularity).
+    /// Concurrent worker functions (ElasticDL pod granularity). Live —
+    /// the elastic control loop resizes this mid-run; in-flight
+    /// iterations beyond a shrunk pool drain without restarting.
     pub workers: usize,
-    /// Modeled seconds per worker iteration (calibrated).
+    /// Modeled seconds per worker iteration at *catalog* power for the
+    /// current allocation (recomputed on every re-plan).
     pub t_iter: f64,
+    /// Observed-compute multiplier from resource churn injection: actual
+    /// iteration time is `t_iter / power_factor` (1.0 = nominal, 0.5 =
+    /// the cloud lost half its effective compute to co-tenancy).
+    pub power_factor: f64,
     pub steps_total: u64,
     pub steps_started: u64,
     pub steps_completed: u64,
@@ -57,6 +64,14 @@ pub struct Partition {
     pub barrier_entry: Time,
     pub cold_start_time: Time,
     pub worker_replicas: Vec<ReplicaId>,
+    /// Virtual time the current allocation took effect (billing-segment
+    /// start; 0.0 until the first elastic re-plan).
+    pub alloc_since: Time,
+    /// Monitoring window state: time / completed steps / blocked seconds
+    /// at the last control-loop sample.
+    pub mon_last_t: Time,
+    pub mon_last_steps: u64,
+    pub mon_last_waited: Time,
     /// Deterministic per-partition jitter stream.
     pub rng: Pcg32,
 }
@@ -68,8 +83,10 @@ impl Partition {
     }
 
     /// Workers currently idle (available to restart after an unblock).
+    /// Saturating: after an elastic downsize, in-flight iterations may
+    /// briefly exceed the pool while the extra ones drain.
     pub fn idle_workers(&self) -> usize {
-        self.workers - self.in_flight
+        self.workers.saturating_sub(self.in_flight)
     }
 
     /// True when the just-completed step closed a local epoch.
@@ -91,6 +108,7 @@ mod tests {
             ps: PsState::new(vec![0.0; 4], 0.1),
             workers: 4,
             t_iter: 1.0,
+            power_factor: 1.0,
             steps_total: 8,
             steps_started: 0,
             steps_completed: 0,
@@ -104,6 +122,10 @@ mod tests {
             barrier_entry: 0.0,
             cold_start_time: 0.0,
             worker_replicas: Vec::new(),
+            alloc_since: 0.0,
+            mon_last_t: 0.0,
+            mon_last_steps: 0,
+            mon_last_waited: 0.0,
             rng: Pcg32::new(1, 0),
         }
     }
@@ -117,6 +139,14 @@ mod tests {
         p.in_flight = 3;
         assert!(p.local_done());
         assert_eq!(p.idle_workers(), 1);
+    }
+
+    #[test]
+    fn idle_workers_saturates_after_downsize() {
+        let mut p = part();
+        p.in_flight = 4;
+        p.workers = 2; // elastic scale-down while 4 iterations in flight
+        assert_eq!(p.idle_workers(), 0, "must not underflow");
     }
 
     #[test]

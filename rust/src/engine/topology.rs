@@ -23,15 +23,28 @@
 //!   2404.11352): payloads travel both directions along tree edges, so
 //!   slow links are bypassed entirely.
 //!
-//! **Averaging weights.** A receiver with in-degree `d` assigns each
-//! incoming model weight `1/(d+1)` and keeps `1 - 1/(d+1)` for its local
-//! model, so incoming weights at every receiver sum to `d/(d+1) < 1`.
-//! For two clouds this reduces to the paper's 0.5/0.5 average; for any
-//! `N`, consensus (all models equal) is a fixed point, which is what the
-//! paper's model-correctness guarantee rests on. (Payloads are applied
-//! sequentially on arrival, so a fan-in receiver's *effective* mix is
-//! order-dependent; see `tests/ncloud_averaging.rs` for the measured
-//! consequences.)
+//! **Averaging weights (Metropolis).** Each directed edge `u -> v`
+//! carries the Metropolis–Hastings weight `1/(1 + max(deg(u), deg(v)))`,
+//! where `deg` is the node's degree in the plan's *undirected support*.
+//! The synchronous per-round mixing matrix this induces is symmetric and
+//! doubly stochastic, so averaging preserves the fleet-wide mean model —
+//! hub-style topologies no longer concentrate "hub authority" the way the
+//! earlier in-degree `1/(in+1)` weights did (see ROADMAP history). For
+//! two clouds the formula reduces to the paper's 0.5/0.5 average, and for
+//! any `N` consensus (all models equal) is a fixed point, which is what
+//! the paper's model-correctness guarantee rests on.
+//!
+//! Payloads still *apply* sequentially on arrival. A naive sequential
+//! apply of weight `w` payloads discounts early arrivals by the residual
+//! factors of later ones; [`sequential_weight`] compensates by up-scaling
+//! the j-th applied payload to `w / (1 - remaining)` (where `remaining`
+//! is the incoming weight not yet applied since the receiver's last
+//! snapshot), which telescopes to the *exact* synchronous Metropolis row
+//! regardless of arrival order. The communicator applies the
+//! compensation on the synchronous (SMA barrier) path only — its
+//! full-round premise does not hold for asynchronous AMA, which uses raw
+//! Metropolis weights — and `tests/ncloud_averaging.rs` pins the
+//! measured consequences.
 //!
 //! Weights apply to model-averaging payloads (AMA/SMA). Gradient
 //! strategies (ASGD/ASGD-GA) ship only the sender's local accumulated
@@ -48,7 +61,9 @@ use crate::net::{Fabric, RegionId};
 pub struct PlanEdge {
     pub from: RegionId,
     pub to: RegionId,
-    /// The remote-model weight applied at the receiver (`1/(in_degree+1)`).
+    /// The remote-model weight applied at the receiver — the Metropolis
+    /// weight `1/(1 + max(deg(from), deg(to)))` over the plan's
+    /// undirected support.
     pub weight: f32,
 }
 
@@ -62,21 +77,30 @@ pub struct SyncPlan {
 
 impl SyncPlan {
     /// Build a plan from raw directed edges, deriving each edge's weight
-    /// from its receiver's in-degree (`weight = 1/(in_degree+1)`).
+    /// by the Metropolis rule: `weight = 1/(1 + max(deg(from), deg(to)))`
+    /// over the undirected support (so symmetric edge pairs carry equal
+    /// weight and the synchronous mixing matrix is doubly stochastic).
     ///
     /// Panics on self-loops, out-of-range endpoints, or duplicate edges —
     /// a topology that plans those is a bug, not an input error.
     pub fn from_directed_edges(n: usize, edges: &[(RegionId, RegionId)]) -> SyncPlan {
         assert!(n >= 1, "a plan needs at least one partition");
-        let mut in_degree = vec![0usize; n];
+        let mut support: Vec<(RegionId, RegionId)> = Vec::new();
         for &(from, to) in edges {
             assert!(from < n && to < n, "edge ({from},{to}) out of range for n={n}");
             assert_ne!(from, to, "self-loop at {from}");
-            in_degree[to] += 1;
+            support.push((from.min(to), from.max(to)));
+        }
+        support.sort_unstable();
+        support.dedup();
+        let mut degree = vec![0usize; n];
+        for &(a, b) in &support {
+            degree[a] += 1;
+            degree[b] += 1;
         }
         let mut outgoing: Vec<Vec<PlanEdge>> = vec![Vec::new(); n];
         for &(from, to) in edges {
-            let weight = 1.0 / (in_degree[to] as f32 + 1.0);
+            let weight = 1.0 / (1.0 + degree[from].max(degree[to]) as f32);
             assert!(
                 !outgoing[from].iter().any(|e| e.to == to),
                 "duplicate edge ({from},{to})"
@@ -84,6 +108,19 @@ impl SyncPlan {
             outgoing[from].push(PlanEdge { from, to, weight });
         }
         SyncPlan { n, outgoing }
+    }
+
+    /// Degree of partition `i` in the plan's undirected support — the
+    /// `deg` the Metropolis weights are derived from.
+    pub fn support_degree(&self, i: RegionId) -> usize {
+        self.undirected_support().iter().filter(|(a, b)| *a == i || *b == i).count()
+    }
+
+    /// Total incoming Metropolis weight at partition `i` (always < 1, so
+    /// the receiver's local share stays positive). The communicator needs
+    /// this for [`sequential_weight`] compensation.
+    pub fn incoming_weight(&self, i: RegionId) -> f32 {
+        self.edges().filter(|e| e.to == i).map(|e| e.weight).sum()
     }
 
     /// Number of partitions the plan covers.
@@ -152,6 +189,31 @@ impl SyncPlan {
     }
 }
 
+/// Effective weight for applying one model-averaging payload
+/// *sequentially* such that, once every planned incoming payload since
+/// the receiver's last snapshot has landed, the combined mix equals the
+/// synchronous Metropolis row exactly — independent of arrival order.
+///
+/// `edge_weight` is the payload's planned (synchronous) weight,
+/// `incoming_total` the receiver's total planned incoming weight
+/// ([`SyncPlan::incoming_weight`]), and `applied` the planned weight of
+/// payloads already applied since the receiver's last snapshot. The j-th
+/// applied payload gets `w / (1 - remaining_after_it)`, which telescopes:
+/// residual local mass after all `d` applies is `1 - incoming_total` and
+/// every payload lands at exactly its planned weight.
+///
+/// Degenerate cases (payloads beyond plan expectations — async pile-ups,
+/// re-sent syncs) clamp to the raw edge weight, which degrades gracefully
+/// toward the uncompensated behavior instead of over-weighting.
+pub fn sequential_weight(edge_weight: f32, incoming_total: f32, applied: f32) -> f32 {
+    let remaining_after = (incoming_total - applied - edge_weight).max(0.0);
+    let denom = 1.0 - remaining_after;
+    if denom <= edge_weight {
+        return edge_weight.min(1.0);
+    }
+    (edge_weight / denom).clamp(edge_weight, 1.0)
+}
+
 /// A pluggable sync-topology strategy: given the partition count and the
 /// WAN fabric, plan who sends to whom with what averaging weight.
 pub trait Topology {
@@ -204,11 +266,12 @@ impl Topology for Ring {
 }
 
 /// HiPS-style hierarchical aggregation (GeoMX): leaves sync to a hub
-/// region which averages and fans back out on its own sync cadence. Each
-/// arriving leaf model is folded into the hub at weight `1/n` (payloads
-/// apply sequentially as they land, so the effective mix favors later
-/// arrivals — the "hub authority" drift noted in ROADMAP.md); every leaf
-/// receives the hub's model at weight `1/2`.
+/// region which averages and fans back out on its own sync cadence. With
+/// Metropolis weights every star edge carries `1/n` in both directions
+/// (hub degree `n-1`), so the hub's model no longer dominates the leaves
+/// the way the old `1/2` hub-to-leaf weight did; combined with
+/// [`sequential_weight`] compensation the per-round mix is exactly the
+/// doubly-stochastic star matrix.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Hierarchical {
     /// Fixed hub region; `None` picks the best-connected region.
@@ -371,7 +434,8 @@ mod tests {
             let out = plan.outgoing(i);
             assert_eq!(out.len(), 1, "ring: one outgoing edge per region");
             assert_eq!(out[0].to, (i + 1) % 4);
-            assert_eq!(out[0].weight, 0.5, "in-degree 1 -> remote weight 1/2");
+            // Ring support degree is 2 everywhere -> Metropolis 1/3.
+            assert!((out[0].weight - 1.0 / 3.0).abs() < 1e-6, "{}", out[0].weight);
         }
         assert!(plan.is_connected());
     }
@@ -382,8 +446,10 @@ mod tests {
         let plan = Ring.plan(2, &f);
         assert_eq!(plan.outgoing(0)[0].to, 1);
         assert_eq!(plan.outgoing(1)[0].to, 0);
-        // The paper's hardcoded 0.5 falls out of the in-degree rule.
+        // The paper's hardcoded 0.5 falls out of the Metropolis rule
+        // (both endpoints have support degree 1) — seed parity holds.
         assert_eq!(plan.outgoing(0)[0].weight, 0.5);
+        assert_eq!(plan.outgoing(1)[0].weight, 0.5);
     }
 
     #[test]
@@ -397,20 +463,57 @@ mod tests {
     }
 
     #[test]
-    fn hierarchical_is_a_star_with_in_degree_weights() {
+    fn hierarchical_is_a_star_with_metropolis_weights() {
         let f = uniform_fabric(5);
         let plan = Hierarchical { hub: Some(2) }.plan(5, &f);
         assert!(plan.is_tree());
         assert_eq!(plan.in_degree(2), 4, "hub receives from every leaf");
+        assert_eq!(plan.support_degree(2), 4);
         for leaf in [0usize, 1, 3, 4] {
             assert_eq!(plan.outgoing(leaf).len(), 1);
             assert_eq!(plan.outgoing(leaf)[0].to, 2);
-            assert!((plan.outgoing(leaf)[0].weight - 0.2).abs() < 1e-6, "1/(4+1)");
+            assert!((plan.outgoing(leaf)[0].weight - 0.2).abs() < 1e-6, "1/(1+max(4,1))");
             assert_eq!(plan.in_degree(leaf), 1);
+            assert_eq!(plan.support_degree(leaf), 1);
         }
-        // Hub fans back out to every leaf at weight 1/2.
+        // Hub fans back out at the SAME 1/5: symmetric Metropolis edges,
+        // no more hub-authority 1/2.
         assert_eq!(plan.outgoing(2).len(), 4);
-        assert!(plan.outgoing(2).iter().all(|e| (e.weight - 0.5).abs() < 1e-6));
+        assert!(plan.outgoing(2).iter().all(|e| (e.weight - 0.2).abs() < 1e-6));
+        // Incoming mass stays below 1 everywhere.
+        for r in 0..5 {
+            assert!(plan.incoming_weight(r) < 1.0);
+        }
+        assert!((plan.incoming_weight(2) - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sequential_weights_telescope_to_the_synchronous_row() {
+        // Star hub with 3 incoming edges at 1/4 each: the applied
+        // sequence must be 1/2, 1/3, 1/4 so every payload ends at 1/4.
+        let w = 0.25f32;
+        let w_in = 0.75f32;
+        let mut applied = 0.0f32;
+        let mut local = 1.0f32; // residual local coefficient
+        let mut coeffs = Vec::new();
+        for expect in [0.5f32, 1.0 / 3.0, 0.25] {
+            let eff = sequential_weight(w, w_in, applied);
+            assert!((eff - expect).abs() < 1e-6, "{eff} vs {expect}");
+            for c in &mut coeffs {
+                *c *= 1.0 - eff;
+            }
+            local *= 1.0 - eff;
+            coeffs.push(eff);
+            applied += w;
+        }
+        for c in &coeffs {
+            assert!((c - w).abs() < 1e-6, "payload coefficient {c} != planned {w}");
+        }
+        assert!((local - 0.25).abs() < 1e-6, "local residual = 1 - incoming_total");
+        // Past-plan payloads degrade to the raw edge weight.
+        assert_eq!(sequential_weight(w, w_in, 0.75), w);
+        // Single-edge receivers are uncompensated.
+        assert_eq!(sequential_weight(0.5, 0.5, 0.0), 0.5);
     }
 
     #[test]
@@ -451,19 +554,26 @@ mod tests {
     }
 
     #[test]
-    fn weights_follow_in_degree_everywhere() {
+    fn weights_follow_metropolis_rule_everywhere() {
         let f = uniform_fabric(6);
         for kind in [TopologyKind::Ring, TopologyKind::Hierarchical, TopologyKind::BandwidthTree] {
             let plan = kind.plan(6, &f);
             for e in plan.edges() {
-                let d = plan.in_degree(e.to) as f32;
+                let d = plan.support_degree(e.from).max(plan.support_degree(e.to)) as f32;
                 assert!(
                     (e.weight - 1.0 / (d + 1.0)).abs() < 1e-6,
-                    "{kind:?}: edge ({},{}) weight {} vs in-degree {d}",
+                    "{kind:?}: edge ({},{}) weight {} vs max support degree {d}",
                     e.from,
                     e.to,
                     e.weight
                 );
+                // Symmetric edge pairs carry equal weight.
+                if let Some(rev) = plan.outgoing(e.to).iter().find(|r| r.to == e.from) {
+                    assert_eq!(rev.weight, e.weight, "{kind:?}: asymmetric pair");
+                }
+            }
+            for r in 0..6 {
+                assert!(plan.incoming_weight(r) < 1.0, "{kind:?}: receiver {r} oversubscribed");
             }
         }
     }

@@ -1,0 +1,211 @@
+//! Elastic re-scheduling under churn — beyond the paper's one-shot plan.
+//!
+//! A 4-cloud heterogeneous WAN launches on the elastic *initial* plan
+//! (Algorithm 1), then mid-run a non-straggler cloud loses 65% of its
+//! delivered compute (co-tenancy churn) and the hub's fat WAN links
+//! degrade (bandwidth weather). The same churn hits two runs:
+//!
+//! - **static** — the paper's behavior: the plan never changes, so the
+//!   slowed cloud (already cut down by the initial plan) becomes a
+//!   massive straggler and every other region burns money waiting;
+//! - **elastic** — the `sched::elastic` control loop observes per-cloud
+//!   step times and per-link delivered bandwidth, re-runs Optimal
+//!   Matching on the *observed* powers, scales the slowed cloud back up
+//!   through the FaaS autoscaler (and sheds units elsewhere), and
+//!   re-plans the sync topology when the measured WAN diverges.
+//!
+//! Reported: end-to-end time, post-churn throughput recovery, waiting
+//! time, compute cost, and the recorded `TrainReport.replan_events`.
+
+use crate::cloud::devices::Device;
+use crate::cloud::CloudEnv;
+use crate::coordinator::Coordinator;
+use crate::engine::{ChurnEvent, TopologyKind};
+use crate::exp::{print_table, save_result, Scale};
+use crate::net::LinkSpec;
+use crate::sched::elastic::ElasticConfig;
+use crate::sync::{Strategy, SyncConfig};
+use crate::train::{calib, TrainConfig, TrainReport};
+use crate::util::json::Json;
+
+fn wan_at(mbps: f64) -> LinkSpec {
+    LinkSpec { bandwidth_bps: mbps * 1e6, ..LinkSpec::wan_100mbps() }
+}
+
+/// The 4-cloud testbed (same shape as the topology experiment): Shanghai
+/// is the best-connected region; Beijing is a cut-down non-straggler that
+/// the churn event will slow to 35% of catalog power.
+fn four_cloud_env(n_train: usize) -> CloudEnv {
+    let per = n_train / 4;
+    CloudEnv::multi_region(vec![
+        ("Shanghai", Device::CascadeLake, 12, per),
+        ("Chongqing", Device::Skylake, 12, per),
+        ("Beijing", Device::Skylake, 12, per),
+        ("Guangzhou", Device::IceLake, 12, n_train - 3 * per),
+    ])
+}
+
+fn hetero_overrides() -> Vec<(usize, usize, LinkSpec)> {
+    let mut ov = Vec::new();
+    for r in 1..4usize {
+        ov.push((0, r, wan_at(300.0)));
+        ov.push((r, 0, wan_at(300.0)));
+    }
+    ov.push((2, 3, wan_at(40.0)));
+    ov.push((3, 2, wan_at(40.0)));
+    ov
+}
+
+/// Rough virtual runtime estimate of the nominal run — places the churn
+/// injection at ~30% and sizes the control interval, so the experiment
+/// scales with model and epoch count instead of hardcoding seconds.
+fn estimate_total_s(cfg: &TrainConfig, env: &CloudEnv, batch_size: usize) -> f64 {
+    let base = if cfg.base_step_s > 0.0 {
+        cfg.base_step_s
+    } else {
+        calib::default_base_step_s(&cfg.model)
+    };
+    // Straggler-bound: the straggler's shard at its full-inventory
+    // throughput (steps_total * base / power, workers cancel). With
+    // equal shards the straggler is the minimum-power region.
+    let shard = cfg.n_train / env.regions.len().max(1);
+    let steps = (shard.max(1) as f64 / batch_size.max(1) as f64).ceil() * cfg.epochs as f64;
+    let power =
+        env.greedy_plan().iter().map(|a| a.power()).fold(f64::INFINITY, f64::min);
+    steps * base / power.max(1e-9)
+}
+
+struct RunPair {
+    static_run: TrainReport,
+    elastic_run: TrainReport,
+    churn_t: f64,
+}
+
+fn run_pair(coord: &Coordinator, scale: Scale, model: &str) -> RunPair {
+    let (n_train, n_eval) = crate::data::default_sizes(model);
+    let env = four_cloud_env(n_train);
+    let initial = coord.plan(&env).allocations;
+    let batch_size = coord
+        .runtime()
+        .load_model(model)
+        .unwrap_or_else(|e| panic!("loading {model}: {e}"))
+        .meta
+        .batch_size;
+
+    let mut base = TrainConfig::new(model);
+    base.epochs = scale.epochs(model).min(6);
+    base.n_train = n_train;
+    base.n_eval = n_eval;
+    base.sync = SyncConfig::new(Strategy::AsgdGa, 8);
+    base.skip_eval = true;
+    base.link_overrides = hetero_overrides();
+    // Bandwidth-aware topology so the WAN churn has something to re-plan:
+    // the initial max-bandwidth tree stars on Shanghai's fat links; after
+    // the 0<->2 collapse the re-planned tree routes Beijing around it.
+    base.topology = TopologyKind::BandwidthTree;
+
+    let est = estimate_total_s(&base, &env, batch_size).max(1.0);
+    let churn_t = (0.3 * est).max(1.0);
+    // Mid-run churn: Beijing loses 65% of its compute; the fat Shanghai
+    // links collapse to a tenth of their planned bandwidth.
+    let churn = vec![
+        ChurnEvent::PowerFactor { t: churn_t, region: 2, factor: 0.35 },
+        ChurnEvent::LinkBandwidth { t: churn_t, from: 0, to: 2, bps: 30e6 },
+        ChurnEvent::LinkBandwidth { t: churn_t, from: 2, to: 0, bps: 30e6 },
+    ];
+
+    let mut static_cfg = base.clone();
+    static_cfg.churn = churn.clone();
+    let static_run =
+        crate::train::run_geo_training(coord.runtime(), &env, initial.clone(), static_cfg)
+            .unwrap_or_else(|e| panic!("static run: {e}"));
+
+    let mut elastic_cfg = base;
+    elastic_cfg.churn = churn;
+    elastic_cfg.elastic = ElasticConfig {
+        enabled: true,
+        interval_s: (est / 20.0).max(0.25),
+        ..ElasticConfig::default()
+    };
+    let elastic_run =
+        crate::train::run_geo_training(coord.runtime(), &env, initial, elastic_cfg)
+            .unwrap_or_else(|e| panic!("elastic run: {e}"));
+
+    RunPair { static_run, elastic_run, churn_t }
+}
+
+fn throughput(r: &TrainReport) -> f64 {
+    let steps: u64 = r.partitions.iter().map(|p| p.steps).sum();
+    steps as f64 / r.total_time.max(1e-9)
+}
+
+/// `exp --id elastic`: static vs elastic plans under injected mid-run
+/// resource churn + WAN fluctuation.
+pub fn elastic_compare(coord: &Coordinator, scale: Scale, model: &str) -> Json {
+    println!("Elastic re-scheduling under churn: 4-cloud WAN, {model}");
+    let pair = run_pair(coord, scale, model);
+    let (s, e) = (&pair.static_run, &pair.elastic_run);
+
+    let rows = vec![
+        vec![
+            "static".to_string(),
+            format!("{:.0}s", s.total_time),
+            format!("{:.2} steps/s", throughput(s)),
+            format!("{:.0}s", s.total_waiting()),
+            format!("${:.4}", s.compute_cost),
+            format!("{}", s.replan_events.len()),
+        ],
+        vec![
+            "elastic".to_string(),
+            format!("{:.0}s", e.total_time),
+            format!("{:.2} steps/s", throughput(e)),
+            format!("{:.0}s", e.total_waiting()),
+            format!("${:.4}", e.compute_cost),
+            format!("{}", e.replan_events.len()),
+        ],
+    ];
+    print_table(&["plan", "time", "throughput", "waiting", "compute cost", "replans"], &rows);
+    let recovery = throughput(e) / throughput(s).max(1e-12);
+    println!(
+        "  churn at t={:.0}s (Beijing -65% compute, Shanghai links -90% bandwidth)",
+        pair.churn_t
+    );
+    println!("  elastic/static throughput: {recovery:.2}x  (>= 1.0 = recovered)");
+    for ev in &e.replan_events {
+        println!(
+            "  replan @{:.0}s [{}] delta={:.2} straggler={} units={:?} topo={}",
+            ev.t, ev.cause, ev.plan_delta, ev.straggler, ev.units, ev.topology_replanned
+        );
+    }
+
+    let run_json = |r: &TrainReport| {
+        Json::obj(vec![
+            ("total_time", Json::num(r.total_time)),
+            ("throughput", Json::num(throughput(r))),
+            ("waiting", Json::num(r.total_waiting())),
+            ("compute_cost", Json::num(r.compute_cost)),
+            ("replans", Json::num(r.replan_events.len() as f64)),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("churn_t", Json::num(pair.churn_t)),
+        ("static", run_json(s)),
+        ("elastic", run_json(e)),
+        ("throughput_recovery", Json::num(recovery)),
+        (
+            "replan_events",
+            Json::arr(e.replan_events.iter().map(|ev| {
+                Json::obj(vec![
+                    ("t", Json::num(ev.t)),
+                    ("cause", Json::str(&ev.cause)),
+                    ("plan_delta", Json::num(ev.plan_delta)),
+                    ("straggler", Json::num(ev.straggler as f64)),
+                    ("topology_replanned", Json::Bool(ev.topology_replanned)),
+                ])
+            })),
+        ),
+    ]);
+    save_result("elastic", &doc);
+    doc
+}

@@ -18,9 +18,12 @@
 //!
 //! Beyond the paper: `topology` compares the engine's N-cloud sync
 //! topologies (ring / hierarchical / bandwidth-tree) on a 4-cloud WAN
-//! (module `topology_exp`).
+//! (module `topology_exp`), and `elastic` pits the static plan against
+//! the live re-scheduling control loop under injected resource churn and
+//! WAN fluctuation (module `elastic_exp`; `scheduling` aliases `table4`).
 
 pub mod ablations;
+pub mod elastic_exp;
 pub mod motivation;
 pub mod scheduling;
 pub mod sync_exp;

@@ -72,6 +72,28 @@ pub fn apply(
     }
 }
 
+/// Plan-driven resize in one call (what the elastic control loop's
+/// re-plan application uses): reconcile `key` to `target` replicas,
+/// apply the decision at `now`, and return `(spawned, live)` — the
+/// newly-spawned replica ids (still cold-starting) and the full
+/// surviving replica set after the action.
+pub fn resize_pool(
+    rt: &mut FaasRuntime,
+    key: &str,
+    target: u32,
+    now: Time,
+) -> anyhow::Result<(Vec<ReplicaId>, Vec<ReplicaId>)> {
+    let action = reconcile_to_target(rt, key, target);
+    let spawned = apply(rt, key, &action, now)?;
+    let live: Vec<ReplicaId> = rt
+        .replicas_of(key)
+        .into_iter()
+        .filter(|r| r.state != ReplicaState::Terminated)
+        .map(|r| r.id)
+        .collect();
+    Ok((spawned, live))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,6 +143,20 @@ mod tests {
         let ids: Vec<_> = rt.ready_replicas_of(&key).iter().map(|r| r.id).collect();
         rt.terminate(ids[0], 5.0);
         assert_eq!(reconcile_to_target(&rt, &key, 3), ScaleAction::Up(1));
+    }
+
+    #[test]
+    fn resize_pool_round_trips() {
+        let (mut rt, key) = rt_with_workers(3);
+        let (spawned, live) = resize_pool(&mut rt, &key, 6, 10.0).unwrap();
+        assert_eq!(spawned.len(), 3);
+        assert_eq!(live.len(), 6);
+        let (spawned, live) = resize_pool(&mut rt, &key, 2, 20.0).unwrap();
+        assert!(spawned.is_empty());
+        assert_eq!(live.len(), 2);
+        let (spawned, live) = resize_pool(&mut rt, &key, 2, 30.0).unwrap();
+        assert!(spawned.is_empty(), "hold is a no-op");
+        assert_eq!(live.len(), 2);
     }
 
     #[test]

@@ -33,13 +33,20 @@ USAGE:
   cloudless train   [--config f] [--model m] [--strategy s] [--topology t]
                     [--freq n] [--epochs n] [--scheduling elastic|greedy]
                     [--seed n] [--n-train n] [--n-eval n] [--json]
+                    [--elastic] [--replan-interval s] [--replan-hysteresis x]
+                    [--bw-threshold x]
   cloudless plan    [--config f]
-  cloudless exp     --id <table1|fig2|fig3|fig7|table4|fig8|fig9|fig10|fig11|topology|ablations|compression|all> [--full]
+  cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|ablations|compression|all> [--full] [--model m]
   cloudless devices
   cloudless check
 
   strategies: asgd (baseline), asgd-ga, ama (alias: ma), sma
   topologies: ring (default), hierarchical, bandwidth-tree
+  --elastic turns on the live re-scheduling control loop (monitor ->
+  re-plan -> apply): --replan-interval (virtual s between samples),
+  --replan-hysteresis (min relative plan movement to act), --bw-threshold
+  (relative delivered-bandwidth divergence that re-plans the topology).
+  The model name \"synthetic\" runs the built-in artifact-free model.
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -86,6 +93,13 @@ fn job_from_args(args: &Args) -> anyhow::Result<JobSpec> {
     if args.flag("skip-eval") {
         spec.train.skip_eval = true;
     }
+    if args.flag("elastic") {
+        spec.train.elastic.enabled = true;
+    }
+    spec.train.elastic.interval_s = args.f64("replan-interval", spec.train.elastic.interval_s);
+    spec.train.elastic.hysteresis = args.f64("replan-hysteresis", spec.train.elastic.hysteresis);
+    spec.train.elastic.bw_threshold = args.f64("bw-threshold", spec.train.elastic.bw_threshold);
+    spec.train.elastic.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(spec)
 }
 
@@ -129,6 +143,7 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     let id = args.get_or("id", "all").to_string();
     let scale = Scale::from_flag(args.flag("full"));
+    let exp_model = args.get_or("model", "lenet").to_string();
     let coord = Coordinator::new(artifacts_dir())?;
     let run = |id: &str, coord: &Coordinator| -> anyhow::Result<()> {
         match id {
@@ -144,8 +159,11 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             "fig7" => {
                 exp::usability::fig7(coord, scale);
             }
-            "table4" => {
+            "table4" | "scheduling" => {
                 exp::scheduling::table4(coord);
+            }
+            "elastic" => {
+                exp::elastic_exp::elastic_compare(coord, scale, &exp_model);
             }
             "fig8" => {
                 exp::scheduling::fig8_fig9(coord, scale, false);
@@ -171,7 +189,11 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         Ok(())
     };
     if id == "all" {
-        for id in ["table1", "fig3", "fig2", "table4", "fig7", "fig9", "fig10", "fig11", "topology"] {
+        let ids = [
+            "table1", "fig3", "fig2", "table4", "fig7", "fig9", "fig10", "fig11", "topology",
+            "elastic",
+        ];
+        for id in ids {
             println!("\n=== {id} ===");
             run(id, &coord)?;
         }
@@ -191,7 +213,7 @@ fn cmd_check() -> anyhow::Result<()> {
     println!("artifacts dir: {}", dir.display());
     let rt = cloudless::runtime::PjrtRuntime::new(&dir)?;
     println!("PJRT platform: {}", rt.platform());
-    for model in ["lenet", "resnet", "deepfm", "transformer"] {
+    for model in ["lenet", "resnet", "deepfm", "transformer", "synthetic"] {
         match rt.load_model(model) {
             Ok(m) => {
                 // one real step to prove executability

@@ -96,6 +96,11 @@ struct Link {
     transfers: u64,
     drops: u64,
     busy_time: Time,
+    /// Busy time minus the fixed per-transfer setup: the share actually
+    /// spent streaming bytes, so `bytes*8/stream_time` recovers the
+    /// delivered bandwidth even for small payloads (the elastic control
+    /// loop's WAN observation).
+    stream_time: Time,
     queue_delay: Time,
     /// Outage windows (failure injection): transfers cannot start inside.
     outages: Vec<(Time, Time)>,
@@ -108,6 +113,10 @@ pub struct LinkStats {
     pub transfers: u64,
     pub drops: u64,
     pub busy_time: Time,
+    /// Serialization time net of per-transfer setup (see `Link`):
+    /// `Δbytes * 8 / Δstream_time` over an observation window is the
+    /// delivered-bandwidth estimate the elastic control loop samples.
+    pub stream_time: Time,
     pub queue_delay: Time,
 }
 
@@ -137,6 +146,7 @@ impl Fabric {
                 transfers: 0,
                 drops: 0,
                 busy_time: 0.0,
+                stream_time: 0.0,
                 queue_delay: 0.0,
                 outages: Vec::new(),
             },
@@ -153,6 +163,15 @@ impl Fabric {
     pub fn add_outage(&mut self, from: RegionId, to: RegionId, from_t: Time, to_t: Time) {
         if let Some(l) = self.links.get_mut(&(from, to)) {
             l.outages.push((from_t, to_t));
+        }
+    }
+
+    /// Mutate a directed link's nominal bandwidth mid-run (WAN churn
+    /// injection; subsequent transfers and planning reads see the new
+    /// value). No-op on links that were never installed.
+    pub fn set_bandwidth(&mut self, from: RegionId, to: RegionId, bps: f64) {
+        if let Some(l) = self.links.get_mut(&(from, to)) {
+            l.spec.bandwidth_bps = bps.max(1.0);
         }
     }
 
@@ -186,12 +205,14 @@ impl Fabric {
         } else {
             1.0
         };
-        let ser = link.spec.setup_s + (bytes as f64) * 8.0 / (link.spec.bandwidth_bps * fluct);
+        let stream = (bytes as f64) * 8.0 / (link.spec.bandwidth_bps * fluct);
+        let ser = link.spec.setup_s + stream;
         let done = start + ser;
         let arrival = done + link.spec.latency_s;
 
         link.queue_delay += start - now;
         link.busy_time += ser;
+        link.stream_time += stream;
         link.busy_until = done;
         link.bytes += bytes;
         Transfer { start, done, arrival, dropped: false }
@@ -227,6 +248,7 @@ impl Fabric {
             transfers: l.transfers,
             drops: l.drops,
             busy_time: l.busy_time,
+            stream_time: l.stream_time,
             queue_delay: l.queue_delay,
         })
     }
@@ -322,6 +344,37 @@ mod tests {
         f2.add_outage(0, 1, 0.0, 5.0);
         let t2 = f2.transfer(0, 1, 1000, 1.0);
         assert!(t2.start >= 5.0, "transfer must wait out the outage: {t2:?}");
+    }
+
+    #[test]
+    fn stream_time_excludes_setup_overhead() {
+        // A tiny payload on a link with a big setup cost: naive
+        // bytes/busy_time would read kilobits; bytes/stream_time (the
+        // elastic loop's delivered-bandwidth estimate) recovers the true
+        // line rate.
+        let mut f = Fabric::new(1);
+        f.add_link(0, 1, LinkSpec { setup_s: 0.09, ..stable_wan() });
+        f.transfer(0, 1, 1000, 0.0); // 80 us of streaming at 100 Mbps
+        let st = f.stats(0, 1).unwrap();
+        let bw = st.bytes as f64 * 8.0 / st.stream_time;
+        assert!((bw - 100e6).abs() < 1.0, "delivered {bw} != line rate");
+        assert!(st.busy_time > 0.09, "busy time still includes setup");
+        // No traffic -> no streaming time to divide by.
+        let mut f2 = Fabric::new(1);
+        f2.add_link(0, 1, stable_wan());
+        assert_eq!(f2.stats(0, 1).unwrap().stream_time, 0.0);
+    }
+
+    #[test]
+    fn set_bandwidth_changes_subsequent_transfers() {
+        let mut f = Fabric::new(1);
+        f.add_link(0, 1, stable_wan());
+        let fast = f.transfer(0, 1, 12_500_000, 0.0); // 1.0 s at 100 Mbps
+        f.set_bandwidth(0, 1, 10e6);
+        let slow = f.transfer(0, 1, 12_500_000, 10.0); // 10 s at 10 Mbps
+        assert!((fast.done - 1.0).abs() < 1e-9);
+        assert!((slow.done - 20.0).abs() < 1e-9, "{slow:?}");
+        assert_eq!(f.link_bandwidth(0, 1), Some(10e6));
     }
 
     #[test]

@@ -31,6 +31,10 @@ pub struct PsState {
     pub version: u64,
     /// Learning rate used for local and remote-gradient application.
     pub lr: f32,
+    /// Planned (synchronous) weight of model-averaging payloads applied
+    /// since this PS last snapshotted its own model — the communicator's
+    /// input to `engine::topology::sequential_weight` compensation.
+    pub applied_weight_since_snapshot: f32,
     // --- statistics ---
     pub sends: u64,
     pub recvs: u64,
@@ -51,6 +55,7 @@ impl PsState {
             total_updates: 0,
             version: 0,
             lr,
+            applied_weight_since_snapshot: 0.0,
             sends: 0,
             recvs: 0,
             staleness_sum: 0,
@@ -87,11 +92,20 @@ impl PsState {
         (grad, steps)
     }
 
-    /// Snapshot parameters for a model-averaging send.
+    /// Snapshot parameters for a model-averaging send. Resets the
+    /// sequential-compensation window: payloads applied after this
+    /// snapshot mix against the freshly-shipped model.
     pub fn snapshot_params(&mut self) -> Vec<f32> {
         self.updates_since_sync = 0;
         self.sends += 1;
+        self.applied_weight_since_snapshot = 0.0;
         self.params.clone()
+    }
+
+    /// Record that a model-averaging payload of planned weight `w` was
+    /// applied (sequential-compensation accounting).
+    pub fn note_applied_weight(&mut self, w: f32) {
+        self.applied_weight_since_snapshot += w;
     }
 
     /// Apply a remote accumulated gradient (receiver side of ASGD/ASGD-GA).

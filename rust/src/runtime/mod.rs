@@ -148,16 +148,25 @@ impl Executable {
     }
 }
 
-/// A loaded model: metadata + compiled entry points + initial params.
+/// Where a model's numerics run.
+enum Backend {
+    /// Compiled HLO artifacts through PJRT (the real models).
+    Pjrt { train: Executable, eval: Executable, sgd: Executable, avg: Executable, acc: Executable },
+    /// A built-in linear-softmax classifier computed natively — no
+    /// artifacts, no PJRT executions. Exists so CI and artifact-less
+    /// hosts can exercise the full engine (driver, partitions, WAN,
+    /// elastic control loop) end-to-end with *real* (if tiny) numerics:
+    /// genuine gradients, losses, and accuracy curves.
+    Synthetic { feats: usize, classes: usize },
+}
+
+/// A loaded model: metadata + a compute backend + initial params.
 pub struct ModelRuntime {
     pub meta: ModelMeta,
     pub init_params: Vec<f32>,
-    train: Executable,
-    eval: Executable,
-    sgd: Executable,
-    avg: Executable,
-    acc: Executable,
-    /// Cumulative PJRT executions for perf accounting.
+    backend: Backend,
+    /// Cumulative PJRT executions for perf accounting (the synthetic
+    /// backend never bumps this).
     pub exec_counts: std::cell::Cell<u64>,
 }
 
@@ -190,7 +199,14 @@ impl PjrtRuntime {
     }
 
     /// Load a model bundle (meta + init + all 5 entry points).
+    ///
+    /// The reserved name `"synthetic"` skips the artifacts entirely and
+    /// returns the built-in native linear-softmax model (see
+    /// [`ModelRuntime::synthetic`]).
     pub fn load_model(&self, model: &str) -> Result<ModelRuntime> {
+        if model == "synthetic" {
+            return Ok(ModelRuntime::synthetic());
+        }
         let meta_text = std::fs::read_to_string(self.artifacts_dir.join(format!("{model}_meta.json")))
             .with_context(|| format!("reading {model}_meta.json — run `make artifacts` first"))?;
         let meta = ModelMeta::parse(&meta_text)?;
@@ -205,17 +221,47 @@ impl PjrtRuntime {
         Ok(ModelRuntime {
             meta,
             init_params,
-            train: self.compile_artifact(&format!("{model}_train_step.hlo.txt"))?,
-            eval: self.compile_artifact(&format!("{model}_eval.hlo.txt"))?,
-            sgd: self.compile_artifact(&format!("{model}_sgd_apply.hlo.txt"))?,
-            avg: self.compile_artifact(&format!("{model}_avg.hlo.txt"))?,
-            acc: self.compile_artifact(&format!("{model}_acc.hlo.txt"))?,
+            backend: Backend::Pjrt {
+                train: self.compile_artifact(&format!("{model}_train_step.hlo.txt"))?,
+                eval: self.compile_artifact(&format!("{model}_eval.hlo.txt"))?,
+                sgd: self.compile_artifact(&format!("{model}_sgd_apply.hlo.txt"))?,
+                avg: self.compile_artifact(&format!("{model}_avg.hlo.txt"))?,
+                acc: self.compile_artifact(&format!("{model}_acc.hlo.txt"))?,
+            },
             exec_counts: std::cell::Cell::new(0),
         })
     }
 }
 
 impl ModelRuntime {
+    /// The built-in artifact-free model: a linear-softmax classifier over
+    /// the synthetic image-style dataset (8 features, 4 classes; params =
+    /// row-major weights + biases). Small enough that CI exercises the
+    /// whole engine in milliseconds, real enough that loss falls and
+    /// accuracy beats chance.
+    pub fn synthetic() -> ModelRuntime {
+        let feats = 8usize;
+        let classes = 4usize;
+        let meta = ModelMeta {
+            name: "synthetic".to_string(),
+            param_count: feats * classes + classes,
+            batch_size: 16,
+            x_shape: vec![feats],
+            x_dtype: "f32".to_string(),
+            y_dtype: "i32".to_string(),
+            num_classes: classes,
+            vocab_sizes: Vec::new(),
+            vocab: 0,
+            compute: "native".to_string(),
+        };
+        ModelRuntime {
+            init_params: vec![0.0; meta.param_count],
+            meta,
+            backend: Backend::Synthetic { feats, classes },
+            exec_counts: std::cell::Cell::new(0),
+        }
+    }
+
     fn params_literal(&self, params: &[f32]) -> Result<xla::Literal> {
         anyhow::ensure!(
             params.len() == self.meta.param_count,
@@ -232,50 +278,163 @@ impl ModelRuntime {
 
     /// One SGD gradient computation: (params, batch) -> (grads, loss).
     pub fn train_step(&self, params: &[f32], x: &Tensor, y: &Tensor) -> Result<(Vec<f32>, f32)> {
-        self.bump();
-        let outs =
-            self.train.run(&[self.params_literal(params)?, x.to_literal()?, y.to_literal()?])?;
-        anyhow::ensure!(outs.len() == 2, "train_step returned {} outputs", outs.len());
-        let grads = outs[0].to_vec::<f32>()?;
-        let loss = outs[1].get_first_element::<f32>()?;
-        Ok((grads, loss))
+        match &self.backend {
+            Backend::Pjrt { train, .. } => {
+                self.bump();
+                let outs =
+                    train.run(&[self.params_literal(params)?, x.to_literal()?, y.to_literal()?])?;
+                anyhow::ensure!(outs.len() == 2, "train_step returned {} outputs", outs.len());
+                let grads = outs[0].to_vec::<f32>()?;
+                let loss = outs[1].get_first_element::<f32>()?;
+                Ok((grads, loss))
+            }
+            Backend::Synthetic { feats, classes } => {
+                synthetic_softmax_step(params, x, y, *feats, *classes, true)
+                    .map(|(g, loss, _)| (g.expect("grad requested"), loss))
+            }
+        }
     }
 
     /// One eval batch: (params, batch) -> (loss_sum, correct_count).
     pub fn eval_batch(&self, params: &[f32], x: &Tensor, y: &Tensor) -> Result<(f32, f32)> {
-        self.bump();
-        let outs =
-            self.eval.run(&[self.params_literal(params)?, x.to_literal()?, y.to_literal()?])?;
-        anyhow::ensure!(outs.len() == 2, "eval returned {} outputs", outs.len());
-        Ok((outs[0].get_first_element::<f32>()?, outs[1].get_first_element::<f32>()?))
+        match &self.backend {
+            Backend::Pjrt { eval, .. } => {
+                self.bump();
+                let outs =
+                    eval.run(&[self.params_literal(params)?, x.to_literal()?, y.to_literal()?])?;
+                anyhow::ensure!(outs.len() == 2, "eval returned {} outputs", outs.len());
+                Ok((outs[0].get_first_element::<f32>()?, outs[1].get_first_element::<f32>()?))
+            }
+            Backend::Synthetic { feats, classes } => {
+                synthetic_softmax_step(params, x, y, *feats, *classes, false)
+                    .map(|(_, loss_sum, correct)| (loss_sum, correct))
+            }
+        }
     }
 
     /// PS vector ops through the Pallas-lowered artifacts (the PJRT
     /// backend; the native backend lives in [`vecops`]).
     pub fn sgd_apply(&self, p: &[f32], g: &[f32], lr: f32) -> Result<Vec<f32>> {
-        self.bump();
-        let outs = self.sgd.run(&[
-            self.params_literal(p)?,
-            self.params_literal(g)?,
-            xla::Literal::scalar(lr),
-        ])?;
-        Ok(outs[0].to_vec::<f32>()?)
+        match &self.backend {
+            Backend::Pjrt { sgd, .. } => {
+                self.bump();
+                let outs = sgd.run(&[
+                    self.params_literal(p)?,
+                    self.params_literal(g)?,
+                    xla::Literal::scalar(lr),
+                ])?;
+                Ok(outs[0].to_vec::<f32>()?)
+            }
+            Backend::Synthetic { .. } => {
+                let mut out = p.to_vec();
+                vecops::sgd_apply_inplace(&mut out, g, lr);
+                Ok(out)
+            }
+        }
     }
 
     pub fn model_average(&self, a: &[f32], b: &[f32], w: f32) -> Result<Vec<f32>> {
-        self.bump();
-        let outs = self.avg.run(&[
-            self.params_literal(a)?,
-            self.params_literal(b)?,
-            xla::Literal::scalar(w),
-        ])?;
-        Ok(outs[0].to_vec::<f32>()?)
+        match &self.backend {
+            Backend::Pjrt { avg, .. } => {
+                self.bump();
+                let outs = avg.run(&[
+                    self.params_literal(a)?,
+                    self.params_literal(b)?,
+                    xla::Literal::scalar(w),
+                ])?;
+                Ok(outs[0].to_vec::<f32>()?)
+            }
+            Backend::Synthetic { .. } => {
+                let mut out = a.to_vec();
+                vecops::average_inplace(&mut out, b, w);
+                Ok(out)
+            }
+        }
     }
 
     pub fn grad_accumulate(&self, acc: &[f32], g: &[f32]) -> Result<Vec<f32>> {
-        self.bump();
-        let outs = self.acc.run(&[self.params_literal(acc)?, self.params_literal(g)?])?;
-        Ok(outs[0].to_vec::<f32>()?)
+        match &self.backend {
+            Backend::Pjrt { acc: accumulate, .. } => {
+                self.bump();
+                let outs =
+                    accumulate.run(&[self.params_literal(acc)?, self.params_literal(g)?])?;
+                Ok(outs[0].to_vec::<f32>()?)
+            }
+            Backend::Synthetic { .. } => {
+                let mut out = acc.to_vec();
+                vecops::accumulate_inplace(&mut out, g);
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// The synthetic backend's forward/backward: softmax cross-entropy over a
+/// linear model (`params` = row-major `[classes x feats]` weights then
+/// `classes` biases). With `with_grad` returns the batch-mean gradient
+/// and mean loss (train); without it returns the batch loss *sum* and
+/// correct count (eval), matching the PJRT artifact contracts.
+fn synthetic_softmax_step(
+    params: &[f32],
+    x: &Tensor,
+    y: &Tensor,
+    feats: usize,
+    classes: usize,
+    with_grad: bool,
+) -> Result<(Option<Vec<f32>>, f32, f32)> {
+    let xs = match x {
+        Tensor::F32 { data, .. } => data,
+        Tensor::I32 { .. } => anyhow::bail!("synthetic model expects f32 features"),
+    };
+    let ys = match y {
+        Tensor::I32 { data, .. } => data,
+        Tensor::F32 { .. } => anyhow::bail!("synthetic model expects i32 labels"),
+    };
+    anyhow::ensure!(params.len() == feats * classes + classes, "bad synthetic params");
+    let batch = ys.len();
+    anyhow::ensure!(batch > 0 && xs.len() == batch * feats, "bad synthetic batch");
+    let (weights, biases) = params.split_at(feats * classes);
+
+    let mut grad = if with_grad { Some(vec![0.0f32; params.len()]) } else { None };
+    let mut loss_sum = 0.0f32;
+    let mut correct = 0.0f32;
+    for b in 0..batch {
+        let xb = &xs[b * feats..(b + 1) * feats];
+        let label = (ys[b].max(0) as usize).min(classes - 1);
+        let mut logits = vec![0.0f32; classes];
+        for (c, logit) in logits.iter_mut().enumerate() {
+            let row = &weights[c * feats..(c + 1) * feats];
+            *logit = biases[c] + row.iter().zip(xb).map(|(w, v)| w * v).sum::<f32>();
+        }
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = logits.iter().map(|l| (l - max).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let probs: Vec<f32> = exps.iter().map(|e| e / z).collect();
+        loss_sum += -(probs[label].max(1e-12)).ln();
+        let argmax = probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if argmax == label {
+            correct += 1.0;
+        }
+        if let Some(g) = grad.as_mut() {
+            for c in 0..classes {
+                let d = probs[c] - if c == label { 1.0 } else { 0.0 };
+                let gw = &mut g[c * feats..(c + 1) * feats];
+                for (gj, xj) in gw.iter_mut().zip(xb) {
+                    *gj += d * xj / batch as f32;
+                }
+                g[feats * classes + c] += d / batch as f32;
+            }
+        }
+    }
+    if with_grad {
+        Ok((grad, loss_sum / batch as f32, correct))
+    } else {
+        Ok((None, loss_sum, correct))
     }
 }
 
@@ -319,5 +478,58 @@ mod tests {
         assert_eq!(t.num_elements(), 6);
         let t2 = Tensor::i32(vec![1, 2], vec![2]);
         assert_eq!(t2.num_elements(), 2);
+    }
+
+    #[test]
+    fn synthetic_model_learns_without_artifacts() {
+        let m = ModelRuntime::synthetic();
+        assert_eq!(m.meta.param_count, m.init_params.len());
+        let (train, eval) = crate::data::generate(&m.meta, 256, 64, 7);
+        let mut params = m.init_params.clone();
+        let idxs: Vec<usize> = (0..m.meta.batch_size).collect();
+        let (x0, y0) = train.batch(&idxs, &m.meta);
+        let (_, loss0) = m.train_step(&params, &x0, &y0).unwrap();
+        assert!((loss0 - (m.meta.num_classes as f32).ln()).abs() < 1e-4, "uniform start");
+        // A few hundred SGD steps must cut the loss and beat chance.
+        let mut shard = crate::data::Shard::new((0..256).collect(), 3, 0);
+        for _ in 0..400 {
+            let batch = shard.next_batch(m.meta.batch_size);
+            let (x, y) = train.batch(&batch, &m.meta);
+            let (g, _) = m.train_step(&params, &x, &y).unwrap();
+            params = m.sgd_apply(&params, &g, 0.1).unwrap();
+        }
+        let mut correct = 0.0;
+        let mut total = 0.0;
+        let mut i = 0;
+        while i < eval.n {
+            let idxs: Vec<usize> = (i..i + m.meta.batch_size).map(|j| j % eval.n).collect();
+            let (x, y) = eval.batch(&idxs, &m.meta);
+            let (_, c) = m.eval_batch(&params, &x, &y).unwrap();
+            correct += c;
+            total += m.meta.batch_size as f32;
+            i += m.meta.batch_size;
+        }
+        let acc = correct / total;
+        assert!(acc > 0.5, "linear model on prototype data beats chance easily: {acc}");
+        assert_eq!(m.exec_counts.get(), 0, "synthetic backend never touches PJRT");
+    }
+
+    #[test]
+    fn synthetic_vecops_match_native() {
+        let m = ModelRuntime::synthetic();
+        let p: Vec<f32> = (0..m.meta.param_count).map(|i| i as f32 * 0.01).collect();
+        let g: Vec<f32> = (0..m.meta.param_count).map(|i| (i as f32 * 0.3).sin()).collect();
+        let out = m.sgd_apply(&p, &g, 0.5).unwrap();
+        for i in 0..p.len() {
+            assert!((out[i] - (p[i] - 0.5 * g[i])).abs() < 1e-6);
+        }
+        let avg = m.model_average(&p, &g, 0.25).unwrap();
+        for i in 0..p.len() {
+            assert!((avg[i] - (0.25 * p[i] + 0.75 * g[i])).abs() < 1e-6);
+        }
+        let acc = m.grad_accumulate(&p, &g).unwrap();
+        for i in 0..p.len() {
+            assert!((acc[i] - (p[i] + g[i])).abs() < 1e-6);
+        }
     }
 }

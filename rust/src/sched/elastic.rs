@@ -1,0 +1,497 @@
+//! The elastic re-scheduling control loop — what makes the §III.B plan
+//! *live* instead of a one-shot pre-training decision.
+//!
+//! The paper's headline claim is that training workflows deploy
+//! "adaptively according to the heterogeneity of available cloud
+//! resources", but resources and WANs are not static: co-tenancy steals
+//! cores mid-run (HeterPS, arXiv 2111.10635 schedules against *observed*
+//! step times for exactly this reason) and WAN bandwidth drifts enough
+//! that NetStorm (arXiv 2404.11352) re-plans its aggregation topology
+//! from live measurements. This module is the controller half of that
+//! loop:
+//!
+//! ```text
+//!   engine/driver ── MonitorSample ──▶ ElasticController
+//!        ▲   (per-cloud effective step time,   │ EWMA-smooth, re-run
+//!        │    per-link delivered bandwidth)    │ optimal_matching on
+//!        │                                     │ observed powers
+//!        └───────── ReplanDecision ◀───────────┘ (only past hysteresis)
+//!          (new allocations / stale topology)
+//! ```
+//!
+//! The controller is pure state-machine logic (no simulator, no FaaS):
+//! the driver owns *applying* a decision — resizing worker pools through
+//! the `faas` autoscaler and re-planning the sync [`Topology`] — which
+//! keeps this module unit-testable in microseconds and free of layering
+//! cycles (`sched` never imports `engine`).
+//!
+//! Two stability guards make the loop safe on noisy samples:
+//!
+//! - **EWMA smoothing** of per-cloud power scales (worker iteration
+//!   jitter is ±25% by construction; a single sample is never trusted);
+//! - **hysteresis**: a candidate plan is applied only when it moves more
+//!   than `hysteresis` of the currently-allocated units. Deciding twice
+//!   on the same observations is idempotent — the first apply commits the
+//!   plan, the second sees delta 0.
+
+use crate::cloud::{Allocation, CloudEnv};
+use crate::net::RegionId;
+
+use super::{optimal_matching_among, Plan};
+
+/// Knobs for the control loop (CLI: `--elastic`, `--replan-interval`,
+/// `--replan-hysteresis`, `--bw-threshold`; config key `"elastic"`).
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Master switch; when false the driver never schedules monitor ticks
+    /// and the run is exactly the static (seed) behavior.
+    pub enabled: bool,
+    /// Virtual seconds between monitor samples / re-plan opportunities.
+    pub interval_s: f64,
+    /// Minimum relative plan movement (|Δunits| summed over clouds,
+    /// normalized by currently-allocated units) before a new plan is
+    /// applied. Prevents oscillation under sample noise.
+    pub hysteresis: f64,
+    /// Relative delivered-bandwidth divergence (per planned link) that
+    /// marks the sync topology stale and triggers a topology re-plan.
+    pub bw_threshold: f64,
+    /// EWMA coefficient for new observations in (0, 1]; 1.0 = trust the
+    /// latest sample completely.
+    pub smoothing: f64,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            enabled: false,
+            interval_s: 60.0,
+            hysteresis: 0.2,
+            bw_threshold: 0.5,
+            smoothing: 0.5,
+        }
+    }
+}
+
+impl ElasticConfig {
+    /// Range-check the knobs (shared by the config parser and the CLI).
+    /// `smoothing == 0` would make an *enabled* loop silently inert —
+    /// the EWMA never folds in an observation — so it is rejected, not
+    /// clamped.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.interval_s > 0.0) {
+            return Err(format!("elastic interval_s must be > 0, got {}", self.interval_s));
+        }
+        if !(self.hysteresis >= 0.0) {
+            return Err(format!("elastic hysteresis must be >= 0, got {}", self.hysteresis));
+        }
+        if !(self.bw_threshold > 0.0) {
+            return Err(format!("elastic bw_threshold must be > 0, got {}", self.bw_threshold));
+        }
+        if !(self.smoothing > 0.0 && self.smoothing <= 1.0) {
+            return Err(format!("elastic smoothing must be in (0, 1], got {}", self.smoothing));
+        }
+        Ok(())
+    }
+}
+
+/// One monitoring sample the driver emits per control interval.
+#[derive(Debug, Clone)]
+pub struct MonitorSample {
+    /// Virtual time of the sample.
+    pub t: f64,
+    /// Per-cloud observed power scale: (expected worker step time at the
+    /// current allocation) / (measured effective step time), i.e. 1.0
+    /// when the cloud delivers its catalog power, <1 when it is slowed by
+    /// churn. `None` when the window carried no finished steps (a stalled
+    /// or finished cloud gives no fresh signal).
+    pub power_scale: Vec<Option<f64>>,
+    /// Per-cloud "done with its shard" flags: the driver will never
+    /// resize a finished partition, so the controller pins its units and
+    /// excludes it from plan-movement accounting.
+    pub finished: Vec<bool>,
+    /// Per-directed-link delivered bandwidth estimates in bits/second
+    /// (bytes moved / streaming time over the window).
+    pub link_bw: Vec<(RegionId, RegionId, f64)>,
+}
+
+/// What the driver should change, produced by [`ElasticController::observe`].
+#[derive(Debug, Clone)]
+pub struct ReplanDecision {
+    /// New per-cloud allocations (always within region inventories).
+    pub allocations: Vec<Allocation>,
+    /// Relative plan movement that cleared the hysteresis gate (0 when
+    /// only the topology went stale).
+    pub plan_delta: f64,
+    /// Straggler index of the new plan.
+    pub straggler: usize,
+    /// True when measured link bandwidth diverged past `bw_threshold`
+    /// from the values the current sync topology was planned with; the
+    /// driver should re-plan the topology against [`ReplanDecision::bw_view`].
+    pub replan_topology: bool,
+    /// The controller's current bandwidth belief for every tracked
+    /// directed link (observed where measured, planning basis elsewhere).
+    pub bw_view: Vec<(RegionId, RegionId, f64)>,
+}
+
+/// The control-plane re-scheduler (the scheduler function re-invoked
+/// periodically, in paper terms).
+pub struct ElasticController {
+    cfg: ElasticConfig,
+    env: CloudEnv,
+    /// EWMA-smoothed per-cloud power scale (1.0 = nominal).
+    scale: Vec<f64>,
+    /// Units per cloud of the currently-applied plan.
+    current_units: Vec<u32>,
+    /// Bandwidth basis the current sync topology was planned with.
+    bw_basis: Vec<(RegionId, RegionId, f64)>,
+    /// EWMA-smoothed delivered-bandwidth estimates.
+    bw_est: Vec<(RegionId, RegionId, f64)>,
+    /// Number of committed re-plans (diagnostic).
+    pub replans: u64,
+}
+
+impl ElasticController {
+    /// `initial` is the plan the run launched with; `nominal_bw` the
+    /// directed-link bandwidths the initial topology was planned against.
+    pub fn new(
+        cfg: ElasticConfig,
+        env: CloudEnv,
+        initial: &[Allocation],
+        nominal_bw: Vec<(RegionId, RegionId, f64)>,
+    ) -> ElasticController {
+        assert_eq!(initial.len(), env.regions.len());
+        let n = env.regions.len();
+        ElasticController {
+            cfg,
+            env,
+            scale: vec![1.0; n],
+            current_units: initial.iter().map(|a| a.total_units()).collect(),
+            bw_est: nominal_bw.clone(),
+            bw_basis: nominal_bw,
+            replans: 0,
+        }
+    }
+
+    /// The smoothed per-cloud power scales (diagnostic / tests).
+    pub fn scales(&self) -> &[f64] {
+        &self.scale
+    }
+
+    /// Units per cloud of the plan currently in force.
+    pub fn current_units(&self) -> &[u32] {
+        &self.current_units
+    }
+
+    /// Fold a monitoring sample in and decide whether to re-plan.
+    ///
+    /// Returns `Some` only when the candidate plan clears the hysteresis
+    /// gate or the topology went stale; a returned decision is already
+    /// *committed* (the controller's notion of the current plan advances),
+    /// so feeding the same observations again returns `None` — the loop
+    /// is idempotent under unchanged observations.
+    pub fn observe(&mut self, sample: &MonitorSample) -> Option<ReplanDecision> {
+        assert_eq!(sample.power_scale.len(), self.scale.len(), "one power scale per cloud");
+        assert_eq!(sample.finished.len(), self.scale.len(), "one finished flag per cloud");
+        let a = self.cfg.smoothing.clamp(0.0, 1.0);
+        for (est, obs) in self.scale.iter_mut().zip(&sample.power_scale) {
+            if let Some(s) = obs {
+                // Guard against degenerate measurements; a cloud never
+                // speeds past ~4x catalog nor below 1% of it.
+                let s = s.clamp(0.01, 4.0);
+                *est = (1.0 - a) * *est + a * s;
+            }
+        }
+        for &(from, to, bw) in &sample.link_bw {
+            if bw <= 0.0 {
+                continue;
+            }
+            match self.bw_est.iter_mut().find(|(f, t, _)| *f == from && *t == to) {
+                Some(entry) => entry.2 = (1.0 - a) * entry.2 + a * bw,
+                None => self.bw_est.push((from, to, bw)),
+            }
+        }
+
+        // Finished clouds neither drive the straggler reference (they
+        // have no remaining work) nor get resized (the driver skips
+        // them), so they are excluded from the matching and pinned at
+        // their deployed units — a candidate that "moved" them would
+        // advance this controller's baseline past reality and skew every
+        // later hysteresis decision.
+        if sample.finished.iter().all(|&f| f) {
+            return None;
+        }
+        let active: Vec<bool> = sample.finished.iter().map(|f| !f).collect();
+        let mut candidate = self.candidate_plan(&active);
+        for (i, alloc) in candidate.allocations.iter_mut().enumerate() {
+            if sample.finished[i] {
+                *alloc = self.shaped_allocation(i, self.current_units[i]);
+            }
+        }
+        let delta = plan_delta(&self.current_units, &candidate.allocations);
+        let topo_stale = self.topology_stale();
+        if delta <= self.cfg.hysteresis && !topo_stale {
+            return None;
+        }
+
+        // Commit: the decision is what the driver will apply.
+        let load_moved = delta > self.cfg.hysteresis;
+        let decision = ReplanDecision {
+            allocations: if load_moved {
+                candidate.allocations.clone()
+            } else {
+                // Topology-only re-plan keeps the current allocations.
+                self.current_allocations(&candidate)
+            },
+            plan_delta: if load_moved { delta } else { 0.0 },
+            straggler: candidate.straggler,
+            replan_topology: topo_stale,
+            bw_view: self.bw_est.clone(),
+        };
+        if load_moved {
+            self.current_units =
+                decision.allocations.iter().map(|al| al.total_units()).collect();
+        }
+        if topo_stale {
+            self.bw_basis = self.bw_est.clone();
+        }
+        self.replans += 1;
+        Some(decision)
+    }
+
+    /// Re-run Algorithm 1 on the smoothed observed powers, over the
+    /// still-active clouds only.
+    fn candidate_plan(&self, active: &[bool]) -> Plan {
+        optimal_matching_among(&self.env, &self.scale, active)
+    }
+
+    /// An allocation of `units` total units in region `i`, shaped
+    /// greedily over the region's inventory (first device class first —
+    /// the same order `greedy_plan` and the search enumerate).
+    fn shaped_allocation(&self, i: usize, units: u32) -> Allocation {
+        let mut left = units;
+        let mut kept = Vec::new();
+        for &(dev, max) in &self.env.regions[i].inventory {
+            let take = left.min(max);
+            if take > 0 {
+                kept.push((dev, take));
+                left -= take;
+            }
+        }
+        Allocation::new(i, kept)
+    }
+
+    /// Reconstruct the in-force allocations (used when only the topology
+    /// is stale): the candidate search is re-run at the committed unit
+    /// counts' power targets, so we instead keep what is deployed. The
+    /// driver never resizes on these.
+    fn current_allocations(&self, candidate: &Plan) -> Vec<Allocation> {
+        // Unit counts are the committed source of truth; shapes come from
+        // the candidate (same inventories).
+        candidate
+            .allocations
+            .iter()
+            .zip(&self.current_units)
+            .map(|(a, &units)| {
+                if a.total_units() == units {
+                    a.clone()
+                } else {
+                    self.shaped_allocation(a.region, units)
+                }
+            })
+            .collect()
+    }
+
+    /// True when any planned link's delivered bandwidth diverged from the
+    /// basis the current topology was computed against.
+    fn topology_stale(&self) -> bool {
+        for &(from, to, est) in &self.bw_est {
+            let basis = self
+                .bw_basis
+                .iter()
+                .find(|(f, t, _)| *f == from && *t == to)
+                .map(|(_, _, b)| *b);
+            if let Some(basis) = basis {
+                if basis > 0.0 && (est - basis).abs() / basis > self.cfg.bw_threshold {
+                    return true;
+                }
+            } else if est > 0.0 {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Relative plan movement: summed |Δunits| over clouds, normalized by the
+/// currently-allocated total. 0.0 = identical plans.
+pub fn plan_delta(current_units: &[u32], candidate: &[Allocation]) -> f64 {
+    let moved: u64 = candidate
+        .iter()
+        .zip(current_units)
+        .map(|(a, &cur)| (a.total_units() as i64 - cur as i64).unsigned_abs())
+        .sum();
+    let base: u64 = current_units.iter().map(|&u| u as u64).sum();
+    moved as f64 / base.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::devices::Device;
+
+    fn four_cloud_env() -> CloudEnv {
+        CloudEnv::multi_region(vec![
+            ("SH", Device::CascadeLake, 12, 1024),
+            ("CQ", Device::Skylake, 12, 1024),
+            ("BJ", Device::Skylake, 12, 1024),
+            ("GZ", Device::IceLake, 12, 1024),
+        ])
+    }
+
+    fn controller(cfg: ElasticConfig) -> ElasticController {
+        let env = four_cloud_env();
+        let initial = crate::sched::optimal_matching(&env).allocations;
+        let bw: Vec<(usize, usize, f64)> = (0..4)
+            .flat_map(|a| (0..4).filter(move |b| *b != a).map(move |b| (a, b, 100e6)))
+            .collect();
+        ElasticController::new(cfg, env, &initial, bw)
+    }
+
+    fn sample(scales: Vec<Option<f64>>) -> MonitorSample {
+        let finished = vec![false; scales.len()];
+        MonitorSample { t: 0.0, power_scale: scales, finished, link_bw: Vec::new() }
+    }
+
+    #[test]
+    fn nominal_observations_never_replan() {
+        let mut c = controller(ElasticConfig { enabled: true, ..Default::default() });
+        for _ in 0..50 {
+            assert!(c.observe(&sample(vec![Some(1.0); 4])).is_none());
+        }
+        assert_eq!(c.replans, 0);
+    }
+
+    #[test]
+    fn straggler_slowdown_scales_the_slowed_cloud_up() {
+        let mut c = controller(ElasticConfig {
+            enabled: true,
+            smoothing: 1.0,
+            ..Default::default()
+        });
+        let before = c.current_units()[2];
+        // BJ (a cut-down cloud) loses 65% of its compute.
+        let dec = c
+            .observe(&sample(vec![Some(1.0), Some(1.0), Some(0.35), Some(1.0)]))
+            .expect("a 65% power loss must clear hysteresis");
+        assert!(dec.plan_delta > 0.0);
+        assert_eq!(dec.straggler, 2, "the slowed cloud becomes the reference");
+        assert!(
+            dec.allocations[2].total_units() > before,
+            "slowed cloud scales up: {} -> {}",
+            before,
+            dec.allocations[2].total_units()
+        );
+        for (a, r) in dec.allocations.iter().zip(&c.env.regions) {
+            assert!(a.fits(r), "replan must fit inventory: {a:?}");
+        }
+    }
+
+    #[test]
+    fn decide_is_idempotent_after_commit() {
+        let mut c = controller(ElasticConfig {
+            enabled: true,
+            smoothing: 1.0,
+            ..Default::default()
+        });
+        let s = sample(vec![Some(1.0), Some(1.0), Some(0.35), Some(1.0)]);
+        assert!(c.observe(&s).is_some());
+        assert!(c.observe(&s).is_none(), "same observations, same plan: no second replan");
+        assert_eq!(c.replans, 1);
+    }
+
+    #[test]
+    fn recovery_replans_back() {
+        let mut c = controller(ElasticConfig {
+            enabled: true,
+            smoothing: 1.0,
+            ..Default::default()
+        });
+        let initial = c.current_units().to_vec();
+        c.observe(&sample(vec![Some(1.0), Some(1.0), Some(0.35), Some(1.0)])).unwrap();
+        let dec = c
+            .observe(&sample(vec![Some(1.0); 4]))
+            .expect("recovery to nominal must replan back");
+        let back: Vec<u32> = dec.allocations.iter().map(|a| a.total_units()).collect();
+        assert_eq!(back, initial, "nominal observations restore the nominal plan");
+    }
+
+    #[test]
+    fn bandwidth_divergence_marks_topology_stale_without_resizing() {
+        let mut c = controller(ElasticConfig {
+            enabled: true,
+            smoothing: 1.0,
+            bw_threshold: 0.5,
+            ..Default::default()
+        });
+        let units = c.current_units().to_vec();
+        let s = MonitorSample {
+            t: 0.0,
+            power_scale: vec![Some(1.0); 4],
+            link_bw: vec![(0, 1, 10e6), (1, 0, 10e6)], // 100 -> 10 Mbps
+        };
+        let dec = c.observe(&s).expect("10x bandwidth collapse is past threshold");
+        assert!(dec.replan_topology);
+        assert_eq!(dec.plan_delta, 0.0);
+        let kept: Vec<u32> = dec.allocations.iter().map(|a| a.total_units()).collect();
+        assert_eq!(kept, units, "topology-only replan keeps allocations");
+        // Basis advanced: the same observation is no longer stale.
+        assert!(c.observe(&s).is_none());
+    }
+
+    #[test]
+    fn small_noise_stays_below_hysteresis() {
+        let mut c = controller(ElasticConfig {
+            enabled: true,
+            smoothing: 1.0,
+            hysteresis: 0.2,
+            ..Default::default()
+        });
+        // ±8% wobble: candidate plans move at most a core or two, never
+        // a fifth of the fleet.
+        for k in 0..40 {
+            let w = if k % 2 == 0 { 0.92 } else { 1.08 };
+            assert!(
+                c.observe(&sample(vec![Some(w), Some(1.0 / w), Some(w), Some(1.0)])).is_none(),
+                "noise within hysteresis must never replan (k={k})"
+            );
+        }
+    }
+
+    #[test]
+    fn finished_clouds_are_pinned_at_their_deployed_units() {
+        let mut c = controller(ElasticConfig {
+            enabled: true,
+            smoothing: 1.0,
+            ..Default::default()
+        });
+        let before = c.current_units().to_vec();
+        // BJ slows hard, but BJ already finished its shard: the candidate
+        // would scale it up, yet the driver can't — the controller must
+        // not move it (and here nothing else moves enough on its own).
+        let mut s = sample(vec![Some(1.0), Some(1.0), Some(0.35), Some(1.0)]);
+        s.finished[2] = true;
+        assert!(
+            c.observe(&s).is_none(),
+            "a finished cloud's slowdown must not drive a replan it can't receive"
+        );
+        assert_eq!(c.current_units(), &before[..], "baseline unchanged");
+    }
+
+    #[test]
+    fn plan_delta_metric() {
+        let a = |u: u32| Allocation::new(0, vec![(Device::Skylake, u)]);
+        assert_eq!(plan_delta(&[8, 8], &[a(8), a(8)]), 0.0);
+        assert!((plan_delta(&[8, 8], &[a(12), a(8)]) - 0.25).abs() < 1e-12);
+        assert!((plan_delta(&[0], &[a(3)]) - 3.0).abs() < 1e-12, "empty base guards /0");
+    }
+}

@@ -19,8 +19,18 @@
 //! the cores it would only have spent waiting with. This module
 //! reproduces the paper's TABLE IV plans exactly (tested below).
 
+pub mod elastic;
+
 use crate::cloud::devices::Device;
 use crate::cloud::{Allocation, CloudEnv};
+
+/// The one scheduling tolerance: allocations are integral and device
+/// powers are exact rationals, so the only noise is f64 rounding in the
+/// LP arithmetic (~ulp scale). Every acceptance test in this module uses
+/// this single constant in a single place (`search_optimal_plan`);
+/// stacking tolerances across call layers is how allocations strictly
+/// below the straggler's load power used to slip through.
+pub const POWER_EPS: f64 = 1e-9;
 
 /// The load power of an allocation against a data size (formula (1)).
 pub fn load_power(alloc: &Allocation, data_samples: usize) -> f64 {
@@ -43,46 +53,78 @@ pub struct Plan {
 /// Run Algorithm 1 over the environment. `Res[N]` is each region's full
 /// inventory; `S_data[N]` the per-region sample counts.
 pub fn optimal_matching(env: &CloudEnv) -> Plan {
+    optimal_matching_observed(env, &vec![1.0; env.regions.len()])
+}
+
+/// Algorithm 1 against *observed* per-cloud compute powers: `scale[i]`
+/// multiplies cloud `i`'s nominal (catalog) power — 1.0 means the cloud
+/// delivers exactly what the catalog promises, 0.5 that co-tenancy or
+/// churn halved it. The elastic control loop ([`elastic`]) feeds measured
+/// scales back through this to re-plan mid-run; the static entry point
+/// [`optimal_matching`] is the all-ones special case.
+pub fn optimal_matching_observed(env: &CloudEnv, scale: &[f64]) -> Plan {
+    optimal_matching_among(env, scale, &vec![true; env.regions.len()])
+}
+
+/// Algorithm 1 restricted to the `active` clouds: the straggler
+/// reference is the minimum observed LP among active clouds only, and
+/// inactive clouds keep their full allocation in the returned plan —
+/// callers pin them separately (the elastic controller pins finished
+/// partitions at their deployed units, since a cloud with no remaining
+/// work must neither drive nor follow the load-power floor).
+pub fn optimal_matching_among(env: &CloudEnv, scale: &[f64], active: &[bool]) -> Plan {
     assert!(!env.regions.is_empty());
+    assert_eq!(scale.len(), env.regions.len(), "one power scale per region");
+    assert_eq!(active.len(), env.regions.len(), "one active flag per region");
+    assert!(scale.iter().all(|s| *s > 0.0), "power scales must be positive");
+    assert!(active.iter().any(|&a| a), "at least one cloud must be active");
     let full: Vec<Allocation> = env.greedy_plan();
-    let full_lp: Vec<f64> =
-        full.iter().zip(&env.regions).map(|(a, r)| load_power(a, r.data_samples)).collect();
+    let full_lp: Vec<f64> = full
+        .iter()
+        .zip(&env.regions)
+        .zip(scale)
+        .map(|((a, r), s)| s * load_power(a, r.data_samples))
+        .collect();
     let (straggler, &min_lp) = full_lp
         .iter()
         .enumerate()
+        .filter(|(i, _)| active[*i])
         .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .expect("non-empty");
+        .expect("at least one active cloud");
 
     let allocations: Vec<Allocation> = env
         .regions
         .iter()
         .enumerate()
         .map(|(i, region)| {
-            if i == straggler {
+            if i == straggler || !active[i] {
                 full[i].clone()
             } else {
-                search_optimal_plan(&full[i], region.data_samples, min_lp)
+                // The cloud must deliver the straggler's observed LP, so
+                // its *nominal* power target is inflated by 1/scale.
+                let target_power = min_lp * region.data_samples as f64 / scale[i];
+                search_optimal_plan(&full[i], target_power)
             }
         })
         .collect();
     let planned_lp: Vec<f64> = allocations
         .iter()
         .zip(&env.regions)
-        .map(|(a, r)| load_power(a, r.data_samples))
+        .zip(scale)
+        .map(|((a, r), s)| s * load_power(a, r.data_samples))
         .collect();
     Plan { allocations, full_lp, planned_lp, straggler }
 }
 
 /// Brute-force the smallest allocation (by total units, then by power)
-/// with LP >= `target_lp` — the paper's `search_optimal_plan`.
+/// with nominal power >= `target_power` — the paper's
+/// `search_optimal_plan`.
 ///
 /// The search enumerates unit counts per device type (inventories are
 /// tens of units, so exhaustive enumeration is exact and instant).
-fn search_optimal_plan(full: &Allocation, data_samples: usize, target_lp: f64) -> Allocation {
-    // Tolerance: allocations are integral, target comes from f64 math.
-    const EPS: f64 = 1e-9;
-    let target_power = target_lp * data_samples as f64;
-
+/// Acceptance uses [`POWER_EPS`] exactly once: callers must pass the raw
+/// target, not a pre-slackened one.
+pub(crate) fn search_optimal_plan(full: &Allocation, target_power: f64) -> Allocation {
     let devices: Vec<(Device, u32)> = full.units.clone();
     let mut best: Option<(u32, f64, Vec<(Device, u32)>)> = None;
 
@@ -96,7 +138,7 @@ fn search_optimal_plan(full: &Allocation, data_samples: usize, target_lp: f64) -
     ) {
         if idx == devices.len() {
             let power: f64 = current.iter().map(|(d, n)| d.power_of(*n)).sum();
-            if power + 1e-12 >= target_power - 1e-9 {
+            if power >= target_power - POWER_EPS {
                 let units: u32 = current.iter().map(|(_, n)| *n).sum();
                 let better = match best {
                     None => true,
@@ -115,7 +157,7 @@ fn search_optimal_plan(full: &Allocation, data_samples: usize, target_lp: f64) -
             current.pop();
         }
     }
-    rec(&devices, 0, &mut Vec::new(), target_power - EPS, &mut best);
+    rec(&devices, 0, &mut Vec::new(), target_power, &mut best);
 
     let chosen = best.map(|(_, _, units)| units).unwrap_or_else(|| devices.clone());
     // Drop zero-unit entries for readability.
@@ -125,13 +167,22 @@ fn search_optimal_plan(full: &Allocation, data_samples: usize, target_lp: f64) -
 
 /// Relative imbalance of a plan: max(LP)/min(LP) - 1. The elastic plan
 /// drives this toward 0; greedy plans can be badly imbalanced.
-pub fn imbalance(lps: &[f64]) -> f64 {
-    let max = lps.iter().cloned().fold(f64::MIN, f64::max);
-    let min = lps.iter().cloned().fold(f64::MAX, f64::min);
-    if min <= 0.0 {
-        return f64::INFINITY;
+///
+/// Total over its whole domain: `None` means *no plan at all* (an empty
+/// LP slice carries no imbalance signal — the old f64::MIN/f64::MAX fold
+/// produced garbage here), while `Some(f64::INFINITY)` means the plan
+/// contains a *stalled cloud* (a non-positive load power that would never
+/// finish its shard).
+pub fn imbalance(lps: &[f64]) -> Option<f64> {
+    if lps.is_empty() {
+        return None;
     }
-    max / min - 1.0
+    let max = lps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let min = lps.iter().cloned().fold(f64::INFINITY, f64::min);
+    if min <= 0.0 {
+        return Some(f64::INFINITY);
+    }
+    Some(max / min - 1.0)
 }
 
 #[cfg(test)]
@@ -230,8 +281,59 @@ mod tests {
     fn plan_reduces_imbalance() {
         let env = CloudEnv::tencent_two_region(Device::Skylake, 2000, 1000);
         let plan = optimal_matching(&env);
-        assert!(imbalance(&plan.planned_lp) <= imbalance(&plan.full_lp) + 1e-9);
-        assert!(imbalance(&plan.planned_lp) < 0.35, "{:?}", plan.planned_lp);
+        let planned = imbalance(&plan.planned_lp).unwrap();
+        let full = imbalance(&plan.full_lp).unwrap();
+        assert!(planned <= full + 1e-9);
+        assert!(planned < 0.35, "{:?}", plan.planned_lp);
+    }
+
+    #[test]
+    fn imbalance_is_total() {
+        assert_eq!(imbalance(&[]), None, "no plan is not the same as a balanced plan");
+        assert_eq!(imbalance(&[0.0, 1.0]), Some(f64::INFINITY), "stalled cloud");
+        assert_eq!(imbalance(&[-1.0]), Some(f64::INFINITY));
+        assert_eq!(imbalance(&[2.0, 2.0]), Some(0.0));
+        assert!((imbalance(&[3.0, 2.0]).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    /// Regression: the acceptance tolerance is applied once. The old code
+    /// seeded the recursion with `target - 1e-9` and then compared
+    /// `power + 1e-12 >= target - 1e-9`, accepting allocations up to
+    /// ~2e-9 *below* the straggler's load power.
+    #[test]
+    fn search_tolerance_is_single_at_the_boundary() {
+        let full = Allocation::new(0, vec![(Device::CascadeLake, 12)]);
+        // 6 Cascade cores deliver power 2.0 (up to f64 rounding).
+        let six = Device::CascadeLake.power_of(6);
+        // Within one POWER_EPS of reachable: 6 cores are accepted.
+        assert_eq!(search_optimal_plan(&full, six + 0.5 * POWER_EPS).total_units(), 6);
+        // 1.5 epsilons above reachable: the old stacked tolerances let 6
+        // cores through; the single tolerance must push to 7.
+        assert_eq!(search_optimal_plan(&full, six + 1.5 * POWER_EPS).total_units(), 7);
+        // Far above: unambiguous.
+        assert_eq!(search_optimal_plan(&full, six + 1e-6).total_units(), 7);
+    }
+
+    #[test]
+    fn observed_scales_shift_the_plan() {
+        // Nominal: case-3 shape, CQ sheds to 4 cores (TABLE IV).
+        let env = CloudEnv::tencent_two_region(Device::Skylake, 2000, 1000);
+        let nominal = optimal_matching(&env);
+        assert_eq!(nominal.allocations[1].total_units(), 4);
+        // CQ observed at 40% of catalog power: it must rent more cores to
+        // still match the straggler's observed load power.
+        let observed = optimal_matching_observed(&env, &[1.0, 0.4]);
+        assert_eq!(observed.straggler, 0, "SH stays the reference");
+        assert!(
+            observed.allocations[1].total_units() > 4,
+            "slowed cloud must scale up: {:?}",
+            observed.allocations[1]
+        );
+        // And the planned observed LP still clears the straggler's.
+        let floor = observed.full_lp[0];
+        for lp in &observed.planned_lp {
+            assert!(*lp + POWER_EPS / 1000.0 >= floor);
+        }
     }
 
     #[test]
@@ -241,6 +343,21 @@ mod tests {
         for (a, r) in plan.allocations.iter().zip(&env.regions) {
             assert!(a.fits(r));
         }
+    }
+
+    #[test]
+    fn inactive_clouds_neither_drive_nor_follow_the_floor() {
+        let env = CloudEnv::multi_region(vec![
+            ("SH", Device::CascadeLake, 12, 1000),
+            ("CQ", Device::Skylake, 12, 1000),
+            ("BJ", Device::Skylake, 12, 1000),
+        ]);
+        // BJ is slowest by far but inactive (finished): the reference
+        // must come from the active pair (SH, LP 4/1000), not BJ.
+        let plan = optimal_matching_among(&env, &[1.0, 1.0, 0.1], &[true, true, false]);
+        assert_eq!(plan.straggler, 0, "straggler picked among active clouds only");
+        assert_eq!(plan.allocations[1].total_units(), 8, "CQ matches SH, not slowed BJ");
+        assert_eq!(plan.allocations[2].total_units(), 12, "inactive cloud left at full");
     }
 
     #[test]

@@ -15,8 +15,10 @@
 //! variant of trivial ML training". ASGD-GA keeps merging local gradients
 //! between syncs so no information is lost, only freshness. MA variants
 //! ship parameters and average on receipt; the averaging weight comes
-//! from the sync topology's per-edge plan (`engine::topology`, in-degree
-//! derived — 0.5 between two clouds, matching the paper's setting).
+//! from the sync topology's per-edge plan (`engine::topology`, Metropolis
+//! weights over the undirected support — 0.5 between two clouds,
+//! matching the paper's setting — applied through sequential-arrival
+//! compensation at the receiver).
 
 pub mod compression;
 
@@ -168,8 +170,10 @@ pub fn make_payload(cfg: &SyncConfig, ps: &mut PsState) -> Payload {
 ///
 /// `remote_weight` is the weight given to the incoming model for
 /// averaging payloads (the receiver keeps `1 - remote_weight` of its
-/// local model); it comes from the topology plan's edge (in-degree
-/// derived — 0.5 between two clouds). Gradient payloads ignore it.
+/// local model); the engine passes the *effective* sequential weight
+/// (`engine::topology::sequential_weight` over the plan edge's
+/// Metropolis weight — 0.5 between two clouds). Gradient payloads
+/// ignore it.
 pub fn apply_payload(cfg: &SyncConfig, ps: &mut PsState, payload: &Payload, remote_weight: f32) {
     match payload {
         Payload::Gradient { grad, .. } => ps.apply_remote_gradient(grad),

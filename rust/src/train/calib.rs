@@ -37,6 +37,9 @@ pub fn default_base_step_s(model: &str) -> f64 {
         "deepfm" => 0.15,
         "transformer" => 1.2,
         "transformer100m" => 30.0,
+        // The artifact-free CI model: LeNet-like timing so smoke runs
+        // exercise the same WAN/compute regime.
+        "synthetic" => 0.25,
         _ => 0.5,
     }
 }

@@ -20,6 +20,27 @@ pub struct EvalPoint {
     pub accuracy: f64,
 }
 
+/// One committed re-plan of the elastic control loop (`sched::elastic`):
+/// the monitor observed resource churn or WAN divergence, the controller
+/// produced a new plan past hysteresis, and the driver applied it.
+#[derive(Debug, Clone, Default)]
+pub struct ReplanEvent {
+    /// Virtual time the re-plan was applied.
+    pub t: Time,
+    /// What tripped it: "load", "bandwidth", or "load+bandwidth".
+    pub cause: String,
+    /// Relative plan movement that cleared hysteresis (0 for
+    /// topology-only re-plans).
+    pub plan_delta: f64,
+    /// Straggler index of the new plan.
+    pub straggler: usize,
+    /// Total allocated units per cloud after the re-plan.
+    pub units: Vec<u32>,
+    /// True when the sync topology was re-planned from observed
+    /// bandwidth.
+    pub topology_replanned: bool,
+}
+
 /// Per-partition outcome.
 #[derive(Debug, Clone, Default)]
 pub struct PartitionReport {
@@ -76,6 +97,9 @@ pub struct TrainReport {
     pub wall_seconds: f64,
     /// PJRT executions (diagnostic / perf accounting).
     pub pjrt_executions: u64,
+    /// Mid-run re-plans the elastic control loop committed (empty for
+    /// static runs).
+    pub replan_events: Vec<ReplanEvent>,
 }
 
 impl TrainReport {
@@ -155,13 +179,34 @@ impl TrainReport {
                     ])
                 })),
             ),
+            (
+                "replan_events",
+                Json::arr(self.replan_events.iter().map(|e| {
+                    Json::obj(vec![
+                        ("t", Json::num(e.t)),
+                        ("cause", Json::str(&e.cause)),
+                        ("plan_delta", Json::num(e.plan_delta)),
+                        ("straggler", Json::num(e.straggler as f64)),
+                        (
+                            "units",
+                            Json::arr(e.units.iter().map(|u| Json::num(*u as f64))),
+                        ),
+                        ("topology_replanned", Json::Bool(e.topology_replanned)),
+                    ])
+                })),
+            ),
         ])
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
+        let replans = if self.replan_events.is_empty() {
+            String::new()
+        } else {
+            format!(" replans={}", self.replan_events.len())
+        };
         format!(
-            "{} [{} f={}] time={:.1}s acc={:.4} loss={:.4} cost=${:.4} wan={:.1}MB wait={:.1}s comm={:.1}s",
+            "{} [{} f={}] time={:.1}s acc={:.4} loss={:.4} cost=${:.4} wan={:.1}MB wait={:.1}s comm={:.1}s{}",
             self.model,
             self.strategy,
             self.sync_freq,
@@ -172,6 +217,7 @@ impl TrainReport {
             self.wan_bytes as f64 / 1e6,
             self.total_waiting(),
             self.total_comm_wait(),
+            replans,
         )
     }
 }

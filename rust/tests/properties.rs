@@ -10,7 +10,8 @@ use cloudless::net::{Fabric, LinkSpec};
 use cloudless::prop::{forall, vec_f32};
 use cloudless::ps::PsState;
 use cloudless::runtime::vecops;
-use cloudless::sched::{imbalance, load_power, optimal_matching};
+use cloudless::sched::elastic::{ElasticConfig, ElasticController, MonitorSample};
+use cloudless::sched::{imbalance, load_power, optimal_matching, optimal_matching_observed};
 use cloudless::sync::{
     apply_payload, make_payload, plan_topology, Payload, Strategy, SyncConfig,
 };
@@ -88,10 +89,10 @@ fn prop_plan_never_increases_imbalance_or_units() {
         |env| {
             let plan = optimal_matching(env);
             let greedy = env.greedy_plan();
-            assert!(
-                imbalance(&plan.planned_lp) <= imbalance(&plan.full_lp) + 1e-9,
-                "plan worsened imbalance"
-            );
+            let planned = imbalance(&plan.planned_lp).expect("plan has regions");
+            let full = imbalance(&plan.full_lp).expect("plan has regions");
+            assert!(planned.is_finite(), "no planned cloud may stall");
+            assert!(planned <= full + 1e-9, "plan worsened imbalance");
             let planned_units: u32 = plan.allocations.iter().map(|a| a.total_units()).sum();
             let greedy_units: u32 = greedy.iter().map(|a| a.total_units()).sum();
             assert!(planned_units <= greedy_units);
@@ -109,6 +110,144 @@ fn prop_load_power_monotone_in_units_and_data() {
             let b = Allocation::new(0, vec![(dev, units + 1)]);
             assert!(load_power(&b, data) > load_power(&a, data));
             assert!(load_power(&a, data + 1) < load_power(&a, data));
+        },
+    );
+}
+
+// ----------------------------------------------------- elastic controller
+
+fn controller_for(env: &CloudEnv, cfg: ElasticConfig) -> ElasticController {
+    let initial = optimal_matching(env).allocations;
+    let n = env.regions.len();
+    let bw: Vec<(usize, usize, f64)> = (0..n)
+        .flat_map(|a| (0..n).filter(move |b| *b != a).map(move |b| (a, b, 100e6)))
+        .collect();
+    ElasticController::new(cfg, env.clone(), &initial, bw)
+}
+
+fn scales_sample(scales: Vec<Option<f64>>) -> MonitorSample {
+    let finished = vec![false; scales.len()];
+    MonitorSample { t: 0.0, power_scale: scales, finished, link_bw: Vec::new() }
+}
+
+#[test]
+fn prop_replanning_is_idempotent_under_unchanged_observations() {
+    forall(
+        60,
+        |r| {
+            let env = random_env(r);
+            let scales: Vec<Option<f64>> =
+                (0..env.regions.len()).map(|_| Some(0.1 + 0.9 * r.f64())).collect();
+            (env, scales)
+        },
+        |(env, scales)| {
+            let mut c = controller_for(
+                env,
+                ElasticConfig { enabled: true, smoothing: 1.0, ..Default::default() },
+            );
+            // Feed the identical observation repeatedly: at most ONE
+            // re-plan may commit, after which the controller holds.
+            let mut commits = 0;
+            for _ in 0..8 {
+                if c.observe(&scales_sample(scales.clone())).is_some() {
+                    commits += 1;
+                }
+            }
+            assert!(commits <= 1, "unchanged observations replanned {commits} times");
+        },
+    );
+}
+
+#[test]
+fn prop_hysteresis_prevents_plan_oscillation_under_noise() {
+    forall(
+        60,
+        |r| (random_env(r), r.next_u64()),
+        |&(ref env, seed)| {
+            let mut c = controller_for(
+                env,
+                ElasticConfig { enabled: true, hysteresis: 0.35, ..Default::default() },
+            );
+            // ±10% multiplicative sample noise around nominal: with EWMA
+            // smoothing and hysteresis the plan must never move.
+            let mut rng = Pcg32::new(seed, 17);
+            for _ in 0..30 {
+                let scales: Vec<Option<f64>> = (0..env.regions.len())
+                    .map(|_| Some(0.9 + 0.2 * rng.f64()))
+                    .collect();
+                assert!(
+                    c.observe(&scales_sample(scales)).is_none(),
+                    "noise within hysteresis oscillated the plan"
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_replans_never_exceed_region_inventories() {
+    forall(
+        80,
+        |r| {
+            let env = random_env(r);
+            let rounds: Vec<Vec<Option<f64>>> = (0..5)
+                .map(|_| {
+                    (0..env.regions.len())
+                        .map(|_| {
+                            if r.below(4) == 0 {
+                                None // stalled / finished cloud: no signal
+                            } else {
+                                Some(0.05 + 1.5 * r.f64())
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            (env, rounds)
+        },
+        |(env, rounds)| {
+            let mut c = controller_for(
+                env,
+                ElasticConfig { enabled: true, hysteresis: 0.05, ..Default::default() },
+            );
+            for scales in rounds {
+                if let Some(dec) = c.observe(&scales_sample(scales.clone())) {
+                    for (alloc, region) in dec.allocations.iter().zip(&env.regions) {
+                        assert!(
+                            alloc.fits(region),
+                            "replan over-allocated {}: {alloc:?}",
+                            region.name
+                        );
+                        assert!(alloc.power() > 0.0, "replan emptied {}", region.name);
+                    }
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_observed_matching_fits_and_clears_the_observed_floor() {
+    forall(
+        100,
+        |r| {
+            let env = random_env(r);
+            let scales: Vec<f64> =
+                (0..env.regions.len()).map(|_| 0.1 + 1.4 * r.f64()).collect();
+            (env, scales)
+        },
+        |(env, scales)| {
+            let plan = optimal_matching_observed(env, scales);
+            let floor = plan.full_lp[plan.straggler];
+            for ((alloc, region), lp) in
+                plan.allocations.iter().zip(&env.regions).zip(&plan.planned_lp)
+            {
+                assert!(alloc.fits(region), "observed plan over-allocates");
+                assert!(
+                    *lp + 1e-9 >= floor,
+                    "observed LP {lp} fell below the straggler floor {floor}"
+                );
+            }
         },
     );
 }
@@ -244,20 +383,28 @@ const KINDS: [TopologyKind; 3] =
     [TopologyKind::Ring, TopologyKind::Hierarchical, TopologyKind::BandwidthTree];
 
 fn check_weights_sum(plan: &SyncPlan) {
-    // Per-edge weights at every receiver: each incoming edge carries
-    // 1/(d+1), so they sum to d/(d+1) and the receiver's residual local
-    // share stays positive.
-    for r in 0..plan.n() {
-        let d = plan.in_degree(r);
-        let incoming: f32 = (0..plan.n())
-            .flat_map(|s| plan.outgoing(s).iter())
-            .filter(|e| e.to == r)
-            .map(|e| e.weight)
-            .sum();
-        let expect = d as f32 / (d as f32 + 1.0);
+    // Metropolis weights: every edge carries 1/(1 + max degree of its
+    // endpoints) over the undirected support, symmetric pairs agree, and
+    // total incoming weight stays < 1 so the receiver's residual local
+    // share is positive.
+    for e in plan.edges() {
+        let d = plan.support_degree(e.from).max(plan.support_degree(e.to)) as f32;
         assert!(
-            (incoming - expect).abs() < 1e-5,
-            "receiver {r}: incoming weights {incoming} != {expect} (d={d})"
+            (e.weight - 1.0 / (d + 1.0)).abs() < 1e-6,
+            "edge ({},{}): weight {} != 1/(1+{d})",
+            e.from,
+            e.to,
+            e.weight
+        );
+        if let Some(rev) = plan.outgoing(e.to).iter().find(|r| r.to == e.from) {
+            assert_eq!(rev.weight, e.weight, "asymmetric pair ({},{})", e.from, e.to);
+        }
+    }
+    for r in 0..plan.n() {
+        let incoming = plan.incoming_weight(r);
+        assert!(
+            (0.0..1.0).contains(&incoming),
+            "receiver {r}: incoming weight {incoming} leaves no local share"
         );
     }
 }
