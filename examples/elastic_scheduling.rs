@@ -8,6 +8,10 @@
 //! ```text
 //! cargo run --release --example elastic_scheduling [epochs]
 //! ```
+//!
+//! The scheduling story continues past this one-shot plan: the live
+//! re-scheduling loop (`exp --id elastic`) and the multi-job fleet
+//! (`exp --id multijob`) are mapped in docs/EXPERIMENTS.md.
 
 use cloudless::cloud::devices::Device;
 use cloudless::cloud::CloudEnv;

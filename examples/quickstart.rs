@@ -4,6 +4,9 @@
 //! ```text
 //! make artifacts && cargo run --release --example quickstart
 //! ```
+//!
+//! Layer map: docs/ARCHITECTURE.md. Every config key / CLI flag used
+//! below: docs/CONFIG.md.
 
 use cloudless::cloud::devices::Device;
 use cloudless::cloud::CloudEnv;

@@ -9,6 +9,9 @@
 //! ```text
 //! cargo run --release --example sync_strategies [epochs]
 //! ```
+//!
+//! Strategy semantics and the `compression` codecs that ride on them
+//! are documented (with compiled examples) in docs/CONFIG.md.
 
 use cloudless::cloud::devices::Device;
 use cloudless::cloud::CloudEnv;

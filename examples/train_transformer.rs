@@ -1,8 +1,9 @@
-//! End-to-end validation driver (DESIGN.md §5): train a decoder-only
-//! transformer LM on a synthetic corpus across two simulated cloud
-//! regions through the FULL stack — control plane, serverless workflows,
-//! PS communicators over the modeled WAN, ASGD-GA sync, and real PJRT
-//! compute for every gradient — logging the loss curve.
+//! End-to-end validation driver: train a decoder-only transformer LM on
+//! a synthetic corpus across two simulated cloud regions through the
+//! FULL stack — control plane, serverless workflows, PS communicators
+//! over the modeled WAN, ASGD-GA sync, and real PJRT compute for every
+//! gradient — logging the loss curve. (Stack layering:
+//! docs/ARCHITECTURE.md.)
 //!
 //! ```text
 //! cargo run --release --example train_transformer [--steps N] [--model transformer100m]
@@ -11,7 +12,7 @@
 //! Defaults: the ~6.5M-parameter config, a few hundred steps. The ~100M
 //! config (`make artifacts-100m` first) is supported via --model
 //! transformer100m --steps 3 (each step is ~30 s of real single-core
-//! compute; see EXPERIMENTS.md §E2E for the recorded runs).
+//! compute; docs/EXPERIMENTS.md maps every recorded experiment).
 
 use cloudless::cloud::devices::Device;
 use cloudless::cloud::CloudEnv;

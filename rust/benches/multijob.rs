@@ -1,0 +1,22 @@
+//! Bench: concurrent training workflows over one shared 4-cloud
+//! inventory — FIFO vs fair-share vs cost-aware leasing on a Poisson
+//! job-arrival trace (see docs/EXPERIMENTS.md).
+mod common;
+
+use cloudless::coordinator::fleet::MultiJobParams;
+
+fn main() {
+    common::banner("multijob");
+    let coord = common::coordinator();
+    let model = std::env::args()
+        .skip_while(|a| a != "--model")
+        .nth(1)
+        .unwrap_or_else(|| "lenet".to_string());
+    let params = MultiJobParams::default();
+    cloudless::exp::multijob_exp::multijob_compare(
+        &coord,
+        common::scale_from_args(),
+        &model,
+        &params,
+    );
+}

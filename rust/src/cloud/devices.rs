@@ -44,7 +44,7 @@ pub struct DeviceType {
 pub const BASELINE_TFLOPS: f64 = 0.096;
 pub const BASELINE_ITER_S: f64 = 3.697;
 
-/// Device ids into [`catalog`].
+/// Device ids into the catalog (rows resolved by [`Device::info`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Device {
     IceLake,

@@ -12,11 +12,15 @@
 //!   "n_train": 4096, "n_eval": 1024,
 //!   "strategy": "asgd-ga",             // asgd | asgd-ga | ama | ma | sma
 //!   "sync_freq": 4,
+//!   "compression": "topk:0.25",        // none | topk[:ratio] | q8
 //!   "topology": "ring",                // ring | hierarchical | bandwidth-tree
 //!   "scheduling": "elastic",           // elastic | greedy
 //!   "elastic": {"enabled": true,       // live re-scheduling control loop
 //!               "interval_s": 60, "hysteresis": 0.2,
 //!               "bw_threshold": 0.5, "smoothing": 0.5},
+//!   "multijob": {"jobs": 6,            // multi-job fleet (exp --id multijob)
+//!                "mean_interarrival_s": 0, "policy": "fair-share",
+//!                "min_units": 1},
 //!   "worker_cores": 3,
 //!   "link": {"bandwidth_mbps": 100, "latency_ms": 15,
 //!             "fluct_sigma": 0.25, "drop_prob": 0.0},
@@ -26,15 +30,20 @@
 //!   ]
 //! }
 //! ```
+//!
+//! Every key is documented with its semantics and defaults in
+//! docs/CONFIG.md; the `config_files_in_repo_parse` integration test
+//! keeps the shipped `configs/*.json` set parsing.
 
 use anyhow::{Context, Result};
 
 use crate::cloud::devices::Device;
 use crate::cloud::{CloudEnv, Region};
+use crate::coordinator::fleet::{LeasePolicy, MultiJobParams};
 use crate::coordinator::{JobSpec, SchedulingMode};
 use crate::engine::TopologyKind;
 use crate::net::LinkSpec;
-use crate::sync::{Strategy, SyncConfig};
+use crate::sync::{Compression, Strategy, SyncConfig};
 use crate::train::TrainConfig;
 use crate::util::json::Json;
 
@@ -94,6 +103,15 @@ pub fn parse_job(text: &str) -> Result<JobSpec> {
     let strategy = Strategy::from_name(strategy_name).map_err(|e| anyhow::anyhow!(e))?;
     let freq = j.get("sync_freq").as_usize().unwrap_or(1) as u32;
     train.sync = SyncConfig::new(strategy, freq);
+    let compression = j.get("compression");
+    if !compression.is_null() {
+        let c = compression.as_str().ok_or_else(|| {
+            anyhow::anyhow!("\"compression\" must be a string (e.g. \"topk:0.25\")")
+        })?;
+        train.sync = train.sync.with_compression(
+            Compression::from_name(c).map_err(|e| anyhow::anyhow!(e))?,
+        );
+    }
     let topology = j.get("topology");
     if !topology.is_null() {
         let t = topology
@@ -143,7 +161,34 @@ pub fn parse_job(text: &str) -> Result<JobSpec> {
         train.elastic.validate().map_err(|e| anyhow::anyhow!(e))?;
     }
 
-    Ok(JobSpec { env, train, scheduling })
+    let mut multijob = None;
+    let mj = j.get("multijob");
+    if !mj.is_null() {
+        anyhow::ensure!(
+            mj.as_obj().is_some(),
+            "\"multijob\" must be an object (e.g. {{\"jobs\": 4}})"
+        );
+        let mut params = MultiJobParams::default();
+        if let Some(n) = mj.get("jobs").as_usize() {
+            params.jobs = n;
+        }
+        if let Some(v) = mj.get("mean_interarrival_s").as_f64() {
+            params.mean_interarrival_s = v;
+        }
+        if let Some(p) = mj.get("policy").as_str() {
+            params.policy = match p {
+                "all" => None,
+                name => Some(LeasePolicy::from_name(name).map_err(|e| anyhow::anyhow!(e))?),
+            };
+        }
+        if let Some(m) = mj.get("min_units").as_usize() {
+            params.min_units = m as u32;
+        }
+        params.validate().map_err(|e| anyhow::anyhow!(e))?;
+        multijob = Some(params);
+    }
+
+    Ok(JobSpec { env, train, scheduling, multijob })
 }
 
 /// Load a job config from a file path.
@@ -251,6 +296,66 @@ mod tests {
                 "regions":[{"device":"sky","units":1,"data":1}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn compression_key_parses() {
+        let region = r#""regions":[{"name":"X","device":"sky","units":6,"data":100}]"#;
+        let spec = parse_job(&format!(
+            r#"{{"model":"lenet","strategy":"asgd-ga","compression":"topk:0.25",{region}}}"#
+        ))
+        .unwrap();
+        assert_eq!(spec.train.sync.compression, Compression::TopK { ratio: 0.25 });
+        let q8 = parse_job(&format!(r#"{{"model":"lenet","compression":"q8",{region}}}"#)).unwrap();
+        assert_eq!(q8.train.sync.compression, Compression::Q8);
+        let none =
+            parse_job(&format!(r#"{{"model":"lenet","compression":"none",{region}}}"#)).unwrap();
+        assert_eq!(none.train.sync.compression, Compression::None);
+        // Unknown codec / bad ratio / wrong JSON type all error.
+        assert!(
+            parse_job(&format!(r#"{{"model":"lenet","compression":"gzip",{region}}}"#)).is_err()
+        );
+        assert!(
+            parse_job(&format!(r#"{{"model":"lenet","compression":"topk:1.5",{region}}}"#)).is_err()
+        );
+        assert!(parse_job(&format!(r#"{{"model":"lenet","compression":8,{region}}}"#)).is_err());
+    }
+
+    #[test]
+    fn multijob_block_parses() {
+        use crate::coordinator::fleet::LeasePolicy;
+        let region = r#""regions":[{"name":"X","device":"sky","units":12,"data":100}]"#;
+        let spec = parse_job(&format!(
+            r#"{{"model":"synthetic",
+                "multijob":{{"jobs":6,"mean_interarrival_s":40,"policy":"fair-share",
+                             "min_units":2}},{region}}}"#
+        ))
+        .unwrap();
+        let mj = spec.multijob.expect("multijob block parsed");
+        assert_eq!(mj.jobs, 6);
+        assert!((mj.mean_interarrival_s - 40.0).abs() < 1e-12);
+        assert_eq!(mj.policy, Some(LeasePolicy::FairShare));
+        assert_eq!(mj.min_units, 2);
+        // "all" means compare every policy; absent block means None.
+        let all = parse_job(&format!(
+            r#"{{"model":"synthetic","multijob":{{"policy":"all"}},{region}}}"#
+        ))
+        .unwrap();
+        assert_eq!(all.multijob.unwrap().policy, None);
+        let plain = parse_job(&format!(r#"{{"model":"synthetic",{region}}}"#)).unwrap();
+        assert!(plain.multijob.is_none());
+        // Invalid knobs error instead of silently defaulting.
+        assert!(parse_job(&format!(
+            r#"{{"model":"synthetic","multijob":{{"jobs":0}},{region}}}"#
+        ))
+        .is_err());
+        assert!(parse_job(&format!(
+            r#"{{"model":"synthetic","multijob":{{"policy":"lottery"}},{region}}}"#
+        ))
+        .is_err());
+        assert!(
+            parse_job(&format!(r#"{{"model":"synthetic","multijob":true,{region}}}"#)).is_err()
+        );
     }
 
     #[test]

@@ -1,0 +1,976 @@
+//! The multi-job control plane: N concurrent training workflows over one
+//! shared multi-cloud inventory.
+//!
+//! The paper's control plane (§III.A) deploys *a* training workflow
+//! adaptively; a production deployment schedules *many* — jobs arrive,
+//! contend for the same per-region inventories and the same WAN links,
+//! and finish, freeing capacity for whoever is queued (HeterPS,
+//! arXiv 2111.10635, makes the same move for heterogeneous clusters; the
+//! serverless cost study arXiv 2509.14920 motivates per-job cost
+//! accounting under shared FaaS capacity). This module adds the
+//! inter-job layer on top of the existing single-job machinery:
+//!
+//! ```text
+//!   JobRequest queue ──▶ admission (policy) ──▶ lease division
+//!        │                                         │ per-region unit
+//!        │ Poisson arrivals                        ▼ leases
+//!        │                    per-job Algorithm 1 within the lease
+//!        │                                         │ allocations
+//!        ▼                                         ▼
+//!   co-simulation: every job's engine/driver stepped on ONE merged
+//!   clock over ONE SharedFabric (jobs queue behind each other's
+//!   payloads on the WAN); on arrival/completion the coordinator
+//!   re-divides leases and resizes running jobs through the FaaS
+//!   autoscaler (preemption-by-resize — never a kill)
+//! ```
+//!
+//! Three [`LeasePolicy`]s are provided:
+//!
+//! - **FIFO** — the baseline batch scheduler: a job is admitted only when
+//!   its full solo resourcing plan fits what earlier jobs left; running
+//!   jobs are never resized. Head-of-line blocking serializes the fleet
+//!   under load.
+//! - **Fair-share** — every region's units are divided among the active
+//!   jobs in proportion to their weights (largest-remainder rounding);
+//!   each arrival/completion re-divides, shrinking or growing running
+//!   jobs through [`apply_lease`](crate::engine::driver) resizes.
+//! - **Cost-aware** — fair shares trimmed to each job's own Algorithm-1
+//!   plan within the share (units the load-power matching would idle are
+//!   never leased), so freed capacity admits queued jobs earlier.
+//!
+//! Inside its lease every job keeps its own elastic controller
+//! (`sched::elastic`) re-planning against *observed* powers; the lease is
+//! the boundary between the two control loops. The fleet outcome is a
+//! [`FleetReport`]: per-job makespan/cost plus Jain's fairness index over
+//! normalized job progress rates.
+
+use anyhow::Result;
+
+use crate::cloud::devices::Device;
+use crate::cloud::{CloudEnv, Region};
+use crate::engine::driver::{self, TrainConfig, World};
+use crate::net::{Fabric, LinkSpec, SharedFabric};
+use crate::runtime::PjrtRuntime;
+use crate::sched::optimal_matching;
+use crate::sim::{Sim, Time};
+use crate::train::calib;
+use crate::train::metrics::TrainReport;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// How the coordinator divides the shared inventory among admitted jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeasePolicy {
+    /// Admit in arrival order, each job at its full solo plan; later jobs
+    /// wait until capacity frees. Never resizes running jobs.
+    Fifo,
+    /// Weighted proportional division of every region's units among the
+    /// active jobs, re-divided on each arrival/completion.
+    FairShare,
+    /// Fair shares trimmed to each job's Algorithm-1 plan within the
+    /// share — capacity the plan would idle admits queued jobs instead.
+    CostAware,
+}
+
+impl LeasePolicy {
+    /// Parse a policy name (case-insensitive). The error lists every
+    /// valid name, so CLI/config callers can surface it verbatim.
+    pub fn from_name(s: &str) -> Result<LeasePolicy, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Ok(LeasePolicy::Fifo),
+            "fair-share" | "fair_share" | "fair" => Ok(LeasePolicy::FairShare),
+            "cost-aware" | "cost_aware" | "cost" => Ok(LeasePolicy::CostAware),
+            other => Err(format!(
+                "unknown lease policy {other:?} (valid: fifo, fair-share, cost-aware)"
+            )),
+        }
+    }
+
+    /// Stable name (inverse of [`LeasePolicy::from_name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LeasePolicy::Fifo => "fifo",
+            LeasePolicy::FairShare => "fair-share",
+            LeasePolicy::CostAware => "cost-aware",
+        }
+    }
+}
+
+/// The `"multijob"` config block / `exp --id multijob` knobs.
+#[derive(Debug, Clone)]
+pub struct MultiJobParams {
+    /// Number of jobs on the arrival trace.
+    pub jobs: usize,
+    /// Mean exponential inter-arrival gap in virtual seconds; 0 =
+    /// auto-scale to roughly a third of one solo job's runtime (so the
+    /// trace actually overlaps).
+    pub mean_interarrival_s: f64,
+    /// Lease policy; `None` compares all three.
+    pub policy: Option<LeasePolicy>,
+    /// Minimum per-region units an admitted job's lease must hold.
+    pub min_units: u32,
+}
+
+impl Default for MultiJobParams {
+    fn default() -> Self {
+        MultiJobParams { jobs: 4, mean_interarrival_s: 0.0, policy: None, min_units: 1 }
+    }
+}
+
+impl MultiJobParams {
+    /// Range-check the knobs (shared by the config parser and the CLI).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.jobs == 0 {
+            return Err("multijob jobs must be >= 1".to_string());
+        }
+        if !(self.mean_interarrival_s >= 0.0) {
+            return Err(format!(
+                "multijob mean_interarrival_s must be >= 0, got {}",
+                self.mean_interarrival_s
+            ));
+        }
+        if self.min_units == 0 {
+            return Err("multijob min_units must be >= 1".to_string());
+        }
+        Ok(())
+    }
+}
+
+/// One training workflow submitted to the fleet.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub name: String,
+    /// Virtual arrival time on the shared clock.
+    pub arrival: Time,
+    /// Fair-share weight (1.0 = one share).
+    pub weight: f64,
+    /// The full per-job training configuration. `link`/`link_overrides`
+    /// are ignored — the fleet's WAN comes from [`FleetConfig`].
+    pub train: TrainConfig,
+}
+
+impl JobRequest {
+    pub fn new(name: &str, arrival: Time, train: TrainConfig) -> JobRequest {
+        JobRequest { name: name.to_string(), arrival, weight: 1.0, train }
+    }
+}
+
+/// The shared substrate every job contends for.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub policy: LeasePolicy,
+    /// Shared inventory; region `data_samples` are the *fractions* each
+    /// job's own `n_train` is split by (the resident-data distribution).
+    pub env: CloudEnv,
+    /// Uniform inter-region WAN spec.
+    pub link: LinkSpec,
+    /// Per-pair overrides applied after the uniform mesh.
+    pub link_overrides: Vec<(usize, usize, LinkSpec)>,
+    pub seed: u64,
+    /// Minimum per-region units an admitted job's lease must hold.
+    pub min_units: u32,
+}
+
+impl FleetConfig {
+    pub fn new(policy: LeasePolicy, env: CloudEnv) -> FleetConfig {
+        FleetConfig {
+            policy,
+            env,
+            link: LinkSpec::wan_100mbps(),
+            link_overrides: Vec::new(),
+            seed: 42,
+            min_units: 1,
+        }
+    }
+}
+
+/// Deterministic Poisson job-arrival trace: `n` arrivals starting at 0,
+/// exponential inter-arrival gaps with mean `mean_s`, drawn from `seed`.
+pub fn poisson_arrivals(n: usize, mean_s: f64, seed: u64) -> Vec<Time> {
+    let mut rng = Pcg32::new(seed, 0x4A0B);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            let at = t;
+            t += -mean_s * (1.0 - rng.f64()).ln();
+            at
+        })
+        .collect()
+}
+
+/// Jain's fairness index over non-negative shares: `(Σx)² / (n·Σx²)`,
+/// 1.0 when everyone gets the same, → 1/n when one job gets everything.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    if s2 <= 0.0 {
+        return 1.0;
+    }
+    s * s / (xs.len() as f64 * s2)
+}
+
+/// Analytic solo-runtime estimate of one job on the full inventory: the
+/// straggler bound — its even shard's steps at the minimum full-region
+/// power (worker counts cancel; startup and WAN excluded). Used to
+/// normalize per-job slowdowns and to auto-scale arrival traces, so it
+/// only needs to be consistent, not exact.
+pub fn solo_estimate_s(train: &TrainConfig, env: &CloudEnv, batch_size: usize) -> f64 {
+    let base = if train.base_step_s > 0.0 {
+        train.base_step_s
+    } else {
+        calib::default_base_step_s(&train.model)
+    };
+    let shard = train.n_train / env.regions.len().max(1);
+    let steps = (shard.max(1) as f64 / batch_size.max(1) as f64).ceil() * train.epochs as f64;
+    let power = env.greedy_plan().iter().map(|a| a.power()).fold(f64::INFINITY, f64::min);
+    steps * base / power.max(1e-9)
+}
+
+/// One finished job's fleet-level outcome.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub name: String,
+    pub arrival: Time,
+    /// When the coordinator admitted (deployed) it.
+    pub admitted: Time,
+    pub finish: Time,
+    /// admitted - arrival: time spent queued, unbilled.
+    pub queue_wait: Time,
+    /// finish - arrival (queue wait included).
+    pub makespan: Time,
+    /// makespan / analytic solo estimate (1.0 = as fast as running alone
+    /// on the full inventory, ignoring startup/WAN).
+    pub slowdown: f64,
+    /// The job's own training report (per-job cost, WAN bytes, re-plan
+    /// record — `"lease"` events are the coordinator's re-divisions).
+    pub report: TrainReport,
+}
+
+/// Aggregate outcome of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub policy: String,
+    /// Outcomes in request order.
+    pub jobs: Vec<JobOutcome>,
+    /// Σ per-job cost (compute + WAN), USD.
+    pub total_cost: f64,
+    pub compute_cost: f64,
+    pub wan_cost: f64,
+    /// Total bytes on the shared fabric (= Σ per-job bytes).
+    pub wan_bytes: u64,
+    /// Last finish minus first arrival.
+    pub makespan: Time,
+    pub mean_slowdown: f64,
+    /// Jain's index over per-job normalized progress rates
+    /// (1 / slowdown): 1.0 = perfectly even service.
+    pub jain_fairness: f64,
+    /// Lease re-divisions applied to *running* jobs (preemption-by-resize
+    /// count; 0 under FIFO).
+    pub lease_events: u64,
+    /// Maximum simultaneously-leased units per region (inventory-safety
+    /// witness: never exceeds the region's inventory).
+    pub peak_units: Vec<u32>,
+    pub wall_seconds: f64,
+}
+
+impl FleetReport {
+    pub fn total_queue_wait(&self) -> Time {
+        self.jobs.iter().map(|j| j.queue_wait).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::str(&self.policy)),
+            ("makespan_s", Json::num(self.makespan)),
+            ("total_cost_usd", Json::num(self.total_cost)),
+            ("compute_cost_usd", Json::num(self.compute_cost)),
+            ("wan_cost_usd", Json::num(self.wan_cost)),
+            ("wan_bytes", Json::num(self.wan_bytes as f64)),
+            ("mean_slowdown", Json::num(self.mean_slowdown)),
+            ("jain_fairness", Json::num(self.jain_fairness)),
+            ("lease_events", Json::num(self.lease_events as f64)),
+            ("total_queue_wait_s", Json::num(self.total_queue_wait())),
+            (
+                "peak_units",
+                Json::arr(self.peak_units.iter().map(|u| Json::num(*u as f64))),
+            ),
+            (
+                "jobs",
+                Json::arr(self.jobs.iter().map(|j| {
+                    Json::obj(vec![
+                        ("name", Json::str(&j.name)),
+                        ("arrival_s", Json::num(j.arrival)),
+                        ("admitted_s", Json::num(j.admitted)),
+                        ("finish_s", Json::num(j.finish)),
+                        ("queue_wait_s", Json::num(j.queue_wait)),
+                        ("makespan_s", Json::num(j.makespan)),
+                        ("slowdown", Json::num(j.slowdown)),
+                        ("cost_usd", Json::num(j.report.cost)),
+                        ("wan_bytes", Json::num(j.report.wan_bytes as f64)),
+                        ("replans", Json::num(j.report.replan_events.len() as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} jobs={} makespan={:.0}s slowdown={:.2} jain={:.3} cost=${:.4} leases={} queue={:.0}s",
+            self.policy,
+            self.jobs.len(),
+            self.makespan,
+            self.mean_slowdown,
+            self.jain_fairness,
+            self.total_cost,
+            self.lease_events,
+            self.total_queue_wait(),
+        )
+    }
+}
+
+// ------------------------------------------------------- lease division
+
+/// Split one job's `n_train` by the fleet's resident-data fractions
+/// (every region keeps at least one sample so load power stays defined).
+fn split_data(n_train: usize, fractions: &[usize]) -> Vec<usize> {
+    let total: usize = fractions.iter().sum::<usize>().max(1);
+    let n = fractions.len();
+    let mut out = Vec::with_capacity(n);
+    let mut acc = 0usize;
+    for (i, f) in fractions.iter().enumerate() {
+        let d = if i + 1 == n {
+            n_train.saturating_sub(acc).max(1)
+        } else {
+            (n_train * f / total).max(1)
+        };
+        acc += d;
+        out.push(d);
+    }
+    out
+}
+
+/// The first `units` units of a region's inventory, device classes in
+/// inventory order (the same order `greedy_plan` and the plan search
+/// enumerate).
+fn clip_inventory(inv: &[(Device, u32)], mut units: u32) -> Vec<(Device, u32)> {
+    let mut kept = Vec::new();
+    for &(dev, max) in inv {
+        let take = units.min(max);
+        if take > 0 {
+            kept.push((dev, take));
+            units -= take;
+        }
+    }
+    kept
+}
+
+/// A job's private view of the shared environment: inventory clipped to
+/// its lease, resident data split by the fleet fractions.
+fn lease_env(base: &CloudEnv, data: &[usize], lease: &[u32]) -> CloudEnv {
+    CloudEnv::new(
+        base.regions
+            .iter()
+            .enumerate()
+            .map(|(i, r)| Region::new(i, &r.name, clip_inventory(&r.inventory, lease[i]), data[i]))
+            .collect(),
+    )
+}
+
+/// Total rentable units per region.
+fn inventory_units(env: &CloudEnv) -> Vec<u32> {
+    env.regions.iter().map(|r| r.inventory.iter().map(|(_, n)| n).sum()).collect()
+}
+
+/// Weighted largest-remainder division of `units` into one share per
+/// weight (deterministic: remainder ties break by index).
+fn fair_shares(units: u32, weights: &[f64]) -> Vec<u32> {
+    if weights.is_empty() {
+        return Vec::new(); // nothing to divide among — and the remainder
+                           // loop below would otherwise never terminate
+    }
+    let total_w: f64 = weights.iter().sum();
+    let raw: Vec<f64> = weights.iter().map(|w| units as f64 * w / total_w.max(1e-12)).collect();
+    let mut shares: Vec<u32> = raw.iter().map(|r| r.floor() as u32).collect();
+    let assigned: u32 = shares.iter().sum();
+    let mut left = units.saturating_sub(assigned);
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = raw[a] - raw[a].floor();
+        let fb = raw[b] - raw[b].floor();
+        fb.partial_cmp(&fa).unwrap().then_with(|| a.cmp(&b))
+    });
+    while left > 0 {
+        for &i in &order {
+            if left == 0 {
+                break;
+            }
+            shares[i] += 1;
+            left -= 1;
+        }
+    }
+    shares
+}
+
+/// What the division algorithm needs to know about one member job.
+struct DivideMember {
+    weight: f64,
+    /// Solo Algorithm-1 plan units per region (the FIFO demand).
+    demand: Vec<u32>,
+    /// Per-region resident samples (for within-lease planning).
+    data: Vec<usize>,
+}
+
+/// Per-member per-region leases under `policy`, or `None` when the set
+/// does not fit (a member's share would fall below `min_units` or, under
+/// FIFO, below its full demand).
+fn try_divide(
+    cfg: &FleetConfig,
+    policy: LeasePolicy,
+    members: &[DivideMember],
+) -> Option<Vec<Vec<u32>>> {
+    let caps = inventory_units(&cfg.env);
+    let n_regions = caps.len();
+    let floor = cfg.min_units.max(1);
+    match policy {
+        LeasePolicy::Fifo => {
+            let mut remaining = caps;
+            let mut leases = Vec::with_capacity(members.len());
+            for m in members {
+                for r in 0..n_regions {
+                    if m.demand[r] > remaining[r] {
+                        return None;
+                    }
+                }
+                for r in 0..n_regions {
+                    remaining[r] -= m.demand[r];
+                }
+                leases.push(m.demand.clone());
+            }
+            Some(leases)
+        }
+        LeasePolicy::FairShare | LeasePolicy::CostAware => {
+            let weights: Vec<f64> = members.iter().map(|m| m.weight.max(1e-9)).collect();
+            let mut leases = vec![vec![0u32; n_regions]; members.len()];
+            for (r, &cap) in caps.iter().enumerate() {
+                let shares = fair_shares(cap, &weights);
+                for (j, &s) in shares.iter().enumerate() {
+                    if s < floor {
+                        return None;
+                    }
+                    leases[j][r] = s;
+                }
+            }
+            if policy == LeasePolicy::CostAware {
+                // Trim every share to the job's own Algorithm-1 plan
+                // within it: units the load-power matching would idle are
+                // never leased, so they stay free for queued jobs. The
+                // trim still honors the `min_units` floor the share was
+                // admitted under (floor <= share was checked above).
+                for (m, lease) in members.iter().zip(leases.iter_mut()) {
+                    let jenv = lease_env(&cfg.env, &m.data, lease);
+                    let plan = optimal_matching(&jenv);
+                    *lease = plan
+                        .allocations
+                        .iter()
+                        .map(|a| a.total_units().max(floor))
+                        .collect();
+                }
+            }
+            Some(leases)
+        }
+    }
+}
+
+// --------------------------------------------------------- the fleet run
+
+struct RunningJob {
+    req: usize,
+    admitted: Time,
+    lease: Vec<u32>,
+    sim: Sim<World>,
+    world: World,
+    finish: Option<Time>,
+}
+
+struct FleetState<'a> {
+    rt: &'a PjrtRuntime,
+    cfg: &'a FleetConfig,
+    requests: &'a [JobRequest],
+    /// Per-request solo demand / data split / solo-runtime estimate.
+    demands: Vec<Vec<u32>>,
+    datas: Vec<Vec<usize>>,
+    ideals: Vec<f64>,
+    fabric: SharedFabric,
+    running: Vec<RunningJob>,
+    /// Arrived-but-not-admitted request indices, arrival order.
+    waiting: Vec<usize>,
+    lease_events: u64,
+    peak_units: Vec<u32>,
+}
+
+impl<'a> FleetState<'a> {
+    fn member_of(&self, req: usize) -> DivideMember {
+        DivideMember {
+            weight: self.requests[req].weight,
+            demand: self.demands[req].clone(),
+            data: self.datas[req].clone(),
+        }
+    }
+
+    /// Active (unfinished) running jobs, in admission order.
+    fn active(&self) -> Vec<usize> {
+        (0..self.running.len()).filter(|&i| self.running[i].finish.is_none()).collect()
+    }
+
+    /// Re-divide leases at `now`: admit the longest viable prefix of the
+    /// waiting queue, then apply the division — resizing running jobs
+    /// whose lease moved (scheduled into their own simulators at `now`)
+    /// and deploying the newly admitted.
+    fn coordinate(&mut self, now: Time) -> Result<()> {
+        let active = self.active();
+        let mut members: Vec<DivideMember> =
+            active.iter().map(|&i| self.member_of(self.running[i].req)).collect();
+        // An already-admitted set always divides (each member was checked
+        // at admission and shrinking the set only grows shares).
+        let mut division = if members.is_empty() {
+            None
+        } else {
+            Some(
+                try_divide(self.cfg, self.cfg.policy, &members)
+                    .expect("the admitted member set always fits"),
+            )
+        };
+        // Admit the longest viable queue prefix, extending the member set
+        // one candidate at a time and keeping the last good division.
+        let mut admit_n = 0;
+        while admit_n < self.waiting.len() {
+            members.push(self.member_of(self.waiting[admit_n]));
+            match try_divide(self.cfg, self.cfg.policy, &members) {
+                Some(d) => {
+                    division = Some(d);
+                    admit_n += 1;
+                }
+                None => {
+                    members.pop(); // head-of-line: later jobs wait behind
+                    break; // the first misfit
+                }
+            }
+        }
+        let newly: Vec<usize> = self.waiting.drain(..admit_n).collect();
+        let Some(leases) = division else {
+            return Ok(()); // nothing running, nothing admittable
+        };
+
+        // Inventory safety: the division can never oversubscribe a region.
+        let caps = inventory_units(&self.cfg.env);
+        for r in 0..caps.len() {
+            let leased: u32 = leases.iter().map(|l| l[r]).sum();
+            debug_assert!(leased <= caps[r], "region {r} oversubscribed: {leased}/{}", caps[r]);
+            self.peak_units[r] = self.peak_units[r].max(leased);
+        }
+
+        // Resize running jobs whose lease moved.
+        for (slot, lease) in active.iter().zip(leases.iter()) {
+            let job = &mut self.running[*slot];
+            if *lease == job.lease {
+                continue;
+            }
+            let jenv = lease_env(&self.cfg.env, &self.datas[job.req], lease);
+            let plan = optimal_matching(&jenv);
+            job.lease = lease.clone();
+            self.lease_events += 1;
+            let (allocs, straggler) = (plan.allocations, plan.straggler);
+            job.sim.schedule_at(now, move |sim, w: &mut World| {
+                driver::apply_lease(sim, w, &jenv, &allocs, straggler);
+            });
+        }
+
+        // Deploy the newly admitted at their final lease.
+        for (k, &req) in newly.iter().enumerate() {
+            let lease = leases[active.len() + k].clone();
+            let jenv = lease_env(&self.cfg.env, &self.datas[req], &lease);
+            let plan = optimal_matching(&jenv);
+            let (sim, world) = driver::deploy_job(
+                self.rt,
+                &jenv,
+                plan.allocations,
+                self.requests[req].train.clone(),
+                now,
+                self.fabric.clone(),
+            )?;
+            self.running.push(RunningJob { req, admitted: now, lease, sim, world, finish: None });
+        }
+        Ok(())
+    }
+
+    /// Build the finished job's outcome (final eval + report).
+    fn finalize_job(&self, slot: usize, end: Time) -> (usize, JobOutcome) {
+        let job = &self.running[slot];
+        let req = &self.requests[job.req];
+        let (loss, acc) = if job.world.cfg.skip_eval {
+            (f64::NAN, f64::NAN)
+        } else {
+            driver::evaluate(&job.world, 0)
+        };
+        let report = driver::finalize_report(&job.world, end, loss, acc, 0.0);
+        let makespan = end - req.arrival;
+        let ideal = self.ideals[job.req].max(1e-9);
+        (
+            job.req,
+            JobOutcome {
+                name: req.name.clone(),
+                arrival: req.arrival,
+                admitted: job.admitted,
+                finish: end,
+                queue_wait: job.admitted - req.arrival,
+                makespan,
+                slowdown: (makespan / ideal).max(1e-12),
+                report,
+            },
+        )
+    }
+}
+
+/// Run a job fleet to completion and return the aggregate report.
+///
+/// Deterministic under (`cfg.seed`, the request list): jobs interleave on
+/// one merged virtual clock — always stepping the simulator whose next
+/// event is earliest, arrivals first on ties, lower admission slot next —
+/// and share one WAN fabric, so their payloads queue behind each other on
+/// the same links.
+pub fn run_fleet(
+    rt: &PjrtRuntime,
+    cfg: &FleetConfig,
+    requests: &[JobRequest],
+) -> Result<FleetReport> {
+    let wall0 = std::time::Instant::now();
+    anyhow::ensure!(!requests.is_empty(), "a fleet needs at least one job");
+    let n_regions = cfg.env.regions.len();
+    anyhow::ensure!(n_regions > 0, "a fleet needs at least one region");
+    anyhow::ensure!(cfg.min_units >= 1, "min_units must be >= 1");
+    for req in requests {
+        anyhow::ensure!(req.arrival >= 0.0, "job {} arrives before t=0", req.name);
+        anyhow::ensure!(req.weight > 0.0, "job {} needs a positive weight", req.name);
+    }
+
+    // Shared WAN: one fabric for the whole fleet.
+    let fabric =
+        SharedFabric::new(Fabric::full_mesh(cfg.seed, n_regions, &cfg.link, &cfg.link_overrides));
+
+    // Per-request statics: data split, solo demand, solo-runtime ideal.
+    let fractions: Vec<usize> = cfg.env.regions.iter().map(|r| r.data_samples.max(1)).collect();
+    let full_units = inventory_units(&cfg.env);
+    let mut batch_sizes: std::collections::BTreeMap<String, usize> = Default::default();
+    let mut datas = Vec::new();
+    let mut demands = Vec::new();
+    let mut ideals = Vec::new();
+    for req in requests {
+        let data = split_data(req.train.n_train, &fractions);
+        let solo_env = lease_env(&cfg.env, &data, &full_units);
+        demands.push(
+            optimal_matching(&solo_env)
+                .allocations
+                .iter()
+                .map(|a| a.total_units())
+                .collect::<Vec<u32>>(),
+        );
+        let batch = match batch_sizes.get(&req.train.model) {
+            Some(&b) => b,
+            None => {
+                let b = rt.load_model(&req.train.model)?.meta.batch_size;
+                batch_sizes.insert(req.train.model.clone(), b);
+                b
+            }
+        };
+        ideals.push(solo_estimate_s(&req.train, &solo_env, batch));
+        datas.push(data);
+    }
+
+    // Arrival order (stable on ties).
+    let mut order: Vec<usize> = (0..requests.len()).collect();
+    order.sort_by(|&a, &b| {
+        requests[a].arrival.partial_cmp(&requests[b].arrival).unwrap().then_with(|| a.cmp(&b))
+    });
+
+    let mut st = FleetState {
+        rt,
+        cfg,
+        requests,
+        demands,
+        datas,
+        ideals,
+        fabric: fabric.clone(),
+        running: Vec::new(),
+        waiting: Vec::new(),
+        lease_events: 0,
+        peak_units: vec![0; n_regions],
+    };
+    let mut outcomes: Vec<Option<JobOutcome>> = vec![None; requests.len()];
+    let mut arrived = 0usize;
+    let mut executed: u64 = 0;
+    const EVENT_LIMIT: u64 = 400_000_000;
+
+    loop {
+        let next_arrival: Option<Time> = if arrived < order.len() {
+            Some(requests[order[arrived]].arrival)
+        } else {
+            None
+        };
+        let next_event: Option<(usize, Time)> = st
+            .running
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| j.finish.is_none())
+            .filter_map(|(i, j)| j.sim.peek_time().map(|t| (i, t)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then_with(|| a.0.cmp(&b.0)));
+        match (next_arrival, next_event) {
+            (None, None) => break,
+            (Some(ta), ev) if ev.map_or(true, |(_, te)| ta <= te) => {
+                // Arrival wave: everything due at ta joins the queue, one
+                // coordination pass serves the whole wave.
+                while arrived < order.len() && requests[order[arrived]].arrival <= ta {
+                    st.waiting.push(order[arrived]);
+                    arrived += 1;
+                }
+                st.coordinate(ta)?;
+            }
+            (_, Some((slot, _))) => {
+                executed += 1;
+                anyhow::ensure!(
+                    executed < EVENT_LIMIT,
+                    "fleet simulation exceeded event limit — runaway loop?"
+                );
+                let finished_at: Option<Time> = {
+                    let job = &mut st.running[slot];
+                    job.sim.step(&mut job.world);
+                    match (job.finish, job.world.global_end) {
+                        (None, Some(end)) => {
+                            job.finish = Some(end);
+                            Some(end)
+                        }
+                        _ => None,
+                    }
+                };
+                if let Some(end) = finished_at {
+                    let (req, outcome) = st.finalize_job(slot, end);
+                    outcomes[req] = Some(outcome);
+                    // Freed capacity: re-divide and admit from the queue.
+                    st.coordinate(end)?;
+                }
+            }
+            // A pending arrival with no runnable event always satisfies
+            // the guarded arrival arm; this arm only exists to make the
+            // match exhaustive for the compiler.
+            (Some(_), None) => unreachable!("guarded arrival arm handles this case"),
+        }
+    }
+
+    let mut jobs: Vec<JobOutcome> = Vec::with_capacity(requests.len());
+    for (i, outcome) in outcomes.into_iter().enumerate() {
+        match outcome {
+            Some(o) => jobs.push(o),
+            // Starvation is a caller error (e.g. min_units no lease can
+            // satisfy), not a crash: surface it through the Result.
+            None => anyhow::bail!(
+                "job {} ({}) never completed under policy {}: no viable lease \
+                 (min_units {} vs the shared inventory?)",
+                i,
+                requests[i].name,
+                cfg.policy.name(),
+                cfg.min_units
+            ),
+        }
+    }
+    let first_arrival = jobs.iter().map(|j| j.arrival).fold(f64::INFINITY, f64::min);
+    let last_finish = jobs.iter().map(|j| j.finish).fold(0.0f64, f64::max);
+    let rates: Vec<f64> = jobs.iter().map(|j| 1.0 / j.slowdown).collect();
+    let mean_slowdown = jobs.iter().map(|j| j.slowdown).sum::<f64>() / jobs.len() as f64;
+    Ok(FleetReport {
+        policy: cfg.policy.name().to_string(),
+        total_cost: jobs.iter().map(|j| j.report.cost).sum(),
+        compute_cost: jobs.iter().map(|j| j.report.compute_cost).sum(),
+        wan_cost: jobs.iter().map(|j| j.report.wan_cost).sum(),
+        wan_bytes: fabric.total_wan_bytes(),
+        makespan: last_finish - first_arrival,
+        mean_slowdown,
+        jain_fairness: jain_index(&rates),
+        lease_events: st.lease_events,
+        peak_units: st.peak_units,
+        wall_seconds: wall0.elapsed().as_secs_f64(),
+        jobs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn four_cloud_env() -> CloudEnv {
+        CloudEnv::multi_region(vec![
+            ("SH", Device::CascadeLake, 12, 128),
+            ("CQ", Device::Skylake, 12, 128),
+            ("BJ", Device::Skylake, 12, 128),
+            ("GZ", Device::IceLake, 12, 128),
+        ])
+    }
+
+    fn member(n_train: usize, env: &CloudEnv) -> DivideMember {
+        let fractions: Vec<usize> = env.regions.iter().map(|r| r.data_samples).collect();
+        let data = split_data(n_train, &fractions);
+        let solo = lease_env(env, &data, &inventory_units(env));
+        let demand =
+            optimal_matching(&solo).allocations.iter().map(|a| a.total_units()).collect();
+        DivideMember { weight: 1.0, demand, data }
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [LeasePolicy::Fifo, LeasePolicy::FairShare, LeasePolicy::CostAware] {
+            assert_eq!(LeasePolicy::from_name(p.name()), Ok(p));
+        }
+        assert_eq!(LeasePolicy::from_name("FAIR"), Ok(LeasePolicy::FairShare));
+        let err = LeasePolicy::from_name("lottery").unwrap_err();
+        assert!(err.contains("fifo") && err.contains("cost-aware") && err.contains("lottery"));
+    }
+
+    #[test]
+    fn poisson_trace_is_deterministic_and_sorted() {
+        let a = poisson_arrivals(16, 10.0, 7);
+        let b = poisson_arrivals(16, 10.0, 7);
+        assert_eq!(a, b);
+        assert_eq!(a[0], 0.0, "first job arrives immediately");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrivals are non-decreasing");
+        let c = poisson_arrivals(16, 10.0, 8);
+        assert_ne!(a, c, "different seed, different trace");
+        // Mean gap lands near the requested mean (law of large numbers).
+        let long = poisson_arrivals(4000, 10.0, 7);
+        let mean = long.last().unwrap() / 3999.0;
+        assert!((mean - 10.0).abs() < 1.0, "mean gap {mean}");
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert!((jain_index(&[2.0, 2.0, 2.0]) - 1.0).abs() < 1e-12);
+        let skew = jain_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((skew - 0.25).abs() < 1e-12, "one-job-takes-all -> 1/n");
+        let mild = jain_index(&[1.0, 0.5, 0.8, 0.9]);
+        assert!(mild > 0.25 && mild < 1.0);
+    }
+
+    #[test]
+    fn fair_shares_largest_remainder() {
+        assert_eq!(fair_shares(12, &[1.0; 4]), vec![3, 3, 3, 3]);
+        assert_eq!(fair_shares(12, &[1.0; 5]), vec![3, 3, 2, 2, 2]);
+        // Weighted: 2:1:1 over 12 -> 6:3:3.
+        assert_eq!(fair_shares(12, &[2.0, 1.0, 1.0]), vec![6, 3, 3]);
+        let total: u32 = fair_shares(7, &[0.3, 0.3, 0.4]).iter().sum();
+        assert_eq!(total, 7, "every unit is assigned");
+    }
+
+    #[test]
+    fn split_data_covers_and_floors() {
+        assert_eq!(split_data(512, &[128, 128, 128, 128]), vec![128, 128, 128, 128]);
+        let skew = split_data(100, &[3, 1]);
+        assert_eq!(skew, vec![75, 25]);
+        let tiny = split_data(2, &[100, 100, 100]);
+        assert!(tiny.iter().all(|&d| d >= 1), "every region keeps >=1 sample: {tiny:?}");
+    }
+
+    #[test]
+    fn clip_inventory_takes_first_classes() {
+        let inv = vec![(Device::CascadeLake, 6), (Device::Skylake, 6)];
+        assert_eq!(clip_inventory(&inv, 4), vec![(Device::CascadeLake, 4)]);
+        assert_eq!(
+            clip_inventory(&inv, 9),
+            vec![(Device::CascadeLake, 6), (Device::Skylake, 3)]
+        );
+        assert_eq!(clip_inventory(&inv, 99), inv, "clip never exceeds the inventory");
+        assert!(clip_inventory(&inv, 0).is_empty());
+    }
+
+    #[test]
+    fn fifo_serializes_on_the_straggler_region() {
+        let env = four_cloud_env();
+        let cfg = FleetConfig::new(LeasePolicy::Fifo, env.clone());
+        let m1 = member(512, &env);
+        // Job 1's solo plan keeps the straggler region fully allocated, so
+        // a second identical job cannot fit.
+        assert!(m1.demand.iter().any(|&u| u == 12), "solo plan saturates a region");
+        let one = try_divide(&cfg, LeasePolicy::Fifo, &[member(512, &env)]).unwrap();
+        assert_eq!(one[0], m1.demand);
+        assert!(
+            try_divide(&cfg, LeasePolicy::Fifo, &[member(512, &env), member(512, &env)])
+                .is_none(),
+            "FIFO queues the second job"
+        );
+    }
+
+    #[test]
+    fn fair_share_admits_what_fifo_queues() {
+        let env = four_cloud_env();
+        let cfg = FleetConfig::new(LeasePolicy::FairShare, env.clone());
+        let members: Vec<DivideMember> = (0..4).map(|_| member(512, &env)).collect();
+        let leases = try_divide(&cfg, LeasePolicy::FairShare, &members).unwrap();
+        for lease in &leases {
+            assert_eq!(lease, &vec![3, 3, 3, 3], "equal weights, equal shares");
+        }
+        // 13 equal jobs cannot all hold >= 1 unit of a 12-unit region.
+        let many: Vec<DivideMember> = (0..13).map(|_| member(512, &env)).collect();
+        assert!(try_divide(&cfg, LeasePolicy::FairShare, &many).is_none());
+    }
+
+    #[test]
+    fn cost_aware_trims_to_the_within_lease_plan() {
+        let env = four_cloud_env();
+        let cfg = FleetConfig::new(LeasePolicy::CostAware, env.clone());
+        let members: Vec<DivideMember> = (0..2).map(|_| member(512, &env)).collect();
+        let fair = try_divide(&cfg, LeasePolicy::FairShare, &members).unwrap();
+        let cost = try_divide(&cfg, LeasePolicy::CostAware, &members).unwrap();
+        for (f, c) in fair.iter().zip(&cost) {
+            for r in 0..4 {
+                assert!(c[r] <= f[r], "trim never grows a lease: {c:?} vs {f:?}");
+                assert!(c[r] >= 1, "trimmed lease keeps every region viable");
+            }
+        }
+        let fair_total: u32 = fair.iter().flatten().sum();
+        let cost_total: u32 = cost.iter().flatten().sum();
+        assert!(
+            cost_total < fair_total,
+            "heterogeneous regions must shed some units: {cost_total} vs {fair_total}"
+        );
+        // The trim still honors the admission floor: with min_units = 2
+        // no trimmed lease may fall below 2 units anywhere.
+        let mut floor2 = FleetConfig::new(LeasePolicy::CostAware, env.clone());
+        floor2.min_units = 2;
+        let trimmed = try_divide(&floor2, LeasePolicy::CostAware, &members).unwrap();
+        for lease in &trimmed {
+            assert!(lease.iter().all(|&u| u >= 2), "min_units floor violated: {lease:?}");
+        }
+    }
+
+    #[test]
+    fn empty_member_set_divides_to_nothing() {
+        let cfg = FleetConfig::new(LeasePolicy::FairShare, four_cloud_env());
+        assert_eq!(fair_shares(12, &[]), Vec::<u32>::new(), "no members, no spin");
+        assert_eq!(try_divide(&cfg, LeasePolicy::FairShare, &[]), Some(Vec::new()));
+        assert_eq!(try_divide(&cfg, LeasePolicy::Fifo, &[]), Some(Vec::new()));
+    }
+
+    #[test]
+    fn multijob_params_validate() {
+        assert!(MultiJobParams::default().validate().is_ok());
+        assert!(MultiJobParams { jobs: 0, ..Default::default() }.validate().is_err());
+        assert!(
+            MultiJobParams { mean_interarrival_s: -1.0, ..Default::default() }
+                .validate()
+                .is_err()
+        );
+        assert!(MultiJobParams { min_units: 0, ..Default::default() }.validate().is_err());
+    }
+}

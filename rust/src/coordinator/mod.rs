@@ -7,6 +7,11 @@
 //! launches the physical training plane (per-cloud serverless workflows)
 //! through the DES engine.
 //!
+//! One [`Coordinator::submit`] call runs a single job on a private WAN;
+//! the [`fleet`] submodule is the multi-job control plane — N concurrent
+//! workflows leasing slices of one shared inventory and contending on one
+//! shared fabric (see docs/ARCHITECTURE.md).
+//!
 //! ```no_run
 //! use cloudless::coordinator::{Coordinator, JobSpec, SchedulingMode};
 //! use cloudless::cloud::{CloudEnv, devices::Device};
@@ -17,6 +22,8 @@
 //! let report = coord.submit(&spec).unwrap();
 //! println!("{}", report.summary());
 //! ```
+
+pub mod fleet;
 
 use anyhow::Result;
 
@@ -40,11 +47,20 @@ pub struct JobSpec {
     pub env: CloudEnv,
     pub train: TrainConfig,
     pub scheduling: SchedulingMode,
+    /// Multi-job fleet parameters, when the config carries a
+    /// `"multijob"` block (consumed by `exp --id multijob`; a plain
+    /// `submit` ignores it).
+    pub multijob: Option<fleet::MultiJobParams>,
 }
 
 impl JobSpec {
     pub fn new(model: &str, env: CloudEnv) -> JobSpec {
-        JobSpec { env, train: TrainConfig::new(model), scheduling: SchedulingMode::Elastic }
+        JobSpec {
+            env,
+            train: TrainConfig::new(model),
+            scheduling: SchedulingMode::Elastic,
+            multijob: None,
+        }
     }
 }
 

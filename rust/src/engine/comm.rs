@@ -5,7 +5,8 @@
 //! baseline communication-bound in Fig 10).
 //!
 //! Generalization over the seed: a sync event ships one payload along
-//! *every* outgoing edge of the partition's [`SyncPlan`] (a single edge
+//! *every* outgoing edge of the partition's
+//! [`SyncPlan`](super::topology::SyncPlan) (a single edge
 //! for [`Ring`](super::topology::Ring), a fan-out for a hierarchical
 //! hub), and each model-averaging payload is applied at the receiver
 //! with its edge's Metropolis weight — compensated for sequential
@@ -104,10 +105,13 @@ pub(crate) fn perform_send(sim: &mut Sim<World>, w: &mut World, p: usize) {
     for e in &edges {
         let (from, to) = (w.parts[p].region, w.parts[e.to].region);
         let t = w.fabric.transfer(from, to, bytes, now);
+        w.wan_transfers += 1;
         if t.dropped {
             any_dropped = true;
             continue;
         }
+        w.wan_bytes += bytes;
+        w.parts[p].wire_time += t.done - t.start;
         // The gRPC send slot frees when this edge's payload lands AND its
         // ack returns (one edge-specific RTT; overrides may differ from
         // the uniform mesh latency).
@@ -167,11 +171,14 @@ pub(crate) fn barrier_exchange(
         for e in &edges {
             let (from, to) = (w.parts[p].region, w.parts[e.to].region);
             let t = w.fabric.transfer(from, to, bytes, now);
+            w.wan_transfers += 1;
             if t.dropped {
                 // Lossy link: this edge's payload is lost; the barrier
                 // still releases (the receiver keeps its local model).
                 continue;
             }
+            w.wan_bytes += bytes;
+            w.parts[p].wire_time += t.done - t.start;
             slot_busy = Some(slot_busy.map_or(t.done, |s: Time| s.max(t.done)));
             release_at = release_at.max(t.arrival);
             let incoming = w.plan.incoming_weight(e.to);

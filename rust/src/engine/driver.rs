@@ -17,10 +17,19 @@
 //! and WAN arrivals interleave in virtual-time order) before the push
 //! lands.
 //!
-//! Layering (see ROADMAP.md "Engine architecture"): this driver owns the
-//! event loop and barrier logic; each region's actor state lives in
+//! Layering (see docs/ARCHITECTURE.md): this driver owns the event loop
+//! and barrier logic; each region's actor state lives in
 //! [`super::partition`]; all WAN interaction goes through
 //! [`super::comm`]; who-talks-to-whom comes from [`super::topology`].
+//!
+//! Single-job vs multi-job: [`run_geo_training`] deploys one job on a
+//! private fabric and drains its simulator to completion. The multi-job
+//! coordinator (`crate::coordinator::fleet`) instead calls the split
+//! crate-internal entry points — `deploy_job` with a start offset and a
+//! [`SharedFabric`](crate::net::SharedFabric), stepping each job's
+//! simulator event-by-event on a merged clock, `apply_lease` when it
+//! re-divides the shared inventory, and `finalize_report` at job
+//! completion.
 
 use std::rc::Rc;
 
@@ -32,7 +41,7 @@ use crate::cloud::{Allocation, CloudEnv};
 use crate::data::{shard_by_fraction, Dataset};
 use crate::faas::workflow::{WorkflowDef, WorkflowInstance};
 use crate::faas::{autoscaler, FaasRuntime, FunctionKind, FunctionSpec};
-use crate::net::{Fabric, LinkSpec};
+use crate::net::{Fabric, LinkSpec, SharedFabric};
 use crate::ps::PsState;
 use crate::runtime::{ModelRuntime, PjrtRuntime};
 use crate::sched::elastic::{ElasticConfig, ElasticController, MonitorSample, ReplanDecision};
@@ -140,7 +149,11 @@ pub(crate) struct World {
     pub(crate) train_ds: Rc<Dataset>,
     pub(crate) eval_ds: Rc<Dataset>,
     pub(crate) parts: Vec<Partition>,
-    pub(crate) fabric: Fabric,
+    /// The WAN — possibly shared with other concurrently simulated jobs
+    /// (multi-job coordinator), in which case its statistics aggregate
+    /// every job's traffic and per-job accounting uses `wan_bytes` /
+    /// `wan_transfers` / `Partition::wire_time` below.
+    pub(crate) fabric: SharedFabric,
     pub(crate) faas: FaasRuntime,
     pub(crate) plan: SyncPlan,
     pub(crate) n_finished: usize,
@@ -163,6 +176,13 @@ pub(crate) struct World {
     /// Billing segments closed by mid-run re-plans (released/replaced
     /// allocations billed up to their release instant).
     pub(crate) closed_billing: Vec<BilledAllocation>,
+    /// This job's own WAN bytes/transfers (counted at send time — the
+    /// fabric's totals include every job sharing it).
+    pub(crate) wan_bytes: u64,
+    pub(crate) wan_transfers: u64,
+    /// Virtual time this job was admitted (its billing and report epoch;
+    /// 0 for single-job runs).
+    pub(crate) start_at: Time,
 }
 
 impl World {
@@ -174,7 +194,9 @@ impl World {
 /// Run one geo-distributed training job and return its report.
 ///
 /// `allocations` is the resourcing plan (greedy or elastic); data is
-/// sharded by the regions' `data_samples` ratio.
+/// sharded by the regions' `data_samples` ratio. The job gets a private
+/// WAN fabric built from `cfg.link` / `cfg.link_overrides`; multi-job
+/// fleets instead deploy through `deploy_job` with a shared fabric.
 pub fn run_geo_training(
     rt: &PjrtRuntime,
     env: &CloudEnv,
@@ -182,6 +204,39 @@ pub fn run_geo_training(
     cfg: TrainConfig,
 ) -> Result<TrainReport> {
     let wall0 = std::time::Instant::now();
+    let fabric = Fabric::full_mesh(cfg.seed, env.regions.len(), &cfg.link, &cfg.link_overrides);
+    let shared = SharedFabric::new(fabric);
+    let (mut sim, mut world) = deploy_job(rt, env, allocations, cfg, 0.0, shared)?;
+    let drained = sim.run_with_limit(&mut world, 200_000_000);
+    anyhow::ensure!(drained, "simulation exceeded event limit — runaway loop?");
+    let global_end = world.global_end.unwrap_or_else(|| sim.now());
+
+    // Final evaluation on partition 0's model.
+    let (final_loss, final_acc) = if world.cfg.skip_eval {
+        (f64::NAN, f64::NAN)
+    } else {
+        evaluate(&world, 0)
+    };
+    Ok(finalize_report(&world, global_end, final_loss, final_acc, wall0.elapsed().as_secs_f64()))
+}
+
+/// Deploy one training job onto `fabric` with its clocks offset to
+/// `start_at` (the virtual instant the control plane begins deploying —
+/// a fleet job's admission time, 0 for single-job runs), returning the
+/// job's simulator and world with every initial event scheduled. The
+/// caller owns stepping: drain to completion (single job) or merge
+/// event-by-event with other jobs' simulators on the shared clock
+/// (multi-job coordinator). Links are expected to be installed on
+/// `fabric` already when it is shared; `run_geo_training` installs them
+/// for the private case.
+pub(crate) fn deploy_job(
+    rt: &PjrtRuntime,
+    env: &CloudEnv,
+    allocations: Vec<Allocation>,
+    cfg: TrainConfig,
+    start_at: Time,
+    fabric: SharedFabric,
+) -> Result<(Sim<World>, World)> {
     anyhow::ensure!(allocations.len() == env.regions.len(), "one allocation per region");
     // Resumed runs must not silently mix sync strategies or topologies.
     if let Some(dir) = &cfg.checkpoint_dir {
@@ -204,23 +259,10 @@ pub fn run_geo_training(
     let fractions: Vec<f64> = env.regions.iter().map(|r| r.data_samples.max(1) as f64).collect();
     let shards = shard_by_fraction(cfg.n_train, &fractions, cfg.seed);
 
-    // ---- network ----
-    let mut fabric = Fabric::new(cfg.seed);
-    for a in 0..env.regions.len() {
-        for b in 0..env.regions.len() {
-            if a != b {
-                fabric.add_link(a, b, cfg.link.clone());
-            }
-        }
-    }
-    for (a, b, spec) in &cfg.link_overrides {
-        fabric.add_link(*a, *b, spec.clone());
-    }
-
     // ---- serverless control plane + training workflows ----
     let mut faas = FaasRuntime::new();
     let mut sim: Sim<World> = Sim::new();
-    let mut startup_done: Time = 0.0;
+    let mut startup_done: Time = start_at;
 
     // Control plane: scheduler -> global communicator (workflow on cloud 0).
     let mut control = WorkflowDef::new("control-plane");
@@ -234,9 +276,9 @@ pub fn run_geo_training(
     );
     let mut control_inst = WorkflowInstance::deploy(control, &mut faas)?;
     // scheduler function cold start + plan generation
-    let inv = faas.invoke("cloudless/scheduler", 0.0)?;
+    let inv = faas.invoke("cloudless/scheduler", start_at)?;
     faas.mark_ready(inv.replica);
-    let t_sched = inv.dispatch_delay + 0.05; // plan generation latency
+    let t_sched = start_at + inv.dispatch_delay + 0.05; // plan generation latency
     control_inst.start(sched_node);
     control_inst.complete(sched_node);
     // global communicator starts after the scheduler
@@ -318,9 +360,10 @@ pub fn run_geo_training(
             local_finish: None,
             barrier_arrived: false,
             barrier_entry: 0.0,
+            wire_time: 0.0,
             cold_start_time: workers_ready - t_comm_ready,
             worker_replicas,
-            alloc_since: 0.0,
+            alloc_since: start_at,
             mon_last_t: startup_done,
             mon_last_steps: 0,
             mon_last_waited: 0.0,
@@ -346,7 +389,7 @@ pub fn run_geo_training(
         None
     };
     let mut world = World {
-        plan: cfg.topology.plan(n_parts, &fabric),
+        plan: fabric.with(|f| cfg.topology.plan(n_parts, f)),
         cfg,
         model,
         train_ds: Rc::new(train_ds),
@@ -364,6 +407,9 @@ pub fn run_geo_training(
         replans: Vec::new(),
         mon_link_last: std::collections::BTreeMap::new(),
         closed_billing: Vec::new(),
+        wan_bytes: 0,
+        wan_transfers: 0,
+        start_at,
     };
 
     // Kick off every worker loop at training start.
@@ -376,18 +422,21 @@ pub fn run_geo_training(
         }
     }
 
-    // Inject resource/WAN churn on the virtual clock.
+    // Inject resource/WAN churn on the virtual clock. Churn times are
+    // job-relative (offset by the job's start); a LinkBandwidth event on a
+    // shared fabric mutates the link every sharing job sees — WAN weather
+    // is global, not per tenant.
     for ev in world.cfg.churn.clone() {
         match ev {
             ChurnEvent::PowerFactor { t, region, factor } => {
-                sim.schedule_at(t.max(startup_done), move |_, w: &mut World| {
+                sim.schedule_at((start_at + t).max(startup_done), move |_, w: &mut World| {
                     if region < w.parts.len() {
                         w.parts[region].power_factor = factor.max(1e-3);
                     }
                 });
             }
             ChurnEvent::LinkBandwidth { t, from, to, bps } => {
-                sim.schedule_at(t.max(0.0), move |_, w: &mut World| {
+                sim.schedule_at(start_at + t.max(0.0), move |_, w: &mut World| {
                     w.fabric.set_bandwidth(from, to, bps);
                 });
             }
@@ -407,25 +456,29 @@ pub fn run_geo_training(
         });
     }
 
-    let drained = sim.run_with_limit(&mut world, 200_000_000);
-    anyhow::ensure!(drained, "simulation exceeded event limit — runaway loop?");
-    let global_end = world.global_end.unwrap_or_else(|| sim.now());
+    Ok((sim, world))
+}
 
-    // Final evaluation on partition 0's model.
-    let (final_loss, final_acc) = if world.cfg.skip_eval {
-        (f64::NAN, f64::NAN)
-    } else {
-        evaluate(&world, 0)
-    };
-
-    // ---- report ----
+/// Build the job's report once its simulation reached `global_end`.
+/// Whole-job durations (`total_time`, `startup_time`) are measured from
+/// the job's own admission (`World::start_at`); per-partition instants
+/// stay on the shared virtual clock. WAN bytes/transfers and per-
+/// partition wire time come from the job's own counters — on a shared
+/// multi-job fabric the link statistics aggregate every tenant.
+pub(crate) fn finalize_report(
+    world: &World,
+    global_end: Time,
+    final_loss: f64,
+    final_acc: f64,
+    wall_seconds: f64,
+) -> TrainReport {
     let cost_model = CostModel::default();
     // Billing is segment-based: allocations released or replaced by a
     // mid-run re-plan were closed at their release instant
     // (`closed_billing`); whatever is still held bills to global end.
     let mut billed = world.closed_billing.clone();
     let mut partitions = Vec::new();
-    for (pi, part) in world.parts.iter().enumerate() {
+    for part in world.parts.iter() {
         for &(dev, n) in &part.alloc.units {
             billed.push(BilledAllocation {
                 device: dev,
@@ -433,21 +486,6 @@ pub fn run_geo_training(
                 held_s: global_end - part.alloc_since,
             });
         }
-        // Outgoing-link serialization time (the on-the-wire share of the
-        // paper's "communication time on WAN"), summed over this
-        // partition's planned edges.
-        let wire_time: Time = world
-            .plan
-            .outgoing(pi)
-            .iter()
-            .map(|e| {
-                world
-                    .fabric
-                    .stats(part.region, world.parts[e.to].region)
-                    .map(|s| s.busy_time)
-                    .unwrap_or(0.0)
-            })
-            .sum();
         partitions.push(PartitionReport {
             region: part.region_name.clone(),
             units: part.alloc.total_units(),
@@ -457,43 +495,36 @@ pub fn run_geo_training(
             local_finish: part.local_finish.unwrap_or(global_end),
             waiting: global_end - part.local_finish.unwrap_or(global_end),
             comm_wait: part.slot.waited,
-            wan_time: part.slot.waited + wire_time,
+            // comm_wait + this partition's own outgoing serialization
+            // time (the on-the-wire share of the paper's "communication
+            // time on WAN").
+            wan_time: part.slot.waited + part.wire_time,
             syncs_sent: part.ps.sends,
             syncs_received: part.ps.recvs,
             mean_staleness: part.ps.mean_staleness(),
             cold_start_time: part.cold_start_time,
         });
     }
-    let wan_bytes = world.fabric.total_wan_bytes();
-    let mut wan_transfers: u64 = 0;
-    for p in 0..n_parts {
-        for e in world.plan.outgoing(p) {
-            if let Some(s) = world.fabric.stats(world.parts[p].region, world.parts[e.to].region) {
-                wan_transfers += s.transfers;
-            }
-        }
-    }
-    let report = TrainReport {
+    TrainReport {
         model: world.cfg.model.clone(),
         strategy: world.cfg.sync.strategy.name().to_string(),
         topology: world.cfg.topology.name().to_string(),
         sync_freq: world.cfg.sync.freq,
-        total_time: global_end,
-        startup_time: world.train_start,
+        total_time: global_end - world.start_at,
+        startup_time: world.train_start - world.start_at,
         partitions,
         curve: world.curve.clone(),
         final_loss,
         final_accuracy: final_acc,
-        wan_bytes,
-        wan_transfers,
-        cost: cost_model.total(&billed, wan_bytes),
+        wan_bytes: world.wan_bytes,
+        wan_transfers: world.wan_transfers,
+        cost: cost_model.total(&billed, world.wan_bytes),
         compute_cost: billed.iter().map(|a| cost_model.compute_cost(a)).sum(),
-        wan_cost: cost_model.wan_cost(wan_bytes),
-        wall_seconds: wall0.elapsed().as_secs_f64(),
+        wan_cost: cost_model.wan_cost(world.wan_bytes),
+        wall_seconds,
         pjrt_executions: world.model.exec_counts.get(),
         replan_events: world.replans.clone(),
-    };
-    Ok(report)
+    }
 }
 
 // ---------------------------------------------------------------- events
@@ -766,62 +797,7 @@ fn apply_replan(sim: &mut Sim<World>, w: &mut World, dec: &ReplanDecision) {
     let now = sim.now();
     let mut load_changed = false;
     if dec.plan_delta > 0.0 {
-        for p in 0..w.parts.len() {
-            if w.parts[p].gate == Gate::Finished {
-                continue;
-            }
-            let new_alloc = dec.allocations[p].clone();
-            if new_alloc.units == w.parts[p].alloc.units {
-                continue;
-            }
-            load_changed = true;
-            // Close the billing segment of the outgoing allocation.
-            let since = w.parts[p].alloc_since;
-            for &(dev, n) in &w.parts[p].alloc.units {
-                w.closed_billing.push(BilledAllocation {
-                    device: dev,
-                    units: n,
-                    held_s: now - since,
-                });
-            }
-            let is_gpu = new_alloc
-                .units
-                .first()
-                .map(|(d, _)| d.info().kind == DeviceKind::Gpu)
-                .unwrap_or(false);
-            let workers =
-                calib::worker_count(new_alloc.total_units(), is_gpu, w.cfg.worker_cores);
-            // Resize the serverless pool (spawned replicas cold-start;
-            // released ones terminate now and stop billing).
-            let key = w.worker_keys[p].clone();
-            let (spawned, live) = autoscaler::resize_pool(&mut w.faas, &key, workers as u32, now)
-                .expect("worker pool registered at deploy time");
-            let mut ready_at = now;
-            for id in &spawned {
-                if let Some(r) = w.faas.replica(*id) {
-                    ready_at = ready_at.max(r.ready_at);
-                }
-                w.faas.mark_ready(*id);
-            }
-            let part = &mut w.parts[p];
-            part.worker_replicas = live;
-            part.workers = workers;
-            let w_power = calib::worker_power(new_alloc.power(), workers);
-            part.t_iter = calib::iter_time(w.base_step, w_power);
-            part.alloc = new_alloc;
-            part.alloc_since = now;
-            // Retime the monitoring window: the old expectation no
-            // longer applies to the new pool.
-            part.mon_last_t = now;
-            part.mon_last_steps = part.steps_completed;
-            part.mon_last_waited = part.slot.waited;
-            if !spawned.is_empty() {
-                // Newly-spawned workers join the loop after cold start.
-                sim.schedule_at(ready_at, move |sim, w: &mut World| {
-                    kick_idle_workers(sim, w, p);
-                });
-            }
-        }
+        load_changed = resize_to_allocations(sim, w, &dec.allocations);
     }
     let mut topology_replanned = false;
     if dec.replan_topology {
@@ -851,6 +827,111 @@ fn apply_replan(sim: &mut Sim<World>, w: &mut World, dec: &ReplanDecision) {
         units: w.parts.iter().map(|p| p.alloc.total_units()).collect(),
         topology_replanned,
     });
+}
+
+/// Resize every changed partition's worker pool to `allocations` through
+/// the FaaS autoscaler: close the outgoing allocation's billing segment,
+/// spawn/terminate replicas (spawned ones cold-start before joining the
+/// loop), retime iterations, and re-open the monitoring window. Finished
+/// partitions and unchanged allocations are skipped; returns whether
+/// anything moved. Shared by the job's own elastic re-plans and the
+/// multi-job coordinator's lease re-divisions (`apply_lease`).
+pub(crate) fn resize_to_allocations(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    allocations: &[Allocation],
+) -> bool {
+    let now = sim.now();
+    let mut changed = false;
+    for p in 0..w.parts.len() {
+        if w.parts[p].gate == Gate::Finished {
+            continue;
+        }
+        let new_alloc = allocations[p].clone();
+        if new_alloc.units == w.parts[p].alloc.units {
+            continue;
+        }
+        changed = true;
+        // Close the billing segment of the outgoing allocation.
+        let since = w.parts[p].alloc_since;
+        for &(dev, n) in &w.parts[p].alloc.units {
+            w.closed_billing.push(BilledAllocation {
+                device: dev,
+                units: n,
+                held_s: now - since,
+            });
+        }
+        let is_gpu = new_alloc
+            .units
+            .first()
+            .map(|(d, _)| d.info().kind == DeviceKind::Gpu)
+            .unwrap_or(false);
+        let workers = calib::worker_count(new_alloc.total_units(), is_gpu, w.cfg.worker_cores);
+        // Resize the serverless pool (spawned replicas cold-start;
+        // released ones terminate now and stop billing).
+        let key = w.worker_keys[p].clone();
+        let (spawned, live) = autoscaler::resize_pool(&mut w.faas, &key, workers as u32, now)
+            .expect("worker pool registered at deploy time");
+        let mut ready_at = now;
+        for id in &spawned {
+            if let Some(r) = w.faas.replica(*id) {
+                ready_at = ready_at.max(r.ready_at);
+            }
+            w.faas.mark_ready(*id);
+        }
+        let part = &mut w.parts[p];
+        part.worker_replicas = live;
+        part.workers = workers;
+        let w_power = calib::worker_power(new_alloc.power(), workers);
+        part.t_iter = calib::iter_time(w.base_step, w_power);
+        part.alloc = new_alloc;
+        part.alloc_since = now;
+        // Retime the monitoring window: the old expectation no
+        // longer applies to the new pool.
+        part.mon_last_t = now;
+        part.mon_last_steps = part.steps_completed;
+        part.mon_last_waited = part.slot.waited;
+        if !spawned.is_empty() {
+            // Newly-spawned workers join the loop after cold start.
+            sim.schedule_at(ready_at, move |sim, w: &mut World| {
+                kick_idle_workers(sim, w, p);
+            });
+        }
+    }
+    changed
+}
+
+/// Apply a multi-job coordinator lease re-division to this running job:
+/// resize its worker pools to the new within-lease `allocations`
+/// (preemption-by-resize — a shrunk job keeps running, smaller) and
+/// re-base its elastic controller on the leased inventory so subsequent
+/// self re-plans stay inside the lease. Records a `"lease"` re-plan event
+/// (straggler is carried from the job's own within-lease plan).
+pub(crate) fn apply_lease(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    lease_env: &CloudEnv,
+    allocations: &[Allocation],
+    straggler: usize,
+) {
+    if w.global_end.is_some() {
+        return; // the job finished while the lease event was in flight
+    }
+    let old_units: Vec<u32> = w.parts.iter().map(|p| p.alloc.total_units()).collect();
+    let changed = resize_to_allocations(sim, w, allocations);
+    if let Some(ctrl) = w.controller.as_mut() {
+        ctrl.reset_lease(lease_env.clone(), allocations);
+    }
+    if changed {
+        w.replans.push(ReplanEvent {
+            t: sim.now(),
+            cause: "lease".to_string(),
+            plan_delta: crate::sched::elastic::plan_delta(&old_units, allocations),
+            straggler,
+            units: w.parts.iter().map(|p| p.alloc.total_units()).collect(),
+            topology_replanned: false,
+        });
+    }
 }
 
 /// Start worker loops on any idle pool slots (used after an elastic
@@ -897,7 +978,7 @@ fn checkpoint_all(w: &World, dir: &std::path::Path) {
 
 /// Evaluate partition `p`'s model over the eval set (real compute;
 /// measurement only, takes no virtual time).
-fn evaluate(w: &World, p: usize) -> (f64, f64) {
+pub(crate) fn evaluate(w: &World, p: usize) -> (f64, f64) {
     let meta = &w.model.meta;
     let b = meta.batch_size;
     let n = w.eval_ds.n;

@@ -12,7 +12,7 @@
 //!   │          send-slot backpressure, delivery
 //!   ▼
 //! topology   pluggable N-cloud sync shapes with   (paper §III.C + GeoMX
-//!   │          in-degree-derived avg weights        HiPS, arXiv 2404.11352)
+//!   │          Metropolis per-edge avg weights      HiPS, arXiv 2404.11352)
 //!   ▼
 //! net::Fabric  link model (serialization, FIFO, fluctuation)
 //! ```

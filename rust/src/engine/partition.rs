@@ -59,6 +59,11 @@ pub struct Partition {
     pub in_flight: usize,
     /// The PS communicator's send slot (backpressure state).
     pub slot: SendSlot,
+    /// Accumulated on-the-wire serialization seconds of this partition's
+    /// own outgoing WAN payloads. Counted per transfer at send time — a
+    /// shared multi-job fabric's link statistics aggregate every job's
+    /// traffic, so per-job reports must not read them.
+    pub wire_time: Time,
     pub local_finish: Option<Time>,
     pub barrier_arrived: bool,
     pub barrier_entry: Time,
@@ -117,6 +122,7 @@ mod tests {
             gate: Gate::Running,
             in_flight: 0,
             slot: SendSlot::default(),
+            wire_time: 0.0,
             local_finish: None,
             barrier_arrived: false,
             barrier_entry: 0.0,

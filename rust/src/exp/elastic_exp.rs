@@ -17,44 +17,14 @@
 //! Reported: end-to-end time, post-churn throughput recovery, waiting
 //! time, compute cost, and the recorded `TrainReport.replan_events`.
 
-use crate::cloud::devices::Device;
 use crate::cloud::CloudEnv;
 use crate::coordinator::Coordinator;
 use crate::engine::{ChurnEvent, TopologyKind};
-use crate::exp::{print_table, save_result, Scale};
-use crate::net::LinkSpec;
+use crate::exp::{four_cloud_env, hetero_overrides, print_table, save_result, Scale};
 use crate::sched::elastic::ElasticConfig;
 use crate::sync::{Strategy, SyncConfig};
 use crate::train::{calib, TrainConfig, TrainReport};
 use crate::util::json::Json;
-
-fn wan_at(mbps: f64) -> LinkSpec {
-    LinkSpec { bandwidth_bps: mbps * 1e6, ..LinkSpec::wan_100mbps() }
-}
-
-/// The 4-cloud testbed (same shape as the topology experiment): Shanghai
-/// is the best-connected region; Beijing is a cut-down non-straggler that
-/// the churn event will slow to 35% of catalog power.
-fn four_cloud_env(n_train: usize) -> CloudEnv {
-    let per = n_train / 4;
-    CloudEnv::multi_region(vec![
-        ("Shanghai", Device::CascadeLake, 12, per),
-        ("Chongqing", Device::Skylake, 12, per),
-        ("Beijing", Device::Skylake, 12, per),
-        ("Guangzhou", Device::IceLake, 12, n_train - 3 * per),
-    ])
-}
-
-fn hetero_overrides() -> Vec<(usize, usize, LinkSpec)> {
-    let mut ov = Vec::new();
-    for r in 1..4usize {
-        ov.push((0, r, wan_at(300.0)));
-        ov.push((r, 0, wan_at(300.0)));
-    }
-    ov.push((2, 3, wan_at(40.0)));
-    ov.push((3, 2, wan_at(40.0)));
-    ov
-}
 
 /// Rough virtual runtime estimate of the nominal run — places the churn
 /// injection at ~30% and sizes the control interval, so the experiment

@@ -18,13 +18,18 @@
 //!
 //! Beyond the paper: `topology` compares the engine's N-cloud sync
 //! topologies (ring / hierarchical / bandwidth-tree) on a 4-cloud WAN
-//! (module `topology_exp`), and `elastic` pits the static plan against
-//! the live re-scheduling control loop under injected resource churn and
-//! WAN fluctuation (module `elastic_exp`; `scheduling` aliases `table4`).
+//! (module `topology_exp`); `elastic` pits the static plan against the
+//! live re-scheduling control loop under injected resource churn and WAN
+//! fluctuation (module `elastic_exp`; `scheduling` aliases `table4`);
+//! and `multijob` runs a Poisson trace of concurrent jobs over one
+//! shared inventory, comparing FIFO vs fair-share vs cost-aware leasing
+//! (module `multijob_exp`). The full id → figure/config/bench mapping
+//! lives in docs/EXPERIMENTS.md.
 
 pub mod ablations;
 pub mod elastic_exp;
 pub mod motivation;
+pub mod multijob_exp;
 pub mod scheduling;
 pub mod sync_exp;
 pub mod topology_exp;
@@ -32,7 +37,43 @@ pub mod usability;
 
 use std::path::PathBuf;
 
+use crate::cloud::devices::Device;
+use crate::cloud::CloudEnv;
+use crate::net::LinkSpec;
 use crate::util::json::Json;
+
+/// The paper's WAN profile at a different nominal bandwidth.
+pub(crate) fn wan_at(mbps: f64) -> LinkSpec {
+    LinkSpec { bandwidth_bps: mbps * 1e6, ..LinkSpec::wan_100mbps() }
+}
+
+/// The canonical 4-cloud heterogeneous testbed shared by the topology,
+/// elastic, and multijob experiments: Shanghai is the best-connected
+/// region, the Beijing–Guangzhou long haul the thinnest (see
+/// [`hetero_overrides`]); `n_train` samples split evenly, remainder to
+/// Guangzhou.
+pub(crate) fn four_cloud_env(n_train: usize) -> CloudEnv {
+    let per = n_train / 4;
+    CloudEnv::multi_region(vec![
+        ("Shanghai", Device::CascadeLake, 12, per),
+        ("Chongqing", Device::Skylake, 12, per),
+        ("Beijing", Device::Skylake, 12, per),
+        ("Guangzhou", Device::IceLake, 12, n_train - 3 * per),
+    ])
+}
+
+/// The testbed's link overrides: fat 300 Mbps pipes to/from the Shanghai
+/// hub, a congested 40 Mbps Beijing↔Guangzhou long haul.
+pub(crate) fn hetero_overrides() -> Vec<(usize, usize, LinkSpec)> {
+    let mut ov = Vec::new();
+    for r in 1..4usize {
+        ov.push((0, r, wan_at(300.0)));
+        ov.push((r, 0, wan_at(300.0)));
+    }
+    ov.push((2, 3, wan_at(40.0)));
+    ov.push((3, 2, wan_at(40.0)));
+    ov
+}
 
 /// Experiment scale: quick (CI-sized) or full (paper-sized epochs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

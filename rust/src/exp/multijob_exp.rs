@@ -1,0 +1,136 @@
+//! Multi-job scheduling policies under contention — beyond the paper's
+//! single workflow.
+//!
+//! A Poisson trace of identical training jobs arrives at a 4-cloud
+//! heterogeneous WAN (the topology/elastic testbed). All jobs share one
+//! inventory and one fabric; the fleet coordinator
+//! (`coordinator::fleet`) arbitrates:
+//!
+//! - **fifo** — head-of-line batch scheduling: each job runs at its full
+//!   solo plan, later arrivals queue. Fast for the first job, brutal for
+//!   the last.
+//! - **fair-share** — every arrival re-divides each region's units
+//!   evenly (weighted) across active jobs, shrinking running jobs
+//!   through autoscaler resizes.
+//! - **cost-aware** — fair shares trimmed to each job's Algorithm-1 plan
+//!   within the share, so capacity the plan would idle admits queued
+//!   jobs earlier.
+//!
+//! Reported per policy: fleet makespan, mean job slowdown (vs the
+//! analytic solo estimate), Jain's fairness index over job progress
+//! rates, queueing, total cost, and lease re-division counts.
+
+use crate::coordinator::fleet::{
+    poisson_arrivals, run_fleet, solo_estimate_s, FleetConfig, FleetReport, JobRequest,
+    LeasePolicy, MultiJobParams,
+};
+use crate::coordinator::Coordinator;
+use crate::exp::{four_cloud_env, hetero_overrides, print_table, save_result, Scale};
+use crate::sched::elastic::ElasticConfig;
+use crate::sync::{Strategy, SyncConfig};
+use crate::train::TrainConfig;
+use crate::util::json::Json;
+
+fn policies_of(params: &MultiJobParams) -> Vec<LeasePolicy> {
+    match params.policy {
+        Some(p) => vec![p],
+        None => vec![LeasePolicy::Fifo, LeasePolicy::FairShare, LeasePolicy::CostAware],
+    }
+}
+
+/// `exp --id multijob`: concurrent training workflows over one shared
+/// 4-cloud inventory, FIFO vs fair-share vs cost-aware leasing on a
+/// Poisson job-arrival trace.
+pub fn multijob_compare(
+    coord: &Coordinator,
+    scale: Scale,
+    model: &str,
+    params: &MultiJobParams,
+) -> Json {
+    let (n_train, n_eval) = crate::data::default_sizes(model);
+    let env = four_cloud_env(n_train);
+    let batch_size = coord
+        .runtime()
+        .load_model(model)
+        .unwrap_or_else(|e| panic!("loading {model}: {e}"))
+        .meta
+        .batch_size;
+
+    let mut template = TrainConfig::new(model);
+    template.epochs = scale.epochs(model).min(4);
+    template.n_train = n_train;
+    template.n_eval = n_eval;
+    template.sync = SyncConfig::new(Strategy::AsgdGa, 8);
+    template.skip_eval = true;
+    let est = solo_estimate_s(&template, &env, batch_size).max(1.0);
+    // Each job keeps its own elastic control loop re-planning within its
+    // lease (the two-level control story).
+    template.elastic =
+        ElasticConfig { enabled: true, interval_s: (est / 10.0).max(0.25), ..Default::default() };
+
+    // Poisson arrivals dense enough that the fleet actually overlaps.
+    let mean = if params.mean_interarrival_s > 0.0 {
+        params.mean_interarrival_s
+    } else {
+        (est / 3.0).max(0.5)
+    };
+    let arrivals = poisson_arrivals(params.jobs, mean, 1234);
+    let requests: Vec<JobRequest> = arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, &at)| {
+            let mut train = template.clone();
+            train.seed = template.seed ^ ((i as u64 + 1) << 8);
+            JobRequest::new(&format!("job{i}"), at, train)
+        })
+        .collect();
+
+    println!(
+        "Multi-job control plane: {} x {model} on a shared 4-cloud WAN (mean gap {:.1}s, solo est {:.0}s)",
+        params.jobs, mean, est
+    );
+
+    let mut reports: Vec<FleetReport> = Vec::new();
+    for policy in policies_of(params) {
+        let mut cfg = FleetConfig::new(policy, env.clone());
+        cfg.link_overrides = hetero_overrides();
+        cfg.min_units = params.min_units;
+        let report = run_fleet(coord.runtime(), &cfg, &requests)
+            .unwrap_or_else(|e| panic!("{} fleet: {e}", policy.name()));
+        reports.push(report);
+    }
+
+    let rows: Vec<Vec<String>> = reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.policy.clone(),
+                format!("{:.0}s", r.makespan),
+                format!("{:.2}x", r.mean_slowdown),
+                format!("{:.3}", r.jain_fairness),
+                format!("{:.0}s", r.total_queue_wait()),
+                format!("${:.4}", r.total_cost),
+                format!("{:.1}MB", r.wan_bytes as f64 / 1e6),
+                format!("{}", r.lease_events),
+            ]
+        })
+        .collect();
+    print_table(
+        &["policy", "makespan", "slowdown", "jain", "queue", "cost", "wan", "leases"],
+        &rows,
+    );
+    for r in &reports {
+        println!("  {}", r.summary());
+    }
+
+    let doc = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("jobs", Json::num(params.jobs as f64)),
+        ("mean_interarrival_s", Json::num(mean)),
+        ("solo_estimate_s", Json::num(est)),
+        ("arrivals", Json::arr(arrivals.iter().map(|a| Json::num(*a)))),
+        ("policies", Json::arr(reports.iter().map(|r| r.to_json()))),
+    ]);
+    save_result("multijob", &doc);
+    doc
+}

@@ -18,41 +18,11 @@ use crate::cloud::devices::Device;
 use crate::cloud::CloudEnv;
 use crate::coordinator::Coordinator;
 use crate::engine::TopologyKind;
-use crate::exp::{print_table, save_result, Scale};
+use crate::exp::{four_cloud_env, hetero_overrides, print_table, save_result, Scale};
 use crate::net::LinkSpec;
 use crate::sync::{Strategy, SyncConfig};
 use crate::train::{TrainConfig, TrainReport};
 use crate::util::json::Json;
-
-fn wan_at(mbps: f64) -> LinkSpec {
-    LinkSpec { bandwidth_bps: mbps * 1e6, ..LinkSpec::wan_100mbps() }
-}
-
-/// The 4-cloud testbed: Shanghai is the best-connected region (300 Mbps
-/// to everyone); Beijing–Guangzhou is a congested 40 Mbps long haul the
-/// bandwidth-aware topologies should route around.
-fn four_cloud_env(n_train: usize) -> CloudEnv {
-    let per = n_train / 4;
-    CloudEnv::multi_region(vec![
-        ("Shanghai", Device::CascadeLake, 12, per),
-        ("Chongqing", Device::Skylake, 12, per),
-        ("Beijing", Device::Skylake, 12, per),
-        ("Guangzhou", Device::IceLake, 12, n_train - 3 * per),
-    ])
-}
-
-fn hetero_overrides() -> Vec<(usize, usize, LinkSpec)> {
-    let mut ov = Vec::new();
-    // Fat pipes to/from the hub region 0.
-    for r in 1..4usize {
-        ov.push((0, r, wan_at(300.0)));
-        ov.push((r, 0, wan_at(300.0)));
-    }
-    // Congested Beijing<->Guangzhou long haul.
-    ov.push((2, 3, wan_at(40.0)));
-    ov.push((3, 2, wan_at(40.0)));
-    ov
-}
 
 fn run_one(
     coord: &Coordinator,

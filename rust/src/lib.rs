@@ -6,11 +6,15 @@
 //!
 //! - **L3 (this crate)** — the serverless geo-distributed training
 //!   coordinator: control plane (elastic scheduler + global communicator
-//!   addressing), the layered training [`engine`] (driver → partition →
-//!   comm → topology; per-cloud PS workflows with pluggable N-cloud sync
-//!   topologies), WAN synchronization strategies (ASGD / ASGD-GA / AMA /
-//!   SMA), and every substrate they need (FaaS runtime, WAN fabric,
-//!   cloud/device/cost models, discrete-event simulator).
+//!   addressing), the multi-job fleet coordinator
+//!   ([`coordinator::fleet`] — N concurrent workflows leasing slices of
+//!   one shared inventory, contending on one shared WAN), the layered
+//!   training [`engine`] (driver → partition → comm → topology;
+//!   per-cloud PS workflows with pluggable N-cloud sync topologies), WAN
+//!   synchronization strategies (ASGD / ASGD-GA / AMA / SMA) with
+//!   optional gradient compression, and every substrate they need (FaaS
+//!   runtime, WAN fabric, cloud/device/cost models, discrete-event
+//!   simulator).
 //! - **L2** — JAX models (LeNet / ResNet-lite / DeepFM / Transformer),
 //!   AOT-lowered to HLO text under `artifacts/` (`make artifacts`).
 //! - **L1** — Pallas kernels (tiled matmul, fused bias+act, PS vector
@@ -18,8 +22,15 @@
 //!
 //! Python never runs on the training path: the `runtime` module loads the
 //! HLO artifacts through PJRT (`xla` crate) and executes them natively.
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! paper-vs-measured record.
+//!
+//! Repository documentation (paths relative to the repo root):
+//!
+//! - `docs/ARCHITECTURE.md` — the layer diagram and the data flow
+//!   between the elastic control loop, the training driver, and the
+//!   multi-job coordinator;
+//! - `docs/EXPERIMENTS.md` — every `cloudless exp --id` mapped to its
+//!   paper figure/table, config file, and bench target;
+//! - `docs/CONFIG.md` — the full config-key and CLI-flag reference.
 
 pub mod cloud;
 pub mod config;

@@ -6,18 +6,23 @@
 //!                   [--scheduling elastic|greedy] [--seed 42] [--json]
 //! cloudless plan    [--config <file>]          print the elastic plan
 //! cloudless exp     --id <table1|fig2|fig3|fig7|table4|fig8|fig9|fig10|
-//!                         fig11|topology|ablations|all> [--full]
+//!                         fig11|topology|elastic|multijob|ablations|all>
+//!                   [--full]
 //! cloudless devices                            print the device catalog
 //! cloudless check                              verify artifacts load + run
 //! ```
+//!
+//! Every flag and config key is documented in docs/CONFIG.md; the
+//! experiment ids map to paper figures in docs/EXPERIMENTS.md.
 
 use cloudless::cloud::devices::Device;
 use cloudless::cloud::CloudEnv;
 use cloudless::config;
+use cloudless::coordinator::fleet::{LeasePolicy, MultiJobParams};
 use cloudless::coordinator::{Coordinator, JobSpec, SchedulingMode};
 use cloudless::engine::TopologyKind;
 use cloudless::exp::{self, Scale};
-use cloudless::sync::{Strategy, SyncConfig};
+use cloudless::sync::{Compression, Strategy, SyncConfig};
 use cloudless::util::args::Args;
 
 fn artifacts_dir() -> std::path::PathBuf {
@@ -33,10 +38,11 @@ USAGE:
   cloudless train   [--config f] [--model m] [--strategy s] [--topology t]
                     [--freq n] [--epochs n] [--scheduling elastic|greedy]
                     [--seed n] [--n-train n] [--n-eval n] [--json]
+                    [--compression none|topk[:r]|q8]
                     [--elastic] [--replan-interval s] [--replan-hysteresis x]
                     [--bw-threshold x]
   cloudless plan    [--config f]
-  cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|ablations|compression|all> [--full] [--model m]
+  cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|multijob|ablations|compression|all> [--full] [--model m]
   cloudless devices
   cloudless check
 
@@ -46,7 +52,11 @@ USAGE:
   re-plan -> apply): --replan-interval (virtual s between samples),
   --replan-hysteresis (min relative plan movement to act), --bw-threshold
   (relative delivered-bandwidth divergence that re-plans the topology).
+  exp --id multijob: [--config f (multijob block)] [--jobs n]
+  [--mean-interarrival s] [--policy fifo|fair-share|cost-aware|all]
+  runs concurrent jobs over one shared inventory (docs/EXPERIMENTS.md).
   The model name \"synthetic\" runs the built-in artifact-free model.
+  Full flag/key reference: docs/CONFIG.md.
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -83,7 +93,8 @@ fn job_from_args(args: &Args) -> anyhow::Result<JobSpec> {
     spec.train.n_eval = args.usize("n-eval", n_eval_default);
     spec.train.lr = args.f64("lr", spec.train.lr as f64) as f32;
     let strategy = args.parsed("strategy", "asgd-ga", Strategy::from_name)?;
-    spec.train.sync = SyncConfig::new(strategy, args.usize("freq", 4) as u32);
+    spec.train.sync = SyncConfig::new(strategy, args.usize("freq", 4) as u32)
+        .with_compression(args.parsed("compression", "none", Compression::from_name)?);
     spec.train.topology = args.parsed("topology", "ring", TopologyKind::from_name)?;
     spec.scheduling = match args.get_or("scheduling", "elastic") {
         "greedy" => SchedulingMode::Greedy,
@@ -140,6 +151,28 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Multi-job fleet knobs for `exp --id multijob`: a `--config` file's
+/// `"multijob"` block seeds the defaults, CLI flags override.
+fn multijob_params(args: &Args) -> anyhow::Result<MultiJobParams> {
+    let mut params = if let Some(path) = args.get("config") {
+        config::load_job(path)?.multijob.unwrap_or_default()
+    } else {
+        MultiJobParams::default()
+    };
+    params.jobs = args.usize("jobs", params.jobs);
+    params.mean_interarrival_s = args.f64("mean-interarrival", params.mean_interarrival_s);
+    if let Some(p) = args.get("policy") {
+        params.policy = match p {
+            "all" => None,
+            name => Some(
+                LeasePolicy::from_name(name).map_err(|e| anyhow::anyhow!("--policy: {e}"))?,
+            ),
+        };
+    }
+    params.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(params)
+}
+
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     let id = args.get_or("id", "all").to_string();
     let scale = Scale::from_flag(args.flag("full"));
@@ -180,6 +213,10 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             "topology" => {
                 exp::topology_exp::topology_compare(coord, scale);
             }
+            "multijob" => {
+                let params = multijob_params(args)?;
+                exp::multijob_exp::multijob_compare(coord, scale, &exp_model, &params);
+            }
             "ablations" => exp::ablations::all(coord, scale),
             "compression" => {
                 exp::ablations::compression_vs_frequency(coord, scale);
@@ -191,7 +228,7 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     if id == "all" {
         let ids = [
             "table1", "fig3", "fig2", "table4", "fig7", "fig9", "fig10", "fig11", "topology",
-            "elastic",
+            "elastic", "multijob",
         ];
         for id in ids {
             println!("\n=== {id} ===");

@@ -12,7 +12,9 @@
 //! All stochasticity comes from a per-link PCG stream seeded from the
 //! experiment seed, so runs replay deterministically.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::rc::Rc;
 
 use crate::sim::Time;
 use crate::util::rng::Pcg32;
@@ -159,6 +161,29 @@ impl Fabric {
         self.add_link(b, a, spec);
     }
 
+    /// The standard WAN build: a full directed mesh over `n` regions at
+    /// `link`, then per-pair `overrides` — what both the single-job
+    /// driver and the multi-job fleet install.
+    pub fn full_mesh(
+        seed: u64,
+        n: usize,
+        link: &LinkSpec,
+        overrides: &[(RegionId, RegionId, LinkSpec)],
+    ) -> Fabric {
+        let mut f = Fabric::new(seed);
+        for a in 0..n {
+            for b in 0..n {
+                if a != b {
+                    f.add_link(a, b, link.clone());
+                }
+            }
+        }
+        for (a, b, spec) in overrides {
+            f.add_link(*a, *b, spec.clone());
+        }
+        f
+    }
+
     /// Inject an outage window on a directed link.
     pub fn add_outage(&mut self, from: RegionId, to: RegionId, from_t: Time, to_t: Time) {
         if let Some(l) = self.links.get_mut(&(from, to)) {
@@ -261,6 +286,66 @@ impl Fabric {
             .filter(|((a, b), _)| a != b)
             .map(|(_, l)| l.bytes)
             .sum()
+    }
+}
+
+/// A cloneable handle to one [`Fabric`] shared by several concurrently
+/// simulated training jobs (the multi-job coordinator's WAN): every clone
+/// sees the same FIFO queues, fluctuation streams, and statistics, so a
+/// transfer issued by one job delays the next job's payload on the same
+/// directed link — real cross-job WAN contention, not N private copies.
+///
+/// The API mirrors the [`Fabric`] methods the engine uses; interior
+/// mutability keeps call sites identical whether the fabric is private
+/// (single-job `run_geo_training`) or shared (a job fleet).
+#[derive(Clone)]
+pub struct SharedFabric(Rc<RefCell<Fabric>>);
+
+impl SharedFabric {
+    pub fn new(fabric: Fabric) -> SharedFabric {
+        SharedFabric(Rc::new(RefCell::new(fabric)))
+    }
+
+    /// Install a directed link (see [`Fabric::add_link`]).
+    pub fn add_link(&self, from: RegionId, to: RegionId, spec: LinkSpec) {
+        self.0.borrow_mut().add_link(from, to, spec)
+    }
+
+    /// Schedule a transfer (see [`Fabric::transfer`]).
+    pub fn transfer(&self, from: RegionId, to: RegionId, bytes: u64, now: Time) -> Transfer {
+        self.0.borrow_mut().transfer(from, to, bytes, now)
+    }
+
+    /// Mutate a directed link's nominal bandwidth mid-run.
+    pub fn set_bandwidth(&self, from: RegionId, to: RegionId, bps: f64) {
+        self.0.borrow_mut().set_bandwidth(from, to, bps)
+    }
+
+    /// Nominal bandwidth of an installed directed link.
+    pub fn link_bandwidth(&self, from: RegionId, to: RegionId) -> Option<f64> {
+        self.0.borrow().link_bandwidth(from, to)
+    }
+
+    /// One-way propagation latency of an installed directed link.
+    pub fn link_latency(&self, from: RegionId, to: RegionId) -> Option<f64> {
+        self.0.borrow().link_latency(from, to)
+    }
+
+    /// Per-link statistics snapshot (aggregated over every sharing job).
+    pub fn stats(&self, from: RegionId, to: RegionId) -> Option<LinkStats> {
+        self.0.borrow().stats(from, to)
+    }
+
+    /// Total bytes carried on all inter-region links, across every job
+    /// sharing this fabric.
+    pub fn total_wan_bytes(&self) -> u64 {
+        self.0.borrow().total_wan_bytes()
+    }
+
+    /// Run a closure against the underlying [`Fabric`] (planning reads
+    /// that take `&Fabric`, e.g. `engine::topology` plans).
+    pub fn with<R>(&self, f: impl FnOnce(&Fabric) -> R) -> R {
+        f(&self.0.borrow())
     }
 }
 
@@ -375,6 +460,42 @@ mod tests {
         assert!((fast.done - 1.0).abs() < 1e-9);
         assert!((slow.done - 20.0).abs() < 1e-9, "{slow:?}");
         assert_eq!(f.link_bandwidth(0, 1), Some(10e6));
+    }
+
+    #[test]
+    fn full_mesh_installs_every_directed_pair_and_overrides() {
+        let slow = LinkSpec { bandwidth_bps: 10e6, ..stable_wan() };
+        let f = Fabric::full_mesh(1, 3, &stable_wan(), &[(0, 2, slow)]);
+        for a in 0..3 {
+            for b in 0..3 {
+                if a != b {
+                    assert!(f.link_bandwidth(a, b).is_some(), "missing link {a}->{b}");
+                }
+            }
+        }
+        assert_eq!(f.link_bandwidth(0, 2), Some(10e6), "override applied after the mesh");
+        assert_eq!(f.link_bandwidth(0, 0), None, "no self links");
+    }
+
+    #[test]
+    fn shared_fabric_clones_contend_on_one_link() {
+        // Two jobs holding clones of the same fabric: the second job's
+        // transfer queues behind the first's on the shared FIFO link.
+        let mut f = Fabric::new(1);
+        f.add_link(0, 1, stable_wan());
+        let shared = SharedFabric::new(f);
+        let job_a = shared.clone();
+        let job_b = shared.clone();
+        let t1 = job_a.transfer(0, 1, 12_500_000, 0.0); // 1.0 s
+        let t2 = job_b.transfer(0, 1, 12_500_000, 0.2); // queued behind job A
+        assert!((t1.done - 1.0).abs() < 1e-9);
+        assert!((t2.start - 1.0).abs() < 1e-9, "cross-job queueing: {t2:?}");
+        // Stats and bandwidth mutations are visible through every clone.
+        assert_eq!(shared.stats(0, 1).unwrap().transfers, 2);
+        job_a.set_bandwidth(0, 1, 10e6);
+        assert_eq!(job_b.link_bandwidth(0, 1), Some(10e6));
+        assert_eq!(shared.total_wan_bytes(), 25_000_000);
+        assert_eq!(shared.with(|f| f.estimate(0, 1, 0) > 0.0), true);
     }
 
     #[test]

@@ -21,9 +21,10 @@
 //!
 //! The controller is pure state-machine logic (no simulator, no FaaS):
 //! the driver owns *applying* a decision — resizing worker pools through
-//! the `faas` autoscaler and re-planning the sync [`Topology`] — which
-//! keeps this module unit-testable in microseconds and free of layering
-//! cycles (`sched` never imports `engine`).
+//! the `faas` autoscaler and re-planning the sync
+//! [`Topology`](crate::engine::topology::Topology) — which keeps this
+//! module unit-testable in microseconds and free of layering cycles
+//! (`sched` never imports `engine`).
 //!
 //! Two stability guards make the loop safe on noisy samples:
 //!
@@ -180,6 +181,21 @@ impl ElasticController {
     /// Units per cloud of the plan currently in force.
     pub fn current_units(&self) -> &[u32] {
         &self.current_units
+    }
+
+    /// Re-base the controller on a new resource lease (the multi-job
+    /// coordinator re-divided the shared inventory): `env` is the leased
+    /// inventory this job may now plan within and `allocations` the
+    /// within-lease plan just applied. Observed power scales and
+    /// bandwidth estimates survive — churn the controller has already
+    /// learned about does not vanish with the lease — but the plan
+    /// baseline moves, so hysteresis is measured against what is actually
+    /// deployed.
+    pub fn reset_lease(&mut self, env: CloudEnv, allocations: &[Allocation]) {
+        assert_eq!(env.regions.len(), self.scale.len(), "a lease cannot change the region count");
+        assert_eq!(allocations.len(), self.scale.len(), "one allocation per region");
+        self.env = env;
+        self.current_units = allocations.iter().map(|a| a.total_units()).collect();
     }
 
     /// Fold a monitoring sample in and decide whether to re-plan.
@@ -437,6 +453,7 @@ mod tests {
         let s = MonitorSample {
             t: 0.0,
             power_scale: vec![Some(1.0); 4],
+            finished: vec![false; 4],
             link_bw: vec![(0, 1, 10e6), (1, 0, 10e6)], // 100 -> 10 Mbps
         };
         let dec = c.observe(&s).expect("10x bandwidth collapse is past threshold");
@@ -485,6 +502,40 @@ mod tests {
             "a finished cloud's slowdown must not drive a replan it can't receive"
         );
         assert_eq!(c.current_units(), &before[..], "baseline unchanged");
+    }
+
+    #[test]
+    fn reset_lease_rebases_plan_and_keeps_observations() {
+        let mut c = controller(ElasticConfig {
+            enabled: true,
+            smoothing: 1.0,
+            ..Default::default()
+        });
+        // Learn a slowdown on BJ first.
+        c.observe(&sample(vec![Some(1.0), Some(1.0), Some(0.35), Some(1.0)])).unwrap();
+        let learned = c.scales().to_vec();
+        // The coordinator shrinks the lease to 6 units per region.
+        let lease_env = CloudEnv::multi_region(vec![
+            ("SH", Device::CascadeLake, 6, 1024),
+            ("CQ", Device::Skylake, 6, 1024),
+            ("BJ", Device::Skylake, 6, 1024),
+            ("GZ", Device::IceLake, 6, 1024),
+        ]);
+        let within = crate::sched::optimal_matching(&lease_env).allocations;
+        c.reset_lease(lease_env.clone(), &within);
+        assert_eq!(
+            c.current_units(),
+            within.iter().map(|a| a.total_units()).collect::<Vec<_>>().as_slice(),
+            "baseline follows the applied within-lease plan"
+        );
+        assert_eq!(c.scales(), learned.as_slice(), "observed scales survive the lease change");
+        // Later candidates must fit the leased inventory.
+        let dec = c.observe(&sample(vec![Some(1.0), Some(1.0), Some(0.2), Some(1.0)]));
+        if let Some(dec) = dec {
+            for (a, r) in dec.allocations.iter().zip(&lease_env.regions) {
+                assert!(a.fits(r), "replan escaped the lease: {a:?}");
+            }
+        }
     }
 
     #[test]

@@ -83,6 +83,15 @@ impl<W> Sim<W> {
         self.heap.len()
     }
 
+    /// Virtual time of the earliest pending event (`None` when the heap
+    /// is empty). The multi-job coordinator interleaves several `Sim`s
+    /// over one shared clock by always stepping the simulator whose next
+    /// event is earliest; this peek is what makes that merge possible
+    /// without executing anything.
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|s| s.at)
+    }
+
     /// Schedule `f` to run `delay` seconds from now (clamped to >= 0).
     pub fn schedule<F>(&mut self, delay: Time, f: F)
     where
@@ -204,6 +213,19 @@ mod tests {
         let drained = sim.run_with_limit(&mut W, 100);
         assert!(!drained);
         assert_eq!(sim.executed(), 100);
+    }
+
+    #[test]
+    fn peek_time_sees_earliest_without_executing() {
+        let mut sim: Sim<Vec<f64>> = Sim::new();
+        assert_eq!(sim.peek_time(), None);
+        sim.schedule(2.0, |_, _: &mut Vec<f64>| {});
+        sim.schedule(1.0, |_, _: &mut Vec<f64>| {});
+        assert_eq!(sim.peek_time(), Some(1.0));
+        assert_eq!(sim.executed(), 0, "peek must not run anything");
+        let mut w = Vec::new();
+        sim.step(&mut w);
+        assert_eq!(sim.peek_time(), Some(2.0));
     }
 
     #[test]

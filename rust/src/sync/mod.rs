@@ -44,6 +44,25 @@ impl Strategy {
     /// alias for the asynchronous model-averaging variant. The error
     /// message lists every valid name, so CLI/config callers can surface
     /// it verbatim.
+    ///
+    /// This is the `"strategy"` config key / `--strategy` flag surface
+    /// (see docs/CONFIG.md):
+    ///
+    /// ```
+    /// use cloudless::sync::{Strategy, SyncConfig};
+    ///
+    /// let s = Strategy::from_name("asgd-ga").unwrap();
+    /// assert_eq!(s, Strategy::AsgdGa);
+    /// assert_eq!(Strategy::from_name("ma").unwrap(), Strategy::Ama);
+    ///
+    /// // ASGD pins the sync frequency to 1 (the paper's baseline).
+    /// let cfg = SyncConfig::new(Strategy::from_name("asgd").unwrap(), 8);
+    /// assert_eq!(cfg.freq, 1);
+    ///
+    /// // Unknown names return the full list of valid ones.
+    /// let err = Strategy::from_name("nope").unwrap_err();
+    /// assert!(err.contains("asgd-ga") && err.contains("sma"));
+    /// ```
     pub fn from_name(s: &str) -> Result<Strategy, String> {
         match s.to_ascii_lowercase().as_str() {
             "asgd" | "baseline" => Ok(Strategy::Asgd),
@@ -87,6 +106,78 @@ pub enum Compression {
     TopK { ratio: f64 },
     /// Linear int8 quantization (per-2048-chunk scales).
     Q8,
+}
+
+impl Compression {
+    /// Parse a codec name (case-insensitive): `"none"`, `"q8"`, or
+    /// `"topk"` with an optional `:ratio` suffix. This is the
+    /// `"compression"` config key / `--compression` flag surface (see
+    /// docs/CONFIG.md); the experimental random-k codec
+    /// ([`compression::random_k`]) is ablation-only and has no config
+    /// name.
+    ///
+    /// ```
+    /// use cloudless::sync::{Compression, Strategy, SyncConfig};
+    ///
+    /// assert_eq!(Compression::from_name("none").unwrap(), Compression::None);
+    /// assert_eq!(Compression::from_name("q8").unwrap(), Compression::Q8);
+    /// assert_eq!(
+    ///     Compression::from_name("topk:0.25").unwrap(),
+    ///     Compression::TopK { ratio: 0.25 },
+    /// );
+    /// // Bare "topk" uses the DGC-style 1% default.
+    /// assert_eq!(
+    ///     Compression::from_name("topk").unwrap(),
+    ///     Compression::TopK { ratio: 0.01 },
+    /// );
+    ///
+    /// // Codecs ride on the sync config; they only shrink gradient
+    /// // payloads (model-averaging strategies ship full parameters).
+    /// let cfg = SyncConfig::new(Strategy::AsgdGa, 8)
+    ///     .with_compression(Compression::from_name("q8").unwrap());
+    /// assert_eq!(cfg.compression, Compression::Q8);
+    ///
+    /// assert!(Compression::from_name("gzip").is_err());
+    /// assert!(Compression::from_name("topk:0").is_err());
+    /// ```
+    pub fn from_name(s: &str) -> Result<Compression, String> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "none" => Ok(Compression::None),
+            "q8" | "quantq8" | "int8" => Ok(Compression::Q8),
+            other => match other.strip_prefix("topk") {
+                Some(rest) => {
+                    let ratio = match rest.strip_prefix(':') {
+                        None if rest.is_empty() => 0.01,
+                        Some(r) => r.parse::<f64>().map_err(|_| {
+                            format!("bad top-k ratio {r:?} (want e.g. \"topk:0.25\")")
+                        })?,
+                        None => {
+                            return Err(format!(
+                                "unknown compression {other:?} (valid: none, topk[:ratio], q8)"
+                            ))
+                        }
+                    };
+                    if !(ratio > 0.0 && ratio <= 1.0) {
+                        return Err(format!("top-k ratio must be in (0, 1], got {ratio}"));
+                    }
+                    Ok(Compression::TopK { ratio })
+                }
+                None => Err(format!(
+                    "unknown compression {other:?} (valid: none, topk[:ratio], q8)"
+                )),
+            },
+        }
+    }
+
+    /// Stable name (inverse of [`Compression::from_name`]).
+    pub fn name(&self) -> String {
+        match self {
+            Compression::None => "none".to_string(),
+            Compression::TopK { ratio } => format!("topk:{ratio}"),
+            Compression::Q8 => "q8".to_string(),
+        }
+    }
 }
 
 /// Full synchronization configuration. (Averaging weights are no longer
@@ -323,6 +414,20 @@ mod tests {
         let packed = make_payload(&cfg, &mut ps);
         let dense = Payload::Gradient { grad: g, steps: 1 };
         assert!(packed.wire_bytes() * 3 < dense.wire_bytes());
+    }
+
+    #[test]
+    fn compression_names_round_trip() {
+        for c in [Compression::None, Compression::Q8, Compression::TopK { ratio: 0.25 }] {
+            assert_eq!(Compression::from_name(&c.name()), Ok(c));
+        }
+        assert_eq!(Compression::from_name("TOPK:0.5"), Ok(Compression::TopK { ratio: 0.5 }));
+        assert_eq!(Compression::from_name("int8"), Ok(Compression::Q8));
+        assert!(Compression::from_name("topk:").is_err());
+        assert!(Compression::from_name("topkx").is_err());
+        assert!(Compression::from_name("topk:-0.1").is_err());
+        let err = Compression::from_name("gzip").unwrap_err();
+        assert!(err.contains("topk") && err.contains("q8"), "{err}");
     }
 
     #[test]

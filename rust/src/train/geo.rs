@@ -1,20 +1,23 @@
 //! Compatibility shim — the geo-distributed training engine now lives in
-//! [`crate::engine`], decomposed into explicit layers:
+//! [`crate::engine`], decomposed into explicit layers (the full diagram
+//! is in docs/ARCHITECTURE.md):
 //!
 //! - [`crate::engine::driver`] — the discrete-event loop (`World`,
-//!   [`run_geo_training`], barriers, eval, reporting);
+//!   [`run_geo_training`], barriers, eval, reporting; also the
+//!   crate-internal multi-job entry points the fleet coordinator
+//!   co-simulates jobs through);
 //! - [`crate::engine::partition`] — the per-cloud actor (worker gating,
 //!   PS state, step accounting; the seed's `Part`);
 //! - [`crate::engine::comm`] — the WAN communicator (payload planning,
 //!   send-slot backpressure, delivery);
 //! - [`crate::engine::topology`] — pluggable N-cloud sync topologies
-//!   (Ring / Hierarchical / BandwidthTree) with in-degree-derived
-//!   averaging weights.
+//!   (Ring / Hierarchical / BandwidthTree) with Metropolis per-edge
+//!   averaging weights applied through sequential-arrival compensation.
 //!
 //! This module re-exports the engine's public surface so seed-era call
 //! sites (`crate::train::run_geo_training`, `crate::train::TrainConfig`)
 //! keep working unchanged. New code should prefer `crate::engine`
-//! directly.
+//! directly; multi-job fleets go through `crate::coordinator::fleet`.
 
 pub use crate::engine::driver::{default_lr, run_geo_training, TrainConfig};
 pub use crate::engine::topology::TopologyKind;
