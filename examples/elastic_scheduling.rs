@@ -36,7 +36,9 @@ fn main() -> anyhow::Result<()> {
             r.name,
             r.inventory,
             r.data_samples,
-            load_power(&full, r.data_samples)
+            // Total since the data plane landed: None = a data-less
+            // region (not possible in this two-region setup).
+            load_power(&full, r.data_samples).expect("both regions hold data")
         );
     }
     let plan = coord.plan(&env);

@@ -1,0 +1,19 @@
+//! Bench: the three data-plane placement modes (compute-follows-data /
+//! data-follows-compute / joint) on a 70%-skewed dataset catalog over a
+//! 4-cloud heterogeneous WAN with thin Guangzhou links.
+mod common;
+
+fn main() {
+    common::banner("dataplane");
+    let coord = common::coordinator();
+    let model = std::env::args()
+        .skip_while(|a| a != "--model")
+        .nth(1)
+        .unwrap_or_else(|| "lenet".to_string());
+    cloudless::exp::dataplane_exp::dataplane_compare(
+        &coord,
+        common::scale_from_args(),
+        &model,
+        None,
+    );
+}

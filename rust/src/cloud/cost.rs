@@ -1,25 +1,34 @@
 //! Monetary cost model for geo-distributed training.
 //!
 //! The paper's Fig 8(d-f) reports "training cost" reductions of 9.2%–24.0%
-//! from elastic scheduling. Cost here has the same two components users
-//! pay for on Tencent Cloud: (1) compute — allocated cores/devices are
-//! billed from allocation to release (so *waiting* for stragglers burns
-//! money), and (2) WAN egress traffic.
+//! from elastic scheduling. Cost here has the components users pay for on
+//! Tencent Cloud: (1) compute — allocated cores/devices are billed from
+//! allocation to release (so *waiting* for stragglers burns money),
+//! (2) WAN sync traffic at a flat egress rate, and (3) bulk object-store
+//! egress for dataset shard migrations, priced **per source region**
+//! (clouds discount egress from their hub regions; the data plane's
+//! placement planner trades these prices against makespan).
 
 use crate::cloud::devices::Device;
+use crate::net::RegionId;
 use crate::sim::Time;
 
 /// Billing rates. Defaults approximate Tencent Cloud list prices; the
 /// experiments only depend on them through relative cost, not absolutes.
 #[derive(Debug, Clone)]
 pub struct CostModel {
-    /// WAN egress price per GB (USD).
+    /// WAN egress price per GB (USD) for sync traffic, and the fallback
+    /// rate for object-store egress from regions beyond the table below.
     pub wan_per_gb: f64,
+    /// Object-store egress price per GB, indexed by `RegionId` — the
+    /// data plane's shard-migration rate. Hub regions (low ids in the
+    /// shipped environments) are discounted relative to edge regions.
+    pub egress_per_gb: Vec<f64>,
 }
 
 impl Default for CostModel {
     fn default() -> Self {
-        CostModel { wan_per_gb: 0.12 }
+        CostModel { wan_per_gb: 0.12, egress_per_gb: vec![0.08, 0.10, 0.10, 0.12] }
     }
 }
 
@@ -38,9 +47,17 @@ impl CostModel {
         a.device.info().price_per_unit_hour * a.units as f64 * a.held_s / 3600.0
     }
 
-    /// WAN traffic cost.
+    /// WAN sync-traffic cost (flat rate).
     pub fn wan_cost(&self, bytes: u64) -> f64 {
         self.wan_per_gb * bytes as f64 / 1e9
+    }
+
+    /// Object-store egress cost of moving `bytes` *out of* region
+    /// `from` (dataset shard migration). Regions beyond the price table
+    /// fall back to the flat WAN rate.
+    pub fn egress_cost(&self, from: RegionId, bytes: u64) -> f64 {
+        let rate = self.egress_per_gb.get(from).copied().unwrap_or(self.wan_per_gb);
+        rate * bytes as f64 / 1e9
     }
 
     /// Total job cost.
@@ -67,6 +84,17 @@ mod tests {
     fn wan_cost() {
         let m = CostModel::default();
         assert!((m.wan_cost(5_000_000_000) - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn egress_is_priced_per_source_region() {
+        let m = CostModel::default();
+        // Hub egress (region 0) is cheaper than edge egress (region 3).
+        assert!(m.egress_cost(0, 1_000_000_000) < m.egress_cost(3, 1_000_000_000));
+        assert!((m.egress_cost(0, 1_000_000_000) - 0.08).abs() < 1e-9);
+        // Off-table regions fall back to the flat WAN rate.
+        assert!((m.egress_cost(99, 1_000_000_000) - m.wan_cost(1_000_000_000)).abs() < 1e-12);
+        assert_eq!(m.egress_cost(1, 0), 0.0);
     }
 
     #[test]

@@ -21,6 +21,9 @@
 //!   "multijob": {"jobs": 6,            // multi-job fleet (exp --id multijob)
 //!                "mean_interarrival_s": 0, "policy": "fair-share",
 //!                "min_units": 1},
+//!   "dataplane": {"placement": "skewed:8:0.7",  // physical data plane
+//!                 "mode": "joint",     // compute-follows-data | data-follows-compute | joint
+//!                 "sample_kb": 256, "rebalance": true},
 //!   "worker_cores": 3,
 //!   "link": {"bandwidth_mbps": 100, "latency_ms": 15,
 //!             "fluct_sigma": 0.25, "drop_prob": 0.0},
@@ -41,6 +44,7 @@ use crate::cloud::devices::Device;
 use crate::cloud::{CloudEnv, Region};
 use crate::coordinator::fleet::{LeasePolicy, MultiJobParams};
 use crate::coordinator::{JobSpec, SchedulingMode};
+use crate::dataplane::{PlacementMode, PlacementSpec};
 use crate::engine::TopologyKind;
 use crate::net::LinkSpec;
 use crate::sync::{Compression, Strategy, SyncConfig};
@@ -159,6 +163,39 @@ pub fn parse_job(text: &str) -> Result<JobSpec> {
             train.elastic.smoothing = v;
         }
         train.elastic.validate().map_err(|e| anyhow::anyhow!(e))?;
+    }
+
+    let dp = j.get("dataplane");
+    if !dp.is_null() {
+        anyhow::ensure!(
+            dp.as_obj().is_some(),
+            "\"dataplane\" must be an object (e.g. {{\"placement\": \"skewed:8:0.7\"}})"
+        );
+        if let Some(p) = dp.get("placement").as_str() {
+            train.dataplane.placement =
+                Some(PlacementSpec::from_name(p).map_err(|e| anyhow::anyhow!(e))?);
+        }
+        if let Some(m) = dp.get("mode").as_str() {
+            train.dataplane.mode =
+                PlacementMode::from_name(m).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        if let Some(kb) = dp.get("sample_kb").as_f64() {
+            // 0 = derive bytes from the model's tensor geometry (the
+            // documented default), matching the CLI's --sample-kb.
+            anyhow::ensure!(kb >= 0.0, "dataplane sample_kb must be >= 0, got {kb}");
+            train.dataplane.sample_bytes = (kb * 1024.0) as u64;
+        }
+        if let Some(r) = dp.get("rebalance").as_bool() {
+            train.dataplane.rebalance = r;
+        }
+        if let Some(v) = dp.get("time_value_per_hour").as_f64() {
+            anyhow::ensure!(v >= 0.0, "dataplane time_value_per_hour must be >= 0, got {v}");
+            train.dataplane.time_value_per_hour = v;
+        }
+        anyhow::ensure!(
+            train.dataplane.placement.is_some(),
+            "\"dataplane\" block needs a \"placement\" spec"
+        );
     }
 
     let mut multijob = None;
@@ -319,6 +356,48 @@ mod tests {
             parse_job(&format!(r#"{{"model":"lenet","compression":"topk:1.5",{region}}}"#)).is_err()
         );
         assert!(parse_job(&format!(r#"{{"model":"lenet","compression":8,{region}}}"#)).is_err());
+    }
+
+    #[test]
+    fn dataplane_block_parses() {
+        let region = r#""regions":[{"name":"X","device":"sky","units":6,"data":100},
+                                   {"name":"Y","device":"sky","units":6,"data":100}]"#;
+        let spec = parse_job(&format!(
+            r#"{{"model":"synthetic",
+                "dataplane":{{"placement":"skewed:8:0.7","mode":"joint",
+                              "sample_kb":256,"rebalance":false,
+                              "time_value_per_hour":1.5}},{region}}}"#
+        ))
+        .unwrap();
+        let dp = &spec.train.dataplane;
+        assert_eq!(dp.placement, Some(PlacementSpec::Skewed { shards: 8, frac: 0.7 }));
+        assert_eq!(dp.mode, PlacementMode::Joint);
+        assert_eq!(dp.sample_bytes, 256 * 1024);
+        assert!(!dp.rebalance);
+        assert!((dp.time_value_per_hour - 1.5).abs() < 1e-12);
+        // Absent block: the data plane is off (seed behavior).
+        let off = parse_job(&format!(r#"{{"model":"synthetic",{region}}}"#)).unwrap();
+        assert!(!off.train.dataplane.enabled());
+        // sample_kb 0 is the documented "derive from model geometry"
+        // default (same as the CLI's --sample-kb 0), not an error.
+        let derive = parse_job(&format!(
+            r#"{{"model":"synthetic",
+                "dataplane":{{"placement":"uniform:4","sample_kb":0}},{region}}}"#
+        ))
+        .unwrap();
+        assert_eq!(derive.train.dataplane.sample_bytes, 0);
+        // Errors: wrong type, missing placement, bad spec/mode/knobs.
+        for bad in [
+            r#""dataplane":"skewed""#,
+            r#""dataplane":{"mode":"joint"}"#,
+            r#""dataplane":{"placement":"striped:4"}"#,
+            r#""dataplane":{"placement":"uniform:4","mode":"teleport"}"#,
+            r#""dataplane":{"placement":"uniform:4","sample_kb":-1}"#,
+            r#""dataplane":{"placement":"uniform:4","time_value_per_hour":-1}"#,
+        ] {
+            let doc = format!(r#"{{"model":"synthetic",{bad},{region}}}"#);
+            assert!(parse_job(&doc).is_err(), "must reject: {doc}");
+        }
     }
 
     #[test]

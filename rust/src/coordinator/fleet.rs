@@ -169,6 +169,14 @@ pub struct FleetConfig {
     pub seed: u64,
     /// Minimum per-region units an admitted job's lease must hold.
     pub min_units: u32,
+    /// Shared dataset catalog (the fleet's data plane): when present,
+    /// every job's data split follows the catalog's *current* residency
+    /// instead of the regions' `data_samples`, so concurrent jobs
+    /// colocate their compute with where the shared datasets physically
+    /// sit. Jobs carrying their own `dataplane` config additionally
+    /// stage migrations on the shared fabric (contending with everyone's
+    /// sync traffic).
+    pub catalog: Option<crate::dataplane::DatasetCatalog>,
 }
 
 impl FleetConfig {
@@ -180,6 +188,16 @@ impl FleetConfig {
             link_overrides: Vec::new(),
             seed: 42,
             min_units: 1,
+            catalog: None,
+        }
+    }
+
+    /// Per-region data fractions jobs split by: catalog residency when a
+    /// shared catalog exists, the regions' `data_samples` otherwise.
+    fn data_fractions(&self) -> Vec<usize> {
+        match &self.catalog {
+            Some(c) => c.resident_samples().iter().map(|&s| s.max(1)).collect(),
+            None => self.env.regions.iter().map(|r| r.data_samples.max(1)).collect(),
         }
     }
 }
@@ -663,7 +681,9 @@ pub fn run_fleet(
         SharedFabric::new(Fabric::full_mesh(cfg.seed, n_regions, &cfg.link, &cfg.link_overrides));
 
     // Per-request statics: data split, solo demand, solo-runtime ideal.
-    let fractions: Vec<usize> = cfg.env.regions.iter().map(|r| r.data_samples.max(1)).collect();
+    // With a shared catalog the split follows where the data physically
+    // sits (fleet-level compute-follows-data).
+    let fractions: Vec<usize> = cfg.data_fractions();
     let full_units = inventory_units(&cfg.env);
     let mut batch_sizes: std::collections::BTreeMap<String, usize> = Default::default();
     let mut datas = Vec::new();
@@ -960,6 +980,27 @@ mod tests {
         assert_eq!(fair_shares(12, &[]), Vec::<u32>::new(), "no members, no spin");
         assert_eq!(try_divide(&cfg, LeasePolicy::FairShare, &[]), Some(Vec::new()));
         assert_eq!(try_divide(&cfg, LeasePolicy::Fifo, &[]), Some(Vec::new()));
+    }
+
+    #[test]
+    fn shared_catalog_drives_the_data_split() {
+        use crate::dataplane::{DatasetCatalog, PlacementSpec};
+        let env = four_cloud_env();
+        let mut cfg = FleetConfig::new(LeasePolicy::FairShare, env.clone());
+        assert_eq!(cfg.data_fractions(), vec![128; 4], "no catalog: region data");
+        cfg.catalog = Some(
+            DatasetCatalog::from_spec(
+                &PlacementSpec::Skewed { shards: 8, frac: 0.7 },
+                512,
+                4,
+                1024,
+                &[1; 4],
+            )
+            .unwrap(),
+        );
+        let fr = cfg.data_fractions();
+        assert!(fr[0] > fr[1], "jobs colocate with the hot region: {fr:?}");
+        assert!(fr.iter().all(|&f| f >= 1), "zero-resident regions stay plannable");
     }
 
     #[test]

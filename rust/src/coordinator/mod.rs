@@ -84,17 +84,41 @@ impl Coordinator {
         optimal_matching(env)
     }
 
-    /// Resolve a job's allocations per its scheduling mode.
-    pub fn allocations_for(&self, spec: &JobSpec) -> Vec<Allocation> {
-        match spec.scheduling {
+    /// Resolve a job's allocations per its scheduling mode. With an
+    /// active data plane, elastic scheduling runs the joint data/compute
+    /// placement planner (`dataplane::plan_for`) instead of plain
+    /// Algorithm 1 — the same deterministic plan the driver stages
+    /// migrations from; greedy still rents everything (the baseline
+    /// wastes money on data-less regions too).
+    pub fn allocations_for(&self, spec: &JobSpec) -> Result<Vec<Allocation>> {
+        Ok(match spec.scheduling {
             SchedulingMode::Greedy => spec.env.greedy_plan(),
+            SchedulingMode::Elastic if spec.train.dataplane.enabled() => {
+                let meta = self.rt.load_model(&spec.train.model)?.meta;
+                crate::dataplane::plan_for(&spec.env, &spec.train, &meta)?.plan.allocations
+            }
             SchedulingMode::Elastic => self.plan(&spec.env).allocations,
-        }
+        })
     }
 
-    /// Submit a job: schedule, deploy workflows, train, report.
+    /// Submit a job: schedule, deploy workflows, train, report. With an
+    /// active data plane the placement plan is computed once and handed
+    /// to the driver (which would otherwise recompute the identical
+    /// deterministic plan).
     pub fn submit(&self, spec: &JobSpec) -> Result<TrainReport> {
-        let allocations = self.allocations_for(spec);
+        if spec.train.dataplane.enabled() && spec.scheduling == SchedulingMode::Elastic {
+            let meta = self.rt.load_model(&spec.train.model)?.meta;
+            let planned = crate::dataplane::plan_for(&spec.env, &spec.train, &meta)?;
+            let allocations = planned.plan.allocations.clone();
+            return crate::engine::driver::run_geo_training_planned(
+                &self.rt,
+                &spec.env,
+                allocations,
+                spec.train.clone(),
+                Some(planned),
+            );
+        }
+        let allocations = self.allocations_for(spec)?;
         run_geo_training(&self.rt, &spec.env, allocations, spec.train.clone())
     }
 }

@@ -273,6 +273,34 @@ impl Shard {
         self.indices.len().div_ceil(b).max(1)
     }
 
+    /// Append newly-available sample indices (a migrated shard landed —
+    /// see `dataplane::migration`). Appended plainly at the tail: they
+    /// join the current pass immediately and mix into the shuffle from
+    /// the next epoch on.
+    pub fn extend(&mut self, extra: impl IntoIterator<Item = usize>) {
+        self.indices.extend(extra);
+    }
+
+    /// Remove every index in `[start, end)` (a shard migrated away).
+    /// The cursor is re-based so the current pass continues over the
+    /// surviving indices without skipping or repeating any.
+    pub fn remove_range(&mut self, start: usize, end: usize) {
+        let cursor = self.cursor;
+        let mut removed_before = 0usize;
+        let mut kept = Vec::with_capacity(self.indices.len());
+        for (pos, &i) in self.indices.iter().enumerate() {
+            if (start..end).contains(&i) {
+                if pos < cursor {
+                    removed_before += 1;
+                }
+            } else {
+                kept.push(i);
+            }
+        }
+        self.indices = kept;
+        self.cursor = (cursor - removed_before).min(self.indices.len());
+    }
+
     /// Next batch of indices; reshuffles at each epoch boundary.
     pub fn next_batch(&mut self, b: usize) -> Vec<usize> {
         let mut out = Vec::with_capacity(b);
@@ -450,6 +478,38 @@ mod tests {
             shards.iter().flat_map(|s| s.indices.iter().copied()).collect();
         all.sort();
         assert_eq!(all, (0..300).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shard_extend_and_remove_range() {
+        let mut s = Shard::new((0..8).collect(), 3, 0);
+        s.extend(vec![8, 9]);
+        assert_eq!(s.len(), 10);
+        let mut seen: Vec<usize> = (0..2).flat_map(|_| s.next_batch(5)).collect();
+        seen.sort();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>(), "extended pass covers everything");
+
+        // Removal mid-pass: surviving indices are each drawn exactly once
+        // before the pass wraps.
+        let mut s = Shard::new((0..8).collect(), 3, 1);
+        let first: Vec<usize> = s.next_batch(2);
+        s.remove_range(0, 4);
+        assert_eq!(s.len(), 4);
+        let survivors_drawn: Vec<usize> =
+            first.iter().copied().filter(|&i| i >= 4).collect();
+        let mut rest = Vec::new();
+        while rest.len() + survivors_drawn.len() < 4 {
+            rest.extend(s.next_batch(1));
+        }
+        let mut all: Vec<usize> = survivors_drawn.into_iter().chain(rest).collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all, vec![4, 5, 6, 7], "no survivor skipped or repeated");
+
+        // Removing everything empties the shard without panicking.
+        let mut e = Shard::new((0..4).collect(), 1, 2);
+        e.remove_range(0, 4);
+        assert!(e.is_empty());
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Physical shard migration over the WAN.
+//!
+//! A planned [`ShardMove`](super::placement::ShardMove) becomes a real
+//! payload on the job's [`net::Fabric`](crate::net::Fabric) /
+//! [`SharedFabric`](crate::net::SharedFabric): it serializes FIFO behind
+//! whatever else is on the directed link — gradient syncs and, on a
+//! shared multi-job fabric, other tenants' traffic — so migration
+//! contention is physical, not modeled. Transfers are issued by the
+//! source region's object store, not the PS communicator, so they do not
+//! occupy the partition's gRPC send slot (but they do occupy the wire).
+//!
+//! **Staging** overlaps with training: every staged move starts at the
+//! training start, destinations train on whatever is already resident,
+//! and a partition that runs out of available data gates on
+//! [`Gate::DataBlocked`] until its next shard lands (the accumulated
+//! block time is the report's `stall_time`). Mid-run rebalancing moves
+//! (`grow_dest`) additionally retime the destination's step budget,
+//! since their samples were not part of the deploy-time plan.
+//!
+//! Numerics are unchanged: sample *contents* regenerate deterministically
+//! everywhere (`crate::data`); what moves here is the modeled bytes and
+//! the *right to train* on those samples.
+
+use crate::cloud::cost::CostModel;
+use crate::engine::driver::{self, World};
+use crate::engine::partition::Gate;
+use crate::sim::{Sim, Time};
+
+use super::catalog::{DatasetCatalog, PlacementSpec};
+use super::placement::{PlacementMode, ShardMove};
+use super::DataPlaneReport;
+
+/// One in-progress (or finished) shard transfer.
+pub(crate) struct MoveState {
+    pub mv: ShardMove,
+    /// Global sample indices the destination gains on arrival.
+    pub indices: Vec<usize>,
+    /// Rebalance moves retime the destination's step budget on arrival;
+    /// staged moves were already counted at deploy.
+    pub grow_dest: bool,
+    pub delivered: bool,
+    /// Dropped-transfer retries so far (failure injection).
+    pub attempts: u32,
+}
+
+/// Give up on a dropped shard transfer after this many attempts (with
+/// exponential backoff between them): unlike the communicator's
+/// optional gradient retries, an unbounded retry on a fully-blacked-out
+/// link would spin the event loop forever while the destination waits.
+const MAX_MOVE_ATTEMPTS: u32 = 8;
+
+/// The job's live data-plane state (inside `engine::driver::World`).
+pub(crate) struct DataPlaneState {
+    /// Catalog with *current* homes (updated as shards land).
+    pub catalog: DatasetCatalog,
+    pub mode: PlacementMode,
+    pub placement: PlacementSpec,
+    pub cost: CostModel,
+    pub moves: Vec<MoveState>,
+    /// Moves issued or queued but not yet delivered.
+    pub pending: usize,
+    /// Bytes put on the WAN (egress side; counted at send).
+    pub sent_bytes: u64,
+    /// Bytes delivered (arrival side).
+    pub moved_bytes: u64,
+    pub moved_shards: usize,
+    /// Moves abandoned after [`MAX_MOVE_ATTEMPTS`] dropped transfers
+    /// (their samples' remaining work is shed, not silently retried
+    /// forever).
+    pub failed_moves: usize,
+    pub egress_cost: f64,
+    /// Latest delivery instant (absolute virtual time).
+    pub staging_done: Time,
+    pub rebalances: u32,
+}
+
+impl DataPlaneState {
+    pub fn new(catalog: DatasetCatalog, mode: PlacementMode, placement: PlacementSpec) -> Self {
+        DataPlaneState {
+            catalog,
+            mode,
+            placement,
+            cost: CostModel::default(),
+            moves: Vec::new(),
+            pending: 0,
+            sent_bytes: 0,
+            moved_bytes: 0,
+            moved_shards: 0,
+            failed_moves: 0,
+            egress_cost: 0.0,
+            staging_done: 0.0,
+            rebalances: 0,
+        }
+    }
+
+    /// Queue a move for execution (caller schedules [`begin_move`]).
+    pub fn enqueue(&mut self, mv: ShardMove, indices: Vec<usize>, grow_dest: bool) -> usize {
+        self.moves.push(MoveState { mv, indices, grow_dest, delivered: false, attempts: 0 });
+        self.pending += 1;
+        self.moves.len() - 1
+    }
+
+    /// Snapshot the report; `stall` is the summed partition block time
+    /// and `start_at` the job's admission epoch (staging time is
+    /// reported job-relative).
+    pub fn report(&self, stall: Time, start_at: Time) -> DataPlaneReport {
+        DataPlaneReport {
+            mode: self.mode.name().to_string(),
+            placement: self.placement.name(),
+            moved_shards: self.moved_shards,
+            moved_bytes: self.moved_bytes,
+            failed_shards: self.failed_moves,
+            egress_cost: self.egress_cost,
+            stall_time: stall,
+            staging_done: if self.moved_shards == 0 {
+                0.0
+            } else {
+                (self.staging_done - start_at).max(0.0)
+            },
+            rebalances: self.rebalances,
+        }
+    }
+}
+
+/// Put move `idx` on the WAN now. The transfer FIFO-queues on the
+/// directed link behind any earlier traffic; egress is priced at the
+/// source region's object-store rate at send time. Dropped transfers
+/// (failure injection) retry with exponential backoff and give up after
+/// [`MAX_MOVE_ATTEMPTS`] — see [`abandon_move`].
+pub(crate) fn begin_move(sim: &mut Sim<World>, w: &mut World, idx: usize) {
+    let now = sim.now();
+    let (from, to, bytes) = {
+        let st = w.dataplane.as_ref().expect("data plane active");
+        let m = &st.moves[idx].mv;
+        (m.from, m.to, m.bytes)
+    };
+    let t = w.fabric.transfer(from, to, bytes, now);
+    w.wan_transfers += 1;
+    if t.dropped {
+        let attempts = {
+            let st = w.dataplane.as_mut().expect("data plane active");
+            let m = &mut st.moves[idx];
+            m.attempts += 1;
+            m.attempts
+        };
+        if attempts >= MAX_MOVE_ATTEMPTS {
+            abandon_move(sim, w, idx);
+        } else {
+            sim.schedule(f64::from(1u32 << attempts), move |sim, w: &mut World| {
+                begin_move(sim, w, idx);
+            });
+        }
+        return;
+    }
+    w.wan_bytes += bytes;
+    {
+        let st = w.dataplane.as_mut().expect("data plane active");
+        st.sent_bytes += bytes;
+        let egress = st.cost.egress_cost(from, bytes);
+        st.egress_cost += egress;
+    }
+    sim.schedule_at(t.arrival, move |sim, w: &mut World| {
+        deliver_shard(sim, w, idx);
+    });
+}
+
+/// Give up on move `idx` (its link dropped every attempt): the shard's
+/// remaining work is shed honestly instead of retrying forever. For a
+/// *staged* move the destination's step budget pre-counted the samples,
+/// so it is retimed down to what is available now **plus** any sibling
+/// staged shards still inbound (those stay pre-counted — shrinking past
+/// them would let the destination finish before they land and drop
+/// their work on delivery). A rebalance move's samples were already
+/// shed at the source; they are simply lost (reported via
+/// `failed_shards`), mirroring the delivered-after-finish case.
+fn abandon_move(sim: &mut Sim<World>, w: &mut World, idx: usize) {
+    let now = sim.now();
+    let (dest, was_staged) = {
+        let st = w.dataplane.as_mut().expect("data plane active");
+        let m = &mut st.moves[idx];
+        m.delivered = true; // terminal: no further retries
+        st.pending = st.pending.saturating_sub(1);
+        st.failed_moves += 1;
+        (m.mv.to, !m.grow_dest)
+    };
+    if was_staged {
+        let inbound: usize = {
+            let st = w.dataplane.as_ref().expect("data plane active");
+            st.moves
+                .iter()
+                .filter(|m| !m.delivered && m.mv.to == dest && !m.grow_dest)
+                .map(|m| m.mv.samples)
+                .sum()
+        };
+        let finish_now = {
+            let part = &mut w.parts[dest];
+            if part.gate == Gate::Finished {
+                false
+            } else {
+                part.retime_step_budget(w.model.meta.batch_size, w.cfg.epochs, inbound);
+                if part.gate == Gate::DataBlocked && part.local_done() {
+                    // Its only awaited data is never coming.
+                    part.data_stall += now - part.data_blocked_since;
+                    part.gate = Gate::Running;
+                }
+                part.gate == Gate::Running && part.local_done() && part.in_flight == 0
+            }
+        };
+        if finish_now {
+            driver::finish_partition(sim, w, dest);
+        }
+    }
+}
+
+/// Move `idx` landed: the destination may now train on its samples.
+pub(crate) fn deliver_shard(sim: &mut Sim<World>, w: &mut World, idx: usize) {
+    let now = sim.now();
+    let (dest, indices, grow) = {
+        let st = w.dataplane.as_mut().expect("data plane active");
+        let m = &mut st.moves[idx];
+        debug_assert!(!m.delivered, "double delivery of move {idx}");
+        m.delivered = true;
+        st.pending = st.pending.saturating_sub(1);
+        st.moved_bytes += m.mv.bytes;
+        st.moved_shards += 1;
+        st.staging_done = st.staging_done.max(now);
+        st.catalog.apply_move(m.mv.shard, m.mv.to);
+        (m.mv.to, std::mem::take(&mut m.indices), m.grow_dest)
+    };
+    {
+        let part = &mut w.parts[dest];
+        if part.gate == Gate::Finished {
+            return; // landed after local completion: bytes moved, work done
+        }
+        part.shard.extend(indices);
+        if grow {
+            part.retime_step_budget(w.model.meta.batch_size, w.cfg.epochs, 0);
+        }
+        if part.gate == Gate::DataBlocked {
+            part.data_stall += now - part.data_blocked_since;
+            part.gate = Gate::Running;
+        }
+    }
+    driver::kick_idle_workers(sim, w, dest);
+}

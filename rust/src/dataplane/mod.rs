@@ -1,0 +1,114 @@
+//! The physical data plane — where training data actually lives, and
+//! what it costs to move it.
+//!
+//! The paper's scheduler deploys workflows "adaptively according to the
+//! heterogeneity of available cloud resources **and distribution of
+//! pre-existing training datasets**" (§III.B), but the compute half was
+//! the only half modeled until this layer: `sched` consumed per-region
+//! sample counts as a fixed input and `data` regenerated shards locally.
+//! This module makes the dataset a first-class physical object:
+//!
+//! - [`catalog`] — a [`DatasetCatalog`](catalog::DatasetCatalog) of sized
+//!   shards with an initial per-cloud placement (seeded from the
+//!   `"dataplane"` config block / `--data-placement`, e.g.
+//!   `skewed:8:0.7`), plus the per-region object-store egress pricing in
+//!   [`cloud::cost`](crate::cloud::cost);
+//! - [`placement`] — the joint data/compute planner: for a given catalog
+//!   it evaluates *compute-follows-data* (train where the shards sit),
+//!   *data-follows-compute* (migrate toward the power-optimal clouds),
+//!   and a *joint* hill-climb over single-shard moves whose payoff beats
+//!   their transfer time + egress cost, returning a
+//!   [`PlacementPlan`](placement::PlacementPlan) `{ allocations, moves }`;
+//! - [`migration`] — the physical shard transfers, executed as payloads
+//!   over the existing [`net::Fabric`](crate::net::Fabric) /
+//!   [`SharedFabric`](crate::net::SharedFabric) so migrations FIFO-contend
+//!   with gradient syncs and other jobs' traffic, with a staging phase
+//!   that overlaps prefetch with the first epochs and gates shard
+//!   availability through `Gate::DataBlocked`.
+//!
+//! HeterPS (arXiv 2111.10635) schedules data and compute jointly across
+//! heterogeneous resources; the modeling split here (pure planner, driver
+//! applies) mirrors `sched::elastic`. Numerically nothing changes — every
+//! partition still regenerates the same deterministic dataset — but the
+//! *bytes* of a migrated shard are physically modeled on the WAN and the
+//! destination may not train on a shard before it lands.
+
+pub mod catalog;
+pub mod migration;
+pub mod placement;
+
+pub use catalog::{sample_bytes, DatasetCatalog, PlacementSpec, ShardInfo};
+pub use placement::{plan_for, PlacementMode, PlacementPlan, PlannedDataPlane, ShardMove};
+
+use crate::sim::Time;
+
+/// The `"dataplane"` config block / `--data-placement` CLI surface.
+#[derive(Debug, Clone)]
+pub struct DataPlaneConfig {
+    /// Initial shard placement; `None` disables the data plane entirely
+    /// (the seed behavior: each region's resident samples come from its
+    /// `data` config and never move).
+    pub placement: Option<PlacementSpec>,
+    /// Which placement strategy the planner runs.
+    pub mode: PlacementMode,
+    /// Stored bytes per training sample; 0 derives it from the model's
+    /// tensor geometry. Real geo-resident datasets are orders of
+    /// magnitude larger than the scaled-down sample counts here, so
+    /// experiments typically set this explicitly (`sample_kb` in config).
+    pub sample_bytes: u64,
+    /// Allow the elastic control loop to propose mid-run shard
+    /// rebalancing moves when a committed load re-plan shifts the
+    /// straggler (hysteresis-gated exactly like compute re-plans).
+    pub rebalance: bool,
+    /// Dollars an hour of job makespan is worth to the planner's
+    /// objective; 0 derives the default from the inventory rental rate
+    /// ([`placement::default_time_value_per_hour`]).
+    pub time_value_per_hour: f64,
+}
+
+impl Default for DataPlaneConfig {
+    fn default() -> Self {
+        DataPlaneConfig {
+            placement: None,
+            mode: PlacementMode::Joint,
+            sample_bytes: 0,
+            rebalance: true,
+            time_value_per_hour: 0.0,
+        }
+    }
+}
+
+impl DataPlaneConfig {
+    /// Is the data plane active for this job?
+    pub fn enabled(&self) -> bool {
+        self.placement.is_some()
+    }
+}
+
+/// What the data plane did during one training run (reported inside
+/// `TrainReport`).
+#[derive(Debug, Clone, Default)]
+pub struct DataPlaneReport {
+    /// Placement mode the run planned with.
+    pub mode: String,
+    /// The initial-placement spec (`PlacementSpec` name).
+    pub placement: String,
+    /// Shards that finished migrating.
+    pub moved_shards: usize,
+    /// Bytes of shard payloads delivered over the WAN.
+    pub moved_bytes: u64,
+    /// Moves abandoned after repeated dropped transfers (failure
+    /// injection); their remaining work was shed, not retried forever.
+    pub failed_shards: usize,
+    /// Object-store egress cost of the migrations (per-source-region
+    /// pricing; see `cloud::cost::CostModel::egress_cost`).
+    pub egress_cost: f64,
+    /// Total virtual seconds partitions sat `Gate::DataBlocked` waiting
+    /// for a shard to arrive.
+    pub stall_time: Time,
+    /// Virtual time (job-relative) the last staged shard landed; 0.0 when
+    /// nothing moved.
+    pub staging_done: Time,
+    /// Mid-run rebalancing rounds the elastic loop committed.
+    pub rebalances: u32,
+}

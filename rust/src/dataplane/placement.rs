@@ -1,0 +1,660 @@
+//! The joint data/compute placement planner.
+//!
+//! Extends Algorithm-1 matching into a *joint* plan over the catalog: for
+//! a candidate shard layout the planner re-runs the matching on the
+//! implied per-region sample counts, estimates the run (compute time vs
+//! inbound staging time per region, prefetch overlapped) and its cost
+//! (compute billed to the estimated end + per-region object-store egress
+//! for every shard that moves), and searches layouts:
+//!
+//! - **compute-follows-data** — keep the catalog layout, train where the
+//!   shards already sit (zero migration; stragglers where the data is);
+//! - **data-follows-compute** — migrate toward the power-proportional
+//!   layout (fast compute; pays transfer time + egress);
+//! - **joint** — start from the cheaper of the two and hill-climb over
+//!   single-shard relocations, keeping only moves whose payoff beats
+//!   their cost. By construction the joint plan's estimated objective is
+//!   never worse than either pure mode's.
+//!
+//! The objective is `$cost + time_value · est_run`: pure dollar cost
+//! would never move a byte (Algorithm-1 matching already makes compute
+//! spend nearly layout-independent), and pure makespan would always
+//! fully balance regardless of egress — the explicit time value (default
+//! 2× the full inventory's hourly rate: halving the run is worth renting
+//! the fleet twice over) is what makes the trade-off real.
+//!
+//! Like `sched::elastic`, this module is pure planning — no simulator,
+//! no FaaS. The driver executes the returned moves through
+//! [`super::migration`]; determinism follows from determinism of the
+//! inputs.
+
+use crate::cloud::cost::{BilledAllocation, CostModel};
+use crate::cloud::{Allocation, CloudEnv};
+use crate::net::{Fabric, LinkSpec, RegionId};
+use crate::sched::optimal_matching_observed;
+
+use super::catalog::{sample_bytes, DatasetCatalog};
+
+/// Which placement strategy [`plan`] runs (config `"dataplane"` `"mode"`
+/// key / `--placement-mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementMode {
+    ComputeFollowsData,
+    DataFollowsCompute,
+    Joint,
+}
+
+impl PlacementMode {
+    /// Parse a mode name; the error lists every valid name.
+    pub fn from_name(s: &str) -> Result<PlacementMode, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "compute-follows-data" | "cfd" => Ok(PlacementMode::ComputeFollowsData),
+            "data-follows-compute" | "dfc" => Ok(PlacementMode::DataFollowsCompute),
+            "joint" => Ok(PlacementMode::Joint),
+            other => Err(format!(
+                "unknown placement mode {other:?} (valid: compute-follows-data, \
+                 data-follows-compute, joint)"
+            )),
+        }
+    }
+
+    /// Stable name (inverse of [`PlacementMode::from_name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementMode::ComputeFollowsData => "compute-follows-data",
+            PlacementMode::DataFollowsCompute => "data-follows-compute",
+            PlacementMode::Joint => "joint",
+        }
+    }
+
+    pub const ALL: [PlacementMode; 3] = [
+        PlacementMode::ComputeFollowsData,
+        PlacementMode::DataFollowsCompute,
+        PlacementMode::Joint,
+    ];
+}
+
+/// One planned shard migration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMove {
+    pub shard: usize,
+    pub from: RegionId,
+    pub to: RegionId,
+    pub bytes: u64,
+    pub samples: usize,
+}
+
+/// The planner's output: a compute plan plus the shard moves that
+/// produce the layout it was planned against.
+#[derive(Debug, Clone)]
+pub struct PlacementPlan {
+    pub mode: PlacementMode,
+    /// Per-region compute allocations (Algorithm 1 on the final layout;
+    /// regions with no resident data after the moves get none).
+    pub allocations: Vec<Allocation>,
+    /// Shard migrations, origin → final home, shard-id order.
+    pub moves: Vec<ShardMove>,
+    /// Final resident samples per region (post-migration).
+    pub resident: Vec<usize>,
+    pub straggler: usize,
+    /// Estimated run seconds (straggler compute vs inbound staging).
+    pub est_run_s: f64,
+    /// Estimated dollar cost: compute billed to `est_run_s` + egress.
+    pub est_cost: f64,
+    /// The scalar the planner minimized:
+    /// `est_cost + time_value · est_run_s`. The joint mode's value is
+    /// never worse than either pure mode's.
+    pub est_objective: f64,
+}
+
+impl PlacementPlan {
+    pub fn moved_bytes(&self) -> u64 {
+        self.moves.iter().map(|m| m.bytes).sum()
+    }
+}
+
+/// Everything the planner needs to know, gathered once per plan call.
+pub struct PlanInputs<'a> {
+    pub env: &'a CloudEnv,
+    pub catalog: &'a DatasetCatalog,
+    /// Local epochs each region trains (remaining epochs for re-plans).
+    pub epochs: usize,
+    pub base_step_s: f64,
+    pub batch_size: usize,
+    /// Directed link specs `links[from][to]` (None on the diagonal).
+    pub links: Vec<Vec<Option<LinkSpec>>>,
+    pub cost: CostModel,
+    /// Observed per-cloud power scales (all ones at launch planning).
+    pub scale: Vec<f64>,
+    /// Dollars an hour of job makespan is worth (deadline pressure).
+    /// [`default_time_value_per_hour`] derives the default from the
+    /// inventory's rental rate.
+    pub time_value_per_hour: f64,
+}
+
+/// The default makespan valuation: twice the full inventory's hourly
+/// rental rate — if renting a second fleet could halve the run, the
+/// job would pay for it.
+pub fn default_time_value_per_hour(env: &CloudEnv, cost: &CostModel) -> f64 {
+    let rate: f64 = env
+        .greedy_plan()
+        .iter()
+        .flat_map(|a| a.units.iter())
+        .map(|&(dev, units)| {
+            cost.compute_cost(&BilledAllocation { device: dev, units, held_s: 3600.0 })
+        })
+        .sum();
+    2.0 * rate
+}
+
+impl<'a> PlanInputs<'a> {
+    /// Gather the link view from a fabric (planning reads only).
+    pub fn link_view(fabric: &Fabric, n: usize) -> Vec<Vec<Option<LinkSpec>>> {
+        (0..n)
+            .map(|a| (0..n).map(|b| fabric.link_spec(a, b)).collect())
+            .collect()
+    }
+
+    fn transfer_s(&self, from: RegionId, to: RegionId, bytes: u64) -> f64 {
+        let spec = self.links[from][to].clone().unwrap_or_else(LinkSpec::lan);
+        spec.setup_s + bytes as f64 * 8.0 / spec.bandwidth_bps.max(1.0) + spec.latency_s
+    }
+}
+
+/// One evaluated candidate layout.
+struct Eval {
+    allocations: Vec<Allocation>,
+    resident: Vec<usize>,
+    straggler: usize,
+    run_s: f64,
+    cost: f64,
+    objective: f64,
+}
+
+fn steps_for(samples: usize, batch: usize, epochs: usize) -> f64 {
+    if samples == 0 {
+        0.0
+    } else {
+        (samples as f64 / batch.max(1) as f64).ceil() * epochs as f64
+    }
+}
+
+/// Estimate a candidate layout: matching on the implied sample counts,
+/// run = max per region of (compute, inbound staging) — prefetch overlaps
+/// the first epochs, so a region stalls only if its inbound bytes take
+/// longer than its resident work — cost = compute billed to the run end
+/// plus per-source egress on every moved byte.
+fn evaluate(inputs: &PlanInputs, homes: &[RegionId]) -> Eval {
+    let n = inputs.env.regions.len();
+    let mut resident = vec![0usize; n];
+    for (s, &h) in inputs.catalog.shards.iter().zip(homes) {
+        resident[h] += s.samples();
+    }
+    let mut env2 = inputs.env.clone();
+    for (r, region) in env2.regions.iter_mut().enumerate() {
+        region.data_samples = resident[r];
+    }
+    let plan = optimal_matching_observed(&env2, &inputs.scale);
+
+    // Inbound staging per region: moves on one directed link serialize
+    // FIFO; different source links stream in parallel.
+    let mut inbound = vec![vec![0.0f64; n]; n]; // [from][to] seconds
+    let mut egress = 0.0f64;
+    for (s, &h) in inputs.catalog.shards.iter().zip(homes) {
+        if h != s.home {
+            inbound[s.home][h] += inputs.transfer_s(s.home, h, s.bytes);
+            egress += inputs.cost.egress_cost(s.home, s.bytes);
+        }
+    }
+    let mut run = 0.0f64;
+    for r in 0..n {
+        let power = plan.allocations[r].power() * inputs.scale[r];
+        let steps = steps_for(resident[r], inputs.batch_size, inputs.epochs);
+        let compute = if steps == 0.0 {
+            0.0
+        } else if power <= 0.0 {
+            f64::INFINITY
+        } else {
+            steps * inputs.base_step_s / power
+        };
+        let staging = (0..n).map(|from| inbound[from][r]).fold(0.0f64, f64::max);
+        run = run.max(compute.max(staging));
+    }
+    let mut cost = egress;
+    for alloc in &plan.allocations {
+        for &(dev, units) in &alloc.units {
+            cost += inputs
+                .cost
+                .compute_cost(&BilledAllocation { device: dev, units, held_s: run });
+        }
+    }
+    let objective = cost + inputs.time_value_per_hour * run / 3600.0;
+    Eval {
+        allocations: plan.allocations,
+        resident,
+        straggler: plan.straggler,
+        run_s: run,
+        cost,
+        objective,
+    }
+}
+
+/// The power-proportional layout: shard homes greedily reassigned toward
+/// per-region sample targets proportional to full-inventory (observed)
+/// power. Each shard moves at most once; a move is taken only when it
+/// strictly reduces the L1 distance to the target.
+fn data_follows_compute_homes(inputs: &PlanInputs) -> Vec<RegionId> {
+    let n = inputs.env.regions.len();
+    let powers: Vec<f64> = inputs
+        .env
+        .greedy_plan()
+        .iter()
+        .zip(&inputs.scale)
+        .map(|(a, s)| a.power() * s)
+        .collect();
+    let total_power: f64 = powers.iter().sum();
+    let total_samples = inputs.catalog.total_samples() as f64;
+    let target: Vec<f64> =
+        powers.iter().map(|p| total_samples * p / total_power.max(1e-12)).collect();
+
+    let mut homes: Vec<RegionId> = inputs.catalog.shards.iter().map(|s| s.home).collect();
+    let mut resident: Vec<f64> = vec![0.0; n];
+    for (s, &h) in inputs.catalog.shards.iter().zip(&homes) {
+        resident[h] += s.samples() as f64;
+    }
+    // Largest shards first (tie: id) so the coarse mass settles before
+    // the fine-grained corrections.
+    let mut order: Vec<usize> = (0..inputs.catalog.shards.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(inputs.catalog.shards[i].samples()), i));
+    for i in order {
+        let k = inputs.catalog.shards[i].samples() as f64;
+        let src = homes[i];
+        let before = (resident[src] - target[src]).abs();
+        let mut best: Option<(f64, usize)> = None;
+        for dst in 0..n {
+            if dst == src {
+                continue;
+            }
+            let after = (resident[src] - k - target[src]).abs()
+                + (resident[dst] + k - target[dst]).abs()
+                - (resident[dst] - target[dst]).abs();
+            let gain = before - after;
+            if gain > 1e-9 && best.map_or(true, |(g, _)| gain > g) {
+                best = Some((gain, dst));
+            }
+        }
+        if let Some((_, dst)) = best {
+            resident[src] -= k;
+            resident[dst] += k;
+            homes[i] = dst;
+        }
+    }
+    homes
+}
+
+/// Greedy hill-climb over single-shard relocations; commits a move only
+/// when it improves the objective by more than `margin` (relative).
+/// `movable` restricts which regions may participate (None = all):
+/// mid-run rebalancing must not strand samples on — or steal them from —
+/// partitions that already finished.
+fn improve(
+    inputs: &PlanInputs,
+    homes: &mut Vec<RegionId>,
+    margin: f64,
+    movable: Option<&[bool]>,
+) -> Eval {
+    let n = inputs.env.regions.len();
+    let shards = inputs.catalog.shards.len();
+    let allowed = |r: RegionId| movable.map_or(true, |m| m[r]);
+    let mut best = evaluate(inputs, homes);
+    for _round in 0..(2 * shards + 4) {
+        let mut winner: Option<(f64, usize, RegionId)> = None;
+        for i in 0..shards {
+            let cur = homes[i];
+            if !allowed(cur) {
+                continue; // its samples are already trained (or training)
+            }
+            for dst in 0..n {
+                if dst == cur || !allowed(dst) {
+                    continue;
+                }
+                homes[i] = dst;
+                let cand = evaluate(inputs, homes);
+                if cand.objective < best.objective * (1.0 - margin) - 1e-12
+                    && winner.map_or(true, |(c, _, _)| cand.objective < c)
+                {
+                    winner = Some((cand.objective, i, dst));
+                }
+            }
+            homes[i] = cur;
+        }
+        match winner {
+            Some((_, i, dst)) => {
+                homes[i] = dst;
+                best = evaluate(inputs, homes);
+            }
+            None => break,
+        }
+    }
+    best
+}
+
+fn moves_from(catalog: &DatasetCatalog, homes: &[RegionId]) -> Vec<ShardMove> {
+    catalog
+        .shards
+        .iter()
+        .zip(homes)
+        .filter(|(s, &h)| h != s.home)
+        .map(|(s, &h)| ShardMove {
+            shard: s.id,
+            from: s.home,
+            to: h,
+            bytes: s.bytes,
+            samples: s.samples(),
+        })
+        .collect()
+}
+
+/// Run the placement planner in `mode` over the catalog.
+pub fn plan(inputs: &PlanInputs, mode: PlacementMode) -> PlacementPlan {
+    let initial: Vec<RegionId> = inputs.catalog.shards.iter().map(|s| s.home).collect();
+    let homes = match mode {
+        PlacementMode::ComputeFollowsData => initial,
+        PlacementMode::DataFollowsCompute => data_follows_compute_homes(inputs),
+        PlacementMode::Joint => {
+            // Start from the better pure layout, then climb: the joint
+            // objective can never be worse than either pure mode's.
+            let dfc = data_follows_compute_homes(inputs);
+            let mut homes =
+                if evaluate(inputs, &dfc).objective < evaluate(inputs, &initial).objective {
+                    dfc
+                } else {
+                    initial
+                };
+            improve(inputs, &mut homes, 0.0, None);
+            homes
+        }
+    };
+    let eval = evaluate(inputs, &homes);
+    PlacementPlan {
+        mode,
+        allocations: eval.allocations,
+        moves: moves_from(inputs.catalog, &homes),
+        resident: eval.resident,
+        straggler: eval.straggler,
+        est_run_s: eval.run_s,
+        est_cost: eval.cost,
+        est_objective: eval.objective,
+    }
+}
+
+/// Mid-run rebalancing: starting from the *current* catalog layout,
+/// return the shard moves a joint climb over the remaining work commits.
+/// `margin` gates churn the same way re-plan hysteresis does — a move
+/// must beat the stay-put objective by that relative margin. Inputs
+/// carry observed power scales and remaining epochs; `movable[r]` marks
+/// regions still training — finished partitions neither receive shards
+/// (the samples would be silently dropped) nor give theirs up (already
+/// trained).
+pub fn rebalance(inputs: &PlanInputs, margin: f64, movable: &[bool]) -> Vec<ShardMove> {
+    let mut homes: Vec<RegionId> = inputs.catalog.shards.iter().map(|s| s.home).collect();
+    improve(inputs, &mut homes, margin.max(0.0), Some(movable));
+    moves_from(inputs.catalog, &homes)
+}
+
+/// Build the catalog and run the configured placement planner for one
+/// job — the deterministic entry point shared by the coordinator (which
+/// needs `plan.allocations`) and the training driver (which additionally
+/// stages `plan.moves`); both must see the identical plan.
+pub fn plan_for(
+    env: &CloudEnv,
+    cfg: &crate::engine::driver::TrainConfig,
+    meta: &crate::runtime::ModelMeta,
+) -> anyhow::Result<PlannedDataPlane> {
+    let spec = cfg
+        .dataplane
+        .placement
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("dataplane not configured (no placement spec)"))?;
+    let per_sample = if cfg.dataplane.sample_bytes > 0 {
+        cfg.dataplane.sample_bytes
+    } else {
+        sample_bytes(meta)
+    };
+    let region_samples: Vec<usize> = env.regions.iter().map(|r| r.data_samples).collect();
+    let catalog = DatasetCatalog::from_spec(
+        spec,
+        cfg.n_train,
+        env.regions.len(),
+        per_sample,
+        &region_samples,
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
+    let fabric =
+        Fabric::full_mesh(cfg.seed, env.regions.len(), &cfg.link, &cfg.link_overrides);
+    let base_step = if cfg.base_step_s > 0.0 {
+        cfg.base_step_s
+    } else {
+        crate::train::calib::default_base_step_s(&cfg.model)
+    };
+    let cost = CostModel::default();
+    let time_value = if cfg.dataplane.time_value_per_hour > 0.0 {
+        cfg.dataplane.time_value_per_hour
+    } else {
+        default_time_value_per_hour(env, &cost)
+    };
+    let inputs = PlanInputs {
+        env,
+        catalog: &catalog,
+        epochs: cfg.epochs,
+        base_step_s: base_step,
+        batch_size: meta.batch_size,
+        links: PlanInputs::link_view(&fabric, env.regions.len()),
+        cost,
+        scale: vec![1.0; env.regions.len()],
+        time_value_per_hour: time_value,
+    };
+    let plan = self::plan(&inputs, cfg.dataplane.mode);
+    Ok(PlannedDataPlane { catalog, plan })
+}
+
+/// A planned data plane: the catalog (initial homes) plus the placement
+/// plan derived from it.
+#[derive(Debug, Clone)]
+pub struct PlannedDataPlane {
+    pub catalog: DatasetCatalog,
+    pub plan: PlacementPlan,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::devices::Device;
+    use crate::dataplane::catalog::PlacementSpec;
+
+    fn four_cloud_env() -> CloudEnv {
+        CloudEnv::multi_region(vec![
+            ("SH", Device::CascadeLake, 12, 128),
+            ("CQ", Device::Skylake, 12, 128),
+            ("BJ", Device::Skylake, 12, 128),
+            ("GZ", Device::IceLake, 12, 128),
+        ])
+    }
+
+    fn skewed_catalog() -> DatasetCatalog {
+        DatasetCatalog::from_spec(
+            &PlacementSpec::Skewed { shards: 8, frac: 0.7 },
+            512,
+            4,
+            256 * 1024,
+            &[1; 4],
+        )
+        .unwrap()
+    }
+
+    fn inputs<'a>(env: &'a CloudEnv, catalog: &'a DatasetCatalog) -> PlanInputs<'a> {
+        let fabric = Fabric::full_mesh(1, 4, &LinkSpec::wan_100mbps(), &[]);
+        let cost = CostModel::default();
+        let tv = default_time_value_per_hour(env, &cost);
+        PlanInputs {
+            env,
+            catalog,
+            epochs: 6,
+            base_step_s: 0.25,
+            batch_size: 16,
+            links: PlanInputs::link_view(&fabric, 4),
+            cost,
+            scale: vec![1.0; 4],
+            time_value_per_hour: tv,
+        }
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for m in PlacementMode::ALL {
+            assert_eq!(PlacementMode::from_name(m.name()), Ok(m));
+        }
+        assert_eq!(PlacementMode::from_name("CFD"), Ok(PlacementMode::ComputeFollowsData));
+        let err = PlacementMode::from_name("teleport").unwrap_err();
+        assert!(err.contains("joint") && err.contains("teleport"));
+    }
+
+    #[test]
+    fn compute_follows_data_never_moves() {
+        let env = four_cloud_env();
+        let cat = skewed_catalog();
+        let p = plan(&inputs(&env, &cat), PlacementMode::ComputeFollowsData);
+        assert!(p.moves.is_empty());
+        assert_eq!(p.resident, cat.resident_samples());
+        assert_eq!(p.straggler, 0, "the hot region is the straggler");
+        // The data-less region gets no compute.
+        let res = cat.resident_samples();
+        for (r, &samples) in res.iter().enumerate() {
+            if samples == 0 {
+                assert_eq!(p.allocations[r].total_units(), 0, "region {r} idle");
+            }
+        }
+    }
+
+    #[test]
+    fn data_follows_compute_balances_toward_power() {
+        let env = four_cloud_env();
+        let cat = skewed_catalog();
+        let p = plan(&inputs(&env, &cat), PlacementMode::DataFollowsCompute);
+        assert!(!p.moves.is_empty(), "a 70% skew must shed load");
+        // Final layout tracks power shares (4:6:6:6 of 22) within a shard.
+        let total: usize = p.resident.iter().sum();
+        assert_eq!(total, 512, "moves conserve samples");
+        let hot_share = p.resident[0] as f64 / total as f64;
+        assert!(hot_share < 0.45, "hot region sheds toward 4/22: {:?}", p.resident);
+        // Every move originates at the shard's catalog home.
+        for m in &p.moves {
+            assert_eq!(cat.shards[m.shard].home, m.from);
+            assert_ne!(m.from, m.to);
+        }
+    }
+
+    #[test]
+    fn joint_estimate_never_worse_than_either_pure_mode() {
+        let env = four_cloud_env();
+        let cat = skewed_catalog();
+        let inp = inputs(&env, &cat);
+        let cfd = plan(&inp, PlacementMode::ComputeFollowsData);
+        let dfc = plan(&inp, PlacementMode::DataFollowsCompute);
+        let joint = plan(&inp, PlacementMode::Joint);
+        assert!(
+            joint.est_objective <= cfd.est_objective + 1e-9,
+            "{} vs cfd {}",
+            joint.est_objective,
+            cfd.est_objective
+        );
+        assert!(
+            joint.est_objective <= dfc.est_objective + 1e-9,
+            "{} vs dfc {}",
+            joint.est_objective,
+            dfc.est_objective
+        );
+        assert!(joint.est_run_s < cfd.est_run_s, "joint must relieve the data straggler");
+        assert!(!joint.moves.is_empty(), "a 70% skew is worth moving for");
+    }
+
+    #[test]
+    fn moves_never_exceed_catalog_bytes_and_plans_are_deterministic() {
+        let env = four_cloud_env();
+        let cat = skewed_catalog();
+        let inp = inputs(&env, &cat);
+        for mode in PlacementMode::ALL {
+            let a = plan(&inp, mode);
+            let b = plan(&inp, mode);
+            assert!(a.moved_bytes() <= cat.total_bytes(), "{mode:?} moved too much");
+            assert_eq!(a.moves, b.moves, "{mode:?} must be deterministic");
+            assert_eq!(a.resident, b.resident);
+            let mut seen = std::collections::BTreeSet::new();
+            for m in &a.moves {
+                assert!(seen.insert(m.shard), "{mode:?} moves shard {} twice", m.shard);
+            }
+            let total: usize = a.resident.iter().sum();
+            assert_eq!(total, cat.total_samples());
+        }
+    }
+
+    #[test]
+    fn rebalance_is_idempotent_at_the_joint_optimum() {
+        let env = four_cloud_env();
+        // Apply the joint plan's moves, then ask again: a local optimum
+        // must not churn (the hysteresis analogue of replan idempotence).
+        let cat = {
+            let mut c = skewed_catalog();
+            let p = plan(&inputs(&env, &c), PlacementMode::Joint);
+            for m in &p.moves {
+                c.apply_move(m.shard, m.to);
+            }
+            c
+        };
+        let inp = inputs(&env, &cat);
+        assert_eq!(
+            rebalance(&inp, 0.02, &[true; 4]),
+            Vec::new(),
+            "settled layout must not churn"
+        );
+    }
+
+    #[test]
+    fn rebalance_never_touches_finished_regions() {
+        // Region 1 finished its shard: a slowed region 0 may shed load,
+        // but no move may target region 1 (its partition would drop the
+        // samples) or take region 1's shards (already trained).
+        let env = four_cloud_env();
+        let cat = skewed_catalog();
+        let mut inp = inputs(&env, &cat);
+        inp.scale = vec![0.3, 1.0, 1.0, 1.0]; // hot region slowed hard
+        let movable = [true, false, true, true];
+        let moves = rebalance(&inp, 0.0, &movable);
+        assert!(!moves.is_empty(), "a 70% slowdown on the hot region must move shards");
+        for m in &moves {
+            assert_ne!(m.to, 1, "moved into a finished region: {m:?}");
+            assert_ne!(m.from, 1, "stole a finished region's shard: {m:?}");
+        }
+    }
+
+    #[test]
+    fn zero_data_region_is_planned_not_panicked() {
+        // The planner legitimately produces regions with no data; the
+        // matching must hand them an empty allocation, not assert.
+        let env = four_cloud_env();
+        let cat = DatasetCatalog::from_spec(
+            &PlacementSpec::Single { region: 0 },
+            256,
+            4,
+            1024,
+            &[1; 4],
+        )
+        .unwrap();
+        let p = plan(&inputs(&env, &cat), PlacementMode::ComputeFollowsData);
+        assert_eq!(p.resident, vec![256, 0, 0, 0]);
+        for alloc in &p.allocations[1..] {
+            assert_eq!(alloc.total_units(), 0);
+        }
+        assert!(p.est_run_s.is_finite());
+    }
+}

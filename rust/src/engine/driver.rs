@@ -38,7 +38,10 @@ use anyhow::Result;
 use crate::cloud::cost::{BilledAllocation, CostModel};
 use crate::cloud::devices::DeviceKind;
 use crate::cloud::{Allocation, CloudEnv};
-use crate::data::{shard_by_fraction, Dataset};
+use crate::data::{shard_by_fraction, Dataset, Shard};
+use crate::dataplane::migration::{self, DataPlaneState};
+use crate::dataplane::placement::{self, PlanInputs};
+use crate::dataplane::DataPlaneConfig;
 use crate::faas::workflow::{WorkflowDef, WorkflowInstance};
 use crate::faas::{autoscaler, FaasRuntime, FunctionKind, FunctionSpec};
 use crate::net::{Fabric, LinkSpec, SharedFabric};
@@ -105,6 +108,10 @@ pub struct TrainConfig {
     pub elastic: ElasticConfig,
     /// Injected resource/WAN churn events (empty = a calm run).
     pub churn: Vec<ChurnEvent>,
+    /// Physical data plane: dataset catalog + placement + migration
+    /// (off by default — data stays resident where the `regions` config
+    /// put it, the seed behavior).
+    pub dataplane: DataPlaneConfig,
 }
 
 impl TrainConfig {
@@ -128,6 +135,7 @@ impl TrainConfig {
             checkpoint_dir: None,
             elastic: ElasticConfig::default(),
             churn: Vec::new(),
+            dataplane: DataPlaneConfig::default(),
         }
     }
 }
@@ -145,6 +153,9 @@ pub fn default_lr(model: &str) -> f32 {
 /// The driver's world: partitions + substrates, stepped by `sim::Sim`.
 pub(crate) struct World {
     pub(crate) cfg: TrainConfig,
+    /// The environment the job deployed into (inventories; the data-plane
+    /// rebalancer re-plans against it).
+    pub(crate) env: CloudEnv,
     pub(crate) model: Rc<ModelRuntime>,
     pub(crate) train_ds: Rc<Dataset>,
     pub(crate) eval_ds: Rc<Dataset>,
@@ -183,6 +194,9 @@ pub(crate) struct World {
     /// Virtual time this job was admitted (its billing and report epoch;
     /// 0 for single-job runs).
     pub(crate) start_at: Time,
+    /// Live data-plane state (catalog + migrations), when
+    /// `cfg.dataplane` is enabled.
+    pub(crate) dataplane: Option<DataPlaneState>,
 }
 
 impl World {
@@ -203,10 +217,24 @@ pub fn run_geo_training(
     allocations: Vec<Allocation>,
     cfg: TrainConfig,
 ) -> Result<TrainReport> {
+    run_geo_training_planned(rt, env, allocations, cfg, None)
+}
+
+/// [`run_geo_training`] with an already-computed placement plan: callers
+/// that ran `dataplane::plan_for` to pick `allocations` (the coordinator)
+/// hand the result down instead of having `deploy_job` recompute the
+/// identical deterministic plan.
+pub(crate) fn run_geo_training_planned(
+    rt: &PjrtRuntime,
+    env: &CloudEnv,
+    allocations: Vec<Allocation>,
+    cfg: TrainConfig,
+    planned: Option<crate::dataplane::PlannedDataPlane>,
+) -> Result<TrainReport> {
     let wall0 = std::time::Instant::now();
     let fabric = Fabric::full_mesh(cfg.seed, env.regions.len(), &cfg.link, &cfg.link_overrides);
     let shared = SharedFabric::new(fabric);
-    let (mut sim, mut world) = deploy_job(rt, env, allocations, cfg, 0.0, shared)?;
+    let (mut sim, mut world) = deploy_job_planned(rt, env, allocations, cfg, 0.0, shared, planned)?;
     let drained = sim.run_with_limit(&mut world, 200_000_000);
     anyhow::ensure!(drained, "simulation exceeded event limit — runaway loop?");
     let global_end = world.global_end.unwrap_or_else(|| sim.now());
@@ -237,6 +265,21 @@ pub(crate) fn deploy_job(
     start_at: Time,
     fabric: SharedFabric,
 ) -> Result<(Sim<World>, World)> {
+    deploy_job_planned(rt, env, allocations, cfg, start_at, fabric, None)
+}
+
+/// [`deploy_job`] with an optionally pre-computed placement plan (see
+/// [`run_geo_training_planned`]); `None` plans here when the data plane
+/// is enabled.
+pub(crate) fn deploy_job_planned(
+    rt: &PjrtRuntime,
+    env: &CloudEnv,
+    allocations: Vec<Allocation>,
+    cfg: TrainConfig,
+    start_at: Time,
+    fabric: SharedFabric,
+    pre_planned: Option<crate::dataplane::PlannedDataPlane>,
+) -> Result<(Sim<World>, World)> {
     anyhow::ensure!(allocations.len() == env.regions.len(), "one allocation per region");
     // Resumed runs must not silently mix sync strategies or topologies.
     if let Some(dir) = &cfg.checkpoint_dir {
@@ -256,8 +299,47 @@ pub(crate) fn deploy_job(
 
     // ---- data ----
     let (train_ds, eval_ds) = crate::data::generate(&model.meta, cfg.n_train, cfg.n_eval, cfg.seed);
-    let fractions: Vec<f64> = env.regions.iter().map(|r| r.data_samples.max(1) as f64).collect();
-    let shards = shard_by_fraction(cfg.n_train, &fractions, cfg.seed);
+    // With an active data plane, residency comes from the catalog and
+    // the placement plan: a partition starts with the indices of the
+    // shards that stay home, gains migrated shards as they land, and its
+    // step budget is sized to the *final* (post-migration) sample count.
+    // Callers that picked `allocations` via `dataplane::plan_for` pass
+    // the plan down (`pre_planned`); anyone else gets the identical
+    // deterministic plan computed here.
+    let planned = match pre_planned {
+        Some(pd) => Some(pd),
+        None if cfg.dataplane.enabled() => Some(placement::plan_for(env, &cfg, &model.meta)?),
+        None => None,
+    };
+    // Per region: (initially-available shard, final sample count).
+    let shards: Vec<(Shard, usize)> = match &planned {
+        Some(pd) => {
+            let moved: std::collections::BTreeSet<usize> =
+                pd.plan.moves.iter().map(|m| m.shard).collect();
+            let mut initial: Vec<Vec<usize>> = vec![Vec::new(); env.regions.len()];
+            for s in &pd.catalog.shards {
+                if !moved.contains(&s.id) {
+                    initial[s.home].extend(s.indices());
+                }
+            }
+            initial
+                .into_iter()
+                .enumerate()
+                .map(|(i, idxs)| (Shard::new(idxs, cfg.seed, i as u64), pd.plan.resident[i]))
+                .collect()
+        }
+        None => {
+            let fractions: Vec<f64> =
+                env.regions.iter().map(|r| r.data_samples.max(1) as f64).collect();
+            shard_by_fraction(cfg.n_train, &fractions, cfg.seed)
+                .into_iter()
+                .map(|s| {
+                    let n = s.len();
+                    (s, n)
+                })
+                .collect()
+        }
+    };
 
     // ---- serverless control plane + training workflows ----
     let mut faas = FaasRuntime::new();
@@ -293,18 +375,29 @@ pub(crate) fn deploy_job(
     let initial_allocations = allocations.clone();
     let mut parts: Vec<Partition> = Vec::new();
     let mut worker_keys: Vec<String> = Vec::new();
-    for (i, (alloc, shard)) in allocations.into_iter().zip(shards).enumerate() {
+    for (i, (alloc, (shard, final_samples))) in allocations.into_iter().zip(shards).enumerate() {
         let region = &env.regions[i];
         let is_gpu = alloc
             .units
             .first()
             .map(|(d, _)| d.info().kind == DeviceKind::Gpu)
             .unwrap_or(false);
-        let workers = calib::worker_count(alloc.total_units(), is_gpu, cfg.worker_cores);
+        // A region with no resident (or inbound) data runs no workers —
+        // the placement planner legitimately leaves it empty.
+        let has_work = final_samples > 0;
+        let workers =
+            if has_work { calib::worker_count(alloc.total_units(), is_gpu, cfg.worker_cores) } else { 0 };
         let power = alloc.power();
-        anyhow::ensure!(power > 0.0, "region {} has an empty allocation", region.name);
-        let w_power = calib::worker_power(power, workers);
-        let t_iter = calib::iter_time(base_step, w_power);
+        anyhow::ensure!(
+            !has_work || power > 0.0,
+            "region {} has data but an empty allocation",
+            region.name
+        );
+        let t_iter = if has_work {
+            calib::iter_time(base_step, calib::worker_power(power, workers))
+        } else {
+            base_step // unused: no worker ever starts
+        };
 
         let mut wf = WorkflowDef::new(&format!("train-{}", region.name));
         let ps_node =
@@ -339,7 +432,12 @@ pub(crate) fn deploy_job(
         startup_done = startup_done.max(workers_ready);
         worker_keys.push(worker_key);
 
-        let steps_per_epoch = shard.steps_per_epoch(model.meta.batch_size) as u64;
+        // Step budget sized to the final (post-migration) sample count.
+        let steps_per_epoch = if final_samples == 0 {
+            0
+        } else {
+            final_samples.div_ceil(model.meta.batch_size).max(1) as u64
+        };
         parts.push(Partition {
             region: i,
             region_name: region.name.clone(),
@@ -353,6 +451,7 @@ pub(crate) fn deploy_job(
             steps_started: 0,
             steps_completed: 0,
             epoch_steps: steps_per_epoch,
+            steps_into_epoch: 0,
             epochs_done: 0,
             gate: Gate::Running,
             in_flight: 0,
@@ -364,33 +463,54 @@ pub(crate) fn deploy_job(
             cold_start_time: workers_ready - t_comm_ready,
             worker_replicas,
             alloc_since: start_at,
-            mon_last_t: startup_done,
-            mon_last_steps: 0,
-            mon_last_waited: 0.0,
+            data_blocked_since: 0.0,
+            data_stall: 0.0,
+            win_iter_sum: 0.0,
+            win_iter_count: 0,
             rng: Pcg32::new(cfg.seed ^ 0x7A27, i as u64),
         });
     }
 
     let n_parts = parts.len();
-    // Elastic control loop: the controller sees the launch plan and the
-    // bandwidths the initial sync topology was planned against.
+    // Elastic control loop: the controller sees the launch plan, the
+    // bandwidths the initial sync topology was planned against, and —
+    // under an active data plane — the *post-migration* residency (its
+    // Algorithm-1 candidates must match the layout actually trained on).
     let controller = if cfg.elastic.enabled {
         let nominal_bw: Vec<(usize, usize, f64)> = (0..n_parts)
             .flat_map(|a| (0..n_parts).filter(move |b| *b != a).map(move |b| (a, b)))
             .filter_map(|(a, b)| fabric.link_bandwidth(a, b).map(|bw| (a, b, bw)))
             .collect();
+        let mut controller_env = env.clone();
+        if let Some(pd) = &planned {
+            for (region, &samples) in controller_env.regions.iter_mut().zip(&pd.plan.resident) {
+                region.data_samples = samples;
+            }
+        }
         Some(ElasticController::new(
             cfg.elastic.clone(),
-            env.clone(),
+            controller_env,
             &initial_allocations,
             nominal_bw,
         ))
     } else {
         None
     };
-    let mut world = World {
+    // Live data-plane state: the catalog plus every staged move, queued
+    // for transfer at training start.
+    let dataplane = planned.map(|pd| {
+        let spec = cfg.dataplane.placement.clone().expect("planned implies a spec");
+        let mut st = DataPlaneState::new(pd.catalog, cfg.dataplane.mode, spec);
+        for mv in pd.plan.moves {
+            let indices = st.catalog.shards[mv.shard].indices();
+            st.enqueue(mv, indices, false);
+        }
+        st
+    });
+    let world = World {
         plan: fabric.with(|f| cfg.topology.plan(n_parts, f)),
         cfg,
+        env: env.clone(),
         model,
         train_ds: Rc::new(train_ds),
         eval_ds: Rc::new(eval_ds),
@@ -410,16 +530,35 @@ pub(crate) fn deploy_job(
         wan_bytes: 0,
         wan_transfers: 0,
         start_at,
+        dataplane,
     };
 
-    // Kick off every worker loop at training start.
+    // Kick off every worker loop at training start; a partition with no
+    // planned steps (a data-less region the placement planner emptied)
+    // finishes immediately instead.
     for p in 0..n_parts {
+        if world.parts[p].steps_total == 0 {
+            sim.schedule_at(startup_done, move |sim, w: &mut World| {
+                finish_partition(sim, w, p);
+            });
+            continue;
+        }
         let workers = world.parts[p].workers;
         for _ in 0..workers {
             sim.schedule_at(startup_done, move |sim, w: &mut World| {
                 start_worker_iteration(sim, w, p);
             });
         }
+    }
+
+    // Stage every planned shard migration at training start: prefetch
+    // overlaps the first epochs, transfers FIFO-contend on the WAN with
+    // gradient syncs (and other jobs on a shared fabric).
+    let staged_moves = world.dataplane.as_ref().map_or(0, |d| d.moves.len());
+    for m in 0..staged_moves {
+        sim.schedule_at(startup_done, move |sim, w: &mut World| {
+            migration::begin_move(sim, w, m);
+        });
     }
 
     // Inject resource/WAN churn on the virtual clock. Churn times are
@@ -443,13 +582,10 @@ pub(crate) fn deploy_job(
         }
     }
 
-    // First monitor tick one interval into training. Monitoring windows
-    // open at the true (global) training start, not each region's own
-    // deploy completion.
+    // First monitor tick one interval into training. Compute windows are
+    // per-iteration accumulators (they open empty at training start);
+    // only the link-bandwidth deltas carry window-start state.
     if world.controller.is_some() {
-        for part in &mut world.parts {
-            part.mon_last_t = startup_done;
-        }
         let interval = world.cfg.elastic.interval_s.max(1e-3);
         sim.schedule_at(startup_done + interval, move |sim, w: &mut World| {
             monitor_tick(sim, w);
@@ -505,6 +641,20 @@ pub(crate) fn finalize_report(
             cold_start_time: part.cold_start_time,
         });
     }
+    // Cost split: sync traffic bills at the flat WAN rate; shard
+    // migrations (when a data plane ran) bill at their source regions'
+    // object-store egress rates instead — `wan_bytes` itself counts both
+    // (it must reconcile against the shared fabric's totals).
+    let (dataplane, shard_bytes, egress_cost) = match &world.dataplane {
+        Some(dp) => {
+            let stall: Time = world.parts.iter().map(|p| p.data_stall).sum();
+            (Some(dp.report(stall, world.start_at)), dp.sent_bytes, dp.egress_cost)
+        }
+        None => (None, 0, 0.0),
+    };
+    let gradient_bytes = world.wan_bytes.saturating_sub(shard_bytes);
+    let compute_cost: f64 = billed.iter().map(|a| cost_model.compute_cost(a)).sum();
+    let wan_cost = cost_model.wan_cost(gradient_bytes) + egress_cost;
     TrainReport {
         model: world.cfg.model.clone(),
         strategy: world.cfg.sync.strategy.name().to_string(),
@@ -518,12 +668,13 @@ pub(crate) fn finalize_report(
         final_accuracy: final_acc,
         wan_bytes: world.wan_bytes,
         wan_transfers: world.wan_transfers,
-        cost: cost_model.total(&billed, world.wan_bytes),
-        compute_cost: billed.iter().map(|a| cost_model.compute_cost(a)).sum(),
-        wan_cost: cost_model.wan_cost(world.wan_bytes),
+        cost: compute_cost + wan_cost,
+        compute_cost,
+        wan_cost,
         wall_seconds,
         pjrt_executions: world.model.exec_counts.get(),
         replan_events: world.replans.clone(),
+        dataplane,
     }
 }
 
@@ -531,8 +682,17 @@ pub(crate) fn finalize_report(
 
 pub(crate) fn start_worker_iteration(sim: &mut Sim<World>, w: &mut World, p: usize) {
     let b = w.model.meta.batch_size;
+    let now = sim.now();
     let part = &mut w.parts[p];
     if part.gate != Gate::Running || part.local_done() {
+        return;
+    }
+    if part.shard.is_empty() {
+        // Data-plane staging: every sample this partition will train on
+        // is still on the WAN. Gate until the next shard lands
+        // (`dataplane::migration::deliver_shard` reopens the pool).
+        part.gate = Gate::DataBlocked;
+        part.data_blocked_since = now;
         return;
     }
     part.steps_started += 1;
@@ -546,10 +706,11 @@ pub(crate) fn start_worker_iteration(sim: &mut Sim<World>, w: &mut World, p: usi
     let jitter = 0.75 + 0.5 * part.rng.f64();
     let t_iter = part.t_iter * jitter / part.power_factor;
     sim.schedule(t_iter, move |sim, w: &mut World| {
-        finish_worker_iteration(sim, w, p, snapshot, version, batch);
+        finish_worker_iteration(sim, w, p, snapshot, version, batch, t_iter);
     });
 }
 
+#[allow(clippy::too_many_arguments)]
 fn finish_worker_iteration(
     sim: &mut Sim<World>,
     w: &mut World,
@@ -557,6 +718,7 @@ fn finish_worker_iteration(
     snapshot: Vec<f32>,
     version: u64,
     batch: Vec<usize>,
+    iter_s: f64,
 ) {
     // Real compute: gradient of the model at the pulled snapshot.
     let (x, y) = w.train_ds.batch(&batch, &w.model.meta);
@@ -564,22 +726,14 @@ fn finish_worker_iteration(
         .model
         .train_step(&snapshot, &x, &y)
         .expect("PJRT train_step failed mid-simulation");
-    {
-        let part = &mut w.parts[p];
-        part.in_flight -= 1;
-        part.steps_completed += 1;
-        part.ps.push_gradient(&grads, version);
-    }
-
-    // Epoch boundary bookkeeping (+ eval on partition 0).
+    // Step + epoch bookkeeping; the modeled completion time feeds the
+    // monitor's per-iteration window (fine-grained even under barriers).
     let crossed_epoch = {
         let part = &mut w.parts[p];
-        if part.at_epoch_boundary() {
-            part.epochs_done += 1;
-            true
-        } else {
-            false
-        }
+        part.in_flight -= 1;
+        part.note_iteration_time(iter_s);
+        part.ps.push_gradient(&grads, version);
+        part.note_step_completed()
     };
     if crossed_epoch && p == 0 && !w.cfg.skip_eval {
         let every = w.cfg.eval_every.max(1);
@@ -624,7 +778,7 @@ fn finish_worker_iteration(
                 try_release_barrier(sim, w);
             }
         }
-        Gate::CommBlocked | Gate::Finished => {}
+        Gate::CommBlocked | Gate::DataBlocked | Gate::Finished => {}
     }
 }
 
@@ -735,35 +889,33 @@ pub(crate) fn monitor_tick(sim: &mut Sim<World>, w: &mut World) {
     });
 }
 
-/// Build the monitoring sample: per-cloud effective step time over the
-/// window (excluding time the partition sat blocked on the WAN, so
-/// comm backpressure is not misread as compute loss) and per-planned-link
-/// delivered bandwidth from the fabric's transfer statistics.
+/// Build the monitoring sample: per-cloud mean per-iteration completion
+/// time over the window (recorded at each iteration's finish, so
+/// barrier-heavy SMA runs sample at full rate — wall-clock windows only
+/// saw freely-running stretches) and per-planned-link delivered
+/// bandwidth from the fabric's transfer statistics.
 fn collect_sample(now: Time, w: &mut World) -> MonitorSample {
     let mut power_scale = Vec::with_capacity(w.parts.len());
+    let mut mean_iter_s = Vec::with_capacity(w.parts.len());
     let finished: Vec<bool> = w.parts.iter().map(|p| p.gate == Gate::Finished).collect();
     for part in &mut w.parts {
-        let dt = now - part.mon_last_t;
-        let steps = part.steps_completed.saturating_sub(part.mon_last_steps);
-        let blocked = (part.slot.waited - part.mon_last_waited).clamp(0.0, dt);
-        // Only a freely-running, not-yet-draining partition carries a
-        // clean compute signal: gated windows hide unrecorded wait time
-        // and wind-down windows (all steps started) read as slowdowns.
-        let scale = if part.gate != Gate::Running || part.local_done() || steps == 0 || dt <= 0.0
-        {
-            None
+        let mean = if part.win_iter_count > 0 {
+            Some(part.win_iter_sum / part.win_iter_count as f64)
         } else {
-            // Steady state: `workers` concurrent loops complete one step
-            // every observed step time; compare against the catalog
-            // expectation for the current allocation.
-            let active = (dt - blocked).max(dt * 0.01);
-            let observed_step = active * part.workers.max(1) as f64 / steps as f64;
-            Some(part.t_iter / observed_step)
+            None
         };
+        // Iteration completion times measure compute directly (waits are
+        // never inside them); wind-down windows (every step started) and
+        // finished partitions still carry no re-plannable signal.
+        let scale = match mean {
+            Some(m) if part.gate != Gate::Finished && !part.local_done() && m > 0.0 => {
+                Some(part.t_iter / m)
+            }
+            _ => None,
+        };
+        mean_iter_s.push(mean);
         power_scale.push(scale);
-        part.mon_last_t = now;
-        part.mon_last_steps = part.steps_completed;
-        part.mon_last_waited = part.slot.waited;
+        part.reset_monitor_window();
     }
     // Delivered bandwidth per planned edge over THIS window: byte and
     // stream-time deltas since the previous tick (setup overhead is
@@ -785,7 +937,7 @@ fn collect_sample(now: Time, w: &mut World) -> MonitorSample {
             }
         }
     }
-    MonitorSample { t: now, power_scale, finished, link_bw }
+    MonitorSample { t: now, power_scale, mean_iter_s, finished, link_bw }
 }
 
 /// Apply a committed re-plan mid-run: resize every changed partition's
@@ -811,6 +963,14 @@ fn apply_replan(sim: &mut Sim<World>, w: &mut World, dec: &ReplanDecision) {
         w.plan = w.cfg.topology.plan(w.parts.len(), &observed);
         topology_replanned = true;
     }
+    // Data-plane rebalancing rides only on *committed* load re-plans
+    // (the same hysteresis gate), so observed-power drift can relocate
+    // shards away from a persistently slowed cloud.
+    let data_moves = if load_changed && w.cfg.dataplane.rebalance {
+        maybe_rebalance(sim, w)
+    } else {
+        0
+    };
     if !load_changed && !topology_replanned {
         return;
     }
@@ -826,7 +986,117 @@ fn apply_replan(sim: &mut Sim<World>, w: &mut World, dec: &ReplanDecision) {
         straggler: dec.straggler,
         units: w.parts.iter().map(|p| p.alloc.total_units()).collect(),
         topology_replanned,
+        data_moves,
     });
+}
+
+/// Propose and execute mid-run shard rebalancing after a committed load
+/// re-plan: re-run the joint placement climb over the *remaining* work
+/// at the controller's observed power scales, and execute any move whose
+/// payoff clears a 5% objective margin (the data plane's hysteresis).
+/// Sources shed their samples immediately (step budgets retimed);
+/// destinations gain theirs when the shard physically lands. Returns the
+/// number of moves put on the WAN.
+///
+/// Only the `joint` placement mode rebalances — the pure modes promise a
+/// fixed migration story (compute-follows-data: zero moves) — and
+/// finished partitions are masked out of the climb: a shard landing on a
+/// finished partition would silently drop its remaining epochs.
+fn maybe_rebalance(sim: &mut Sim<World>, w: &mut World) -> usize {
+    if w.cfg.dataplane.mode != crate::dataplane::PlacementMode::Joint {
+        return 0;
+    }
+    let scales = match w.controller.as_ref() {
+        Some(c) => c.scales().to_vec(),
+        None => return 0,
+    };
+    match w.dataplane.as_ref() {
+        // One settled staging at a time, and at most a couple of
+        // rebalancing rounds per run — migration churn is never free.
+        Some(dp) if dp.pending == 0 && dp.rebalances < 2 => {}
+        _ => return 0,
+    }
+    let remaining_epochs = w
+        .parts
+        .iter()
+        .filter(|p| p.gate != Gate::Finished)
+        .map(|p| w.cfg.epochs.saturating_sub(p.epochs_done))
+        .max()
+        .unwrap_or(0);
+    if remaining_epochs < 2 {
+        return 0; // not enough run left to amortize a transfer
+    }
+    let movable: Vec<bool> = w.parts.iter().map(|p| p.gate != Gate::Finished).collect();
+    let moves = {
+        let dp = w.dataplane.as_ref().expect("checked above");
+        let links = w.fabric.with(|f| PlanInputs::link_view(f, w.env.regions.len()));
+        let time_value = if w.cfg.dataplane.time_value_per_hour > 0.0 {
+            w.cfg.dataplane.time_value_per_hour
+        } else {
+            placement::default_time_value_per_hour(&w.env, &dp.cost)
+        };
+        let inputs = PlanInputs {
+            env: &w.env,
+            catalog: &dp.catalog,
+            epochs: remaining_epochs,
+            base_step_s: w.base_step,
+            batch_size: w.model.meta.batch_size,
+            links,
+            cost: dp.cost.clone(),
+            scale: scales,
+            time_value_per_hour: time_value,
+        };
+        placement::rebalance(&inputs, 0.05, &movable)
+    };
+    if moves.is_empty() {
+        return 0;
+    }
+    let batch = w.model.meta.batch_size;
+    let epochs = w.cfg.epochs;
+    let count = moves.len();
+    for mv in moves {
+        let (start, end) = {
+            let dp = w.dataplane.as_ref().expect("data plane active");
+            let s = &dp.catalog.shards[mv.shard];
+            (s.start, s.end)
+        };
+        let src = mv.from;
+        {
+            let part = &mut w.parts[src];
+            part.shard.remove_range(start, end);
+            part.retime_step_budget(batch, epochs, 0);
+        }
+        // A source drained to nothing finishes once its in-flight work
+        // lands; if it is already idle, close it out now.
+        if w.parts[src].gate == Gate::Running
+            && w.parts[src].local_done()
+            && w.parts[src].in_flight == 0
+        {
+            finish_partition(sim, w, src);
+        }
+        let idx = w
+            .dataplane
+            .as_mut()
+            .expect("data plane active")
+            .enqueue(mv, (start..end).collect(), true);
+        migration::begin_move(sim, w, idx);
+    }
+    // Keep the controller's residency view in sync with the layout the
+    // moves will produce (its candidates must plan the new data map).
+    let predicted: Vec<usize> = {
+        let dp = w.dataplane.as_mut().expect("data plane active");
+        dp.rebalances += 1;
+        let mut resident = dp.catalog.resident_samples();
+        for m in dp.moves.iter().filter(|m| !m.delivered) {
+            resident[m.mv.from] -= m.mv.samples.min(resident[m.mv.from]);
+            resident[m.mv.to] += m.mv.samples;
+        }
+        resident
+    };
+    if let Some(ctrl) = w.controller.as_mut() {
+        ctrl.update_residency(&predicted);
+    }
+    count
 }
 
 /// Resize every changed partition's worker pool to `allocations` through
@@ -886,11 +1156,9 @@ pub(crate) fn resize_to_allocations(
         part.t_iter = calib::iter_time(w.base_step, w_power);
         part.alloc = new_alloc;
         part.alloc_since = now;
-        // Retime the monitoring window: the old expectation no
-        // longer applies to the new pool.
-        part.mon_last_t = now;
-        part.mon_last_steps = part.steps_completed;
-        part.mon_last_waited = part.slot.waited;
+        // Reset the monitoring window: iterations recorded under the old
+        // pool's `t_iter` no longer measure the new expectation.
+        part.reset_monitor_window();
         if !spawned.is_empty() {
             // Newly-spawned workers join the loop after cold start.
             sim.schedule_at(ready_at, move |sim, w: &mut World| {
@@ -919,6 +1187,10 @@ pub(crate) fn apply_lease(
     }
     let old_units: Vec<u32> = w.parts.iter().map(|p| p.alloc.total_units()).collect();
     let changed = resize_to_allocations(sim, w, allocations);
+    // The job's planning view of its inventory follows the lease: both
+    // the elastic controller and the data-plane rebalancer must plan
+    // against compute the job actually holds.
+    w.env = lease_env.clone();
     if let Some(ctrl) = w.controller.as_mut() {
         ctrl.reset_lease(lease_env.clone(), allocations);
     }
@@ -930,6 +1202,7 @@ pub(crate) fn apply_lease(
             straggler,
             units: w.parts.iter().map(|p| p.alloc.total_units()).collect(),
             topology_replanned: false,
+            data_moves: 0,
         });
     }
 }

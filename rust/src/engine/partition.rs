@@ -6,7 +6,8 @@
 //! (the paper's ElasticDL-derived pods), and step/epoch accounting. The
 //! WAN side of the actor (send slot, backpressure clock) lives in
 //! [`super::comm::SendSlot`]; the event loop that drives it lives in
-//! [`super::driver`].
+//! [`super::driver`]; shard arrivals that feed it come from
+//! [`crate::dataplane::migration`].
 
 use crate::cloud::Allocation;
 use crate::data::Shard;
@@ -24,6 +25,9 @@ pub enum Gate {
     Running,
     /// Blocked on the PS communicator's send slot (WAN backpressure).
     CommBlocked,
+    /// Waiting for a dataset shard still in flight on the WAN (the data
+    /// plane's staging gate).
+    DataBlocked,
     /// Waiting at a synchronous-strategy barrier (SMA).
     AtBarrier,
     /// All local epochs done; worker functions terminated.
@@ -52,7 +56,12 @@ pub struct Partition {
     pub steps_total: u64,
     pub steps_started: u64,
     pub steps_completed: u64,
+    /// Steps per local epoch. Mutable: data-plane rebalancing moves
+    /// samples between partitions mid-run ([`Partition::retime_step_budget`]).
     pub epoch_steps: u64,
+    /// Steps completed inside the current epoch (explicit counter, so
+    /// `epoch_steps` can change mid-run without corrupting boundaries).
+    pub steps_into_epoch: u64,
     pub epochs_done: usize,
     pub gate: Gate,
     /// Worker iterations currently in flight.
@@ -72,11 +81,17 @@ pub struct Partition {
     /// Virtual time the current allocation took effect (billing-segment
     /// start; 0.0 until the first elastic re-plan).
     pub alloc_since: Time,
-    /// Monitoring window state: time / completed steps / blocked seconds
-    /// at the last control-loop sample.
-    pub mon_last_t: Time,
-    pub mon_last_steps: u64,
-    pub mon_last_waited: Time,
+    /// When the partition entered `Gate::DataBlocked`.
+    pub data_blocked_since: Time,
+    /// Accumulated seconds spent `Gate::DataBlocked` (the data-plane
+    /// report's stall time).
+    pub data_stall: Time,
+    /// Per-iteration completion times over the current monitoring window
+    /// (sum + count of modeled iteration durations; ROADMAP open item —
+    /// the finer signal barrier-heavy runs need). Reset at every monitor
+    /// sample and on every pool resize.
+    pub win_iter_sum: f64,
+    pub win_iter_count: u64,
     /// Deterministic per-partition jitter stream.
     pub rng: Pcg32,
 }
@@ -94,9 +109,63 @@ impl Partition {
         self.workers.saturating_sub(self.in_flight)
     }
 
-    /// True when the just-completed step closed a local epoch.
-    pub fn at_epoch_boundary(&self) -> bool {
-        self.epoch_steps > 0 && self.steps_completed % self.epoch_steps == 0
+    /// Account one completed step's epoch bookkeeping; returns true when
+    /// it closed a local epoch.
+    pub fn note_step_completed(&mut self) -> bool {
+        self.steps_completed += 1;
+        self.steps_into_epoch += 1;
+        if self.epoch_steps > 0 && self.steps_into_epoch >= self.epoch_steps {
+            self.steps_into_epoch = 0;
+            self.epochs_done += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record one iteration's modeled completion time in the monitoring
+    /// window.
+    pub fn note_iteration_time(&mut self, seconds: f64) {
+        self.win_iter_sum += seconds;
+        self.win_iter_count += 1;
+    }
+
+    /// Reset the monitoring window (after a sample, or when a resize
+    /// invalidates the `t_iter` the window was measured against).
+    pub fn reset_monitor_window(&mut self) {
+        self.win_iter_sum = 0.0;
+        self.win_iter_count = 0;
+    }
+
+    /// Re-derive the remaining step budget from the shard's *current*
+    /// sample count plus `inbound_samples` still expected on the WAN
+    /// (pre-counted staged shards that have not landed yet): the current
+    /// epoch finishes at the new per-epoch step count, every remaining
+    /// full epoch runs at it too. Called when the data plane moves
+    /// samples in or out mid-run; `total_epochs` is the job's configured
+    /// epoch count.
+    ///
+    /// Clamped so in-flight iterations stay consistent: the budget never
+    /// drops below `steps_started` (a partition shrunk to nothing drains
+    /// and finishes instead of blocking forever).
+    pub fn retime_step_budget(&mut self, batch: usize, total_epochs: usize, inbound_samples: usize) {
+        // All configured epochs already closed: nothing left to budget —
+        // without this guard a retime after the final epoch boundary
+        // (steps_into_epoch just reset to 0) would grant a phantom epoch.
+        let remaining_incl_current =
+            (total_epochs as u64).saturating_sub(self.epochs_done as u64);
+        if remaining_incl_current == 0 {
+            self.steps_total = self.steps_completed.max(self.steps_started);
+            return;
+        }
+        let samples = self.shard.len() + inbound_samples;
+        let new_eps =
+            if samples == 0 { 0 } else { samples.div_ceil(batch.max(1)).max(1) as u64 };
+        let remaining_full = remaining_incl_current - 1;
+        let current_left = new_eps.saturating_sub(self.steps_into_epoch.min(new_eps));
+        self.epoch_steps = new_eps;
+        self.steps_total = (self.steps_completed + current_left + remaining_full * new_eps)
+            .max(self.steps_started);
     }
 }
 
@@ -118,6 +187,7 @@ mod tests {
             steps_started: 0,
             steps_completed: 0,
             epoch_steps: 4,
+            steps_into_epoch: 0,
             epochs_done: 0,
             gate: Gate::Running,
             in_flight: 0,
@@ -129,9 +199,10 @@ mod tests {
             cold_start_time: 0.0,
             worker_replicas: Vec::new(),
             alloc_since: 0.0,
-            mon_last_t: 0.0,
-            mon_last_steps: 0,
-            mon_last_waited: 0.0,
+            data_blocked_since: 0.0,
+            data_stall: 0.0,
+            win_iter_sum: 0.0,
+            win_iter_count: 0,
             rng: Pcg32::new(1, 0),
         }
     }
@@ -158,11 +229,66 @@ mod tests {
     #[test]
     fn epoch_boundary_detection() {
         let mut p = part();
-        p.steps_completed = 3;
-        assert!(!p.at_epoch_boundary());
-        p.steps_completed = 4;
-        assert!(p.at_epoch_boundary());
-        p.steps_completed = 8;
-        assert!(p.at_epoch_boundary());
+        assert!(!p.note_step_completed());
+        assert!(!p.note_step_completed());
+        assert!(!p.note_step_completed());
+        assert!(p.note_step_completed(), "4th step closes the epoch");
+        assert_eq!(p.epochs_done, 1);
+        assert_eq!(p.steps_into_epoch, 0);
+        for _ in 0..3 {
+            assert!(!p.note_step_completed());
+        }
+        assert!(p.note_step_completed());
+        assert_eq!(p.epochs_done, 2);
+    }
+
+    #[test]
+    fn monitor_window_resets() {
+        let mut p = part();
+        p.note_iteration_time(0.5);
+        p.note_iteration_time(0.7);
+        assert_eq!(p.win_iter_count, 2);
+        assert!((p.win_iter_sum - 1.2).abs() < 1e-12);
+        p.reset_monitor_window();
+        assert_eq!(p.win_iter_count, 0);
+        assert_eq!(p.win_iter_sum, 0.0);
+    }
+
+    #[test]
+    fn retime_grows_and_shrinks_the_budget() {
+        // 4 samples, batch 2, 2 epochs: 2 steps/epoch, 4 total.
+        let mut p = part();
+        p.epoch_steps = 2;
+        p.steps_total = 4;
+        // One step into epoch 0, then a shard of 4 more samples lands.
+        p.steps_started = 1;
+        assert!(!p.note_step_completed());
+        p.shard.extend(vec![4, 5, 6, 7]);
+        p.retime_step_budget(2, 2, 0);
+        // 8 samples -> 4 steps/epoch: finish epoch 0 (3 more) + epoch 1 (4).
+        assert_eq!(p.epoch_steps, 4);
+        assert_eq!(p.steps_total, 1 + 3 + 4);
+
+        // Shrink to nothing mid-flight: budget clamps to steps_started.
+        let mut q = part();
+        q.steps_started = 3;
+        q.steps_completed = 2;
+        q.shard.remove_range(0, 4);
+        q.retime_step_budget(2, 2, 0);
+        assert_eq!(q.epoch_steps, 0);
+        assert_eq!(q.steps_total, 3, "drains in-flight work, then finishes");
+        assert!(!q.local_done() || q.steps_started >= q.steps_total);
+
+        // Every configured epoch already closed (steps_into_epoch just
+        // reset to 0): a retime must not grant a phantom extra epoch.
+        let mut r = part();
+        r.epoch_steps = 2;
+        r.steps_total = 4;
+        r.epochs_done = 2; // == total_epochs below
+        r.steps_completed = 4;
+        r.steps_started = 4;
+        r.shard.extend(vec![8, 9, 10, 11]);
+        r.retime_step_budget(2, 2, 0);
+        assert_eq!(r.steps_total, 4, "no work may be budgeted past the last epoch");
     }
 }

@@ -21,12 +21,15 @@
 //! (module `topology_exp`); `elastic` pits the static plan against the
 //! live re-scheduling control loop under injected resource churn and WAN
 //! fluctuation (module `elastic_exp`; `scheduling` aliases `table4`);
-//! and `multijob` runs a Poisson trace of concurrent jobs over one
+//! `multijob` runs a Poisson trace of concurrent jobs over one
 //! shared inventory, comparing FIFO vs fair-share vs cost-aware leasing
-//! (module `multijob_exp`). The full id → figure/config/bench mapping
+//! (module `multijob_exp`); and `dataplane` compares the three
+//! data/compute placement modes on a 70%-skewed dataset catalog
+//! (module `dataplane_exp`). The full id → figure/config/bench mapping
 //! lives in docs/EXPERIMENTS.md.
 
 pub mod ablations;
+pub mod dataplane_exp;
 pub mod elastic_exp;
 pub mod motivation;
 pub mod multijob_exp;

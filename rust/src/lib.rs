@@ -8,7 +8,9 @@
 //!   coordinator: control plane (elastic scheduler + global communicator
 //!   addressing), the multi-job fleet coordinator
 //!   ([`coordinator::fleet`] — N concurrent workflows leasing slices of
-//!   one shared inventory, contending on one shared WAN), the layered
+//!   one shared inventory, contending on one shared WAN), the physical
+//!   [`dataplane`] (dataset catalog, joint data/compute placement, WAN
+//!   shard migration with staging gates), the layered
 //!   training [`engine`] (driver → partition → comm → topology;
 //!   per-cloud PS workflows with pluggable N-cloud sync topologies), WAN
 //!   synchronization strategies (ASGD / ASGD-GA / AMA / SMA) with
@@ -36,6 +38,7 @@ pub mod cloud;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dataplane;
 pub mod engine;
 pub mod exp;
 pub mod faas;

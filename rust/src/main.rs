@@ -20,6 +20,7 @@ use cloudless::cloud::CloudEnv;
 use cloudless::config;
 use cloudless::coordinator::fleet::{LeasePolicy, MultiJobParams};
 use cloudless::coordinator::{Coordinator, JobSpec, SchedulingMode};
+use cloudless::dataplane::{PlacementMode, PlacementSpec};
 use cloudless::engine::TopologyKind;
 use cloudless::exp::{self, Scale};
 use cloudless::sync::{Compression, Strategy, SyncConfig};
@@ -41,8 +42,9 @@ USAGE:
                     [--compression none|topk[:r]|q8]
                     [--elastic] [--replan-interval s] [--replan-hysteresis x]
                     [--bw-threshold x]
+                    [--data-placement spec] [--placement-mode m] [--sample-kb n]
   cloudless plan    [--config f]
-  cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|multijob|ablations|compression|all> [--full] [--model m]
+  cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|multijob|dataplane|ablations|compression|all> [--full] [--model m]
   cloudless devices
   cloudless check
 
@@ -52,6 +54,11 @@ USAGE:
   re-plan -> apply): --replan-interval (virtual s between samples),
   --replan-hysteresis (min relative plan movement to act), --bw-threshold
   (relative delivered-bandwidth divergence that re-plans the topology).
+  --data-placement activates the physical data plane (dataset catalog +
+  WAN shard migration): resident | uniform:<shards> | skewed:<shards>:<frac>
+  | single:<region>; --placement-mode picks compute-follows-data |
+  data-follows-compute | joint (default); --sample-kb sets stored KB per
+  sample. exp --id dataplane compares the three modes on a skewed catalog.
   exp --id multijob: [--config f (multijob block)] [--jobs n]
   [--mean-interarrival s] [--policy fifo|fair-share|cost-aware|all]
   runs concurrent jobs over one shared inventory (docs/EXPERIMENTS.md).
@@ -111,6 +118,15 @@ fn job_from_args(args: &Args) -> anyhow::Result<JobSpec> {
     spec.train.elastic.hysteresis = args.f64("replan-hysteresis", spec.train.elastic.hysteresis);
     spec.train.elastic.bw_threshold = args.f64("bw-threshold", spec.train.elastic.bw_threshold);
     spec.train.elastic.validate().map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(p) = args.get("data-placement") {
+        spec.train.dataplane.placement =
+            Some(PlacementSpec::from_name(p).map_err(|e| anyhow::anyhow!("--data-placement: {e}"))?);
+    }
+    spec.train.dataplane.mode =
+        args.parsed("placement-mode", spec.train.dataplane.mode.name(), PlacementMode::from_name)?;
+    let sample_kb = args.f64("sample-kb", spec.train.dataplane.sample_bytes as f64 / 1024.0);
+    anyhow::ensure!(sample_kb >= 0.0, "--sample-kb must be >= 0");
+    spec.train.dataplane.sample_bytes = (sample_kb * 1024.0) as u64;
     Ok(spec)
 }
 
@@ -217,6 +233,14 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
                 let params = multijob_params(args)?;
                 exp::multijob_exp::multijob_compare(coord, scale, &exp_model, &params);
             }
+            "dataplane" => {
+                exp::dataplane_exp::dataplane_compare(
+                    coord,
+                    scale,
+                    &exp_model,
+                    args.get("data-placement"),
+                );
+            }
             "ablations" => exp::ablations::all(coord, scale),
             "compression" => {
                 exp::ablations::compression_vs_frequency(coord, scale);
@@ -228,7 +252,7 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     if id == "all" {
         let ids = [
             "table1", "fig3", "fig2", "table4", "fig7", "fig9", "fig10", "fig11", "topology",
-            "elastic", "multijob",
+            "elastic", "multijob", "dataplane",
         ];
         for id in ids {
             println!("\n=== {id} ===");

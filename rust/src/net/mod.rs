@@ -261,6 +261,12 @@ impl Fabric {
         self.links.get(&(from, to)).map(|l| l.spec.bandwidth_bps)
     }
 
+    /// Full spec of an installed directed link (the data-plane placement
+    /// planner's transfer-time inputs). `None` when no link is installed.
+    pub fn link_spec(&self, from: RegionId, to: RegionId) -> Option<LinkSpec> {
+        self.links.get(&(from, to)).map(|l| l.spec.clone())
+    }
+
     /// One-way propagation latency of an installed directed link (the
     /// communicator's ack-RTT share). `None` when no link is installed.
     pub fn link_latency(&self, from: RegionId, to: RegionId) -> Option<f64> {

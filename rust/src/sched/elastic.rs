@@ -100,12 +100,22 @@ impl ElasticConfig {
 pub struct MonitorSample {
     /// Virtual time of the sample.
     pub t: f64,
-    /// Per-cloud observed power scale: (expected worker step time at the
-    /// current allocation) / (measured effective step time), i.e. 1.0
-    /// when the cloud delivers its catalog power, <1 when it is slowed by
-    /// churn. `None` when the window carried no finished steps (a stalled
-    /// or finished cloud gives no fresh signal).
+    /// Per-cloud observed power scale: (expected per-iteration time at
+    /// the current allocation) / (measured mean per-iteration completion
+    /// time over the window), i.e. 1.0 when the cloud delivers its
+    /// catalog power, <1 when it is slowed by churn. `None` when the
+    /// window carried no finished steps (a stalled or finished cloud
+    /// gives no fresh signal).
     pub power_scale: Vec<Option<f64>>,
+    /// Per-cloud mean per-iteration completion seconds over the window —
+    /// the raw signal `power_scale` is derived from, carried for
+    /// diagnostics and result dumps. Recorded per completed iteration
+    /// (not from wall-clock windows), so barrier-heavy SMA runs sample
+    /// at full rate instead of only in freely-running windows (ROADMAP
+    /// open item); consumers that need the derived form — the
+    /// controller's EWMA, and through it the data-plane rebalancer —
+    /// read `power_scale` / [`ElasticController::scales`].
+    pub mean_iter_s: Vec<Option<f64>>,
     /// Per-cloud "done with its shard" flags: the driver will never
     /// resize a finished partition, so the controller pins its units and
     /// excludes it from plan-movement accounting.
@@ -194,8 +204,27 @@ impl ElasticController {
     pub fn reset_lease(&mut self, env: CloudEnv, allocations: &[Allocation]) {
         assert_eq!(env.regions.len(), self.scale.len(), "a lease cannot change the region count");
         assert_eq!(allocations.len(), self.scale.len(), "one allocation per region");
+        // A lease re-division changes *inventory*, not where the data
+        // sits: keep the residency this controller already knows (the
+        // post-migration layout installed at deploy, plus any
+        // `update_residency` from rebalances) — the coordinator's lease
+        // env only carries the admission-time split.
+        let mut env = env;
+        for (region, known) in env.regions.iter_mut().zip(&self.env.regions) {
+            region.data_samples = known.data_samples;
+        }
         self.env = env;
         self.current_units = allocations.iter().map(|a| a.total_units()).collect();
+    }
+
+    /// Update the per-region resident sample counts the controller plans
+    /// against (the data plane moved shards mid-run): Algorithm-1
+    /// candidates must match the layout actually being trained on.
+    pub fn update_residency(&mut self, samples: &[usize]) {
+        assert_eq!(samples.len(), self.env.regions.len(), "one sample count per region");
+        for (region, &s) in self.env.regions.iter_mut().zip(samples) {
+            region.data_samples = s;
+        }
     }
 
     /// Fold a monitoring sample in and decide whether to re-plan.
@@ -375,7 +404,8 @@ mod tests {
 
     fn sample(scales: Vec<Option<f64>>) -> MonitorSample {
         let finished = vec![false; scales.len()];
-        MonitorSample { t: 0.0, power_scale: scales, finished, link_bw: Vec::new() }
+        let mean_iter_s = vec![None; scales.len()];
+        MonitorSample { t: 0.0, power_scale: scales, mean_iter_s, finished, link_bw: Vec::new() }
     }
 
     #[test]
@@ -453,6 +483,7 @@ mod tests {
         let s = MonitorSample {
             t: 0.0,
             power_scale: vec![Some(1.0); 4],
+            mean_iter_s: vec![None; 4],
             finished: vec![false; 4],
             link_bw: vec![(0, 1, 10e6), (1, 0, 10e6)], // 100 -> 10 Mbps
         };

@@ -33,9 +33,19 @@ use crate::cloud::{Allocation, CloudEnv};
 pub const POWER_EPS: f64 = 1e-9;
 
 /// The load power of an allocation against a data size (formula (1)).
-pub fn load_power(alloc: &Allocation, data_samples: usize) -> f64 {
-    assert!(data_samples > 0, "LP undefined for empty data");
-    alloc.power() / data_samples as f64
+///
+/// Total over its whole domain (mirroring the PR-2 [`imbalance`] fix):
+/// `None` means the region holds **no local data** — it finishes its
+/// (empty) shard instantly, so it is not a straggler candidate and needs
+/// no compute matched to it. The data-plane placement planner
+/// legitimately produces such regions (compute-follows-data on a skewed
+/// catalog); the old `assert!(data_samples > 0)` panicked on them.
+pub fn load_power(alloc: &Allocation, data_samples: usize) -> Option<f64> {
+    if data_samples == 0 {
+        None
+    } else {
+        Some(alloc.power() / data_samples as f64)
+    }
 }
 
 /// A resourcing plan: one allocation per cloud + diagnostics.
@@ -43,6 +53,8 @@ pub fn load_power(alloc: &Allocation, data_samples: usize) -> f64 {
 pub struct Plan {
     pub allocations: Vec<Allocation>,
     /// Full-allocation LP per cloud (the inputs to the matching).
+    /// `f64::INFINITY` marks a region with no local data: it finishes
+    /// instantly, drives nothing, and is allocated nothing.
     pub full_lp: Vec<f64>,
     /// Planned LP per cloud (after cutting down).
     pub planned_lp: Vec<f64>,
@@ -79,11 +91,16 @@ pub fn optimal_matching_among(env: &CloudEnv, scale: &[f64], active: &[bool]) ->
     assert!(scale.iter().all(|s| *s > 0.0), "power scales must be positive");
     assert!(active.iter().any(|&a| a), "at least one cloud must be active");
     let full: Vec<Allocation> = env.greedy_plan();
+    // A data-less region's LP is +inf: done instantly, never the
+    // reference, and its power target below is zero (no allocation).
+    let lp_of = |a: &Allocation, samples: usize, s: f64| {
+        load_power(a, samples).map(|lp| s * lp).unwrap_or(f64::INFINITY)
+    };
     let full_lp: Vec<f64> = full
         .iter()
         .zip(&env.regions)
         .zip(scale)
-        .map(|((a, r), s)| s * load_power(a, r.data_samples))
+        .map(|((a, r), s)| lp_of(a, r.data_samples, *s))
         .collect();
     let (straggler, &min_lp) = full_lp
         .iter()
@@ -97,12 +114,17 @@ pub fn optimal_matching_among(env: &CloudEnv, scale: &[f64], active: &[bool]) ->
         .iter()
         .enumerate()
         .map(|(i, region)| {
-            if i == straggler || !active[i] {
+            if (i == straggler || !active[i]) && region.data_samples > 0 {
                 full[i].clone()
             } else {
                 // The cloud must deliver the straggler's observed LP, so
                 // its *nominal* power target is inflated by 1/scale.
-                let target_power = min_lp * region.data_samples as f64 / scale[i];
+                // Zero resident samples ⇒ zero target ⇒ empty allocation.
+                let target_power = if min_lp.is_finite() {
+                    min_lp * region.data_samples as f64 / scale[i]
+                } else {
+                    0.0
+                };
                 search_optimal_plan(&full[i], target_power)
             }
         })
@@ -111,7 +133,7 @@ pub fn optimal_matching_among(env: &CloudEnv, scale: &[f64], active: &[bool]) ->
         .iter()
         .zip(&env.regions)
         .zip(scale)
-        .map(|((a, r), s)| s * load_power(a, r.data_samples))
+        .map(|((a, r), s)| lp_of(a, r.data_samples, *s))
         .collect();
     Plan { allocations, full_lp, planned_lp, straggler }
 }
@@ -251,6 +273,28 @@ mod tests {
                 plan.allocations[i]
             );
         }
+    }
+
+    /// Regression (ISSUE-4 satellite): the data-plane placement planner
+    /// legitimately produces regions with zero resident samples; the
+    /// matching must hand them an empty allocation instead of panicking
+    /// in `load_power`, and they must never drive the straggler floor.
+    #[test]
+    fn zero_data_region_is_total_not_a_panic() {
+        let a = Allocation::new(0, vec![(Device::Skylake, 4)]);
+        assert_eq!(load_power(&a, 0), None, "no data, no load power");
+        assert!(load_power(&a, 100).unwrap() > 0.0);
+
+        let env = CloudEnv::new(vec![
+            Region::new(0, "SH", vec![(Device::CascadeLake, 12)], 2000),
+            Region::new(1, "CQ", vec![(Device::Skylake, 12)], 0),
+        ]);
+        let plan = optimal_matching(&env);
+        assert_eq!(plan.straggler, 0, "the data-holding region is the reference");
+        assert_eq!(plan.allocations[0].total_units(), 12, "straggler keeps everything");
+        assert_eq!(plan.allocations[1].total_units(), 0, "no data ⇒ no compute");
+        assert_eq!(plan.full_lp[1], f64::INFINITY);
+        assert!(plan.allocations.iter().zip(&env.regions).all(|(a, r)| a.fits(r)));
     }
 
     #[test]

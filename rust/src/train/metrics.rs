@@ -39,6 +39,9 @@ pub struct ReplanEvent {
     /// True when the sync topology was re-planned from observed
     /// bandwidth.
     pub topology_replanned: bool,
+    /// Shard migrations the data-plane rebalancer committed alongside
+    /// this re-plan (0 without an active data plane).
+    pub data_moves: usize,
 }
 
 /// Per-partition outcome.
@@ -100,6 +103,9 @@ pub struct TrainReport {
     /// Mid-run re-plans the elastic control loop committed (empty for
     /// static runs).
     pub replan_events: Vec<ReplanEvent>,
+    /// What the data plane did (None when the job ran without one — the
+    /// seed behavior of locally-resident, never-moving data).
+    pub dataplane: Option<crate::dataplane::DataPlaneReport>,
 }
 
 impl TrainReport {
@@ -192,8 +198,26 @@ impl TrainReport {
                             Json::arr(e.units.iter().map(|u| Json::num(*u as f64))),
                         ),
                         ("topology_replanned", Json::Bool(e.topology_replanned)),
+                        ("data_moves", Json::num(e.data_moves as f64)),
                     ])
                 })),
+            ),
+            (
+                "dataplane",
+                match &self.dataplane {
+                    None => Json::Null,
+                    Some(d) => Json::obj(vec![
+                        ("mode", Json::str(&d.mode)),
+                        ("placement", Json::str(&d.placement)),
+                        ("moved_shards", Json::num(d.moved_shards as f64)),
+                        ("moved_bytes", Json::num(d.moved_bytes as f64)),
+                        ("failed_shards", Json::num(d.failed_shards as f64)),
+                        ("egress_cost_usd", Json::num(d.egress_cost)),
+                        ("stall_s", Json::num(d.stall_time)),
+                        ("staging_done_s", Json::num(d.staging_done)),
+                        ("rebalances", Json::num(d.rebalances as f64)),
+                    ]),
+                },
             ),
         ])
     }
@@ -205,8 +229,17 @@ impl TrainReport {
         } else {
             format!(" replans={}", self.replan_events.len())
         };
+        let dataplane = match &self.dataplane {
+            None => String::new(),
+            Some(d) => format!(
+                " data[{} moved={:.1}MB stall={:.1}s]",
+                d.mode,
+                d.moved_bytes as f64 / 1e6,
+                d.stall_time
+            ),
+        };
         format!(
-            "{} [{} f={}] time={:.1}s acc={:.4} loss={:.4} cost=${:.4} wan={:.1}MB wait={:.1}s comm={:.1}s{}",
+            "{} [{} f={}] time={:.1}s acc={:.4} loss={:.4} cost=${:.4} wan={:.1}MB wait={:.1}s comm={:.1}s{}{}",
             self.model,
             self.strategy,
             self.sync_freq,
@@ -218,6 +251,7 @@ impl TrainReport {
             self.total_waiting(),
             self.total_comm_wait(),
             replans,
+            dataplane,
         )
     }
 }

@@ -108,8 +108,9 @@ fn prop_load_power_monotone_in_units_and_data() {
         |&(dev, units, data)| {
             let a = Allocation::new(0, vec![(dev, units)]);
             let b = Allocation::new(0, vec![(dev, units + 1)]);
-            assert!(load_power(&b, data) > load_power(&a, data));
-            assert!(load_power(&a, data + 1) < load_power(&a, data));
+            assert!(load_power(&b, data).unwrap() > load_power(&a, data).unwrap());
+            assert!(load_power(&a, data + 1).unwrap() < load_power(&a, data).unwrap());
+            assert_eq!(load_power(&a, 0), None, "total: no data has no load power");
         },
     );
 }
@@ -127,7 +128,8 @@ fn controller_for(env: &CloudEnv, cfg: ElasticConfig) -> ElasticController {
 
 fn scales_sample(scales: Vec<Option<f64>>) -> MonitorSample {
     let finished = vec![false; scales.len()];
-    MonitorSample { t: 0.0, power_scale: scales, finished, link_bw: Vec::new() }
+    let mean_iter_s = vec![None; scales.len()];
+    MonitorSample { t: 0.0, power_scale: scales, mean_iter_s, finished, link_bw: Vec::new() }
 }
 
 #[test]
