@@ -1,6 +1,8 @@
-//! Bench: the three data-plane placement modes (compute-follows-data /
-//! data-follows-compute / joint) on a 70%-skewed dataset catalog over a
-//! 4-cloud heterogeneous WAN with thin Guangzhou links.
+//! Bench: the data-plane placement modes (compute-follows-data /
+//! data-follows-compute / joint, plus a replica-seeded joint run) on a
+//! 70%-skewed dataset catalog over a 4-cloud heterogeneous WAN with thin
+//! Guangzhou links. `--data-placement <spec>` overrides the catalog
+//! (e.g. `skewed:8:0.7:r2`).
 mod common;
 
 fn main() {
@@ -10,10 +12,11 @@ fn main() {
         .skip_while(|a| a != "--model")
         .nth(1)
         .unwrap_or_else(|| "lenet".to_string());
+    let spec = std::env::args().skip_while(|a| a != "--data-placement").nth(1);
     cloudless::exp::dataplane_exp::dataplane_compare(
         &coord,
         common::scale_from_args(),
         &model,
-        None,
+        spec.as_deref(),
     );
 }

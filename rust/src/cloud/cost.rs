@@ -60,6 +60,22 @@ impl CostModel {
         rate * bytes as f64 / 1e9
     }
 
+    /// The planner's scalar for materializing one replica copy of
+    /// `bytes` out of region `from`: the object-store egress — paid
+    /// **once per created replica**, never per reader of the new copy —
+    /// plus the time-valued transfer seconds. The data plane's read
+    /// assignment picks each consumer's source replica by minimizing
+    /// this, so on symmetric links the cheaper-egress region wins.
+    pub fn copy_objective(
+        &self,
+        from: RegionId,
+        bytes: u64,
+        transfer_s: Time,
+        time_value_per_hour: f64,
+    ) -> f64 {
+        self.egress_cost(from, bytes) + time_value_per_hour * transfer_s / 3600.0
+    }
+
     /// Total job cost.
     pub fn total(&self, allocations: &[BilledAllocation], wan_bytes: u64) -> f64 {
         allocations.iter().map(|a| self.compute_cost(a)).sum::<f64>() + self.wan_cost(wan_bytes)
@@ -95,6 +111,19 @@ mod tests {
         // Off-table regions fall back to the flat WAN rate.
         assert!((m.egress_cost(99, 1_000_000_000) - m.wan_cost(1_000_000_000)).abs() < 1e-12);
         assert_eq!(m.egress_cost(1, 0), 0.0);
+    }
+
+    #[test]
+    fn copy_objective_trades_egress_against_time() {
+        let m = CostModel::default();
+        let gb = 1_000_000_000u64;
+        // Equal transfer times: the hub's cheaper egress wins.
+        assert!(m.copy_objective(0, gb, 10.0, 4.0) < m.copy_objective(3, gb, 10.0, 4.0));
+        // A much slower source loses even at the cheaper egress rate:
+        // 1h of extra transfer at $4/h dwarfs a $0.04 egress gap.
+        assert!(m.copy_objective(0, gb, 3600.0, 4.0) > m.copy_objective(3, gb, 10.0, 4.0));
+        // Zero time value degenerates to pure egress.
+        assert!((m.copy_objective(2, gb, 99.0, 0.0) - m.egress_cost(2, gb)).abs() < 1e-12);
     }
 
     #[test]

@@ -21,7 +21,9 @@
 //!   "multijob": {"jobs": 6,            // multi-job fleet (exp --id multijob)
 //!                "mean_interarrival_s": 0, "policy": "fair-share",
 //!                "min_units": 1},
-//!   "dataplane": {"placement": "skewed:8:0.7",  // physical data plane
+//!   "dataplane": {"placement": "skewed:8:0.7:r2",  // physical data plane
+//!                 // layout resident|uniform:n|skewed:n:frac|single:r,
+//!                 // optional :rK suffix = K replica copies per shard
 //!                 "mode": "joint",     // compute-follows-data | data-follows-compute | joint
 //!                 "sample_kb": 256, "rebalance": true},
 //!   "worker_cores": 3,
@@ -370,8 +372,20 @@ mod tests {
         ))
         .unwrap();
         let dp = &spec.train.dataplane;
-        assert_eq!(dp.placement, Some(PlacementSpec::Skewed { shards: 8, frac: 0.7 }));
+        assert_eq!(
+            dp.placement,
+            Some(PlacementSpec::new(crate::dataplane::Layout::Skewed { shards: 8, frac: 0.7 }))
+        );
         assert_eq!(dp.mode, PlacementMode::Joint);
+        // The :rK suffix carries the replica factor through the config.
+        let replicated = parse_job(&format!(
+            r#"{{"model":"synthetic",
+                "dataplane":{{"placement":"skewed:8:0.7:r2"}},{region}}}"#
+        ))
+        .unwrap();
+        let rp = replicated.train.dataplane.placement.unwrap();
+        assert_eq!(rp.replication, 2);
+        assert_eq!(rp.name(), "skewed:8:0.7:r2");
         assert_eq!(dp.sample_bytes, 256 * 1024);
         assert!(!dp.rebalance);
         assert!((dp.time_value_per_hour - 1.5).abs() < 1e-12);
@@ -391,6 +405,7 @@ mod tests {
             r#""dataplane":"skewed""#,
             r#""dataplane":{"mode":"joint"}"#,
             r#""dataplane":{"placement":"striped:4"}"#,
+            r#""dataplane":{"placement":"uniform:4:r0"}"#,
             r#""dataplane":{"placement":"uniform:4","mode":"teleport"}"#,
             r#""dataplane":{"placement":"uniform:4","sample_kb":-1}"#,
             r#""dataplane":{"placement":"uniform:4","time_value_per_hour":-1}"#,

@@ -48,6 +48,8 @@ use anyhow::Result;
 
 use crate::cloud::devices::Device;
 use crate::cloud::{CloudEnv, Region};
+use crate::dataplane::placement::PlanInputs;
+use crate::dataplane::{self, DatasetCatalog};
 use crate::engine::driver::{self, TrainConfig, World};
 use crate::net::{Fabric, LinkSpec, SharedFabric};
 use crate::runtime::PjrtRuntime;
@@ -173,10 +175,14 @@ pub struct FleetConfig {
     /// every job's data split follows the catalog's *current* residency
     /// instead of the regions' `data_samples`, so concurrent jobs
     /// colocate their compute with where the shared datasets physically
-    /// sit. Jobs carrying their own `dataplane` config additionally
-    /// stage migrations on the shared fabric (contending with everyone's
-    /// sync traffic).
-    pub catalog: Option<crate::dataplane::DatasetCatalog>,
+    /// sit. The coordinator keeps a **live** copy: replica copies
+    /// created by one job's migrations are folded back in between
+    /// arrivals, so a later job whose `n_train` matches the catalog
+    /// plans directly against the migrated replica map (and moves fewer
+    /// bytes). Jobs carrying their own `dataplane` config stage their
+    /// migrations on the shared fabric (contending with everyone's sync
+    /// traffic).
+    pub catalog: Option<DatasetCatalog>,
 }
 
 impl FleetConfig {
@@ -529,6 +535,10 @@ struct FleetState<'a> {
     waiting: Vec<usize>,
     lease_events: u64,
     peak_units: Vec<u32>,
+    /// The fleet catalog's *live* replica map: seeded from
+    /// `FleetConfig::catalog`, re-unioned with every job's delivered
+    /// migrations at each coordination pass.
+    live_catalog: Option<DatasetCatalog>,
 }
 
 impl<'a> FleetState<'a> {
@@ -545,11 +555,55 @@ impl<'a> FleetState<'a> {
         (0..self.running.len()).filter(|&i| self.running[i].finish.is_none()).collect()
     }
 
+    /// Fold every job's *delivered* migrations into the live catalog
+    /// (idempotent replica-set union), then refresh the queued requests'
+    /// data splits and solo demands against where the bytes now sit —
+    /// admission must re-read shard replica maps between arrivals, not
+    /// plan against the admission-time snapshot (ROADMAP data-plane
+    /// defect). Already-admitted jobs keep their deployed splits.
+    fn refresh_catalog(&mut self) {
+        {
+            let Some(live) = self.live_catalog.as_mut() else { return };
+            for job in &self.running {
+                if let Some(dp) = job.world.dataplane.as_ref() {
+                    live.merge_replicas(&dp.catalog);
+                }
+            }
+        }
+        // Re-split the queued (not-yet-admitted) requests against the
+        // current residency every pass — merges from earlier passes must
+        // reach arrivals that were not queued yet when they happened.
+        if self.waiting.is_empty() {
+            return;
+        }
+        let fractions: Vec<usize> = self
+            .live_catalog
+            .as_ref()
+            .expect("checked above")
+            .resident_samples()
+            .iter()
+            .map(|&s| s.max(1))
+            .collect();
+        let full_units = inventory_units(&self.cfg.env);
+        let queued = self.waiting.clone();
+        for req in queued {
+            let data = split_data(self.requests[req].train.n_train, &fractions);
+            let solo_env = lease_env(&self.cfg.env, &data, &full_units);
+            self.demands[req] = optimal_matching(&solo_env)
+                .allocations
+                .iter()
+                .map(|a| a.total_units())
+                .collect();
+            self.datas[req] = data;
+        }
+    }
+
     /// Re-divide leases at `now`: admit the longest viable prefix of the
     /// waiting queue, then apply the division — resizing running jobs
     /// whose lease moved (scheduled into their own simulators at `now`)
     /// and deploying the newly admitted.
     fn coordinate(&mut self, now: Time) -> Result<()> {
+        self.refresh_catalog();
         let active = self.active();
         let mut members: Vec<DivideMember> =
             active.iter().map(|&i| self.member_of(self.running[i].req)).collect();
@@ -608,18 +662,38 @@ impl<'a> FleetState<'a> {
             });
         }
 
-        // Deploy the newly admitted at their final lease.
+        // Deploy the newly admitted at their final lease. A job carrying
+        // its own `dataplane` config plans its joint data/compute
+        // placement here, at admission, against the **live** shared
+        // fabric's current link specs (not the config template) and —
+        // when its sample space matches — the live shared catalog's
+        // replica map, so earlier jobs' migrations benefit it.
         for (k, &req) in newly.iter().enumerate() {
             let lease = leases[active.len() + k].clone();
             let jenv = lease_env(&self.cfg.env, &self.datas[req], &lease);
-            let plan = optimal_matching(&jenv);
-            let (sim, world) = driver::deploy_job(
+            let train = self.requests[req].train.clone();
+            let (allocations, planned) = if train.dataplane.enabled() {
+                let meta = self.rt.load_model(&train.model)?.meta;
+                let links =
+                    self.fabric.with(|f| PlanInputs::link_view(f, jenv.regions.len()));
+                let planned = match &self.live_catalog {
+                    Some(cat) if cat.total_samples() == train.n_train => {
+                        dataplane::plan_for_catalog(&jenv, &train, &meta, cat.clone(), links)?
+                    }
+                    _ => dataplane::plan_for_on(&jenv, &train, &meta, links)?,
+                };
+                (planned.plan.allocations.clone(), Some(planned))
+            } else {
+                (optimal_matching(&jenv).allocations, None)
+            };
+            let (sim, world) = driver::deploy_job_planned(
                 self.rt,
                 &jenv,
-                plan.allocations,
-                self.requests[req].train.clone(),
+                allocations,
+                train,
                 now,
                 self.fabric.clone(),
+                planned,
             )?;
             self.running.push(RunningJob { req, admitted: now, lease, sim, world, finish: None });
         }
@@ -729,6 +803,7 @@ pub fn run_fleet(
         waiting: Vec::new(),
         lease_events: 0,
         peak_units: vec![0; n_regions],
+        live_catalog: cfg.catalog.clone(),
     };
     let mut outcomes: Vec<Option<JobOutcome>> = vec![None; requests.len()];
     let mut arrived = 0usize;
@@ -984,13 +1059,13 @@ mod tests {
 
     #[test]
     fn shared_catalog_drives_the_data_split() {
-        use crate::dataplane::{DatasetCatalog, PlacementSpec};
+        use crate::dataplane::{Layout, PlacementSpec};
         let env = four_cloud_env();
         let mut cfg = FleetConfig::new(LeasePolicy::FairShare, env.clone());
         assert_eq!(cfg.data_fractions(), vec![128; 4], "no catalog: region data");
         cfg.catalog = Some(
             DatasetCatalog::from_spec(
-                &PlacementSpec::Skewed { shards: 8, frac: 0.7 },
+                &PlacementSpec::new(Layout::Skewed { shards: 8, frac: 0.7 }),
                 512,
                 4,
                 1024,

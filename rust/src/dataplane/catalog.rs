@@ -1,12 +1,15 @@
-//! The dataset catalog: named shards with sizes and per-cloud homes.
+//! The dataset catalog: named shards with sizes and per-cloud replica
+//! sets.
 //!
 //! A catalog partitions one job's `n_train` global sample indices into
-//! contiguous, sized shards, each resident ("homed") in one region. The
-//! placement planner ([`super::placement`]) decides which shards move;
-//! the migration layer ([`super::migration`]) moves the bytes. Sample
-//! *contents* are deterministic everywhere (see `crate::data`) — the
-//! catalog models where the physical bytes sit and what egress they pay
-//! to leave.
+//! contiguous, sized shards, each physically resident in a **replica
+//! set** of one or more regions (`:rK` in the placement spec grammar).
+//! The placement planner ([`super::placement`]) decides which region
+//! *trains* each shard and which replica a remote consumer reads from;
+//! the migration layer ([`super::migration`]) moves the bytes of replica
+//! copies that do not exist yet. Sample *contents* are deterministic
+//! everywhere (see `crate::data`) — the catalog models where the
+//! physical bytes sit and what egress they pay to leave.
 
 use crate::net::RegionId;
 use crate::runtime::ModelMeta;
@@ -22,12 +25,14 @@ pub fn sample_bytes(meta: &ModelMeta) -> u64 {
 }
 
 /// One shard: a contiguous range of global sample indices with a size in
-/// bytes and a current home region.
+/// bytes and a set of regions holding a physical copy.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardInfo {
     pub id: usize,
-    /// Region the shard's bytes currently reside in.
-    pub home: RegionId,
+    /// Regions holding a physical copy of the shard's bytes, in the
+    /// order the copies were created (seeded home first). Never empty;
+    /// a single-home shard (the PR-4 model) has exactly one entry.
+    pub replicas: Vec<RegionId>,
     /// Global sample index range `[start, end)`.
     pub start: usize,
     pub end: usize,
@@ -43,12 +48,23 @@ impl ShardInfo {
     pub fn indices(&self) -> Vec<usize> {
         (self.start..self.end).collect()
     }
+
+    /// The seeded (primary) copy's region — the single "home" of the
+    /// PR-4 model; replicas added later never displace it.
+    pub fn home(&self) -> RegionId {
+        self.replicas[0]
+    }
+
+    /// Does `region` hold a physical copy?
+    pub fn has_replica(&self, region: RegionId) -> bool {
+        self.replicas.contains(&region)
+    }
 }
 
-/// How the initial shard placement is seeded (config `"dataplane"`
-/// `"placement"` key / `--data-placement`).
+/// How the initial shard layout is seeded (config `"dataplane"`
+/// `"placement"` key / `--data-placement`), before replication.
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub enum PlacementSpec {
+pub enum Layout {
     /// One shard per region, sized by the regions' `data` fractions —
     /// the seed behavior's residency, now with explicit bytes.
     Resident,
@@ -61,64 +77,108 @@ pub enum PlacementSpec {
     Single { region: RegionId },
 }
 
+/// A full placement spec: the seeded layout plus the initial replica
+/// count per shard (`<layout>[:rK]`, e.g. `skewed:8:0.7:r2`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlacementSpec {
+    pub layout: Layout,
+    /// Physical copies each shard starts with (1 = single home, the
+    /// PR-4 model; clamped to the region count at catalog build).
+    pub replication: usize,
+}
+
 impl PlacementSpec {
+    /// A single-home spec over `layout`.
+    pub fn new(layout: Layout) -> PlacementSpec {
+        PlacementSpec { layout, replication: 1 }
+    }
+
+    /// The same layout seeded with `r` copies per shard.
+    pub fn with_replication(mut self, r: usize) -> PlacementSpec {
+        self.replication = r.max(1);
+        self
+    }
+
     /// Parse a spec name. The error spells out the grammar so CLI/config
     /// callers can surface it verbatim.
     pub fn from_name(s: &str) -> Result<PlacementSpec, String> {
         let err = || {
             format!(
                 "unknown data placement {s:?} (valid: resident, uniform:<shards>, \
-                 skewed:<shards>:<frac>, single:<region>)"
+                 skewed:<shards>:<frac>, single:<region>, each optionally suffixed \
+                 :r<replicas>, e.g. skewed:8:0.7:r2)"
             )
         };
-        let mut parts = s.split(':');
+        // An `:rK` tail is the replication factor; everything before it
+        // is the layout grammar.
+        let mut parts: Vec<&str> = s.split(':').collect();
+        let mut replication = 1usize;
+        if parts.len() > 1 {
+            let last = parts[parts.len() - 1];
+            let tail = last.strip_prefix('r').or_else(|| last.strip_prefix('R'));
+            if let Some(digits) = tail {
+                if !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit()) {
+                    replication = digits.parse().map_err(|_| err())?;
+                    if replication == 0 {
+                        return Err("replication factor must be >= 1 (r1 = single home)"
+                            .to_string());
+                    }
+                    parts.pop();
+                }
+            }
+        }
+        let mut parts = parts.into_iter();
         let head = parts.next().unwrap_or("").to_ascii_lowercase();
-        let spec = match head.as_str() {
-            "resident" => PlacementSpec::Resident,
+        let layout = match head.as_str() {
+            "resident" => Layout::Resident,
             "uniform" => {
                 let shards: usize = parts.next().and_then(|v| v.parse().ok()).ok_or_else(err)?;
-                PlacementSpec::Uniform { shards }
+                Layout::Uniform { shards }
             }
             "skewed" => {
                 let shards: usize = parts.next().and_then(|v| v.parse().ok()).ok_or_else(err)?;
                 let frac: f64 = parts.next().and_then(|v| v.parse().ok()).ok_or_else(err)?;
-                PlacementSpec::Skewed { shards, frac }
+                Layout::Skewed { shards, frac }
             }
             "single" => {
                 let region: usize = parts.next().and_then(|v| v.parse().ok()).ok_or_else(err)?;
-                PlacementSpec::Single { region }
+                Layout::Single { region }
             }
             _ => return Err(err()),
         };
         if parts.next().is_some() {
             return Err(err());
         }
-        match spec {
-            PlacementSpec::Uniform { shards } | PlacementSpec::Skewed { shards, .. }
-                if shards == 0 =>
-            {
+        match layout {
+            Layout::Uniform { shards } | Layout::Skewed { shards, .. } if shards == 0 => {
                 Err("data placement needs at least one shard".to_string())
             }
-            PlacementSpec::Skewed { frac, .. } if !(0.0..=1.0).contains(&frac) => {
+            Layout::Skewed { frac, .. } if !(0.0..=1.0).contains(&frac) => {
                 Err(format!("skew fraction must be in [0, 1], got {frac}"))
             }
-            ok => Ok(ok),
+            ok => Ok(PlacementSpec { layout: ok, replication }),
         }
     }
 
-    /// Stable name (inverse of [`PlacementSpec::from_name`]).
+    /// Stable name (inverse of [`PlacementSpec::from_name`]); the `:rK`
+    /// suffix appears only for replicated specs.
     pub fn name(&self) -> String {
-        match self {
-            PlacementSpec::Resident => "resident".to_string(),
-            PlacementSpec::Uniform { shards } => format!("uniform:{shards}"),
-            PlacementSpec::Skewed { shards, frac } => format!("skewed:{shards}:{frac}"),
-            PlacementSpec::Single { region } => format!("single:{region}"),
+        let base = match self.layout {
+            Layout::Resident => "resident".to_string(),
+            Layout::Uniform { shards } => format!("uniform:{shards}"),
+            Layout::Skewed { shards, frac } => format!("skewed:{shards}:{frac}"),
+            Layout::Single { region } => format!("single:{region}"),
+        };
+        if self.replication > 1 {
+            format!("{base}:r{}", self.replication)
+        } else {
+            base
         }
     }
 }
 
-/// The catalog: every shard of one dataset with its current home.
-#[derive(Debug, Clone)]
+/// The catalog: every shard of one dataset with its current replica set.
+#[derive(Debug, Clone, PartialEq)]
 pub struct DatasetCatalog {
     pub shards: Vec<ShardInfo>,
     pub n_regions: usize,
@@ -135,8 +195,10 @@ fn chunks(n: usize, k: usize) -> Vec<(usize, usize)> {
 impl DatasetCatalog {
     /// Build the catalog for one job: `n_train` samples at `sample_bytes`
     /// each over `n_regions` clouds. `region_samples` is the config's
-    /// per-region `data` distribution (used by [`PlacementSpec::Resident`]
-    /// only).
+    /// per-region `data` distribution (used by [`Layout::Resident`]
+    /// only). Replicated specs seed each shard's extra copies
+    /// deterministically round-robin over the other regions (rotated by
+    /// shard id, so a hot region's shards spread their second copies).
     pub fn from_spec(
         spec: &PlacementSpec,
         n_train: usize,
@@ -150,24 +212,25 @@ impl DatasetCatalog {
         if n_train == 0 {
             return Err("catalog needs at least one sample".to_string());
         }
-        // `from_name` rejects zero shard counts, but the variants are
+        if spec.replication == 0 {
+            return Err("replication factor must be >= 1".to_string());
+        }
+        // `from_name` rejects zero shard counts, but the fields are
         // public: validate here too so direct construction errors
         // instead of panicking in the chunking below.
-        if let PlacementSpec::Uniform { shards: 0 } | PlacementSpec::Skewed { shards: 0, .. } =
-            spec
-        {
+        if let Layout::Uniform { shards: 0 } | Layout::Skewed { shards: 0, .. } = spec.layout {
             return Err("data placement needs at least one shard".to_string());
         }
         let shard = |id: usize, home: RegionId, start: usize, end: usize| ShardInfo {
             id,
-            home,
+            replicas: vec![home],
             start,
             end,
             bytes: (end - start) as u64 * sample_bytes,
         };
         let mut shards = Vec::new();
-        match *spec {
-            PlacementSpec::Resident => {
+        match spec.layout {
+            Layout::Resident => {
                 // Mirror data::shard_by_fraction's contiguous split.
                 let total: usize = region_samples.iter().map(|s| s.max(&1)).sum();
                 let mut start = 0usize;
@@ -183,12 +246,12 @@ impl DatasetCatalog {
                     start = end;
                 }
             }
-            PlacementSpec::Uniform { shards: k } => {
+            Layout::Uniform { shards: k } => {
                 for (i, (s, e)) in chunks(n_train, k).into_iter().enumerate() {
                     shards.push(shard(i, i % n_regions, s, e));
                 }
             }
-            PlacementSpec::Skewed { shards: k, frac } => {
+            Layout::Skewed { shards: k, frac } => {
                 let hot_n = ((n_train as f64) * frac).round() as usize;
                 let hot_n = hot_n.min(n_train);
                 let cold_n = n_train - hot_n;
@@ -213,7 +276,7 @@ impl DatasetCatalog {
                     }
                 }
             }
-            PlacementSpec::Single { region } => {
+            Layout::Single { region } => {
                 if region >= n_regions {
                     return Err(format!(
                         "single:{region} names a region outside the {n_regions}-region environment"
@@ -231,23 +294,45 @@ impl DatasetCatalog {
         for (i, s) in shards.iter_mut().enumerate() {
             s.id = i;
         }
+        // Seed the extra replicas: shard i's j-th extra copy lands
+        // `1 + (i + j) mod (n - 1)` regions past its home — distinct per
+        // shard-and-copy, rotated by shard id so a hot region's shards
+        // fan their second copies across every other region.
+        let copies = spec.replication.min(n_regions);
+        if copies > 1 && n_regions > 1 {
+            for s in shards.iter_mut() {
+                let h = s.replicas[0];
+                for j in 0..copies - 1 {
+                    let off = 1 + (s.id + j) % (n_regions - 1);
+                    let r = (h + off) % n_regions;
+                    if !s.replicas.contains(&r) {
+                        s.replicas.push(r);
+                    }
+                }
+            }
+        }
         Ok(DatasetCatalog { shards, n_regions })
     }
 
-    /// Samples currently resident per region.
+    /// Samples physically resident per region, counting every replica
+    /// copy (a region holding a copy can train those samples locally).
     pub fn resident_samples(&self) -> Vec<usize> {
         let mut out = vec![0usize; self.n_regions];
         for s in &self.shards {
-            out[s.home] += s.samples();
+            for &r in &s.replicas {
+                out[r] += s.samples();
+            }
         }
         out
     }
 
-    /// Bytes currently resident per region.
+    /// Bytes physically resident per region (every replica copy counted).
     pub fn resident_bytes(&self) -> Vec<u64> {
         let mut out = vec![0u64; self.n_regions];
         for s in &self.shards {
-            out[s.home] += s.bytes;
+            for &r in &s.replicas {
+                out[r] += s.bytes;
+            }
         }
         out
     }
@@ -256,15 +341,53 @@ impl DatasetCatalog {
         self.shards.iter().map(|s| s.samples()).sum()
     }
 
+    /// Bytes of the logical dataset (each shard counted once, however
+    /// many replicas it has).
     pub fn total_bytes(&self) -> u64 {
         self.shards.iter().map(|s| s.bytes).sum()
     }
 
-    /// Record a completed migration: the shard's bytes now live in `to`.
-    pub fn apply_move(&mut self, shard_id: usize, to: RegionId) {
+    /// Does region `r` hold a copy of shard `shard_id`?
+    pub fn has_replica(&self, shard_id: usize, r: RegionId) -> bool {
+        self.shards.get(shard_id).map_or(false, |s| s.has_replica(r))
+    }
+
+    /// Record a completed replica copy: the shard's bytes now *also*
+    /// live in `to` (idempotent; the source copy is not released).
+    pub fn add_replica(&mut self, shard_id: usize, to: RegionId) {
         if let Some(s) = self.shards.get_mut(shard_id) {
-            s.home = to;
+            if !s.replicas.contains(&to) {
+                s.replicas.push(to);
+            }
         }
+    }
+
+    /// Union another catalog's replica sets into this one (the fleet's
+    /// live shared-catalog view absorbing a job's delivered migrations).
+    /// No-op returning `false` when the shard geometries differ; returns
+    /// whether any replica was actually added.
+    pub fn merge_replicas(&mut self, other: &DatasetCatalog) -> bool {
+        if self.n_regions != other.n_regions || self.shards.len() != other.shards.len() {
+            return false;
+        }
+        if self
+            .shards
+            .iter()
+            .zip(&other.shards)
+            .any(|(a, b)| a.start != b.start || a.end != b.end)
+        {
+            return false;
+        }
+        let mut changed = false;
+        for (mine, theirs) in self.shards.iter_mut().zip(&other.shards) {
+            for &r in &theirs.replicas {
+                if !mine.replicas.contains(&r) {
+                    mine.replicas.push(r);
+                    changed = true;
+                }
+            }
+        }
+        changed
     }
 }
 
@@ -274,16 +397,21 @@ mod tests {
 
     #[test]
     fn spec_names_round_trip() {
-        for name in ["resident", "uniform:8", "skewed:8:0.7", "single:2"] {
+        for name in ["resident", "uniform:8", "skewed:8:0.7", "single:2", "skewed:8:0.7:r2",
+                     "uniform:4:r3", "resident:r2", "single:0:r2"] {
             let spec = PlacementSpec::from_name(name).unwrap();
             assert_eq!(spec.name(), name);
         }
         assert_eq!(
             PlacementSpec::from_name("SKEWED:4:0.5").unwrap(),
-            PlacementSpec::Skewed { shards: 4, frac: 0.5 }
+            PlacementSpec::new(Layout::Skewed { shards: 4, frac: 0.5 })
         );
+        assert_eq!(PlacementSpec::from_name("uniform:4:r1").unwrap().replication, 1);
+        assert_eq!(PlacementSpec::from_name("uniform:4:r1").unwrap().name(), "uniform:4");
+        assert_eq!(PlacementSpec::from_name("skewed:8:0.7:R2").unwrap().replication, 2);
         for bad in ["", "striped:4", "uniform", "uniform:0", "skewed:4", "skewed:4:1.5",
-                    "single:x", "uniform:4:9"] {
+                    "single:x", "uniform:4:9", "uniform:4:r0", "uniform:4:r", "r2",
+                    "skewed:8:0.7:r2:r3"] {
             assert!(PlacementSpec::from_name(bad).is_err(), "{bad:?} must not parse");
         }
     }
@@ -291,7 +419,7 @@ mod tests {
     #[test]
     fn skewed_catalog_holds_the_fraction_hot() {
         let c = DatasetCatalog::from_spec(
-            &PlacementSpec::Skewed { shards: 8, frac: 0.7 },
+            &PlacementSpec::new(Layout::Skewed { shards: 8, frac: 0.7 }),
             512,
             4,
             100,
@@ -311,18 +439,70 @@ mod tests {
     }
 
     #[test]
+    fn replicated_spec_seeds_spread_copies() {
+        let c = DatasetCatalog::from_spec(
+            &PlacementSpec::new(Layout::Skewed { shards: 8, frac: 0.7 }).with_replication(2),
+            512,
+            4,
+            100,
+            &[1; 4],
+        )
+        .unwrap();
+        for s in &c.shards {
+            assert_eq!(s.replicas.len(), 2, "every shard gets two copies: {s:?}");
+            assert_ne!(s.replicas[0], s.replicas[1]);
+        }
+        // Logical bytes ignore replication; physical residency counts it.
+        assert_eq!(c.total_bytes(), 512 * 100);
+        let res: usize = c.resident_samples().iter().sum();
+        assert_eq!(res, 2 * 512, "each copy is physically resident");
+        // The hot region's shards fan their second copies over every
+        // other region, not all onto one neighbor.
+        let hot_extras: std::collections::BTreeSet<usize> = c
+            .shards
+            .iter()
+            .filter(|s| s.home() == 0)
+            .map(|s| s.replicas[1])
+            .collect();
+        assert!(hot_extras.len() >= 2, "second copies spread: {hot_extras:?}");
+        // Replication clamps to the region count.
+        let full = DatasetCatalog::from_spec(
+            &PlacementSpec::new(Layout::Uniform { shards: 3 }).with_replication(9),
+            90,
+            3,
+            10,
+            &[1; 3],
+        )
+        .unwrap();
+        for s in &full.shards {
+            assert_eq!(s.replicas.len(), 3, "clamped to every region: {s:?}");
+        }
+    }
+
+    #[test]
     fn uniform_and_single_and_resident() {
-        let u = DatasetCatalog::from_spec(&PlacementSpec::Uniform { shards: 4 }, 400, 4, 10, &[1; 4])
-            .unwrap();
+        let u = DatasetCatalog::from_spec(
+            &PlacementSpec::new(Layout::Uniform { shards: 4 }),
+            400,
+            4,
+            10,
+            &[1; 4],
+        )
+        .unwrap();
         assert_eq!(u.resident_samples(), vec![100; 4]);
 
-        let s =
-            DatasetCatalog::from_spec(&PlacementSpec::Single { region: 3 }, 400, 4, 10, &[1; 4])
-                .unwrap();
+        let s = DatasetCatalog::from_spec(
+            &PlacementSpec::new(Layout::Single { region: 3 }),
+            400,
+            4,
+            10,
+            &[1; 4],
+        )
+        .unwrap();
         assert_eq!(s.resident_samples()[3], 400);
         assert!(s.shards.len() >= 2, "single keeps planner granularity");
         assert!(DatasetCatalog::from_spec(
-            &PlacementSpec::Single { region: 4 },
+            &PlacementSpec::new(Layout::Single { region: 4 }),
             400,
             4,
             10,
@@ -330,34 +510,53 @@ mod tests {
         )
         .is_err());
 
-        let r = DatasetCatalog::from_spec(&PlacementSpec::Resident, 300, 2, 10, &[200, 100])
-            .unwrap();
+        let r = DatasetCatalog::from_spec(
+            &PlacementSpec::new(Layout::Resident),
+            300,
+            2,
+            10,
+            &[200, 100],
+        )
+        .unwrap();
         assert_eq!(r.resident_samples(), vec![200, 100], "mirrors shard_by_fraction");
     }
 
     #[test]
     fn directly_constructed_zero_shard_specs_error_not_panic() {
-        for spec in [
-            PlacementSpec::Uniform { shards: 0 },
-            PlacementSpec::Skewed { shards: 0, frac: 1.0 },
-            PlacementSpec::Skewed { shards: 0, frac: 0.3 },
+        for layout in [
+            Layout::Uniform { shards: 0 },
+            Layout::Skewed { shards: 0, frac: 1.0 },
+            Layout::Skewed { shards: 0, frac: 0.3 },
         ] {
             assert!(
-                DatasetCatalog::from_spec(&spec, 100, 3, 1, &[1; 3]).is_err(),
-                "{spec:?} must be rejected"
+                DatasetCatalog::from_spec(&PlacementSpec::new(layout), 100, 3, 1, &[1; 3])
+                    .is_err(),
+                "{layout:?} must be rejected"
             );
         }
+        let zero_r = PlacementSpec { layout: Layout::Resident, replication: 0 };
+        assert!(DatasetCatalog::from_spec(&zero_r, 100, 3, 1, &[1; 3]).is_err());
     }
 
     #[test]
     fn extreme_skews_stay_total() {
-        let all_hot =
-            DatasetCatalog::from_spec(&PlacementSpec::Skewed { shards: 4, frac: 1.0 }, 100, 3, 1, &[1; 3])
-                .unwrap();
+        let all_hot = DatasetCatalog::from_spec(
+            &PlacementSpec::new(Layout::Skewed { shards: 4, frac: 1.0 }),
+            100,
+            3,
+            1,
+            &[1; 3],
+        )
+        .unwrap();
         assert_eq!(all_hot.resident_samples(), vec![100, 0, 0]);
-        let no_hot =
-            DatasetCatalog::from_spec(&PlacementSpec::Skewed { shards: 4, frac: 0.0 }, 100, 3, 1, &[1; 3])
-                .unwrap();
+        let no_hot = DatasetCatalog::from_spec(
+            &PlacementSpec::new(Layout::Skewed { shards: 4, frac: 0.0 }),
+            100,
+            3,
+            1,
+            &[1; 3],
+        )
+        .unwrap();
         assert_eq!(no_hot.resident_samples()[0], 0);
         assert_eq!(no_hot.total_samples(), 100);
     }
@@ -373,11 +572,35 @@ mod tests {
     }
 
     #[test]
-    fn apply_move_relocates_bytes() {
-        let mut c =
-            DatasetCatalog::from_spec(&PlacementSpec::Uniform { shards: 4 }, 400, 4, 10, &[1; 4])
-                .unwrap();
-        c.apply_move(0, 3);
-        assert_eq!(c.resident_samples(), vec![0, 100, 100, 200]);
+    fn add_replica_is_additive_and_idempotent() {
+        let mut c = DatasetCatalog::from_spec(
+            &PlacementSpec::new(Layout::Uniform { shards: 4 }),
+            400,
+            4,
+            10,
+            &[1; 4],
+        )
+        .unwrap();
+        c.add_replica(0, 3);
+        c.add_replica(0, 3);
+        assert_eq!(c.shards[0].replicas, vec![0, 3], "copy added once, source kept");
+        assert!(c.has_replica(0, 3) && c.has_replica(0, 0));
+        assert_eq!(c.resident_samples(), vec![100, 100, 100, 200]);
+        assert_eq!(c.total_bytes(), 4000, "logical bytes unchanged by replication");
+    }
+
+    #[test]
+    fn merge_replicas_unions_matching_catalogs() {
+        let spec = PlacementSpec::new(Layout::Uniform { shards: 4 });
+        let mut live = DatasetCatalog::from_spec(&spec, 400, 4, 10, &[1; 4]).unwrap();
+        let mut job = live.clone();
+        job.add_replica(1, 3);
+        job.add_replica(2, 0);
+        assert!(live.merge_replicas(&job), "new replicas merged");
+        assert!(live.has_replica(1, 3) && live.has_replica(2, 0));
+        assert!(!live.merge_replicas(&job), "second merge is a no-op");
+        // Geometry mismatch: refuse rather than corrupt.
+        let other = DatasetCatalog::from_spec(&spec, 444, 4, 10, &[1; 4]).unwrap();
+        assert!(!live.merge_replicas(&other));
     }
 }

@@ -6,8 +6,12 @@
 //! whatever else is on the directed link — gradient syncs and, on a
 //! shared multi-job fabric, other tenants' traffic — so migration
 //! contention is physical, not modeled. Transfers are issued by the
-//! source region's object store, not the PS communicator, so they do not
-//! occupy the partition's gRPC send slot (but they do occupy the wire).
+//! chosen **source replica**'s object store, not the PS communicator, so
+//! they do not occupy the partition's gRPC send slot (but they do occupy
+//! the wire). A delivered copy *adds* a replica (the source keeps its
+//! bytes); a zero-byte [`ShardMove`] is a pure training-right handoff
+//! onto a region that already holds a replica — it never touches the
+//! WAN and pays no egress.
 //!
 //! **Staging** overlaps with training: every staged move starts at the
 //! training start, destinations train on whatever is already resident,
@@ -15,7 +19,11 @@
 //! [`Gate::DataBlocked`] until its next shard lands (the accumulated
 //! block time is the report's `stall_time`). Mid-run rebalancing moves
 //! (`grow_dest`) additionally retime the destination's step budget,
-//! since their samples were not part of the deploy-time plan.
+//! since their samples were not part of the deploy-time plan; if the
+//! destination *finishes* while such a shard is still in flight, the
+//! delivery re-routes to the next-best unfinished region instead of
+//! silently dropping the shard's remaining epochs
+//! ([`DataPlaneReport::rerouted_shards`](super::DataPlaneReport)).
 //!
 //! Numerics are unchanged: sample *contents* regenerate deterministically
 //! everywhere (`crate::data`); what moves here is the modeled bytes and
@@ -24,6 +32,7 @@
 use crate::cloud::cost::CostModel;
 use crate::engine::driver::{self, World};
 use crate::engine::partition::Gate;
+use crate::net::RegionId;
 use crate::sim::{Sim, Time};
 
 use super::catalog::{DatasetCatalog, PlacementSpec};
@@ -51,8 +60,17 @@ const MAX_MOVE_ATTEMPTS: u32 = 8;
 
 /// The job's live data-plane state (inside `engine::driver::World`).
 pub(crate) struct DataPlaneState {
-    /// Catalog with *current* homes (updated as shards land).
+    /// Catalog with *current* replica sets (copies added as they land).
     pub catalog: DatasetCatalog,
+    /// Which region currently holds the right to train each shard
+    /// (index = shard id; sources shed at move commit, destinations
+    /// gain at delivery).
+    pub assign: Vec<RegionId>,
+    /// Shards whose remaining work was shed for good (an abandoned
+    /// transfer, or a re-route with nobody left to train it): excluded
+    /// from the controller's residency view and never rebalanced again —
+    /// `failed_shards` already reported their work as lost.
+    pub shed: Vec<bool>,
     pub mode: PlacementMode,
     pub placement: PlacementSpec,
     pub cost: CostModel,
@@ -63,10 +81,18 @@ pub(crate) struct DataPlaneState {
     pub sent_bytes: u64,
     /// Bytes delivered (arrival side).
     pub moved_bytes: u64,
+    /// Physical copies delivered (zero-byte handoffs excluded).
     pub moved_shards: usize,
+    /// Replica provenance: every physical copy delivered, as
+    /// `(shard, source replica, destination)`, delivery order.
+    pub replicas_created: Vec<(usize, RegionId, RegionId)>,
+    /// In-flight rebalance shards re-routed because their destination
+    /// finished before delivery.
+    pub rerouted: usize,
     /// Moves abandoned after [`MAX_MOVE_ATTEMPTS`] dropped transfers
     /// (their samples' remaining work is shed, not silently retried
-    /// forever).
+    /// forever), plus rebalance shards left with no unfinished region
+    /// to re-route to.
     pub failed_moves: usize,
     pub egress_cost: f64,
     /// Latest delivery instant (absolute virtual time).
@@ -75,9 +101,18 @@ pub(crate) struct DataPlaneState {
 }
 
 impl DataPlaneState {
-    pub fn new(catalog: DatasetCatalog, mode: PlacementMode, placement: PlacementSpec) -> Self {
+    pub fn new(
+        catalog: DatasetCatalog,
+        assign: Vec<RegionId>,
+        mode: PlacementMode,
+        placement: PlacementSpec,
+    ) -> Self {
+        debug_assert_eq!(catalog.shards.len(), assign.len(), "one trainer per shard");
+        let shed = vec![false; catalog.shards.len()];
         DataPlaneState {
             catalog,
+            assign,
+            shed,
             mode,
             placement,
             cost: CostModel::default(),
@@ -86,11 +121,26 @@ impl DataPlaneState {
             sent_bytes: 0,
             moved_bytes: 0,
             moved_shards: 0,
+            replicas_created: Vec::new(),
+            rerouted: 0,
             failed_moves: 0,
             egress_cost: 0.0,
             staging_done: 0.0,
             rebalances: 0,
         }
+    }
+
+    /// Samples each region currently holds the right to train — the
+    /// residency view the elastic controller plans against. Shed shards
+    /// (abandoned transfers) count for nobody: their work is lost.
+    pub fn assigned_samples(&self) -> Vec<usize> {
+        let mut out = vec![0usize; self.catalog.n_regions];
+        for ((s, &a), &shed) in self.catalog.shards.iter().zip(&self.assign).zip(&self.shed) {
+            if !shed {
+                out[a] += s.samples();
+            }
+        }
+        out
     }
 
     /// Queue a move for execution (caller schedules [`begin_move`]).
@@ -109,6 +159,8 @@ impl DataPlaneState {
             placement: self.placement.name(),
             moved_shards: self.moved_shards,
             moved_bytes: self.moved_bytes,
+            replicas_created: self.replicas_created.clone(),
+            rerouted_shards: self.rerouted,
             failed_shards: self.failed_moves,
             egress_cost: self.egress_cost,
             stall_time: stall,
@@ -124,8 +176,10 @@ impl DataPlaneState {
 
 /// Put move `idx` on the WAN now. The transfer FIFO-queues on the
 /// directed link behind any earlier traffic; egress is priced at the
-/// source region's object-store rate at send time. Dropped transfers
-/// (failure injection) retry with exponential backoff and give up after
+/// source replica's object-store rate at send time. A zero-byte handoff
+/// (the destination already holds a replica) delivers immediately
+/// without touching the fabric. Dropped transfers (failure injection)
+/// retry with exponential backoff and give up after
 /// [`MAX_MOVE_ATTEMPTS`] — see [`abandon_move`].
 pub(crate) fn begin_move(sim: &mut Sim<World>, w: &mut World, idx: usize) {
     let now = sim.now();
@@ -134,6 +188,14 @@ pub(crate) fn begin_move(sim: &mut Sim<World>, w: &mut World, idx: usize) {
         let m = &st.moves[idx].mv;
         (m.from, m.to, m.bytes)
     };
+    if bytes == 0 {
+        // Training-right handoff onto an existing replica: local read,
+        // no WAN traffic, no egress — deliver on the next event round.
+        sim.schedule(0.0, move |sim, w: &mut World| {
+            deliver_shard(sim, w, idx);
+        });
+        return;
+    }
     let t = w.fabric.transfer(from, to, bytes, now);
     w.wan_transfers += 1;
     if t.dropped {
@@ -172,7 +234,7 @@ pub(crate) fn begin_move(sim: &mut Sim<World>, w: &mut World, idx: usize) {
 /// them would let the destination finish before they land and drop
 /// their work on delivery). A rebalance move's samples were already
 /// shed at the source; they are simply lost (reported via
-/// `failed_shards`), mirroring the delivered-after-finish case.
+/// `failed_shards`).
 fn abandon_move(sim: &mut Sim<World>, w: &mut World, idx: usize) {
     let now = sim.now();
     let (dest, was_staged) = {
@@ -181,8 +243,12 @@ fn abandon_move(sim: &mut Sim<World>, w: &mut World, idx: usize) {
         m.delivered = true; // terminal: no further retries
         st.pending = st.pending.saturating_sub(1);
         st.failed_moves += 1;
+        // Nobody will train these samples now: keep the residency view
+        // and future rebalance rounds honest about the loss.
+        st.shed[m.mv.shard] = true;
         (m.mv.to, !m.grow_dest)
     };
+    driver::sync_controller_residency(w);
     if was_staged {
         let inbound: usize = {
             let st = w.dataplane.as_ref().expect("data plane active");
@@ -212,26 +278,42 @@ fn abandon_move(sim: &mut Sim<World>, w: &mut World, idx: usize) {
     }
 }
 
-/// Move `idx` landed: the destination may now train on its samples.
+/// Move `idx` landed: the destination may now train on its samples — or,
+/// if it finished while a rebalance shard was in flight, the shard
+/// re-routes to the next-best unfinished region (the delivered copy
+/// still counts: the bytes physically moved and stay usable as a source
+/// replica for the re-route).
 pub(crate) fn deliver_shard(sim: &mut Sim<World>, w: &mut World, idx: usize) {
     let now = sim.now();
-    let (dest, indices, grow) = {
+    let (dest, indices, grow, shard_id) = {
         let st = w.dataplane.as_mut().expect("data plane active");
         let m = &mut st.moves[idx];
         debug_assert!(!m.delivered, "double delivery of move {idx}");
         m.delivered = true;
         st.pending = st.pending.saturating_sub(1);
         st.moved_bytes += m.mv.bytes;
-        st.moved_shards += 1;
-        st.staging_done = st.staging_done.max(now);
-        st.catalog.apply_move(m.mv.shard, m.mv.to);
-        (m.mv.to, std::mem::take(&mut m.indices), m.grow_dest)
+        if m.mv.bytes > 0 {
+            st.moved_shards += 1;
+            st.staging_done = st.staging_done.max(now);
+            st.replicas_created.push((m.mv.shard, m.mv.from, m.mv.to));
+            st.catalog.add_replica(m.mv.shard, m.mv.to);
+        }
+        (m.mv.to, std::mem::take(&mut m.indices), m.grow_dest, m.mv.shard)
     };
+    if w.parts[dest].gate == Gate::Finished {
+        if grow {
+            // The destination finished while this rebalance shard was in
+            // flight: its remaining epochs were shed at the source, so
+            // dropping the delivery here would silently lose that work.
+            reroute_move(sim, w, shard_id, indices);
+        }
+        // A *staged* move landing after local completion is benign: the
+        // destination's step budget pre-counted these samples and was
+        // already executed (batches cycle over what was resident).
+        return;
+    }
     {
         let part = &mut w.parts[dest];
-        if part.gate == Gate::Finished {
-            return; // landed after local completion: bytes moved, work done
-        }
         part.shard.extend(indices);
         if grow {
             part.retime_step_budget(w.model.meta.batch_size, w.cfg.epochs, 0);
@@ -242,4 +324,175 @@ pub(crate) fn deliver_shard(sim: &mut Sim<World>, w: &mut World, idx: usize) {
         }
     }
     driver::kick_idle_workers(sim, w, dest);
+}
+
+/// Re-route an in-flight rebalance shard whose destination finished
+/// before delivery: hand its training right (and, where no replica
+/// exists yet, its bytes) to the unfinished region with the cheapest
+/// inbound transfer from the shard's current replica set. With no
+/// unfinished region left the work is shed honestly (`failed_shards`).
+fn reroute_move(sim: &mut Sim<World>, w: &mut World, shard: usize, indices: Vec<usize>) {
+    let (bytes, replicas) = {
+        let st = w.dataplane.as_ref().expect("data plane active");
+        let s = &st.catalog.shards[shard];
+        let mut reps = s.replicas.clone();
+        reps.sort_unstable();
+        (s.bytes, reps)
+    };
+    // Next-best unfinished target: free if it already holds a replica,
+    // else cheapest estimated transfer from any replica; ties break to
+    // the lowest region id (deterministic).
+    let mut best: Option<(f64, RegionId, RegionId)> = None; // (est, target, source)
+    for t in 0..w.parts.len() {
+        if w.parts[t].gate == Gate::Finished {
+            continue;
+        }
+        let (est, src) = if replicas.contains(&t) {
+            (0.0, t)
+        } else {
+            let mut pick = (f64::INFINITY, replicas[0]);
+            for &r in &replicas {
+                let e = w.fabric.with(|f| f.estimate(r, t, bytes));
+                if e < pick.0 - 1e-12 {
+                    pick = (e, r);
+                }
+            }
+            pick
+        };
+        // Strict improvement only: `t` ascends, so ties keep the lowest
+        // region id by construction.
+        if best.map_or(true, |(b, _, _)| est < b - 1e-9) {
+            best = Some((est, t, src));
+        }
+    }
+    let Some((_, target, src)) = best else {
+        // Every region finished — nobody is left to train the samples.
+        let st = w.dataplane.as_mut().expect("data plane active");
+        st.failed_moves += 1;
+        st.shed[shard] = true;
+        return;
+    };
+    let samples = indices.len();
+    let bytes_needed = if replicas.contains(&target) { 0 } else { bytes };
+    let mv = ShardMove { shard, from: src, to: target, bytes: bytes_needed, samples };
+    let idx = {
+        let st = w.dataplane.as_mut().expect("data plane active");
+        st.rerouted += 1;
+        st.assign[shard] = target;
+        st.enqueue(mv, indices, true)
+    };
+    begin_move(sim, w, idx);
+    driver::sync_controller_residency(w);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::devices::Device;
+    use crate::cloud::CloudEnv;
+    use crate::dataplane::catalog::Layout;
+    use crate::dataplane::{self, DataPlaneConfig};
+    use crate::engine::driver::TrainConfig;
+    use crate::net::{Fabric, SharedFabric};
+    use crate::runtime::PjrtRuntime;
+    use crate::sync::{Strategy, SyncConfig};
+
+    /// Regression (ROADMAP data-plane defect): a destination finishing
+    /// while a rebalance shard is in flight used to silently drop that
+    /// shard's remaining epochs at delivery. Now the delivery re-routes
+    /// to the next-best unfinished region and the work survives.
+    #[test]
+    fn inflight_rebalance_shard_reroutes_when_destination_finishes() {
+        let rt = PjrtRuntime::new("artifacts-not-needed").unwrap();
+        let env = CloudEnv::multi_region(vec![
+            ("A", Device::Skylake, 6, 1),
+            ("B", Device::Skylake, 6, 1),
+            ("C", Device::Skylake, 6, 1),
+        ]);
+        let mut cfg = TrainConfig::new("synthetic");
+        cfg.epochs = 4;
+        cfg.n_train = 96;
+        cfg.n_eval = 16;
+        cfg.skip_eval = true;
+        cfg.sync = SyncConfig::new(Strategy::Asgd, 1_000_000); // never syncs
+        cfg.dataplane = DataPlaneConfig {
+            placement: Some(crate::dataplane::PlacementSpec::new(Layout::Uniform {
+                shards: 3,
+            })),
+            mode: dataplane::PlacementMode::ComputeFollowsData, // no staged moves
+            sample_bytes: 1024 * 1024, // 32 MB shards: seconds on the wire
+            ..DataPlaneConfig::default()
+        };
+        let meta = rt.load_model("synthetic").unwrap().meta;
+        let planned = dataplane::plan_for(&env, &cfg, &meta).unwrap();
+        assert!(planned.plan.moves.is_empty(), "CFD stages nothing");
+        let allocations = planned.plan.allocations.clone();
+        let fabric = SharedFabric::new(Fabric::full_mesh(
+            cfg.seed,
+            3,
+            &cfg.link,
+            &cfg.link_overrides,
+        ));
+        let (mut sim, mut world) = driver::deploy_job_planned(
+            &rt,
+            &env,
+            allocations,
+            cfg,
+            0.0,
+            fabric,
+            Some(planned),
+        )
+        .unwrap();
+
+        // Mimic a committed rebalance: shard 0 (trained at region 0)
+        // hands its remaining epochs to region 1 over the WAN.
+        let (start, end, bytes, samples) = {
+            let dp = world.dataplane.as_ref().unwrap();
+            let s = &dp.catalog.shards[0];
+            (s.start, s.end, s.bytes, s.samples())
+        };
+        let batch = world.model.meta.batch_size;
+        let epochs = world.cfg.epochs;
+        {
+            let part = &mut world.parts[0];
+            part.shard.remove_range(start, end);
+            part.retime_step_budget(batch, epochs, 0);
+        }
+        let idx = {
+            let dp = world.dataplane.as_mut().unwrap();
+            dp.assign[0] = 1;
+            dp.enqueue(
+                ShardMove { shard: 0, from: 0, to: 1, bytes, samples },
+                (start..end).collect(),
+                true,
+            )
+        };
+        begin_move(&mut sim, &mut world, idx);
+        // The destination finishes while the 32 MB transfer is on the
+        // wire (~2.7 s at 100 Mbps).
+        driver::finish_partition(&mut sim, &mut world, 1);
+        assert_eq!(world.parts[1].gate, Gate::Finished);
+
+        assert!(sim.run_with_limit(&mut world, 10_000_000), "run must drain");
+        let dp = world.dataplane.as_ref().unwrap();
+        assert_eq!(dp.rerouted, 1, "the in-flight shard must re-route, not drop");
+        assert_eq!(dp.failed_moves, 0);
+        // The origin still holds a replica and is unfinished, so it is
+        // the cheapest re-route target: the training right comes home as
+        // a zero-byte handoff and the remaining epochs actually run.
+        let target = dp.assign[0];
+        assert_ne!(target, 1, "the finished region cannot train the samples");
+        assert_eq!(target, 0, "the origin's local replica is the cheapest target");
+        assert_eq!(world.parts[0].shard.len(), samples, "the samples are trainable again");
+        let expected_steps = (samples as u64).div_ceil(batch as u64) * epochs as u64;
+        assert_eq!(
+            world.parts[0].steps_completed, expected_steps,
+            "every re-routed epoch was executed, none dropped"
+        );
+        assert!(world.global_end.is_some(), "the job still completes");
+        // The physical copy that landed on the finished region is real
+        // and recorded as provenance.
+        assert_eq!(dp.replicas_created, vec![(0, 0, 1)]);
+        assert!(dp.catalog.has_replica(0, 1));
+    }
 }

@@ -9,22 +9,28 @@
 //! This module makes the dataset a first-class physical object:
 //!
 //! - [`catalog`] — a [`DatasetCatalog`](catalog::DatasetCatalog) of sized
-//!   shards with an initial per-cloud placement (seeded from the
-//!   `"dataplane"` config block / `--data-placement`, e.g.
-//!   `skewed:8:0.7`), plus the per-region object-store egress pricing in
+//!   shards, each resident in a **replica set** of one or more regions
+//!   (seeded from the `"dataplane"` config block / `--data-placement`,
+//!   e.g. `skewed:8:0.7` or `skewed:8:0.7:r2` for two copies per shard),
+//!   plus the per-region object-store egress pricing in
 //!   [`cloud::cost`](crate::cloud::cost);
 //! - [`placement`] — the joint data/compute planner: for a given catalog
-//!   it evaluates *compute-follows-data* (train where the shards sit),
+//!   it evaluates *compute-follows-data* (train inside the replica sets),
 //!   *data-follows-compute* (migrate toward the power-optimal clouds),
-//!   and a *joint* hill-climb over single-shard moves whose payoff beats
-//!   their transfer time + egress cost, returning a
-//!   [`PlacementPlan`](placement::PlacementPlan) `{ allocations, moves }`;
-//! - [`migration`] — the physical shard transfers, executed as payloads
+//!   and a *joint* hill-climb over single-shard reassignments that may
+//!   *create* replicas when the time-valued makespan saving beats the
+//!   copy cost — each consumer reads from its nearest replica and egress
+//!   is paid once per created copy, never per reader — returning a
+//!   [`PlacementPlan`](placement::PlacementPlan)
+//!   `{ allocations, assign, moves }`;
+//! - [`migration`] — the physical replica copies, executed as payloads
 //!   over the existing [`net::Fabric`](crate::net::Fabric) /
 //!   [`SharedFabric`](crate::net::SharedFabric) so migrations FIFO-contend
 //!   with gradient syncs and other jobs' traffic, with a staging phase
-//!   that overlaps prefetch with the first epochs and gates shard
-//!   availability through `Gate::DataBlocked`.
+//!   that overlaps prefetch with the first epochs, gates shard
+//!   availability through `Gate::DataBlocked`, and re-routes in-flight
+//!   rebalance shards whose destination finished instead of dropping
+//!   their remaining epochs.
 //!
 //! HeterPS (arXiv 2111.10635) schedules data and compute jointly across
 //! heterogeneous resources; the modeling split here (pure planner, driver
@@ -37,8 +43,11 @@ pub mod catalog;
 pub mod migration;
 pub mod placement;
 
-pub use catalog::{sample_bytes, DatasetCatalog, PlacementSpec, ShardInfo};
-pub use placement::{plan_for, PlacementMode, PlacementPlan, PlannedDataPlane, ShardMove};
+pub use catalog::{sample_bytes, DatasetCatalog, Layout, PlacementSpec, ShardInfo};
+pub use placement::{
+    plan_for, plan_for_catalog, plan_for_on, PlacementMode, PlacementPlan, PlannedDataPlane,
+    ShardMove,
+};
 
 use crate::sim::Time;
 
@@ -93,12 +102,24 @@ pub struct DataPlaneReport {
     pub mode: String,
     /// The initial-placement spec (`PlacementSpec` name).
     pub placement: String,
-    /// Shards that finished migrating.
+    /// Physical replica copies that finished migrating (zero-byte
+    /// training-right handoffs onto existing replicas excluded).
     pub moved_shards: usize,
-    /// Bytes of shard payloads delivered over the WAN.
+    /// Bytes of shard payloads delivered over the WAN; each created
+    /// replica's bytes are counted exactly once, however many epochs
+    /// read the copy afterwards.
     pub moved_bytes: u64,
+    /// Replica provenance: every physical copy delivered, as
+    /// `(shard id, source replica, destination region)` in delivery
+    /// order — where each consumer's bytes actually came from.
+    pub replicas_created: Vec<(usize, crate::net::RegionId, crate::net::RegionId)>,
+    /// In-flight rebalance shards re-routed to another unfinished region
+    /// because their planned destination finished before delivery
+    /// (previously those shards' remaining epochs were silently dropped).
+    pub rerouted_shards: usize,
     /// Moves abandoned after repeated dropped transfers (failure
-    /// injection); their remaining work was shed, not retried forever.
+    /// injection), plus re-routes with no unfinished region left; their
+    /// remaining work was shed, not retried forever.
     pub failed_shards: usize,
     /// Object-store egress cost of the migrations (per-source-region
     /// pricing; see `cloud::cost::CostModel::egress_cost`).

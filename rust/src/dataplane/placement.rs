@@ -1,20 +1,31 @@
-//! The joint data/compute placement planner.
+//! The joint data/compute placement planner, replica-aware.
 //!
-//! Extends Algorithm-1 matching into a *joint* plan over the catalog: for
-//! a candidate shard layout the planner re-runs the matching on the
-//! implied per-region sample counts, estimates the run (compute time vs
-//! inbound staging time per region, prefetch overlapped) and its cost
-//! (compute billed to the estimated end + per-region object-store egress
-//! for every shard that moves), and searches layouts:
+//! Extends Algorithm-1 matching into a *joint* plan over the catalog:
+//! every shard physically resides in a **replica set** of one or more
+//! regions, and the planner chooses which region *trains* each shard
+//! (its assignment) plus, for every shard assigned outside its replica
+//! set, **which replica the consumer reads from** — the source whose
+//! egress + time-valued transfer seconds is cheapest (nearest by
+//! delivered bandwidth; ties break to the cheaper egress region, then
+//! the lowest id). Reading from a co-located replica is free; creating
+//! a new replica pays egress **once per copy**, never per reader. For a
+//! candidate assignment the planner re-runs the matching on the implied
+//! per-region sample counts, estimates the run (compute time vs inbound
+//! staging time per region, prefetch overlapped) and its cost (compute
+//! billed to the estimated end + per-source egress for every replica
+//! copy created), and searches assignments:
 //!
-//! - **compute-follows-data** — keep the catalog layout, train where the
-//!   shards already sit (zero migration; stragglers where the data is);
+//! - **compute-follows-data** — train strictly inside each shard's
+//!   replica set (zero migration; with `r1` this is "train where the
+//!   single copy sits", with `rK` the copies themselves balance load);
 //! - **data-follows-compute** — migrate toward the power-proportional
-//!   layout (fast compute; pays transfer time + egress);
+//!   layout (fast compute; pays transfer time + egress for whatever the
+//!   replica sets do not already cover);
 //! - **joint** — start from the cheaper of the two and hill-climb over
-//!   single-shard relocations, keeping only moves whose payoff beats
-//!   their cost. By construction the joint plan's estimated objective is
-//!   never worse than either pure mode's.
+//!   single-shard reassignments, *creating* a replica whenever the
+//!   time-valued makespan saving beats the copy cost. By construction
+//!   the joint plan's estimated objective is never worse than either
+//!   pure mode's.
 //!
 //! The objective is `$cost + time_value · est_run`: pure dollar cost
 //! would never move a byte (Algorithm-1 matching already makes compute
@@ -33,7 +44,7 @@ use crate::cloud::{Allocation, CloudEnv};
 use crate::net::{Fabric, LinkSpec, RegionId};
 use crate::sched::optimal_matching_observed;
 
-use super::catalog::{sample_bytes, DatasetCatalog};
+use super::catalog::{sample_bytes, DatasetCatalog, ShardInfo};
 
 /// Which placement strategy [`plan`] runs (config `"dataplane"` `"mode"`
 /// key / `--placement-mode`).
@@ -74,27 +85,36 @@ impl PlacementMode {
     ];
 }
 
-/// One planned shard migration.
+/// One planned shard migration: a replica copy read from `from` (the
+/// chosen source replica) materializing at `to`. `bytes == 0` marks a
+/// pure training-right handoff onto a region that *already* holds a
+/// replica (mid-run rebalancing only) — no WAN traffic, no egress.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardMove {
     pub shard: usize,
+    /// Source replica the copy streams from (`== to` for a zero-byte
+    /// handoff onto an existing replica).
     pub from: RegionId,
     pub to: RegionId,
+    /// Bytes on the WAN: the shard's size, or 0 for a local handoff.
     pub bytes: u64,
     pub samples: usize,
 }
 
-/// The planner's output: a compute plan plus the shard moves that
-/// produce the layout it was planned against.
+/// The planner's output: a compute plan plus the shard assignment it was
+/// planned against and the replica copies that make it physical.
 #[derive(Debug, Clone)]
 pub struct PlacementPlan {
     pub mode: PlacementMode,
-    /// Per-region compute allocations (Algorithm 1 on the final layout;
-    /// regions with no resident data after the moves get none).
+    /// Per-region compute allocations (Algorithm 1 on the final
+    /// assignment; regions training no samples get none).
     pub allocations: Vec<Allocation>,
-    /// Shard migrations, origin → final home, shard-id order.
+    /// Replica copies to create, shard-id order (shards whose assigned
+    /// trainer already holds a replica need none).
     pub moves: Vec<ShardMove>,
-    /// Final resident samples per region (post-migration).
+    /// Which region trains each shard (index = shard id).
+    pub assign: Vec<RegionId>,
+    /// Samples trained per region under `assign` (post-migration).
     pub resident: Vec<usize>,
     pub straggler: usize,
     /// Estimated run seconds (straggler compute vs inbound staging).
@@ -148,7 +168,9 @@ pub fn default_time_value_per_hour(env: &CloudEnv, cost: &CostModel) -> f64 {
 }
 
 impl<'a> PlanInputs<'a> {
-    /// Gather the link view from a fabric (planning reads only).
+    /// Gather the link view from a fabric (planning reads only). Fleet
+    /// admission calls this on the **live** shared fabric, so plans see
+    /// churn-mutated bandwidths instead of the config template.
     pub fn link_view(fabric: &Fabric, n: usize) -> Vec<Vec<Option<LinkSpec>>> {
         (0..n)
             .map(|a| (0..n).map(|b| fabric.link_spec(a, b)).collect())
@@ -156,12 +178,47 @@ impl<'a> PlanInputs<'a> {
     }
 
     fn transfer_s(&self, from: RegionId, to: RegionId, bytes: u64) -> f64 {
+        if from == to {
+            return 0.0;
+        }
         let spec = self.links[from][to].clone().unwrap_or_else(LinkSpec::lan);
         spec.setup_s + bytes as f64 * 8.0 / spec.bandwidth_bps.max(1.0) + spec.latency_s
     }
+
+    /// Full-inventory observed powers per region.
+    fn powers(&self) -> Vec<f64> {
+        self.env
+            .greedy_plan()
+            .iter()
+            .zip(&self.scale)
+            .map(|(a, s)| a.power() * s)
+            .collect()
+    }
 }
 
-/// One evaluated candidate layout.
+/// The replica a consumer in `to` reads shard `s` from: `to` itself when
+/// co-located, else the replica minimizing egress + time-valued transfer
+/// ([`CostModel::copy_objective`]); ties break to the lowest region id.
+fn best_source(inputs: &PlanInputs, s: &ShardInfo, to: RegionId) -> RegionId {
+    if s.has_replica(to) {
+        return to;
+    }
+    let mut reps = s.replicas.clone();
+    reps.sort_unstable();
+    let mut best_r = reps[0];
+    let mut best_obj = f64::INFINITY;
+    for &r in &reps {
+        let t = inputs.transfer_s(r, to, s.bytes);
+        let obj = inputs.cost.copy_objective(r, s.bytes, t, inputs.time_value_per_hour);
+        if obj < best_obj - 1e-12 {
+            best_obj = obj;
+            best_r = r;
+        }
+    }
+    best_r
+}
+
+/// One evaluated candidate assignment.
 struct Eval {
     allocations: Vec<Allocation>,
     resident: Vec<usize>,
@@ -179,16 +236,17 @@ fn steps_for(samples: usize, batch: usize, epochs: usize) -> f64 {
     }
 }
 
-/// Estimate a candidate layout: matching on the implied sample counts,
-/// run = max per region of (compute, inbound staging) — prefetch overlaps
-/// the first epochs, so a region stalls only if its inbound bytes take
-/// longer than its resident work — cost = compute billed to the run end
-/// plus per-source egress on every moved byte.
-fn evaluate(inputs: &PlanInputs, homes: &[RegionId]) -> Eval {
+/// Estimate a candidate assignment: matching on the implied sample
+/// counts, run = max per region of (compute, inbound staging) — prefetch
+/// overlaps the first epochs, so a region stalls only if its inbound
+/// bytes take longer than its resident work — cost = compute billed to
+/// the run end plus per-source egress on every replica copy created
+/// (shards trained inside their replica set stage nothing).
+fn evaluate(inputs: &PlanInputs, assign: &[RegionId]) -> Eval {
     let n = inputs.env.regions.len();
     let mut resident = vec![0usize; n];
-    for (s, &h) in inputs.catalog.shards.iter().zip(homes) {
-        resident[h] += s.samples();
+    for (s, &a) in inputs.catalog.shards.iter().zip(assign) {
+        resident[a] += s.samples();
     }
     let mut env2 = inputs.env.clone();
     for (r, region) in env2.regions.iter_mut().enumerate() {
@@ -196,14 +254,16 @@ fn evaluate(inputs: &PlanInputs, homes: &[RegionId]) -> Eval {
     }
     let plan = optimal_matching_observed(&env2, &inputs.scale);
 
-    // Inbound staging per region: moves on one directed link serialize
-    // FIFO; different source links stream in parallel.
+    // Inbound staging per region: copies on one directed link serialize
+    // FIFO; different source links stream in parallel. Each created
+    // replica pays its source's egress exactly once.
     let mut inbound = vec![vec![0.0f64; n]; n]; // [from][to] seconds
     let mut egress = 0.0f64;
-    for (s, &h) in inputs.catalog.shards.iter().zip(homes) {
-        if h != s.home {
-            inbound[s.home][h] += inputs.transfer_s(s.home, h, s.bytes);
-            egress += inputs.cost.egress_cost(s.home, s.bytes);
+    for (s, &a) in inputs.catalog.shards.iter().zip(assign) {
+        if !s.has_replica(a) {
+            let src = best_source(inputs, s, a);
+            inbound[src][a] += inputs.transfer_s(src, a, s.bytes);
+            egress += inputs.cost.egress_cost(src, s.bytes);
         }
     }
     let mut run = 0.0f64;
@@ -239,28 +299,61 @@ fn evaluate(inputs: &PlanInputs, homes: &[RegionId]) -> Eval {
     }
 }
 
-/// The power-proportional layout: shard homes greedily reassigned toward
-/// per-region sample targets proportional to full-inventory (observed)
-/// power. Each shard moves at most once; a move is taken only when it
-/// strictly reduces the L1 distance to the target.
-fn data_follows_compute_homes(inputs: &PlanInputs) -> Vec<RegionId> {
+/// The migration-free baseline: every shard trains inside its replica
+/// set, larger shards placed first on the replica whose accumulated
+/// load-per-power stays lowest. At `r1` this degenerates to "train where
+/// the single copy sits" (the PR-4 compute-follows-data); with real
+/// replica sets the copies themselves already balance load.
+fn compute_follows_data_assign(inputs: &PlanInputs) -> Vec<RegionId> {
+    let powers = inputs.powers();
+    let shards = &inputs.catalog.shards;
+    let mut assign: Vec<RegionId> = shards.iter().map(|s| s.home()).collect();
+    let mut load = vec![0.0f64; inputs.env.regions.len()];
+    // Single-replica shards are immovable mass; place it first.
+    for s in shards.iter().filter(|s| s.replicas.len() == 1) {
+        load[s.home()] += s.samples() as f64;
+    }
+    let mut order: Vec<usize> =
+        (0..shards.len()).filter(|&i| shards[i].replicas.len() > 1).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(shards[i].samples()), i));
+    for i in order {
+        let s = &shards[i];
+        let k = s.samples() as f64;
+        let mut reps = s.replicas.clone();
+        reps.sort_unstable();
+        let mut best = reps[0];
+        let mut best_t = f64::INFINITY;
+        for &r in &reps {
+            let t = if powers[r] > 0.0 { (load[r] + k) / powers[r] } else { f64::INFINITY };
+            if t < best_t - 1e-12 {
+                best_t = t;
+                best = r;
+            }
+        }
+        assign[i] = best;
+        load[best] += k;
+    }
+    assign
+}
+
+/// The power-proportional assignment: starting from the migration-free
+/// baseline, shards greedily reassigned toward per-region sample targets
+/// proportional to full-inventory (observed) power. Each shard moves at
+/// most once; a move is taken only when it strictly reduces the L1
+/// distance to the target. Blind to link speed and egress — that is the
+/// point of the baseline.
+fn data_follows_compute_assign(inputs: &PlanInputs) -> Vec<RegionId> {
     let n = inputs.env.regions.len();
-    let powers: Vec<f64> = inputs
-        .env
-        .greedy_plan()
-        .iter()
-        .zip(&inputs.scale)
-        .map(|(a, s)| a.power() * s)
-        .collect();
+    let powers = inputs.powers();
     let total_power: f64 = powers.iter().sum();
     let total_samples = inputs.catalog.total_samples() as f64;
     let target: Vec<f64> =
         powers.iter().map(|p| total_samples * p / total_power.max(1e-12)).collect();
 
-    let mut homes: Vec<RegionId> = inputs.catalog.shards.iter().map(|s| s.home).collect();
+    let mut assign = compute_follows_data_assign(inputs);
     let mut resident: Vec<f64> = vec![0.0; n];
-    for (s, &h) in inputs.catalog.shards.iter().zip(&homes) {
-        resident[h] += s.samples() as f64;
+    for (s, &a) in inputs.catalog.shards.iter().zip(&assign) {
+        resident[a] += s.samples() as f64;
     }
     // Largest shards first (tie: id) so the coarse mass settles before
     // the fine-grained corrections.
@@ -268,7 +361,7 @@ fn data_follows_compute_homes(inputs: &PlanInputs) -> Vec<RegionId> {
     order.sort_by_key(|&i| (std::cmp::Reverse(inputs.catalog.shards[i].samples()), i));
     for i in order {
         let k = inputs.catalog.shards[i].samples() as f64;
-        let src = homes[i];
+        let src = assign[i];
         let before = (resident[src] - target[src]).abs();
         let mut best: Option<(f64, usize)> = None;
         for dst in 0..n {
@@ -286,31 +379,33 @@ fn data_follows_compute_homes(inputs: &PlanInputs) -> Vec<RegionId> {
         if let Some((_, dst)) = best {
             resident[src] -= k;
             resident[dst] += k;
-            homes[i] = dst;
+            assign[i] = dst;
         }
     }
-    homes
+    assign
 }
 
-/// Greedy hill-climb over single-shard relocations; commits a move only
-/// when it improves the objective by more than `margin` (relative).
-/// `movable` restricts which regions may participate (None = all):
-/// mid-run rebalancing must not strand samples on — or steal them from —
+/// Greedy hill-climb over single-shard reassignments; commits a move
+/// only when it improves the objective by more than `margin` (relative).
+/// Reassigning onto an existing replica is free; anywhere else implies
+/// creating a replica, whose copy cost the objective charges. `movable`
+/// restricts which regions may participate (None = all): mid-run
+/// rebalancing must not strand samples on — or steal them from —
 /// partitions that already finished.
 fn improve(
     inputs: &PlanInputs,
-    homes: &mut Vec<RegionId>,
+    assign: &mut Vec<RegionId>,
     margin: f64,
     movable: Option<&[bool]>,
 ) -> Eval {
     let n = inputs.env.regions.len();
     let shards = inputs.catalog.shards.len();
     let allowed = |r: RegionId| movable.map_or(true, |m| m[r]);
-    let mut best = evaluate(inputs, homes);
+    let mut best = evaluate(inputs, assign);
     for _round in 0..(2 * shards + 4) {
         let mut winner: Option<(f64, usize, RegionId)> = None;
         for i in 0..shards {
-            let cur = homes[i];
+            let cur = assign[i];
             if !allowed(cur) {
                 continue; // its samples are already trained (or training)
             }
@@ -318,20 +413,20 @@ fn improve(
                 if dst == cur || !allowed(dst) {
                     continue;
                 }
-                homes[i] = dst;
-                let cand = evaluate(inputs, homes);
+                assign[i] = dst;
+                let cand = evaluate(inputs, assign);
                 if cand.objective < best.objective * (1.0 - margin) - 1e-12
                     && winner.map_or(true, |(c, _, _)| cand.objective < c)
                 {
                     winner = Some((cand.objective, i, dst));
                 }
             }
-            homes[i] = cur;
+            assign[i] = cur;
         }
         match winner {
             Some((_, i, dst)) => {
-                homes[i] = dst;
-                best = evaluate(inputs, homes);
+                assign[i] = dst;
+                best = evaluate(inputs, assign);
             }
             None => break,
         }
@@ -339,16 +434,19 @@ fn improve(
     best
 }
 
-fn moves_from(catalog: &DatasetCatalog, homes: &[RegionId]) -> Vec<ShardMove> {
-    catalog
+/// The replica copies an assignment requires: one per shard trained
+/// outside its replica set, read from its best source.
+fn moves_from(inputs: &PlanInputs, assign: &[RegionId]) -> Vec<ShardMove> {
+    inputs
+        .catalog
         .shards
         .iter()
-        .zip(homes)
-        .filter(|(s, &h)| h != s.home)
-        .map(|(s, &h)| ShardMove {
+        .zip(assign)
+        .filter(|(s, &a)| !s.has_replica(a))
+        .map(|(s, &a)| ShardMove {
             shard: s.id,
-            from: s.home,
-            to: h,
+            from: best_source(inputs, s, a),
+            to: a,
             bytes: s.bytes,
             samples: s.samples(),
         })
@@ -357,29 +455,30 @@ fn moves_from(catalog: &DatasetCatalog, homes: &[RegionId]) -> Vec<ShardMove> {
 
 /// Run the placement planner in `mode` over the catalog.
 pub fn plan(inputs: &PlanInputs, mode: PlacementMode) -> PlacementPlan {
-    let initial: Vec<RegionId> = inputs.catalog.shards.iter().map(|s| s.home).collect();
-    let homes = match mode {
-        PlacementMode::ComputeFollowsData => initial,
-        PlacementMode::DataFollowsCompute => data_follows_compute_homes(inputs),
+    let assign = match mode {
+        PlacementMode::ComputeFollowsData => compute_follows_data_assign(inputs),
+        PlacementMode::DataFollowsCompute => data_follows_compute_assign(inputs),
         PlacementMode::Joint => {
-            // Start from the better pure layout, then climb: the joint
-            // objective can never be worse than either pure mode's.
-            let dfc = data_follows_compute_homes(inputs);
-            let mut homes =
-                if evaluate(inputs, &dfc).objective < evaluate(inputs, &initial).objective {
+            // Start from the better pure assignment, then climb: the
+            // joint objective can never be worse than either pure mode's.
+            let cfd = compute_follows_data_assign(inputs);
+            let dfc = data_follows_compute_assign(inputs);
+            let mut assign =
+                if evaluate(inputs, &dfc).objective < evaluate(inputs, &cfd).objective {
                     dfc
                 } else {
-                    initial
+                    cfd
                 };
-            improve(inputs, &mut homes, 0.0, None);
-            homes
+            improve(inputs, &mut assign, 0.0, None);
+            assign
         }
     };
-    let eval = evaluate(inputs, &homes);
+    let eval = evaluate(inputs, &assign);
     PlacementPlan {
         mode,
         allocations: eval.allocations,
-        moves: moves_from(inputs.catalog, &homes),
+        moves: moves_from(inputs, &assign),
+        assign,
         resident: eval.resident,
         straggler: eval.straggler,
         est_run_s: eval.run_s,
@@ -388,28 +487,73 @@ pub fn plan(inputs: &PlanInputs, mode: PlacementMode) -> PlacementPlan {
     }
 }
 
-/// Mid-run rebalancing: starting from the *current* catalog layout,
+/// Mid-run rebalancing: starting from the *current* training assignment,
 /// return the shard moves a joint climb over the remaining work commits.
 /// `margin` gates churn the same way re-plan hysteresis does — a move
 /// must beat the stay-put objective by that relative margin. Inputs
 /// carry observed power scales and remaining epochs; `movable[r]` marks
 /// regions still training — finished partitions neither receive shards
 /// (the samples would be silently dropped) nor give theirs up (already
-/// trained).
-pub fn rebalance(inputs: &PlanInputs, margin: f64, movable: &[bool]) -> Vec<ShardMove> {
-    let mut homes: Vec<RegionId> = inputs.catalog.shards.iter().map(|s| s.home).collect();
-    improve(inputs, &mut homes, margin.max(0.0), Some(movable));
-    moves_from(inputs.catalog, &homes)
+/// trained). A reassignment onto a region that already holds a replica
+/// comes back as a zero-byte handoff (`ShardMove::bytes == 0`).
+pub fn rebalance(
+    inputs: &PlanInputs,
+    margin: f64,
+    movable: &[bool],
+    current: &[RegionId],
+) -> Vec<ShardMove> {
+    let mut assign = current.to_vec();
+    improve(inputs, &mut assign, margin.max(0.0), Some(movable));
+    inputs
+        .catalog
+        .shards
+        .iter()
+        .zip(&assign)
+        .zip(current)
+        .filter(|((_, &a), &cur)| a != cur)
+        .map(|((s, &a), _)| {
+            if s.has_replica(a) {
+                ShardMove { shard: s.id, from: a, to: a, bytes: 0, samples: s.samples() }
+            } else {
+                ShardMove {
+                    shard: s.id,
+                    from: best_source(inputs, s, a),
+                    to: a,
+                    bytes: s.bytes,
+                    samples: s.samples(),
+                }
+            }
+        })
+        .collect()
 }
 
-/// Build the catalog and run the configured placement planner for one
-/// job — the deterministic entry point shared by the coordinator (which
-/// needs `plan.allocations`) and the training driver (which additionally
-/// stages `plan.moves`); both must see the identical plan.
+/// Build the catalog from the config's spec and run the configured
+/// placement planner for one job on a *private* link view derived from
+/// the job's own `link`/`link_overrides` — the deterministic entry point
+/// shared by the coordinator (which needs `plan.allocations`) and the
+/// training driver (which additionally stages `plan.moves`); both must
+/// see the identical plan. Fleet admission instead goes through
+/// [`plan_for_on`] / [`plan_for_catalog`] with the live shared fabric's
+/// link view.
 pub fn plan_for(
     env: &CloudEnv,
     cfg: &crate::engine::driver::TrainConfig,
     meta: &crate::runtime::ModelMeta,
+) -> anyhow::Result<PlannedDataPlane> {
+    let fabric =
+        Fabric::full_mesh(cfg.seed, env.regions.len(), &cfg.link, &cfg.link_overrides);
+    plan_for_on(env, cfg, meta, PlanInputs::link_view(&fabric, env.regions.len()))
+}
+
+/// [`plan_for`] with an explicit link view — what fleet admission passes
+/// from the **live** shared fabric, so jobs with private `dataplane`
+/// configs plan against current link state instead of the config
+/// template.
+pub fn plan_for_on(
+    env: &CloudEnv,
+    cfg: &crate::engine::driver::TrainConfig,
+    meta: &crate::runtime::ModelMeta,
+    links: Vec<Vec<Option<LinkSpec>>>,
 ) -> anyhow::Result<PlannedDataPlane> {
     let spec = cfg
         .dataplane
@@ -430,8 +574,32 @@ pub fn plan_for(
         &region_samples,
     )
     .map_err(|e| anyhow::anyhow!(e))?;
-    let fabric =
-        Fabric::full_mesh(cfg.seed, env.regions.len(), &cfg.link, &cfg.link_overrides);
+    plan_for_catalog(env, cfg, meta, catalog, links)
+}
+
+/// Plan over an *existing* catalog (the fleet's live shared catalog,
+/// replica map included) instead of building one from the config's
+/// placement spec: later fleet jobs see the copies earlier jobs'
+/// migrations already created and plan correspondingly fewer moves.
+pub fn plan_for_catalog(
+    env: &CloudEnv,
+    cfg: &crate::engine::driver::TrainConfig,
+    meta: &crate::runtime::ModelMeta,
+    catalog: DatasetCatalog,
+    links: Vec<Vec<Option<LinkSpec>>>,
+) -> anyhow::Result<PlannedDataPlane> {
+    anyhow::ensure!(
+        catalog.n_regions == env.regions.len(),
+        "catalog spans {} regions, environment has {}",
+        catalog.n_regions,
+        env.regions.len()
+    );
+    anyhow::ensure!(
+        catalog.total_samples() == cfg.n_train,
+        "catalog holds {} samples, job trains {}",
+        catalog.total_samples(),
+        cfg.n_train
+    );
     let base_step = if cfg.base_step_s > 0.0 {
         cfg.base_step_s
     } else {
@@ -449,7 +617,7 @@ pub fn plan_for(
         epochs: cfg.epochs,
         base_step_s: base_step,
         batch_size: meta.batch_size,
-        links: PlanInputs::link_view(&fabric, env.regions.len()),
+        links,
         cost,
         scale: vec![1.0; env.regions.len()],
         time_value_per_hour: time_value,
@@ -458,8 +626,8 @@ pub fn plan_for(
     Ok(PlannedDataPlane { catalog, plan })
 }
 
-/// A planned data plane: the catalog (initial homes) plus the placement
-/// plan derived from it.
+/// A planned data plane: the catalog (initial replica sets) plus the
+/// placement plan derived from it.
 #[derive(Debug, Clone)]
 pub struct PlannedDataPlane {
     pub catalog: DatasetCatalog,
@@ -470,7 +638,7 @@ pub struct PlannedDataPlane {
 mod tests {
     use super::*;
     use crate::cloud::devices::Device;
-    use crate::dataplane::catalog::PlacementSpec;
+    use crate::dataplane::catalog::{Layout, PlacementSpec};
 
     fn four_cloud_env() -> CloudEnv {
         CloudEnv::multi_region(vec![
@@ -483,7 +651,18 @@ mod tests {
 
     fn skewed_catalog() -> DatasetCatalog {
         DatasetCatalog::from_spec(
-            &PlacementSpec::Skewed { shards: 8, frac: 0.7 },
+            &PlacementSpec::new(Layout::Skewed { shards: 8, frac: 0.7 }),
+            512,
+            4,
+            256 * 1024,
+            &[1; 4],
+        )
+        .unwrap()
+    }
+
+    fn replicated_catalog() -> DatasetCatalog {
+        DatasetCatalog::from_spec(
+            &PlacementSpec::new(Layout::Skewed { shards: 8, frac: 0.7 }).with_replication(2),
             512,
             4,
             256 * 1024,
@@ -534,6 +713,21 @@ mod tests {
                 assert_eq!(p.allocations[r].total_units(), 0, "region {r} idle");
             }
         }
+        // Replica-aware CFD still never moves, but balances inside the
+        // replica sets: the hot region sheds replicated shards for free.
+        let rep = replicated_catalog();
+        let p2 = plan(&inputs(&env, &rep), PlacementMode::ComputeFollowsData);
+        assert!(p2.moves.is_empty(), "CFD must stay migration-free at r2");
+        for (s, &a) in rep.shards.iter().zip(&p2.assign) {
+            assert!(s.has_replica(a), "CFD assigned outside the replica set");
+        }
+        assert!(
+            p2.resident[0] < cat.resident_samples()[0],
+            "free copies relieve the hot region: {:?} vs {:?}",
+            p2.resident,
+            cat.resident_samples()
+        );
+        assert!(p2.est_run_s < p.est_run_s, "r2 CFD beats r1 CFD on makespan");
     }
 
     #[test]
@@ -547,73 +741,152 @@ mod tests {
         assert_eq!(total, 512, "moves conserve samples");
         let hot_share = p.resident[0] as f64 / total as f64;
         assert!(hot_share < 0.45, "hot region sheds toward 4/22: {:?}", p.resident);
-        // Every move originates at the shard's catalog home.
+        // Every move reads from the shard's only replica at r1.
         for m in &p.moves {
-            assert_eq!(cat.shards[m.shard].home, m.from);
+            assert_eq!(cat.shards[m.shard].home(), m.from);
             assert_ne!(m.from, m.to);
+            assert!(m.bytes > 0, "a copy outside the replica set is physical");
         }
     }
 
     #[test]
     fn joint_estimate_never_worse_than_either_pure_mode() {
         let env = four_cloud_env();
+        for cat in [skewed_catalog(), replicated_catalog()] {
+            let inp = inputs(&env, &cat);
+            let cfd = plan(&inp, PlacementMode::ComputeFollowsData);
+            let dfc = plan(&inp, PlacementMode::DataFollowsCompute);
+            let joint = plan(&inp, PlacementMode::Joint);
+            assert!(
+                joint.est_objective <= cfd.est_objective + 1e-9,
+                "{} vs cfd {}",
+                joint.est_objective,
+                cfd.est_objective
+            );
+            assert!(
+                joint.est_objective <= dfc.est_objective + 1e-9,
+                "{} vs dfc {}",
+                joint.est_objective,
+                dfc.est_objective
+            );
+            assert!(
+                joint.est_run_s <= cfd.est_run_s + 1e-9,
+                "joint must never worsen the data straggler"
+            );
+        }
+        // At r1 a 70% skew is worth physically moving for, and the climb
+        // strictly relieves the single-home straggler (at r2 the free
+        // copies already balance the load, so CFD can match joint).
         let cat = skewed_catalog();
         let inp = inputs(&env, &cat);
         let cfd = plan(&inp, PlacementMode::ComputeFollowsData);
-        let dfc = plan(&inp, PlacementMode::DataFollowsCompute);
         let joint = plan(&inp, PlacementMode::Joint);
-        assert!(
-            joint.est_objective <= cfd.est_objective + 1e-9,
-            "{} vs cfd {}",
-            joint.est_objective,
-            cfd.est_objective
-        );
-        assert!(
-            joint.est_objective <= dfc.est_objective + 1e-9,
-            "{} vs dfc {}",
-            joint.est_objective,
-            dfc.est_objective
-        );
-        assert!(joint.est_run_s < cfd.est_run_s, "joint must relieve the data straggler");
+        assert!(joint.est_run_s < cfd.est_run_s, "joint must relieve the r1 data straggler");
         assert!(!joint.moves.is_empty(), "a 70% skew is worth moving for");
+    }
+
+    #[test]
+    fn replicas_make_the_joint_plan_cheaper_not_worse() {
+        // The same logical layout with a second pre-existing copy per
+        // shard: the planner can only do better — lower (or equal)
+        // objective, fewer migrated bytes, less egress.
+        let env = four_cloud_env();
+        let r1 = skewed_catalog();
+        let r2 = replicated_catalog();
+        let p1 = plan(&inputs(&env, &r1), PlacementMode::Joint);
+        let p2 = plan(&inputs(&env, &r2), PlacementMode::Joint);
+        // Pointwise dominance (exact property): the identical assignment
+        // evaluated against the replica-rich catalog needs a subset of
+        // the copies, so its objective can only fall.
+        let on_r1 = evaluate(&inputs(&env, &r1), &p1.assign);
+        let on_r2 = evaluate(&inputs(&env, &r2), &p1.assign);
+        assert!(
+            on_r2.objective <= on_r1.objective + 1e-9,
+            "replicas must never make an assignment dearer: {} vs {}",
+            on_r2.objective,
+            on_r1.objective
+        );
+        assert!(on_r2.run_s <= on_r1.run_s + 1e-9);
+        // And the planner banks the advantage end to end.
+        assert!(
+            p2.est_objective <= p1.est_objective + 1e-9,
+            "r2 objective {} must not exceed r1 {}",
+            p2.est_objective,
+            p1.est_objective
+        );
+        assert!(
+            p2.moved_bytes() <= p1.moved_bytes(),
+            "pre-existing replicas reduce copies: {} vs {}",
+            p2.moved_bytes(),
+            p1.moved_bytes()
+        );
+    }
+
+    #[test]
+    fn read_assignment_prefers_fast_then_cheap_sources() {
+        let env = four_cloud_env();
+        // One shard replicated at {1, 2}; region 2's link to 3 is 30x
+        // faster than region 1's: the consumer at 3 must read from 2.
+        let mut cat = skewed_catalog();
+        cat.shards[0].replicas = vec![1, 2];
+        let slow = LinkSpec { bandwidth_bps: 10e6, ..LinkSpec::wan_100mbps() };
+        let fast = LinkSpec { bandwidth_bps: 300e6, ..LinkSpec::wan_100mbps() };
+        let fabric =
+            Fabric::full_mesh(1, 4, &LinkSpec::wan_100mbps(), &[(1, 3, slow), (2, 3, fast)]);
+        let mut inp = inputs(&env, &cat);
+        inp.links = PlanInputs::link_view(&fabric, 4);
+        assert_eq!(best_source(&inp, &cat.shards[0], 3), 2, "nearest-by-bandwidth wins");
+        // Co-located consumer reads locally, for free.
+        assert_eq!(best_source(&inp, &cat.shards[0], 1), 1);
+        // Symmetric links: the cheaper egress region wins (region 0's
+        // hub rate beats region 3's edge rate).
+        let mut cat2 = skewed_catalog();
+        cat2.shards[0].replicas = vec![0, 3];
+        let inp2 = inputs(&env, &cat2);
+        assert_eq!(best_source(&inp2, &cat2.shards[0], 1), 0, "cheaper egress breaks the tie");
     }
 
     #[test]
     fn moves_never_exceed_catalog_bytes_and_plans_are_deterministic() {
         let env = four_cloud_env();
-        let cat = skewed_catalog();
-        let inp = inputs(&env, &cat);
-        for mode in PlacementMode::ALL {
-            let a = plan(&inp, mode);
-            let b = plan(&inp, mode);
-            assert!(a.moved_bytes() <= cat.total_bytes(), "{mode:?} moved too much");
-            assert_eq!(a.moves, b.moves, "{mode:?} must be deterministic");
-            assert_eq!(a.resident, b.resident);
-            let mut seen = std::collections::BTreeSet::new();
-            for m in &a.moves {
-                assert!(seen.insert(m.shard), "{mode:?} moves shard {} twice", m.shard);
+        for cat in [skewed_catalog(), replicated_catalog()] {
+            let inp = inputs(&env, &cat);
+            for mode in PlacementMode::ALL {
+                let a = plan(&inp, mode);
+                let b = plan(&inp, mode);
+                assert!(a.moved_bytes() <= cat.total_bytes(), "{mode:?} moved too much");
+                assert_eq!(a.moves, b.moves, "{mode:?} must be deterministic");
+                assert_eq!(a.assign, b.assign, "{mode:?} read assignment must be deterministic");
+                assert_eq!(a.resident, b.resident);
+                let mut seen = std::collections::BTreeSet::new();
+                for m in &a.moves {
+                    assert!(seen.insert(m.shard), "{mode:?} moves shard {} twice", m.shard);
+                    assert!(
+                        !cat.shards[m.shard].has_replica(m.to),
+                        "{mode:?} copied onto an existing replica"
+                    );
+                    assert!(cat.shards[m.shard].has_replica(m.from), "source must hold a copy");
+                }
+                let total: usize = a.resident.iter().sum();
+                assert_eq!(total, cat.total_samples());
             }
-            let total: usize = a.resident.iter().sum();
-            assert_eq!(total, cat.total_samples());
         }
     }
 
     #[test]
     fn rebalance_is_idempotent_at_the_joint_optimum() {
         let env = four_cloud_env();
-        // Apply the joint plan's moves, then ask again: a local optimum
-        // must not churn (the hysteresis analogue of replan idempotence).
-        let cat = {
-            let mut c = skewed_catalog();
-            let p = plan(&inputs(&env, &c), PlacementMode::Joint);
-            for m in &p.moves {
-                c.apply_move(m.shard, m.to);
-            }
-            c
-        };
+        // Apply the joint plan's copies, then ask again from its own
+        // assignment: a local optimum must not churn (the hysteresis
+        // analogue of replan idempotence).
+        let mut cat = skewed_catalog();
+        let p = plan(&inputs(&env, &cat), PlacementMode::Joint);
+        for m in &p.moves {
+            cat.add_replica(m.shard, m.to);
+        }
         let inp = inputs(&env, &cat);
         assert_eq!(
-            rebalance(&inp, 0.02, &[true; 4]),
+            rebalance(&inp, 0.02, &[true; 4], &p.assign),
             Vec::new(),
             "settled layout must not churn"
         );
@@ -629,12 +902,39 @@ mod tests {
         let mut inp = inputs(&env, &cat);
         inp.scale = vec![0.3, 1.0, 1.0, 1.0]; // hot region slowed hard
         let movable = [true, false, true, true];
-        let moves = rebalance(&inp, 0.0, &movable);
+        let current: Vec<RegionId> = cat.shards.iter().map(|s| s.home()).collect();
+        let moves = rebalance(&inp, 0.0, &movable, &current);
         assert!(!moves.is_empty(), "a 70% slowdown on the hot region must move shards");
         for m in &moves {
             assert_ne!(m.to, 1, "moved into a finished region: {m:?}");
-            assert_ne!(m.from, 1, "stole a finished region's shard: {m:?}");
+            assert_ne!(current[m.shard], 1, "stole a finished region's shard: {m:?}");
         }
+    }
+
+    #[test]
+    fn rebalance_hands_off_without_bytes_when_a_replica_exists() {
+        // Region 0 slowed; its shards' second copies already sit on the
+        // fast regions, so the rebalance must come back as zero-byte
+        // training-right handoffs, not physical copies.
+        let env = four_cloud_env();
+        let cat = replicated_catalog();
+        let mut inp = inputs(&env, &cat);
+        inp.scale = vec![0.25, 1.0, 1.0, 1.0];
+        let current: Vec<RegionId> = cat.shards.iter().map(|s| s.home()).collect();
+        let moves = rebalance(&inp, 0.0, &[true; 4], &current);
+        assert!(!moves.is_empty(), "a 75% slowdown must shed the hot region's load");
+        for m in &moves {
+            if cat.shards[m.shard].has_replica(m.to) {
+                assert_eq!(m.bytes, 0, "existing replica must be read locally: {m:?}");
+                assert_eq!(m.from, m.to);
+            } else {
+                assert!(m.bytes > 0);
+            }
+        }
+        assert!(
+            moves.iter().any(|m| m.bytes == 0),
+            "the replicated catalog must yield at least one free handoff: {moves:?}"
+        );
     }
 
     #[test]
@@ -643,7 +943,7 @@ mod tests {
         // matching must hand them an empty allocation, not assert.
         let env = four_cloud_env();
         let cat = DatasetCatalog::from_spec(
-            &PlacementSpec::Single { region: 0 },
+            &PlacementSpec::new(Layout::Single { region: 0 }),
             256,
             4,
             1024,

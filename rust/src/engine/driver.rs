@@ -25,7 +25,7 @@
 //! Single-job vs multi-job: [`run_geo_training`] deploys one job on a
 //! private fabric and drains its simulator to completion. The multi-job
 //! coordinator (`crate::coordinator::fleet`) instead calls the split
-//! crate-internal entry points — `deploy_job` with a start offset and a
+//! crate-internal entry points — `deploy_job_planned` with a start offset and a
 //! [`SharedFabric`](crate::net::SharedFabric), stepping each job's
 //! simulator event-by-event on a merged clock, `apply_lease` when it
 //! re-divides the shared inventory, and `finalize_report` at job
@@ -210,7 +210,7 @@ impl World {
 /// `allocations` is the resourcing plan (greedy or elastic); data is
 /// sharded by the regions' `data_samples` ratio. The job gets a private
 /// WAN fabric built from `cfg.link` / `cfg.link_overrides`; multi-job
-/// fleets instead deploy through `deploy_job` with a shared fabric.
+/// fleets instead deploy through `deploy_job_planned` with a shared fabric.
 pub fn run_geo_training(
     rt: &PjrtRuntime,
     env: &CloudEnv,
@@ -222,7 +222,7 @@ pub fn run_geo_training(
 
 /// [`run_geo_training`] with an already-computed placement plan: callers
 /// that ran `dataplane::plan_for` to pick `allocations` (the coordinator)
-/// hand the result down instead of having `deploy_job` recompute the
+/// hand the result down instead of having `deploy_job_planned` recompute the
 /// identical deterministic plan.
 pub(crate) fn run_geo_training_planned(
     rt: &PjrtRuntime,
@@ -256,21 +256,10 @@ pub(crate) fn run_geo_training_planned(
 /// event-by-event with other jobs' simulators on the shared clock
 /// (multi-job coordinator). Links are expected to be installed on
 /// `fabric` already when it is shared; `run_geo_training` installs them
-/// for the private case.
-pub(crate) fn deploy_job(
-    rt: &PjrtRuntime,
-    env: &CloudEnv,
-    allocations: Vec<Allocation>,
-    cfg: TrainConfig,
-    start_at: Time,
-    fabric: SharedFabric,
-) -> Result<(Sim<World>, World)> {
-    deploy_job_planned(rt, env, allocations, cfg, start_at, fabric, None)
-}
-
-/// [`deploy_job`] with an optionally pre-computed placement plan (see
-/// [`run_geo_training_planned`]); `None` plans here when the data plane
-/// is enabled.
+/// for the private case. `pre_planned` carries an already-computed
+/// placement plan (see [`run_geo_training_planned`]; fleet admission
+/// plans against the live fabric and catalog); `None` plans here — on
+/// the passed fabric's link view — when the data plane is enabled.
 pub(crate) fn deploy_job_planned(
     rt: &PjrtRuntime,
     env: &CloudEnv,
@@ -308,10 +297,18 @@ pub(crate) fn deploy_job_planned(
     // deterministic plan computed here.
     let planned = match pre_planned {
         Some(pd) => Some(pd),
-        None if cfg.dataplane.enabled() => Some(placement::plan_for(env, &cfg, &model.meta)?),
+        None if cfg.dataplane.enabled() => {
+            // Plan against the fabric the job will actually run on (for
+            // a fleet's shared fabric that is the *live* link state, not
+            // the config template).
+            let links = fabric.with(|f| PlanInputs::link_view(f, env.regions.len()));
+            Some(placement::plan_for_on(env, &cfg, &model.meta, links)?)
+        }
         None => None,
     };
-    // Per region: (initially-available shard, final sample count).
+    // Per region: (initially-available shard, final sample count). A
+    // shard is available at start wherever its assigned trainer already
+    // holds a replica; everything else arrives via the staged moves.
     let shards: Vec<(Shard, usize)> = match &planned {
         Some(pd) => {
             let moved: std::collections::BTreeSet<usize> =
@@ -319,7 +316,7 @@ pub(crate) fn deploy_job_planned(
             let mut initial: Vec<Vec<usize>> = vec![Vec::new(); env.regions.len()];
             for s in &pd.catalog.shards {
                 if !moved.contains(&s.id) {
-                    initial[s.home].extend(s.indices());
+                    initial[pd.plan.assign[s.id]].extend(s.indices());
                 }
             }
             initial
@@ -500,7 +497,8 @@ pub(crate) fn deploy_job_planned(
     // for transfer at training start.
     let dataplane = planned.map(|pd| {
         let spec = cfg.dataplane.placement.clone().expect("planned implies a spec");
-        let mut st = DataPlaneState::new(pd.catalog, cfg.dataplane.mode, spec);
+        let mut st =
+            DataPlaneState::new(pd.catalog, pd.plan.assign.clone(), cfg.dataplane.mode, spec);
         for mv in pd.plan.moves {
             let indices = st.catalog.shards[mv.shard].indices();
             st.enqueue(mv, indices, false);
@@ -1046,7 +1044,16 @@ fn maybe_rebalance(sim: &mut Sim<World>, w: &mut World) -> usize {
             scale: scales,
             time_value_per_hour: time_value,
         };
-        placement::rebalance(&inputs, 0.05, &movable)
+        placement::rebalance(&inputs, 0.05, &movable, &dp.assign)
+    };
+    let moves = {
+        // A shed shard's work was already reported lost (abandoned
+        // transfer); re-planning it would silently resurrect samples
+        // `failed_shards` counted out.
+        let dp = w.dataplane.as_ref().expect("data plane active");
+        let mut moves = moves;
+        moves.retain(|m| !dp.shed[m.shard]);
+        moves
     };
     if moves.is_empty() {
         return 0;
@@ -1055,12 +1062,14 @@ fn maybe_rebalance(sim: &mut Sim<World>, w: &mut World) -> usize {
     let epochs = w.cfg.epochs;
     let count = moves.len();
     for mv in moves {
-        let (start, end) = {
+        // The region shedding the samples is the shard's *current
+        // trainer* — with replica sets that need not be the physical
+        // source the bytes stream from (`mv.from`).
+        let (start, end, src) = {
             let dp = w.dataplane.as_ref().expect("data plane active");
             let s = &dp.catalog.shards[mv.shard];
-            (s.start, s.end)
+            (s.start, s.end, dp.assign[mv.shard])
         };
-        let src = mv.from;
         {
             let part = &mut w.parts[src];
             part.shard.remove_range(start, end);
@@ -1074,29 +1083,31 @@ fn maybe_rebalance(sim: &mut Sim<World>, w: &mut World) -> usize {
         {
             finish_partition(sim, w, src);
         }
-        let idx = w
-            .dataplane
-            .as_mut()
-            .expect("data plane active")
-            .enqueue(mv, (start..end).collect(), true);
+        let idx = {
+            let dp = w.dataplane.as_mut().expect("data plane active");
+            dp.assign[mv.shard] = mv.to;
+            dp.enqueue(mv, (start..end).collect(), true)
+        };
         migration::begin_move(sim, w, idx);
     }
-    // Keep the controller's residency view in sync with the layout the
-    // moves will produce (its candidates must plan the new data map).
-    let predicted: Vec<usize> = {
-        let dp = w.dataplane.as_mut().expect("data plane active");
-        dp.rebalances += 1;
-        let mut resident = dp.catalog.resident_samples();
-        for m in dp.moves.iter().filter(|m| !m.delivered) {
-            resident[m.mv.from] -= m.mv.samples.min(resident[m.mv.from]);
-            resident[m.mv.to] += m.mv.samples;
-        }
-        resident
+    w.dataplane.as_mut().expect("data plane active").rebalances += 1;
+    // Keep the controller's residency view in sync with the assignment
+    // the moves produce (its candidates must plan the new data map).
+    sync_controller_residency(w);
+    count
+}
+
+/// Re-derive the elastic controller's per-region residency from the data
+/// plane's current training assignment (after rebalance commits and
+/// delivery-time re-routes); no-op without a controller or data plane.
+pub(crate) fn sync_controller_residency(w: &mut World) {
+    let assigned = match w.dataplane.as_ref() {
+        Some(dp) => dp.assigned_samples(),
+        None => return,
     };
     if let Some(ctrl) = w.controller.as_mut() {
-        ctrl.update_residency(&predicted);
+        ctrl.update_residency(&assigned);
     }
-    count
 }
 
 /// Resize every changed partition's worker pool to `allocations` through

@@ -16,10 +16,16 @@
 //!   transfer time + egress: the hot data spreads to the fast,
 //!   well-connected regions and Guangzhou is left nearly alone.
 //!
+//! A single-home spec adds a fourth run: the same layout seeded with a
+//! second replica per shard (`:r2`) under the joint planner — consumers
+//! read from the nearest pre-existing copy, so the hot region's load
+//! spreads with little or no staged migration (and no extra egress).
+//!
 //! Reported per mode: end-to-end time, data-stall time, migrated bytes,
-//! egress cost, and total cost — the acceptance bar is the joint mode
-//! beating compute-follows-data on makespan and data-follows-compute on
-//! total cost (see `rust/tests/dataplane.rs`).
+//! replica copies created, egress cost, and total cost — the acceptance
+//! bars are the joint mode beating compute-follows-data on makespan and
+//! data-follows-compute on total cost, and `joint:r2` beating the
+//! single-home joint run on makespan (see `rust/tests/dataplane.rs`).
 
 use crate::coordinator::Coordinator;
 use crate::dataplane::{self, DataPlaneConfig, PlacementMode, PlacementSpec};
@@ -72,7 +78,8 @@ fn run_mode(
     (report, est)
 }
 
-/// `exp --id dataplane`: the three placement modes on the skewed
+/// `exp --id dataplane`: the three placement modes (plus a `joint:r2`
+/// replica-seeded run when the spec is single-home) on the skewed
 /// 4-cloud catalog. `spec` overrides the default `skewed:8:0.7`.
 pub fn dataplane_compare(
     coord: &Coordinator,
@@ -84,7 +91,7 @@ pub fn dataplane_compare(
     let placement = match spec {
         Some(s) => PlacementSpec::from_name(s)
             .unwrap_or_else(|e| panic!("--data-placement: {e}")),
-        None => PlacementSpec::Skewed { shards: 8, frac: 0.7 },
+        None => PlacementSpec::new(crate::dataplane::Layout::Skewed { shards: 8, frac: 0.7 }),
     };
 
     let mut base = TrainConfig::new(model);
@@ -110,33 +117,56 @@ pub fn dataplane_compare(
     let mut rows = Vec::new();
     let mut docs = Vec::new();
     let mut runs: Vec<(PlacementMode, TrainReport)> = Vec::new();
-    for mode in PlacementMode::ALL {
-        let (r, est) = run_mode(coord, &base, mode);
+    let record = |label: &str,
+                      r: &TrainReport,
+                      est: f64,
+                      rows: &mut Vec<Vec<String>>,
+                      docs: &mut Vec<Json>| {
         let d = r.dataplane.clone().expect("data plane was configured");
         rows.push(vec![
-            mode.name().to_string(),
+            label.to_string(),
             format!("{:.1}s", r.total_time),
             format!("{:.1}s", d.stall_time),
             format!("{:.1}MB", d.moved_bytes as f64 / 1e6),
+            format!("{}", d.replicas_created.len()),
             format!("${:.4}", d.egress_cost),
             format!("${:.4}", r.cost),
             format!("{:.1}s", est),
         ]);
         docs.push(Json::obj(vec![
-            ("mode", Json::str(mode.name())),
+            ("mode", Json::str(label)),
+            ("placement", Json::str(&d.placement)),
             ("total_time_s", Json::num(r.total_time)),
             ("stall_s", Json::num(d.stall_time)),
             ("moved_bytes", Json::num(d.moved_bytes as f64)),
             ("moved_shards", Json::num(d.moved_shards as f64)),
+            ("replicas_created", Json::num(d.replicas_created.len() as f64)),
             ("egress_cost_usd", Json::num(d.egress_cost)),
             ("total_cost_usd", Json::num(r.cost)),
             ("est_run_s", Json::num(est)),
             ("wan_bytes", Json::num(r.wan_bytes as f64)),
         ]));
+    };
+    for mode in PlacementMode::ALL {
+        let (r, est) = run_mode(coord, &base, mode);
+        record(mode.name(), &r, est, &mut rows, &mut docs);
         runs.push((mode, r));
     }
+    // A fourth run when the spec is single-home: the same layout seeded
+    // with a second replica per shard, under the joint planner —
+    // consumers read from the nearest pre-existing copy, so the hot
+    // region's load spreads with little or no staged migration.
+    let replicated = if placement.replication == 1 {
+        let mut rep = base.clone();
+        rep.dataplane.placement = Some(placement.with_replication(2));
+        let (r, est) = run_mode(coord, &rep, PlacementMode::Joint);
+        record("joint:r2", &r, est, &mut rows, &mut docs);
+        Some(r)
+    } else {
+        None
+    };
     print_table(
-        &["placement", "time", "data stall", "moved", "egress", "total cost", "est"],
+        &["placement", "time", "data stall", "moved", "copies", "egress", "total cost", "est"],
         &rows,
     );
     let by = |m: PlacementMode| &runs.iter().find(|(k, _)| *k == m).unwrap().1;
@@ -150,6 +180,14 @@ pub fn dataplane_compare(
         cfd.total_time / joint.total_time.max(1e-9),
         dfc.cost / joint.cost.max(1e-12),
     );
+    if let Some(rep) = &replicated {
+        println!(
+            "  joint:r2 vs joint:r1: {:.2}x faster at {:.1}MB vs {:.1}MB migrated",
+            joint.total_time / rep.total_time.max(1e-9),
+            rep.dataplane.as_ref().map_or(0.0, |d| d.moved_bytes as f64 / 1e6),
+            joint.dataplane.as_ref().map_or(0.0, |d| d.moved_bytes as f64 / 1e6),
+        );
+    }
 
     let doc = Json::obj(vec![
         ("model", Json::str(model)),

@@ -24,9 +24,9 @@
 //! `multijob` runs a Poisson trace of concurrent jobs over one
 //! shared inventory, comparing FIFO vs fair-share vs cost-aware leasing
 //! (module `multijob_exp`); and `dataplane` compares the three
-//! data/compute placement modes on a 70%-skewed dataset catalog
-//! (module `dataplane_exp`). The full id → figure/config/bench mapping
-//! lives in docs/EXPERIMENTS.md.
+//! data/compute placement modes — plus a replica-seeded `joint:r2` run —
+//! on a 70%-skewed dataset catalog (module `dataplane_exp`). The full
+//! id → figure/config/bench mapping lives in docs/EXPERIMENTS.md.
 
 pub mod ablations;
 pub mod dataplane_exp;

@@ -56,9 +56,12 @@ USAGE:
   (relative delivered-bandwidth divergence that re-plans the topology).
   --data-placement activates the physical data plane (dataset catalog +
   WAN shard migration): resident | uniform:<shards> | skewed:<shards>:<frac>
-  | single:<region>; --placement-mode picks compute-follows-data |
-  data-follows-compute | joint (default); --sample-kb sets stored KB per
-  sample. exp --id dataplane compares the three modes on a skewed catalog.
+  | single:<region>, each optionally suffixed :r<K> for K replica copies
+  per shard (e.g. skewed:8:0.7:r2 — consumers read from the nearest
+  replica, egress is paid once per created copy); --placement-mode picks
+  compute-follows-data | data-follows-compute | joint (default);
+  --sample-kb sets stored KB per sample. exp --id dataplane compares the
+  three modes (plus a replicated joint run) on a skewed catalog.
   exp --id multijob: [--config f (multijob block)] [--jobs n]
   [--mean-interarrival s] [--policy fifo|fair-share|cost-aware|all]
   runs concurrent jobs over one shared inventory (docs/EXPERIMENTS.md).

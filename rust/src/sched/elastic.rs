@@ -218,8 +218,12 @@ impl ElasticController {
     }
 
     /// Update the per-region resident sample counts the controller plans
-    /// against (the data plane moved shards mid-run): Algorithm-1
-    /// candidates must match the layout actually being trained on.
+    /// against (the data plane reassigned shards mid-run — physical
+    /// replica copies, zero-byte handoffs onto existing replicas, or a
+    /// delivery-time re-route after a destination finished): Algorithm-1
+    /// candidates must match the training assignment actually in force,
+    /// which the driver re-derives from the data plane's `assign` map
+    /// (`sync_controller_residency`).
     pub fn update_residency(&mut self, samples: &[usize]) {
         assert_eq!(samples.len(), self.env.regions.len(), "one sample count per region");
         for (region, &s) in self.env.regions.iter_mut().zip(samples) {

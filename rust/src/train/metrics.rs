@@ -211,6 +211,15 @@ impl TrainReport {
                         ("placement", Json::str(&d.placement)),
                         ("moved_shards", Json::num(d.moved_shards as f64)),
                         ("moved_bytes", Json::num(d.moved_bytes as f64)),
+                        (
+                            "replicas_created",
+                            Json::arr(d.replicas_created.iter().map(|&(s, from, to)| {
+                                Json::arr(
+                                    [s, from, to].iter().map(|&v| Json::num(v as f64)),
+                                )
+                            })),
+                        ),
+                        ("rerouted_shards", Json::num(d.rerouted_shards as f64)),
                         ("failed_shards", Json::num(d.failed_shards as f64)),
                         ("egress_cost_usd", Json::num(d.egress_cost)),
                         ("stall_s", Json::num(d.stall_time)),
@@ -232,9 +241,10 @@ impl TrainReport {
         let dataplane = match &self.dataplane {
             None => String::new(),
             Some(d) => format!(
-                " data[{} moved={:.1}MB stall={:.1}s]",
+                " data[{} moved={:.1}MB replicas={} stall={:.1}s]",
                 d.mode,
                 d.moved_bytes as f64 / 1e6,
+                d.replicas_created.len(),
                 d.stall_time
             ),
         };

@@ -17,7 +17,7 @@ use cloudless::cloud::devices::Device;
 use cloudless::cloud::CloudEnv;
 use cloudless::coordinator::fleet::{run_fleet, FleetConfig, JobRequest, LeasePolicy};
 use cloudless::dataplane::{
-    self, DataPlaneConfig, DatasetCatalog, PlacementMode, PlacementSpec,
+    self, DataPlaneConfig, DatasetCatalog, Layout, PlacementMode, PlacementSpec,
 };
 use cloudless::engine::ChurnEvent;
 use cloudless::net::LinkSpec;
@@ -58,6 +58,10 @@ fn overrides() -> Vec<(usize, usize, LinkSpec)> {
     ov
 }
 
+fn skewed_spec() -> PlacementSpec {
+    PlacementSpec::new(Layout::Skewed { shards: 8, frac: 0.7 })
+}
+
 fn skewed_cfg(mode: PlacementMode) -> TrainConfig {
     let mut cfg = TrainConfig::new("synthetic");
     cfg.epochs = 6;
@@ -68,7 +72,7 @@ fn skewed_cfg(mode: PlacementMode) -> TrainConfig {
     cfg.seed = 23;
     cfg.link_overrides = overrides();
     cfg.dataplane = DataPlaneConfig {
-        placement: Some(PlacementSpec::Skewed { shards: 8, frac: 0.7 }),
+        placement: Some(skewed_spec()),
         mode,
         sample_bytes: 256 * 1024,
         ..DataPlaneConfig::default()
@@ -76,13 +80,16 @@ fn skewed_cfg(mode: PlacementMode) -> TrainConfig {
     cfg
 }
 
-fn run_mode(mode: PlacementMode) -> TrainReport {
+fn run_cfg(cfg: TrainConfig) -> TrainReport {
     let rt = rt();
     let env = four_cloud_env();
-    let cfg = skewed_cfg(mode);
     let meta = rt.load_model("synthetic").unwrap().meta;
     let planned = dataplane::plan_for(&env, &cfg, &meta).unwrap();
     run_geo_training(&rt, &env, planned.plan.allocations, cfg).unwrap()
+}
+
+fn run_mode(mode: PlacementMode) -> TrainReport {
+    run_cfg(skewed_cfg(mode))
 }
 
 #[test]
@@ -161,14 +168,7 @@ fn per_job_bytes_reconcile_on_a_shared_fabric_with_migrations() {
     let mut cfg = FleetConfig::new(LeasePolicy::FairShare, four_cloud_env());
     cfg.link_overrides = overrides();
     cfg.catalog = Some(
-        DatasetCatalog::from_spec(
-            &PlacementSpec::Skewed { shards: 8, frac: 0.7 },
-            512,
-            4,
-            256 * 1024,
-            &[1; 4],
-        )
-        .unwrap(),
+        DatasetCatalog::from_spec(&skewed_spec(), 512, 4, 256 * 1024, &[1; 4]).unwrap(),
     );
     let requests: Vec<JobRequest> = (0..2)
         .map(|i| {
@@ -209,7 +209,7 @@ fn data_less_regions_finish_instantly_without_compute() {
     let rt = rt();
     let env = four_cloud_env();
     let mut cfg = skewed_cfg(PlacementMode::ComputeFollowsData);
-    cfg.dataplane.placement = Some(PlacementSpec::Single { region: 0 });
+    cfg.dataplane.placement = Some(PlacementSpec::new(Layout::Single { region: 0 }));
     let meta = rt.load_model("synthetic").unwrap().meta;
     let planned = dataplane::plan_for(&env, &cfg, &meta).unwrap();
     let report = run_geo_training(&rt, &env, planned.plan.allocations, cfg).unwrap();
@@ -219,6 +219,112 @@ fn data_less_regions_finish_instantly_without_compute() {
     }
     assert!(report.partitions[0].steps > 0);
     assert_eq!(report.dataplane.as_ref().unwrap().moved_bytes, 0);
+}
+
+#[test]
+fn replica_sets_beat_single_homes_on_makespan_at_bounded_egress() {
+    // The ISSUE-5 acceptance case: the same 70%-skewed catalog seeded
+    // with two replica copies per shard (`skewed:8:0.7:r2`). The joint
+    // planner reads from the nearest pre-existing copy — the hot
+    // region's load spreads without the staged copies (and egress) the
+    // single-home run has to pay, so the run is strictly faster and the
+    // migration bill can only shrink.
+    let r1 = run_mode(PlacementMode::Joint);
+    let mut cfg = skewed_cfg(PlacementMode::Joint);
+    cfg.dataplane.placement = Some(skewed_spec().with_replication(2));
+    let r2 = run_cfg(cfg);
+
+    let (d1, d2) = (r1.dataplane.as_ref().unwrap(), r2.dataplane.as_ref().unwrap());
+    assert_eq!(d2.placement, "skewed:8:0.7:r2", "the spec records its replica factor");
+    assert!(
+        r2.total_time < 0.99 * r1.total_time,
+        "r2 must be strictly faster: {:.2}s vs r1 {:.2}s",
+        r2.total_time,
+        r1.total_time
+    );
+    assert!(
+        d2.moved_bytes <= d1.moved_bytes,
+        "pre-existing replicas reduce staged copies: {} vs {}",
+        d2.moved_bytes,
+        d1.moved_bytes
+    );
+    assert!(
+        d2.egress_cost <= d1.egress_cost + 1e-9,
+        "extra egress stays within the single-home copy bill: ${} vs ${}",
+        d2.egress_cost,
+        d1.egress_cost
+    );
+    // WAN byte conservation with replicas: each created copy's bytes
+    // are counted exactly once, however many epochs read the copy.
+    let meta = rt().load_model("synthetic").unwrap().meta;
+    let wire = meta.param_count as u64 * 4 + 64;
+    let sends: u64 = r2.partitions.iter().map(|p| p.syncs_sent).sum();
+    assert_eq!(
+        r2.wan_bytes,
+        sends * wire + d2.moved_bytes,
+        "byte conservation at r2: wan = {sends} sends x {wire} + {} copy bytes",
+        d2.moved_bytes
+    );
+    assert_eq!(d2.replicas_created.len(), d2.moved_shards, "one provenance entry per copy");
+}
+
+#[test]
+fn fleet_jobs_with_private_dataplane_plan_on_the_live_shared_fabric() {
+    // Regression (ROADMAP data-plane defect): the fleet's WAN has thin
+    // 30 Mbps Guangzhou spurs, but the job's own TrainConfig still
+    // carries the default uniform 100 Mbps template. Admission used to
+    // plan the joint placement against the template — and ship the
+    // fast-but-unreachable Guangzhou region a share of the hot data.
+    // Planning must read the live SharedFabric's link specs instead and
+    // leave Guangzhou alone.
+    let rt = rt();
+    let mut cfg = FleetConfig::new(LeasePolicy::FairShare, four_cloud_env());
+    cfg.link_overrides = overrides(); // the *fleet* WAN is thin to GZ
+    let mut train = skewed_cfg(PlacementMode::Joint);
+    train.link_overrides = Vec::new(); // the job template claims uniform 100 Mbps
+    let fleet = run_fleet(&rt, &cfg, &[JobRequest::new("j0", 0.0, train)]).unwrap();
+    let dp = fleet.jobs[0].report.dataplane.as_ref().expect("job ran a data plane");
+    assert!(dp.moved_bytes > 0, "the skew still forces migration");
+    assert!(
+        dp.replicas_created.iter().all(|&(_, _, to)| to != 3),
+        "hot shards must not be shipped through the thin Guangzhou links: {:?}",
+        dp.replicas_created
+    );
+}
+
+#[test]
+fn later_fleet_jobs_benefit_from_earlier_migrations() {
+    // Regression (ROADMAP data-plane defect): a shared-catalog fleet
+    // never let one job's migration benefit later jobs — admission read
+    // the admission-time snapshot. Now the coordinator re-reads the live
+    // replica map between arrivals: the second job, arriving after the
+    // first finished, plans against the already-created replicas and
+    // moves strictly fewer bytes.
+    let rt = rt();
+    let template = skewed_cfg(PlacementMode::Joint);
+    let mut cfg = FleetConfig::new(LeasePolicy::FairShare, four_cloud_env());
+    cfg.link_overrides = overrides();
+    cfg.catalog = Some(
+        DatasetCatalog::from_spec(&skewed_spec(), 512, 4, 256 * 1024, &[1; 4]).unwrap(),
+    );
+    let requests: Vec<JobRequest> = (0..2)
+        .map(|i| {
+            let mut train = template.clone();
+            train.seed = template.seed ^ ((i as u64 + 1) << 8);
+            // Job 1 arrives long after job 0's virtual completion.
+            JobRequest::new(&format!("job{i}"), i as f64 * 10_000.0, train)
+        })
+        .collect();
+    let fleet = run_fleet(&rt, &cfg, &requests).unwrap();
+    let d0 = fleet.jobs[0].report.dataplane.as_ref().unwrap();
+    let d1 = fleet.jobs[1].report.dataplane.as_ref().unwrap();
+    assert!(d0.moved_bytes > 0, "the first job pays for the copies");
+    assert!(
+        d1.moved_bytes < d0.moved_bytes,
+        "the second job must reuse job 0's replicas: {} vs {}",
+        d1.moved_bytes,
+        d0.moved_bytes
+    );
 }
 
 #[test]
