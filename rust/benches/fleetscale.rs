@@ -1,0 +1,12 @@
+//! Bench: fleet-scale simulation throughput — hundreds of synthetic jobs
+//! on a 16-region GPU fleet, reporting discrete events executed per wall
+//! second plus the per-worker vs cohort-aggregation equivalence leg (see
+//! docs/EXPERIMENTS.md). `--full` runs the 1000-job trace.
+mod common;
+
+fn main() {
+    common::banner("fleetscale");
+    let coord = common::coordinator();
+    cloudless::exp::fleetscale_exp::fleetscale(&coord, common::scale_from_args(), 0, 0)
+        .expect("fleetscale bench");
+}

@@ -27,6 +27,7 @@
 //!                 "mode": "joint",     // compute-follows-data | data-follows-compute | joint
 //!                 "sample_kb": 256, "rebalance": true},
 //!   "worker_cores": 3,
+//!   "cohort_threshold": 64,            // aggregate >64-worker pools into cohort waves (0 = off)
 //!   "link": {"bandwidth_mbps": 100, "latency_ms": 15,
 //!             "fluct_sigma": 0.25, "drop_prob": 0.0},
 //!   "regions": [                        // required, >= 1
@@ -103,6 +104,12 @@ pub fn parse_job(text: &str) -> Result<JobSpec> {
     }
     if j.get("skip_eval").as_bool() == Some(true) {
         train.skip_eval = true;
+    }
+    let cohort = j.get("cohort_threshold");
+    if !cohort.is_null() {
+        train.cohort_threshold = cohort.as_usize().ok_or_else(|| {
+            anyhow::anyhow!("\"cohort_threshold\" must be a non-negative integer (0 = off)")
+        })?;
     }
 
     let strategy_name = j.get("strategy").as_str().unwrap_or("asgd");
@@ -335,6 +342,22 @@ mod tests {
                 "regions":[{"device":"sky","units":1,"data":1}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn cohort_threshold_parses() {
+        let region = r#""regions":[{"name":"X","device":"sky","units":6,"data":100}]"#;
+        let spec =
+            parse_job(&format!(r#"{{"model":"lenet","cohort_threshold":64,{region}}}"#)).unwrap();
+        assert_eq!(spec.train.cohort_threshold, 64);
+        // Default: off — the exact per-worker simulation path.
+        let off = parse_job(&format!(r#"{{"model":"lenet",{region}}}"#)).unwrap();
+        assert_eq!(off.train.cohort_threshold, 0);
+        // Wrong JSON type errors rather than being silently ignored.
+        assert!(
+            parse_job(&format!(r#"{{"model":"lenet","cohort_threshold":"big",{region}}}"#))
+                .is_err()
+        );
     }
 
     #[test]

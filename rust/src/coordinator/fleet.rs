@@ -171,6 +171,14 @@ pub struct FleetConfig {
     pub seed: u64,
     /// Minimum per-region units an admitted job's lease must hold.
     pub min_units: u32,
+    /// Pick the next simulator to step through the fleet's merged-clock
+    /// *index* (a lazily-invalidated min-heap over per-job
+    /// `Sim::peek_time`s, O(log jobs) per event) instead of a linear scan
+    /// over every running job (O(jobs) per event). The two paths produce
+    /// byte-identical `FleetReport`s — the index reproduces the scan's
+    /// exact tie-breaking — so this stays configurable only as an
+    /// equivalence-test seam and an escape hatch.
+    pub indexed_clock: bool,
     /// Shared dataset catalog (the fleet's data plane): when present,
     /// every job's data split follows the catalog's *current* residency
     /// instead of the regions' `data_samples`, so concurrent jobs
@@ -194,6 +202,7 @@ impl FleetConfig {
             link_overrides: Vec::new(),
             seed: 42,
             min_units: 1,
+            indexed_clock: true,
             catalog: None,
         }
     }
@@ -297,12 +306,27 @@ pub struct FleetReport {
     /// Maximum simultaneously-leased units per region (inventory-safety
     /// witness: never exceeds the region's inventory).
     pub peak_units: Vec<u32>,
+    /// Discrete events executed across every job simulator (the merged
+    /// clock's step count) — the quantity the fleetscale perf trajectory
+    /// tracks. Deterministic under the seed, unlike `wall_seconds`.
+    pub events_executed: u64,
     pub wall_seconds: f64,
 }
 
 impl FleetReport {
     pub fn total_queue_wait(&self) -> Time {
         self.jobs.iter().map(|j| j.queue_wait).sum()
+    }
+
+    /// Simulation throughput: executed events per wall-clock second
+    /// (0 when the run was too fast to time). Derived, so tests that
+    /// need run-to-run byte-identical JSON can pin `wall_seconds`.
+    pub fn events_per_wall_second(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.events_executed as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -316,6 +340,8 @@ impl FleetReport {
             ("mean_slowdown", Json::num(self.mean_slowdown)),
             ("jain_fairness", Json::num(self.jain_fairness)),
             ("lease_events", Json::num(self.lease_events as f64)),
+            ("events_executed", Json::num(self.events_executed as f64)),
+            ("events_per_wall_second", Json::num(self.events_per_wall_second())),
             ("total_queue_wait_s", Json::num(self.total_queue_wait())),
             (
                 "peak_units",
@@ -344,7 +370,7 @@ impl FleetReport {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "{} jobs={} makespan={:.0}s slowdown={:.2} jain={:.3} cost=${:.4} leases={} queue={:.0}s",
+            "{} jobs={} makespan={:.0}s slowdown={:.2} jain={:.3} cost=${:.4} leases={} queue={:.0}s events={} ({:.0}/s)",
             self.policy,
             self.jobs.len(),
             self.makespan,
@@ -353,6 +379,8 @@ impl FleetReport {
             self.total_cost,
             self.lease_events,
             self.total_queue_wait(),
+            self.events_executed,
+            self.events_per_wall_second(),
         )
     }
 }
@@ -539,6 +567,18 @@ struct FleetState<'a> {
     /// `FleetConfig::catalog`, re-unioned with every job's delivered
     /// migrations at each coordination pass.
     live_catalog: Option<DatasetCatalog>,
+    /// [`DatasetCatalog::version`] the queued requests' data splits were
+    /// last computed against — when no merge changed residency since,
+    /// the coordination pass skips the re-split entirely.
+    split_version: u64,
+    /// The last admission's joint read assignment — the *incumbent* seed
+    /// for the next admission's hill-climb
+    /// ([`placement::plan_seeded`](crate::dataplane::placement::plan_seeded)).
+    /// Between admissions only the delta changes (one more lease, churned
+    /// links, merged replicas), so re-planning from the incumbent usually
+    /// converges in one round instead of `2·shards+4`. Stale geometry is
+    /// harmless: mismatched seeds are validated and ignored.
+    last_assign: Option<Vec<crate::net::RegionId>>,
 }
 
 impl<'a> FleetState<'a> {
@@ -562,20 +602,26 @@ impl<'a> FleetState<'a> {
     /// plan against the admission-time snapshot (ROADMAP data-plane
     /// defect). Already-admitted jobs keep their deployed splits.
     fn refresh_catalog(&mut self) {
-        {
+        let version = {
             let Some(live) = self.live_catalog.as_mut() else { return };
             for job in &self.running {
                 if let Some(dp) = job.world.dataplane.as_ref() {
                     live.merge_replicas(&dp.catalog);
                 }
             }
-        }
+            live.version()
+        };
         // Re-split the queued (not-yet-admitted) requests against the
-        // current residency every pass — merges from earlier passes must
-        // reach arrivals that were not queued yet when they happened.
-        if self.waiting.is_empty() {
+        // current residency — merges from earlier passes must reach
+        // arrivals that were not queued yet when they happened. Every
+        // request's initial split (computed up front in `run_fleet`) is
+        // valid for the seed catalog's version, so when no merge has
+        // changed residency since the last pass there is nothing to
+        // recompute and the pass skips the O(queue · matching) re-split.
+        if self.waiting.is_empty() || version == self.split_version {
             return;
         }
+        self.split_version = version;
         let fractions: Vec<usize> = self
             .live_catalog
             .as_ref()
@@ -676,12 +722,21 @@ impl<'a> FleetState<'a> {
                 let meta = self.rt.load_model(&train.model)?.meta;
                 let links =
                     self.fabric.with(|f| PlanInputs::link_view(f, jenv.regions.len()));
+                let seed = self.last_assign.as_deref();
                 let planned = match &self.live_catalog {
                     Some(cat) if cat.total_samples() == train.n_train => {
-                        dataplane::plan_for_catalog(&jenv, &train, &meta, cat.clone(), links)?
+                        dataplane::plan_for_catalog_seeded(
+                            &jenv,
+                            &train,
+                            &meta,
+                            cat.clone(),
+                            links,
+                            seed,
+                        )?
                     }
-                    _ => dataplane::plan_for_on(&jenv, &train, &meta, links)?,
+                    _ => dataplane::plan_for_on_seeded(&jenv, &train, &meta, links, seed)?,
                 };
+                self.last_assign = Some(planned.plan.assign.clone());
                 (planned.plan.allocations.clone(), Some(planned))
             } else {
                 (optimal_matching(&jenv).allocations, None)
@@ -728,6 +783,36 @@ impl<'a> FleetState<'a> {
     }
 }
 
+/// One entry of the fleet's merged-clock index: slot `slot`'s simulator
+/// reported `at` as its next-event time when the entry was pushed.
+/// Ordered earliest-first with lower slot winning time ties (exactly the
+/// linear scan's `min_by` order, inverted for `BinaryHeap`'s max-heap).
+/// Entries are lazily invalidated: a pushed entry is never updated in
+/// place — when the slot's peek moves (it was stepped) or the job
+/// finishes, the stale entry is discarded at pop time instead.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct ClockEntry {
+    at: Time,
+    slot: usize,
+}
+
+impl Eq for ClockEntry {}
+impl PartialOrd for ClockEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for ClockEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Event times are finite by construction (Sim asserts it).
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.slot.cmp(&self.slot))
+    }
+}
+
 /// Run a job fleet to completion and return the aggregate report.
 ///
 /// Deterministic under (`cfg.seed`, the request list): jobs interleave on
@@ -735,6 +820,13 @@ impl<'a> FleetState<'a> {
 /// event is earliest, arrivals first on ties, lower admission slot next —
 /// and share one WAN fabric, so their payloads queue behind each other on
 /// the same links.
+///
+/// The merge is indexed: a min-heap of [`ClockEntry`]s keyed per job
+/// picks the next simulator in O(log jobs) per event instead of scanning
+/// every running job. Only the just-stepped job's entry is refreshed per
+/// event; a coordination pass (which may resize any running job and
+/// deploy new ones) rebuilds the index wholesale. The linear scan is kept
+/// behind [`FleetConfig::indexed_clock`] as the equivalence baseline.
 pub fn run_fleet(
     rt: &PjrtRuntime,
     cfg: &FleetConfig,
@@ -804,11 +896,33 @@ pub fn run_fleet(
         lease_events: 0,
         peak_units: vec![0; n_regions],
         live_catalog: cfg.catalog.clone(),
+        split_version: cfg.catalog.as_ref().map_or(0, |c| c.version()),
+        last_assign: None,
     };
     let mut outcomes: Vec<Option<JobOutcome>> = vec![None; requests.len()];
     let mut arrived = 0usize;
     let mut executed: u64 = 0;
     const EVENT_LIMIT: u64 = 400_000_000;
+
+    // The merged-clock index. Invariant (indexed mode): every active slot
+    // with a pending event has at least one entry carrying its *current*
+    // peek time; anything else in the heap is stale and discarded lazily.
+    let indexed = cfg.indexed_clock;
+    let mut clock: std::collections::BinaryHeap<ClockEntry> = std::collections::BinaryHeap::new();
+    macro_rules! reindex_clock {
+        () => {
+            if indexed {
+                clock.clear();
+                for (i, j) in st.running.iter().enumerate() {
+                    if j.finish.is_none() {
+                        if let Some(t) = j.sim.peek_time() {
+                            clock.push(ClockEntry { at: t, slot: i });
+                        }
+                    }
+                }
+            }
+        };
+    }
 
     loop {
         let next_arrival: Option<Time> = if arrived < order.len() {
@@ -816,13 +930,27 @@ pub fn run_fleet(
         } else {
             None
         };
-        let next_event: Option<(usize, Time)> = st
-            .running
-            .iter()
-            .enumerate()
-            .filter(|(_, j)| j.finish.is_none())
-            .filter_map(|(i, j)| j.sim.peek_time().map(|t| (i, t)))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then_with(|| a.0.cmp(&b.0)));
+        let next_event: Option<(usize, Time)> = if indexed {
+            loop {
+                match clock.peek() {
+                    None => break None,
+                    Some(&ClockEntry { at, slot }) => {
+                        let j = &st.running[slot];
+                        if j.finish.is_none() && j.sim.peek_time() == Some(at) {
+                            break Some((slot, at));
+                        }
+                        clock.pop();
+                    }
+                }
+            }
+        } else {
+            st.running
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| j.finish.is_none())
+                .filter_map(|(i, j)| j.sim.peek_time().map(|t| (i, t)))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then_with(|| a.0.cmp(&b.0)))
+        };
         match (next_arrival, next_event) {
             (None, None) => break,
             (Some(ta), ev) if ev.map_or(true, |(_, te)| ta <= te) => {
@@ -833,6 +961,10 @@ pub fn run_fleet(
                     arrived += 1;
                 }
                 st.coordinate(ta)?;
+                // Coordination may have resized any running job (a lease
+                // event scheduled at `ta` moves its peek) and deployed new
+                // ones: rebuild the index rather than chase every slot.
+                reindex_clock!();
             }
             (_, Some((slot, _))) => {
                 executed += 1;
@@ -840,6 +972,9 @@ pub fn run_fleet(
                     executed < EVENT_LIMIT,
                     "fleet simulation exceeded event limit — runaway loop?"
                 );
+                if indexed {
+                    clock.pop(); // consume the entry; re-pushed fresh below
+                }
                 let finished_at: Option<Time> = {
                     let job = &mut st.running[slot];
                     job.sim.step(&mut job.world);
@@ -851,11 +986,22 @@ pub fn run_fleet(
                         _ => None,
                     }
                 };
-                if let Some(end) = finished_at {
-                    let (req, outcome) = st.finalize_job(slot, end);
-                    outcomes[req] = Some(outcome);
-                    // Freed capacity: re-divide and admit from the queue.
-                    st.coordinate(end)?;
+                match finished_at {
+                    Some(end) => {
+                        let (req, outcome) = st.finalize_job(slot, end);
+                        outcomes[req] = Some(outcome);
+                        // Freed capacity: re-divide and admit from queue.
+                        st.coordinate(end)?;
+                        reindex_clock!();
+                    }
+                    None => {
+                        // Only the stepped slot's peek moved.
+                        if indexed {
+                            if let Some(t) = st.running[slot].sim.peek_time() {
+                                clock.push(ClockEntry { at: t, slot });
+                            }
+                        }
+                    }
                 }
             }
             // A pending arrival with no runnable event always satisfies
@@ -896,6 +1042,7 @@ pub fn run_fleet(
         jain_fairness: jain_index(&rates),
         lease_events: st.lease_events,
         peak_units: st.peak_units,
+        events_executed: executed,
         wall_seconds: wall0.elapsed().as_secs_f64(),
         jobs,
     })
@@ -1076,6 +1223,19 @@ mod tests {
         let fr = cfg.data_fractions();
         assert!(fr[0] > fr[1], "jobs colocate with the hot region: {fr:?}");
         assert!(fr.iter().all(|&f| f >= 1), "zero-resident regions stay plannable");
+    }
+
+    #[test]
+    fn clock_entries_pop_earliest_time_then_lowest_slot() {
+        let mut heap = std::collections::BinaryHeap::new();
+        heap.push(ClockEntry { at: 2.0, slot: 0 });
+        heap.push(ClockEntry { at: 1.0, slot: 3 });
+        heap.push(ClockEntry { at: 1.0, slot: 1 });
+        heap.push(ClockEntry { at: 3.0, slot: 2 });
+        let order: Vec<(f64, usize)> =
+            std::iter::from_fn(|| heap.pop().map(|e| (e.at, e.slot))).collect();
+        // Exactly the linear scan's `min_by` order: time, then slot.
+        assert_eq!(order, vec![(1.0, 1), (1.0, 3), (2.0, 0), (3.0, 2)]);
     }
 
     #[test]

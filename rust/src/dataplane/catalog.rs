@@ -178,10 +178,23 @@ impl PlacementSpec {
 }
 
 /// The catalog: every shard of one dataset with its current replica set.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct DatasetCatalog {
     pub shards: Vec<ShardInfo>,
     pub n_regions: usize,
+    /// Residency version: bumped every time a replica is actually added
+    /// ([`DatasetCatalog::add_replica`] / [`DatasetCatalog::merge_replicas`]),
+    /// so callers holding derived state (the fleet's queued data splits)
+    /// can skip recomputing it when nothing moved. Not part of equality —
+    /// two catalogs with identical residency compare equal however they
+    /// got there.
+    version: u64,
+}
+
+impl PartialEq for DatasetCatalog {
+    fn eq(&self, other: &Self) -> bool {
+        self.shards == other.shards && self.n_regions == other.n_regions
+    }
 }
 
 /// Split `[0, n)` into `k` contiguous chunks whose sizes differ by at
@@ -311,7 +324,7 @@ impl DatasetCatalog {
                 }
             }
         }
-        Ok(DatasetCatalog { shards, n_regions })
+        Ok(DatasetCatalog { shards, n_regions, version: 0 })
     }
 
     /// Samples physically resident per region, counting every replica
@@ -352,12 +365,20 @@ impl DatasetCatalog {
         self.shards.get(shard_id).map_or(false, |s| s.has_replica(r))
     }
 
+    /// Current residency version (see the field doc). Monotone
+    /// non-decreasing; a changed version means residency changed, an
+    /// unchanged version means derived state is still valid.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
     /// Record a completed replica copy: the shard's bytes now *also*
     /// live in `to` (idempotent; the source copy is not released).
     pub fn add_replica(&mut self, shard_id: usize, to: RegionId) {
         if let Some(s) = self.shards.get_mut(shard_id) {
             if !s.replicas.contains(&to) {
                 s.replicas.push(to);
+                self.version += 1;
             }
         }
     }
@@ -386,6 +407,9 @@ impl DatasetCatalog {
                     changed = true;
                 }
             }
+        }
+        if changed {
+            self.version += 1;
         }
         changed
     }
@@ -587,6 +611,35 @@ mod tests {
         assert!(c.has_replica(0, 3) && c.has_replica(0, 0));
         assert_eq!(c.resident_samples(), vec![100, 100, 100, 200]);
         assert_eq!(c.total_bytes(), 4000, "logical bytes unchanged by replication");
+    }
+
+    #[test]
+    fn version_bumps_only_when_residency_changes() {
+        let spec = PlacementSpec::new(Layout::Uniform { shards: 4 });
+        let mut c = DatasetCatalog::from_spec(&spec, 400, 4, 10, &[1; 4]).unwrap();
+        assert_eq!(c.version(), 0);
+        c.add_replica(0, 3);
+        let v1 = c.version();
+        assert!(v1 > 0, "a new copy bumps the version");
+        c.add_replica(0, 3); // idempotent re-add
+        assert_eq!(c.version(), v1, "no residency change, no bump");
+        let mut job = c.clone();
+        job.add_replica(1, 2);
+        assert!(c.merge_replicas(&job));
+        let v2 = c.version();
+        assert!(v2 > v1);
+        assert!(!c.merge_replicas(&job), "already merged");
+        assert_eq!(c.version(), v2);
+        // Version is bookkeeping, not identity: the same residency
+        // reached through two adds (two bumps) or one merge (one bump)
+        // still compares equal.
+        let mut adds = c.clone();
+        adds.add_replica(2, 0);
+        adds.add_replica(2, 1);
+        let mut merged = c.clone();
+        assert!(merged.merge_replicas(&adds));
+        assert_eq!(merged, adds);
+        assert_ne!(merged.version(), adds.version());
     }
 
     #[test]

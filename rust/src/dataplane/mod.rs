@@ -45,8 +45,8 @@ pub mod placement;
 
 pub use catalog::{sample_bytes, DatasetCatalog, Layout, PlacementSpec, ShardInfo};
 pub use placement::{
-    plan_for, plan_for_catalog, plan_for_on, PlacementMode, PlacementPlan, PlannedDataPlane,
-    ShardMove,
+    plan_for, plan_for_catalog, plan_for_catalog_seeded, plan_for_on, plan_for_on_seeded,
+    PlacementMode, PlacementPlan, PlannedDataPlane, ShardMove,
 };
 
 use crate::sim::Time;

@@ -455,20 +455,52 @@ fn moves_from(inputs: &PlanInputs, assign: &[RegionId]) -> Vec<ShardMove> {
 
 /// Run the placement planner in `mode` over the catalog.
 pub fn plan(inputs: &PlanInputs, mode: PlacementMode) -> PlacementPlan {
+    plan_seeded(inputs, mode, None)
+}
+
+/// [`plan`] seeded with an *incumbent* assignment — the previous plan
+/// over the same shard geometry (fleet admission passes the last
+/// admission's joint assignment; only the delta — the new job's lease,
+/// churn-mutated links, merged replicas — has changed). The joint climb
+/// starts from the best of {incumbent, compute-follows-data,
+/// data-follows-compute} and early-outs on the first round that commits
+/// no improving move, so a near-converged incumbent costs one scan
+/// instead of the from-scratch `2·shards+4` rounds. The hill-climb only
+/// ever lowers the objective, so the incremental estimate is never worse
+/// than either pure mode — the same invariant the from-scratch joint
+/// plan guarantees. An incumbent whose geometry does not match (wrong
+/// shard count, out-of-range region) is ignored. Pure modes ignore the
+/// seed entirely.
+pub fn plan_seeded(
+    inputs: &PlanInputs,
+    mode: PlacementMode,
+    incumbent: Option<&[RegionId]>,
+) -> PlacementPlan {
+    let n = inputs.env.regions.len();
+    let shards = inputs.catalog.shards.len();
+    let incumbent = incumbent
+        .filter(|a| a.len() == shards && a.iter().all(|&r| r < n));
     let assign = match mode {
         PlacementMode::ComputeFollowsData => compute_follows_data_assign(inputs),
         PlacementMode::DataFollowsCompute => data_follows_compute_assign(inputs),
         PlacementMode::Joint => {
-            // Start from the better pure assignment, then climb: the
-            // joint objective can never be worse than either pure mode's.
+            // Start from the best seed available, then climb: the joint
+            // objective can never be worse than either pure mode's (and
+            // never worse than the incumbent re-costed on today's state).
             let cfd = compute_follows_data_assign(inputs);
             let dfc = data_follows_compute_assign(inputs);
-            let mut assign =
-                if evaluate(inputs, &dfc).objective < evaluate(inputs, &cfd).objective {
-                    dfc
-                } else {
-                    cfd
-                };
+            let mut assign = if evaluate(inputs, &dfc).objective
+                < evaluate(inputs, &cfd).objective
+            {
+                dfc
+            } else {
+                cfd
+            };
+            if let Some(inc) = incumbent {
+                if evaluate(inputs, inc).objective < evaluate(inputs, &assign).objective {
+                    assign = inc.to_vec();
+                }
+            }
             improve(inputs, &mut assign, 0.0, None);
             assign
         }
@@ -555,6 +587,20 @@ pub fn plan_for_on(
     meta: &crate::runtime::ModelMeta,
     links: Vec<Vec<Option<LinkSpec>>>,
 ) -> anyhow::Result<PlannedDataPlane> {
+    plan_for_on_seeded(env, cfg, meta, links, None)
+}
+
+/// [`plan_for_on`] seeded with an incumbent assignment (see
+/// [`plan_seeded`]); fleet admission passes its cached last joint
+/// assignment so back-to-back admissions over stable geometry converge
+/// in one climb round instead of re-running the full search.
+pub fn plan_for_on_seeded(
+    env: &CloudEnv,
+    cfg: &crate::engine::driver::TrainConfig,
+    meta: &crate::runtime::ModelMeta,
+    links: Vec<Vec<Option<LinkSpec>>>,
+    incumbent: Option<&[RegionId]>,
+) -> anyhow::Result<PlannedDataPlane> {
     let spec = cfg
         .dataplane
         .placement
@@ -574,7 +620,7 @@ pub fn plan_for_on(
         &region_samples,
     )
     .map_err(|e| anyhow::anyhow!(e))?;
-    plan_for_catalog(env, cfg, meta, catalog, links)
+    plan_for_catalog_seeded(env, cfg, meta, catalog, links, incumbent)
 }
 
 /// Plan over an *existing* catalog (the fleet's live shared catalog,
@@ -587,6 +633,19 @@ pub fn plan_for_catalog(
     meta: &crate::runtime::ModelMeta,
     catalog: DatasetCatalog,
     links: Vec<Vec<Option<LinkSpec>>>,
+) -> anyhow::Result<PlannedDataPlane> {
+    plan_for_catalog_seeded(env, cfg, meta, catalog, links, None)
+}
+
+/// [`plan_for_catalog`] seeded with an incumbent assignment (see
+/// [`plan_seeded`]).
+pub fn plan_for_catalog_seeded(
+    env: &CloudEnv,
+    cfg: &crate::engine::driver::TrainConfig,
+    meta: &crate::runtime::ModelMeta,
+    catalog: DatasetCatalog,
+    links: Vec<Vec<Option<LinkSpec>>>,
+    incumbent: Option<&[RegionId]>,
 ) -> anyhow::Result<PlannedDataPlane> {
     anyhow::ensure!(
         catalog.n_regions == env.regions.len(),
@@ -622,7 +681,7 @@ pub fn plan_for_catalog(
         scale: vec![1.0; env.regions.len()],
         time_value_per_hour: time_value,
     };
-    let plan = self::plan(&inputs, cfg.dataplane.mode);
+    let plan = plan_seeded(&inputs, cfg.dataplane.mode, incumbent);
     Ok(PlannedDataPlane { catalog, plan })
 }
 
@@ -844,6 +903,70 @@ mod tests {
         cat2.shards[0].replicas = vec![0, 3];
         let inp2 = inputs(&env, &cat2);
         assert_eq!(best_source(&inp2, &cat2.shards[0], 1), 0, "cheaper egress breaks the tie");
+    }
+
+    #[test]
+    fn seeded_joint_never_worse_than_pure_modes_for_any_incumbent() {
+        let env = four_cloud_env();
+        for cat in [skewed_catalog(), replicated_catalog()] {
+            let inp = inputs(&env, &cat);
+            let cfd = plan(&inp, PlacementMode::ComputeFollowsData);
+            let dfc = plan(&inp, PlacementMode::DataFollowsCompute);
+            let shards = cat.shards.len();
+            // Adversarial incumbents: all-in-one-region, round-robin, a
+            // deterministic pseudo-random scatter, and both pure assigns.
+            let mut seeds: Vec<Vec<RegionId>> = vec![
+                vec![0; shards],
+                vec![3; shards],
+                (0..shards).map(|s| s % 4).collect(),
+                (0..shards).map(|s| (s * 2654435761) % 4).collect(),
+                cfd.assign.clone(),
+                dfc.assign.clone(),
+            ];
+            // Geometry mismatches must be ignored, not panic or skew.
+            seeds.push(vec![0; shards + 1]);
+            seeds.push(vec![99; shards]);
+            for inc in &seeds {
+                let seeded = plan_seeded(&inp, PlacementMode::Joint, Some(inc));
+                assert!(
+                    seeded.est_objective <= cfd.est_objective + 1e-9,
+                    "seeded {} vs cfd {}",
+                    seeded.est_objective,
+                    cfd.est_objective
+                );
+                assert!(
+                    seeded.est_objective <= dfc.est_objective + 1e-9,
+                    "seeded {} vs dfc {}",
+                    seeded.est_objective,
+                    dfc.est_objective
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn seeding_with_the_joint_optimum_is_a_fixed_point() {
+        // Re-planning from a converged incumbent must reproduce the plan
+        // exactly (the climb's first round finds no improving move) — the
+        // property fleet admission relies on for cheap steady-state
+        // re-planning.
+        let env = four_cloud_env();
+        for cat in [skewed_catalog(), replicated_catalog()] {
+            let inp = inputs(&env, &cat);
+            let scratch = plan(&inp, PlacementMode::Joint);
+            let seeded = plan_seeded(&inp, PlacementMode::Joint, Some(&scratch.assign));
+            assert_eq!(seeded.assign, scratch.assign, "converged seed must be a fixed point");
+            assert_eq!(seeded.est_objective, scratch.est_objective);
+            assert_eq!(seeded.moves, scratch.moves);
+        }
+        // Pure modes ignore the seed entirely.
+        let cat = skewed_catalog();
+        let inp = inputs(&env, &cat);
+        for mode in [PlacementMode::ComputeFollowsData, PlacementMode::DataFollowsCompute] {
+            let plain = plan(&inp, mode);
+            let seeded = plan_seeded(&inp, mode, Some(&vec![0; cat.shards.len()]));
+            assert_eq!(plain.assign, seeded.assign, "{mode:?} must ignore the incumbent");
+        }
     }
 
     #[test]

@@ -74,9 +74,9 @@ pub(crate) fn unblock_comm(sim: &mut Sim<World>, w: &mut World, p: usize) {
     if w.cfg.sync.should_sync(&w.parts[p].ps) {
         perform_send(sim, w, p);
     }
-    // Restart idle workers.
-    let idle = w.parts[p].idle_workers();
-    for _ in 0..idle {
+    // Restart idle workers (one call per cohort wave).
+    let waves = w.parts[p].idle_workers().div_ceil(w.parts[p].cohort.max(1));
+    for _ in 0..waves {
         driver::start_worker_iteration(sim, w, p);
     }
     if w.parts[p].local_done() && w.parts[p].in_flight == 0 {

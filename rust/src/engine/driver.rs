@@ -112,6 +112,17 @@ pub struct TrainConfig {
     /// (off by default — data stays resident where the `regions` config
     /// put it, the seed behavior).
     pub dataplane: DataPlaneConfig,
+    /// Worker-cohort aggregation threshold: a partition whose pool
+    /// exceeds this many workers is simulated as ~threshold weighted
+    /// cohort waves — each scheduled event carrying
+    /// `ceil(workers/threshold)` iterations of step/billing/monitor
+    /// accounting ([`super::partition::cohort_size`]) — instead of one
+    /// event per worker iteration. 0 (the default) = off: the exact
+    /// per-worker path. Aggregation keeps step/epoch/billing totals
+    /// within tolerance but coarsens sync and batch granularity to the
+    /// wave, so it is opt-in (fleet-scale runs set it; see
+    /// docs/CONFIG.md).
+    pub cohort_threshold: usize,
 }
 
 impl TrainConfig {
@@ -136,6 +147,7 @@ impl TrainConfig {
             elastic: ElasticConfig::default(),
             churn: Vec::new(),
             dataplane: DataPlaneConfig::default(),
+            cohort_threshold: 0,
         }
     }
 }
@@ -452,6 +464,7 @@ pub(crate) fn deploy_job_planned(
             epochs_done: 0,
             gate: Gate::Running,
             in_flight: 0,
+            cohort: super::partition::cohort_size(workers, cfg.cohort_threshold),
             slot: SendSlot::default(),
             local_finish: None,
             barrier_arrived: false,
@@ -533,7 +546,9 @@ pub(crate) fn deploy_job_planned(
 
     // Kick off every worker loop at training start; a partition with no
     // planned steps (a data-less region the placement planner emptied)
-    // finishes immediately instead.
+    // finishes immediately instead. Under cohort aggregation one kick
+    // fills a whole wave, so `ceil(workers/cohort)` kicks saturate the
+    // pool (identical to one kick per worker when the cohort is 1).
     for p in 0..n_parts {
         if world.parts[p].steps_total == 0 {
             sim.schedule_at(startup_done, move |sim, w: &mut World| {
@@ -541,8 +556,9 @@ pub(crate) fn deploy_job_planned(
             });
             continue;
         }
-        let workers = world.parts[p].workers;
-        for _ in 0..workers {
+        let part = &world.parts[p];
+        let waves = part.workers.div_ceil(part.cohort.max(1));
+        for _ in 0..waves {
             sim.schedule_at(startup_done, move |sim, w: &mut World| {
                 start_worker_iteration(sim, w, p);
             });
@@ -678,6 +694,13 @@ pub(crate) fn finalize_report(
 
 // ---------------------------------------------------------------- events
 
+/// Start the next worker event on partition `p` — one iteration on the
+/// per-worker path, or one *cohort wave* of `wave_size()` iterations
+/// under aggregation (`TrainConfig::cohort_threshold`). A wave occupies
+/// `wave` pool slots, consumes one batch + one jitter draw + one PS
+/// pull, and finishes as one event carrying the whole wave's accounting;
+/// with a cohort of 1 every quantity degenerates to exactly the historic
+/// per-worker behavior (same RNG stream, same event count).
 pub(crate) fn start_worker_iteration(sim: &mut Sim<World>, w: &mut World, p: usize) {
     let b = w.model.meta.batch_size;
     let now = sim.now();
@@ -693,8 +716,12 @@ pub(crate) fn start_worker_iteration(sim: &mut Sim<World>, w: &mut World, p: usi
         part.data_blocked_since = now;
         return;
     }
-    part.steps_started += 1;
-    part.in_flight += 1;
+    let wave = part.wave_size();
+    if wave == 0 {
+        return; // pool saturated (ragged waves self-heal at finishes)
+    }
+    part.steps_started += wave as u64;
+    part.in_flight += wave;
     let (snapshot, version) = part.ps.pull();
     let batch = part.shard.next_batch(b);
     // Deterministic ±25% iteration jitter: serverless pods see real
@@ -704,7 +731,7 @@ pub(crate) fn start_worker_iteration(sim: &mut Sim<World>, w: &mut World, p: usi
     let jitter = 0.75 + 0.5 * part.rng.f64();
     let t_iter = part.t_iter * jitter / part.power_factor;
     sim.schedule(t_iter, move |sim, w: &mut World| {
-        finish_worker_iteration(sim, w, p, snapshot, version, batch, t_iter);
+        finish_worker_iteration(sim, w, p, snapshot, version, batch, t_iter, wave);
     });
 }
 
@@ -717,33 +744,44 @@ fn finish_worker_iteration(
     version: u64,
     batch: Vec<usize>,
     iter_s: f64,
+    wave: usize,
 ) {
-    // Real compute: gradient of the model at the pulled snapshot.
+    // Real compute: gradient of the model at the pulled snapshot — once
+    // per event; a cohort wave's single gradient stands for all `wave`
+    // iterations (applied weighted below).
     let (x, y) = w.train_ds.batch(&batch, &w.model.meta);
     let (grads, _loss) = w
         .model
         .train_step(&snapshot, &x, &y)
         .expect("PJRT train_step failed mid-simulation");
-    // Step + epoch bookkeeping; the modeled completion time feeds the
-    // monitor's per-iteration window (fine-grained even under barriers).
-    let crossed_epoch = {
+    // Step + epoch bookkeeping for every iteration the wave carried; the
+    // modeled completion times feed the monitor's per-iteration window
+    // (fine-grained even under barriers). One event may close several
+    // epochs under aggregation — each crossing is handled in order.
+    let mut crossings: Vec<usize> = Vec::new();
+    {
         let part = &mut w.parts[p];
-        part.in_flight -= 1;
-        part.note_iteration_time(iter_s);
-        part.ps.push_gradient(&grads, version);
-        part.note_step_completed()
-    };
-    if crossed_epoch && p == 0 && !w.cfg.skip_eval {
-        let every = w.cfg.eval_every.max(1);
-        if w.parts[0].epochs_done % every == 0 {
-            let (loss, acc) = evaluate(w, 0);
-            let epoch = w.parts[0].epochs_done;
-            w.curve.push(EvalPoint { t: sim.now(), epoch, loss, accuracy: acc });
+        part.in_flight -= wave;
+        part.note_iteration_times(iter_s, wave as u64);
+        part.ps.push_gradient_weighted(&grads, version, wave as u32);
+        for _ in 0..wave {
+            if part.note_step_completed() {
+                crossings.push(part.epochs_done);
+            }
         }
     }
-    if crossed_epoch && p == 0 {
-        if let Some(dir) = w.cfg.checkpoint_dir.clone() {
-            checkpoint_all(w, &dir);
+    for epoch in crossings {
+        if p == 0 && !w.cfg.skip_eval {
+            let every = w.cfg.eval_every.max(1);
+            if epoch % every == 0 {
+                let (loss, acc) = evaluate(w, 0);
+                w.curve.push(EvalPoint { t: sim.now(), epoch, loss, accuracy: acc });
+            }
+        }
+        if p == 0 {
+            if let Some(dir) = w.cfg.checkpoint_dir.clone() {
+                checkpoint_all(w, &dir);
+            }
         }
     }
 
@@ -830,8 +868,8 @@ fn resume_from_barrier(sim: &mut Sim<World>, w: &mut World, p: usize) {
         }
         return;
     }
-    let idle = w.parts[p].idle_workers();
-    for _ in 0..idle {
+    let waves = w.parts[p].idle_workers().div_ceil(w.parts[p].cohort.max(1));
+    for _ in 0..waves {
         start_worker_iteration(sim, w, p);
     }
 }
@@ -1163,6 +1201,7 @@ pub(crate) fn resize_to_allocations(
         let part = &mut w.parts[p];
         part.worker_replicas = live;
         part.workers = workers;
+        part.cohort = super::partition::cohort_size(workers, w.cfg.cohort_threshold);
         let w_power = calib::worker_power(new_alloc.power(), workers);
         part.t_iter = calib::iter_time(w.base_step, w_power);
         part.alloc = new_alloc;
@@ -1224,8 +1263,8 @@ pub(crate) fn kick_idle_workers(sim: &mut Sim<World>, w: &mut World, p: usize) {
     if w.parts[p].gate != Gate::Running || w.parts[p].local_done() {
         return;
     }
-    let idle = w.parts[p].idle_workers();
-    for _ in 0..idle {
+    let waves = w.parts[p].idle_workers().div_ceil(w.parts[p].cohort.max(1));
+    for _ in 0..waves {
         start_worker_iteration(sim, w, p);
     }
 }

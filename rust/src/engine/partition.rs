@@ -18,6 +18,20 @@ use crate::util::rng::Pcg32;
 
 use super::comm::SendSlot;
 
+/// How many worker iterations one scheduled event carries for a pool of
+/// `workers` functions: 1 (today's exact per-worker path) until the pool
+/// exceeds `threshold`, then `ceil(workers / threshold)` — so at most
+/// ~`threshold` wave events are ever in flight per partition however
+/// large the serverless pool grows. `threshold == 0` disables
+/// aggregation entirely.
+pub fn cohort_size(workers: usize, threshold: usize) -> usize {
+    if threshold == 0 || workers <= threshold {
+        1
+    } else {
+        workers.div_ceil(threshold)
+    }
+}
+
 /// What a partition's worker pool is currently allowed to do.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Gate {
@@ -66,6 +80,11 @@ pub struct Partition {
     pub gate: Gate,
     /// Worker iterations currently in flight.
     pub in_flight: usize,
+    /// Iterations each scheduled worker event aggregates (a *cohort
+    /// wave*): 1 = the exact per-worker path; >1 simulates the pool as
+    /// ~threshold weighted waves ([`cohort_size`]). Recomputed from the
+    /// live pool size on every elastic resize.
+    pub cohort: usize,
     /// The PS communicator's send slot (backpressure state).
     pub slot: SendSlot,
     /// Accumulated on-the-wire serialization seconds of this partition's
@@ -107,6 +126,22 @@ impl Partition {
     /// briefly exceed the pool while the extra ones drain.
     pub fn idle_workers(&self) -> usize {
         self.workers.saturating_sub(self.in_flight)
+    }
+
+    /// Iterations the next wave event should carry: the cohort size
+    /// clamped to idle pool slots and the remaining step budget. 0 means
+    /// nothing to start (pool saturated or budget exhausted).
+    pub fn wave_size(&self) -> usize {
+        let remaining = self.steps_total.saturating_sub(self.steps_started);
+        self.cohort.max(1).min(self.idle_workers()).min(remaining.min(usize::MAX as u64) as usize)
+    }
+
+    /// Record `n` iterations' modeled completion times in the monitoring
+    /// window (each of duration `seconds` — one cohort wave). `n == 1`
+    /// is [`Partition::note_iteration_time`] exactly.
+    pub fn note_iteration_times(&mut self, seconds: f64, n: u64) {
+        self.win_iter_sum += seconds * n as f64;
+        self.win_iter_count += n;
     }
 
     /// Account one completed step's epoch bookkeeping; returns true when
@@ -191,6 +226,7 @@ mod tests {
             epochs_done: 0,
             gate: Gate::Running,
             in_flight: 0,
+            cohort: 1,
             slot: SendSlot::default(),
             wire_time: 0.0,
             local_finish: None,
@@ -240,6 +276,53 @@ mod tests {
         }
         assert!(p.note_step_completed());
         assert_eq!(p.epochs_done, 2);
+    }
+
+    #[test]
+    fn cohort_size_thresholds() {
+        // Off, or pool within threshold: the exact per-worker path.
+        assert_eq!(cohort_size(1_000_000, 0), 1);
+        assert_eq!(cohort_size(64, 64), 1);
+        assert_eq!(cohort_size(4, 64), 1);
+        // Above threshold: ~threshold waves in flight, ragged tail up.
+        assert_eq!(cohort_size(640, 64), 10);
+        assert_eq!(cohort_size(650, 64), 11);
+        assert_eq!(cohort_size(1_000_000, 64), 15_625);
+    }
+
+    #[test]
+    fn wave_size_clamps_to_idle_and_budget() {
+        let mut p = part();
+        p.workers = 640;
+        p.cohort = 10;
+        assert_eq!(p.wave_size(), 8, "budget-limited: only 8 steps planned");
+        p.steps_total = 10_000;
+        assert_eq!(p.wave_size(), 10, "full wave");
+        p.in_flight = 635;
+        assert_eq!(p.wave_size(), 5, "pool-limited to the idle slots");
+        p.in_flight = 640;
+        assert_eq!(p.wave_size(), 0, "saturated pool starts nothing");
+        p.in_flight = 0;
+        p.steps_started = 10_000;
+        assert_eq!(p.wave_size(), 0, "exhausted budget starts nothing");
+    }
+
+    #[test]
+    fn weighted_iteration_times_match_singles() {
+        let mut a = part();
+        let mut b = part();
+        for _ in 0..5 {
+            a.note_iteration_time(0.3);
+        }
+        b.note_iteration_times(0.3, 5);
+        assert_eq!(a.win_iter_count, b.win_iter_count);
+        assert!((a.win_iter_sum - b.win_iter_sum).abs() < 1e-12);
+        // n == 1 is bitwise the single-iteration record.
+        let mut c = part();
+        let mut d = part();
+        c.note_iteration_time(0.7);
+        d.note_iteration_times(0.7, 1);
+        assert_eq!(c.win_iter_sum.to_bits(), d.win_iter_sum.to_bits());
     }
 
     #[test]

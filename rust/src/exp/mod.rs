@@ -23,14 +23,19 @@
 //! fluctuation (module `elastic_exp`; `scheduling` aliases `table4`);
 //! `multijob` runs a Poisson trace of concurrent jobs over one
 //! shared inventory, comparing FIFO vs fair-share vs cost-aware leasing
-//! (module `multijob_exp`); and `dataplane` compares the three
+//! (module `multijob_exp`); `dataplane` compares the three
 //! data/compute placement modes — plus a replica-seeded `joint:r2` run —
-//! on a 70%-skewed dataset catalog (module `dataplane_exp`). The full
-//! id → figure/config/bench mapping lives in docs/EXPERIMENTS.md.
+//! on a 70%-skewed dataset catalog (module `dataplane_exp`); and
+//! `fleetscale` benchmarks the simulator itself — hundreds of jobs on a
+//! 16-region GPU fleet, reporting events executed/second and the
+//! per-worker vs cohort-aggregation equivalence (module
+//! `fleetscale_exp`). The full id → figure/config/bench mapping lives
+//! in docs/EXPERIMENTS.md.
 
 pub mod ablations;
 pub mod dataplane_exp;
 pub mod elastic_exp;
+pub mod fleetscale_exp;
 pub mod motivation;
 pub mod multijob_exp;
 pub mod scheduling;

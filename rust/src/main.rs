@@ -44,7 +44,7 @@ USAGE:
                     [--bw-threshold x]
                     [--data-placement spec] [--placement-mode m] [--sample-kb n]
   cloudless plan    [--config f]
-  cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|multijob|dataplane|ablations|compression|all> [--full] [--model m]
+  cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|multijob|dataplane|fleetscale|ablations|compression|all> [--full] [--model m]
   cloudless devices
   cloudless check
 
@@ -65,6 +65,10 @@ USAGE:
   exp --id multijob: [--config f (multijob block)] [--jobs n]
   [--mean-interarrival s] [--policy fifo|fair-share|cost-aware|all]
   runs concurrent jobs over one shared inventory (docs/EXPERIMENTS.md).
+  --cohort-threshold n simulates worker pools larger than n as weighted
+  cohort waves (0 = off, the exact per-worker path; docs/CONFIG.md).
+  exp --id fleetscale: [--jobs n] [--regions n] synthetic fleet-scale
+  throughput benchmark (quick: 200 jobs/16 regions; --full: 1000 jobs).
   The model name \"synthetic\" runs the built-in artifact-free model.
   Full flag/key reference: docs/CONFIG.md.
 ";
@@ -130,6 +134,7 @@ fn job_from_args(args: &Args) -> anyhow::Result<JobSpec> {
     let sample_kb = args.f64("sample-kb", spec.train.dataplane.sample_bytes as f64 / 1024.0);
     anyhow::ensure!(sample_kb >= 0.0, "--sample-kb must be >= 0");
     spec.train.dataplane.sample_bytes = (sample_kb * 1024.0) as u64;
+    spec.train.cohort_threshold = args.usize("cohort-threshold", spec.train.cohort_threshold);
     Ok(spec)
 }
 
@@ -243,6 +248,11 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
                     &exp_model,
                     args.get("data-placement"),
                 );
+            }
+            "fleetscale" => {
+                let jobs = args.usize("jobs", 0);
+                let regions = args.usize("regions", 0);
+                exp::fleetscale_exp::fleetscale(coord, scale, jobs, regions)?;
             }
             "ablations" => exp::ablations::all(coord, scale),
             "compression" => {

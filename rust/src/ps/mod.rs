@@ -82,6 +82,34 @@ impl PsState {
         self.version += 1;
     }
 
+    /// Worker-cohort push: what `n` sequential [`PsState::push_gradient`]
+    /// calls of the same gradient/pulled-version would do, in one O(|g|)
+    /// application (SGD is linear, so `n` applications of `g` equal one
+    /// application of `n·g`; the staleness sum models the `n` sequential
+    /// version bumps exactly). The engine's cohort waves (see
+    /// `engine::partition::cohort_size`) push one representative gradient
+    /// per wave weighted by the wave's iteration count. `n == 1` is
+    /// byte-identical to `push_gradient`.
+    pub fn push_gradient_weighted(&mut self, grad: &[f32], pulled_version: u64, n: u32) {
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            return self.push_gradient(grad, pulled_version);
+        }
+        let scaled: Vec<f32> = grad.iter().map(|g| g * n as f32).collect();
+        vecops::sgd_apply_inplace(&mut self.params, &scaled, self.lr);
+        vecops::accumulate_inplace(&mut self.accum, &scaled);
+        self.accum_steps += n;
+        self.updates_since_sync += n;
+        self.total_updates += n as u64;
+        // Push i of the modeled sequence sees i extra version bumps.
+        let n64 = n as u64;
+        self.staleness_sum += (self.version - pulled_version) * n64 + n64 * (n64 - 1) / 2;
+        self.staleness_n += n64;
+        self.version += n64;
+    }
+
     /// Take the accumulated gradient for a WAN send, resetting it.
     pub fn take_accumulated(&mut self) -> (Vec<f32>, u32) {
         let steps = self.accum_steps;
@@ -175,6 +203,39 @@ mod tests {
         s.push_gradient(&[0.0; 3], 0); // pulled at 0, version now 1 -> staleness 1
         s.push_gradient(&[0.0; 3], 1); // staleness 1
         assert!((s.mean_staleness() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_push_matches_sequential_pushes() {
+        // Powers of two keep f32 arithmetic exact, so the equality is
+        // bitwise, not approximate.
+        let grad = [0.5f32, -0.25, 1.0];
+        let mut seq = PsState::new(vec![1.0, 2.0, 3.0], 0.125);
+        let mut agg = seq.clone();
+        seq.push_gradient(&grad, 0);
+        seq.push_gradient(&grad, 0);
+        seq.push_gradient(&grad, 0);
+        seq.push_gradient(&grad, 0);
+        agg.push_gradient_weighted(&grad, 0, 4);
+        assert_eq!(seq.params, agg.params);
+        assert_eq!(seq.accum, agg.accum);
+        assert_eq!(seq.accum_steps, agg.accum_steps);
+        assert_eq!(seq.updates_since_sync, agg.updates_since_sync);
+        assert_eq!(seq.total_updates, agg.total_updates);
+        assert_eq!(seq.version, agg.version);
+        assert_eq!(seq.staleness_sum, agg.staleness_sum);
+        assert_eq!(seq.staleness_n, agg.staleness_n);
+
+        // n == 1 delegates; n == 0 is a no-op.
+        let mut one = PsState::new(vec![1.0, 2.0, 3.0], 0.125);
+        let mut direct = one.clone();
+        one.push_gradient_weighted(&grad, 0, 1);
+        direct.push_gradient(&grad, 0);
+        assert_eq!(one.params, direct.params);
+        assert_eq!(one.version, direct.version);
+        let before = one.version;
+        one.push_gradient_weighted(&grad, 0, 0);
+        assert_eq!(one.version, before);
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Fleet-scale performance equivalence suite (the ISSUE-6 acceptance
+//! cases): the simulator's three asymptotic optimizations — the indexed
+//! merged clock, worker-cohort aggregation, and incremental admission
+//! planning — must be *accounting-preserving*, not just fast. Driven by
+//! the built-in synthetic model, so this suite runs everywhere tier-1
+//! runs.
+//!
+//! - The indexed clock is byte-identical to the linear scan it replaced
+//!   (same `FleetReport` JSON on a multi-job Poisson trace).
+//! - Cohort size 1 (threshold 0, or pools under the threshold) is the
+//!   per-worker path, byte for byte.
+//! - Real cohorts (>1) preserve step totals exactly and time/billing
+//!   within 1%, at a >=10x PJRT-execution reduction.
+//! - Incremental admission planning seeded from *any* incumbent is never
+//!   worse than either pure placement mode, and the joint optimum is a
+//!   fixed point of seeding.
+
+use cloudless::cloud::devices::Device;
+use cloudless::cloud::CloudEnv;
+use cloudless::coordinator::fleet::{
+    poisson_arrivals, run_fleet, solo_estimate_s, FleetConfig, FleetReport, JobRequest,
+    LeasePolicy,
+};
+use cloudless::dataplane::{self, DataPlaneConfig, Layout, PlacementMode, PlacementSpec};
+use cloudless::net::LinkSpec;
+use cloudless::runtime::PjrtRuntime;
+use cloudless::sync::{Strategy, SyncConfig};
+use cloudless::train::{run_geo_training, TrainConfig, TrainReport};
+
+fn rt() -> PjrtRuntime {
+    // The synthetic model never touches the artifacts directory.
+    PjrtRuntime::new("artifacts-not-needed").expect("PJRT CPU client")
+}
+
+fn four_cloud_env() -> CloudEnv {
+    CloudEnv::multi_region(vec![
+        ("Shanghai", Device::CascadeLake, 12, 128),
+        ("Chongqing", Device::Skylake, 12, 128),
+        ("Beijing", Device::Skylake, 12, 128),
+        ("Guangzhou", Device::IceLake, 12, 128),
+    ])
+}
+
+/// A 4-region GPU env: one PS worker per unit, so pools are 64 wide and
+/// cohort aggregation actually engages (CPU pools clamp at 8 workers).
+fn gpu_env(n_train: usize) -> CloudEnv {
+    let per = n_train / 4;
+    CloudEnv::multi_region(vec![
+        ("gpu0", Device::T4, 64, per),
+        ("gpu1", Device::V100, 64, per),
+        ("gpu2", Device::T4, 64, per),
+        ("gpu3", Device::V100, 64, n_train - 3 * per),
+    ])
+}
+
+fn job_template() -> TrainConfig {
+    let mut cfg = TrainConfig::new("synthetic");
+    cfg.epochs = 6;
+    cfg.n_train = 512;
+    cfg.n_eval = 64;
+    cfg.sync = SyncConfig::new(Strategy::AsgdGa, 8);
+    cfg.skip_eval = true;
+    cfg.seed = 17;
+    cfg
+}
+
+/// Four jobs on a Poisson trace dense enough that they overlap, so the
+/// merged clock actually interleaves simulators.
+fn requests(rt: &PjrtRuntime) -> Vec<JobRequest> {
+    let template = job_template();
+    let batch = rt.load_model("synthetic").unwrap().meta.batch_size;
+    let est = solo_estimate_s(&template, &four_cloud_env(), batch).max(0.1);
+    let arrivals = poisson_arrivals(4, est * 0.1, 99);
+    arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, &at)| {
+            let mut train = template.clone();
+            train.seed = template.seed ^ ((i as u64 + 1) << 8);
+            JobRequest::new(&format!("job{i}"), at, train)
+        })
+        .collect()
+}
+
+/// Serialize a fleet report with wall time pinned (the only
+/// non-deterministic field; `events_per_wall_second` derives from it).
+fn fleet_json(mut r: FleetReport) -> String {
+    r.wall_seconds = 0.0;
+    r.to_json().to_string_pretty()
+}
+
+fn train_json(mut r: TrainReport) -> String {
+    r.wall_seconds = 0.0;
+    r.to_json().to_string_pretty()
+}
+
+// ------------------------------------------------ indexed merged clock
+
+#[test]
+fn indexed_clock_is_byte_identical_to_linear_scan() {
+    let rt = rt();
+    let reqs = requests(&rt);
+    let run = |indexed: bool| -> FleetReport {
+        let mut cfg = FleetConfig::new(LeasePolicy::FairShare, four_cloud_env());
+        cfg.indexed_clock = indexed;
+        run_fleet(&rt, &cfg, &reqs).unwrap()
+    };
+    let scan = run(false);
+    let heap = run(true);
+    assert!(scan.events_executed > 0, "the fleet must execute events");
+    assert_eq!(
+        scan.events_executed, heap.events_executed,
+        "both paths step the same merged-event sequence"
+    );
+    assert_eq!(
+        fleet_json(scan),
+        fleet_json(heap),
+        "indexed clock must reproduce the scan's FleetReport byte for byte"
+    );
+}
+
+#[test]
+fn same_seed_fleet_reports_are_identical_run_to_run() {
+    let rt = rt();
+    let reqs = requests(&rt);
+    let run = || {
+        let cfg = FleetConfig::new(LeasePolicy::FairShare, four_cloud_env());
+        run_fleet(&rt, &cfg, &reqs).unwrap()
+    };
+    assert_eq!(fleet_json(run()), fleet_json(run()));
+}
+
+// --------------------------------------------- worker-cohort aggregation
+
+#[test]
+fn cohort_size_one_reproduces_the_per_worker_path_exactly() {
+    // CPU pools clamp at 8 workers, far under the threshold, so the
+    // threshold knob must leave the run byte-identical to threshold 0.
+    let rt = rt();
+    let env = four_cloud_env();
+    let run = |threshold: usize| -> TrainReport {
+        let mut cfg = job_template();
+        cfg.cohort_threshold = threshold;
+        run_geo_training(&rt, &env, env.greedy_plan(), cfg).unwrap()
+    };
+    assert_eq!(
+        train_json(run(0)),
+        train_json(run(64)),
+        "pools under the threshold must take the per-worker path byte for byte"
+    );
+}
+
+#[test]
+fn cohorts_preserve_step_totals_exactly_and_billing_within_one_percent() {
+    let rt = rt();
+    // 64-worker GPU pools, 32768 steps per partition: the pools are
+    // work-conserving, so drift comes only from jitter variance over
+    // the number of waves (sigma ~ 0.14/sqrt(waves)); 2048 waves per
+    // partition puts the worst case well under the 1% bound.
+    let batch = rt.load_model("synthetic").unwrap().meta.batch_size;
+    let n_train = 16384 * batch * 4;
+    let env = gpu_env(n_train);
+    let run = |threshold: usize| -> TrainReport {
+        let mut cfg = TrainConfig::new("synthetic");
+        cfg.epochs = 2;
+        cfg.n_train = n_train;
+        cfg.n_eval = batch * 8;
+        cfg.sync = SyncConfig::new(Strategy::AsgdGa, 32);
+        cfg.skip_eval = true;
+        cfg.seed = 17;
+        cfg.cohort_threshold = threshold;
+        run_geo_training(&rt, &env, env.greedy_plan(), cfg).unwrap()
+    };
+    let per_worker = run(0);
+    let cohort = run(4); // 64 workers / threshold 4 -> 16-step waves
+
+    // Step accounting is exact: the budget drives both paths.
+    let steps = |r: &TrainReport| -> Vec<u64> { r.partitions.iter().map(|p| p.steps).collect() };
+    assert_eq!(steps(&per_worker), steps(&cohort), "per-partition step totals must match exactly");
+    let updates = |r: &TrainReport| -> u64 { r.partitions.iter().map(|p| p.local_updates).sum() };
+    assert_eq!(updates(&per_worker), updates(&cohort), "PS update counters must match exactly");
+
+    // Time and billing drift only by wave-granular jitter: within 1%.
+    let drift = |a: f64, b: f64| (a - b).abs() / a.max(1e-12);
+    assert!(
+        drift(per_worker.total_time, cohort.total_time) < 0.01,
+        "total time drifted {:.2}% ({:.2}s vs {:.2}s)",
+        drift(per_worker.total_time, cohort.total_time) * 100.0,
+        per_worker.total_time,
+        cohort.total_time
+    );
+    assert!(
+        drift(per_worker.compute_cost, cohort.compute_cost) < 0.01,
+        "compute cost drifted {:.2}% (${:.4} vs ${:.4})",
+        drift(per_worker.compute_cost, cohort.compute_cost) * 100.0,
+        per_worker.compute_cost,
+        cohort.compute_cost
+    );
+
+    // The point of it all: >=10x fewer real model executions.
+    assert!(
+        per_worker.pjrt_executions >= 10 * cohort.pjrt_executions.max(1),
+        "expected >=10x execution reduction: {} vs {}",
+        per_worker.pjrt_executions,
+        cohort.pjrt_executions
+    );
+}
+
+// --------------------------------------- incremental admission planning
+
+fn skewed_cfg(mode: PlacementMode) -> TrainConfig {
+    let mut cfg = job_template();
+    cfg.seed = 23;
+    cfg.dataplane = DataPlaneConfig {
+        placement: Some(PlacementSpec::new(Layout::Skewed { shards: 8, frac: 0.7 })),
+        mode,
+        sample_bytes: 256 * 1024,
+        ..DataPlaneConfig::default()
+    };
+    cfg
+}
+
+/// Uniform 100 Mbps link view (None on the diagonal), the shape fleet
+/// admission passes from its live fabric.
+fn uniform_links(n: usize) -> Vec<Vec<Option<LinkSpec>>> {
+    (0..n)
+        .map(|a| {
+            (0..n)
+                .map(|b| if a == b { None } else { Some(LinkSpec::wan_100mbps()) })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn seeded_admission_is_never_worse_than_either_pure_mode() {
+    let rt = rt();
+    let env = four_cloud_env();
+    let meta = rt.load_model("synthetic").unwrap().meta;
+    let pure = |mode: PlacementMode| -> f64 {
+        dataplane::plan_for_on(&env, &skewed_cfg(mode), &meta, uniform_links(4))
+            .unwrap()
+            .plan
+            .est_objective
+    };
+    let cfd = pure(PlacementMode::ComputeFollowsData);
+    let dfc = pure(PlacementMode::DataFollowsCompute);
+
+    // Incumbents a real fleet could hand the planner: stale-but-valid
+    // assignments of every shape, plus geometry mismatches the planner
+    // must ignore rather than trust.
+    let shards = 8usize;
+    let mut incumbents: Vec<Vec<usize>> = vec![
+        vec![0; shards],
+        vec![3; shards],
+        (0..shards).map(|s| s % 4).collect(),
+        (0..shards).map(|s| (s * 2654435761) % 4).collect(),
+        vec![0; shards + 1], // wrong shard count: must be ignored
+        vec![99; shards],    // out-of-range region: must be ignored
+    ];
+    incumbents.push((0..shards).map(|s| (s * 7 + 1) % 4).collect());
+    for inc in &incumbents {
+        let seeded = dataplane::plan_for_on_seeded(
+            &env,
+            &skewed_cfg(PlacementMode::Joint),
+            &meta,
+            uniform_links(4),
+            Some(inc),
+        )
+        .unwrap()
+        .plan;
+        assert!(
+            seeded.est_objective <= cfd + 1e-9 && seeded.est_objective <= dfc + 1e-9,
+            "incumbent {inc:?}: seeded objective {} must not exceed cfd {} / dfc {}",
+            seeded.est_objective,
+            cfd,
+            dfc
+        );
+    }
+}
+
+#[test]
+fn the_joint_optimum_is_a_fixed_point_of_seeding() {
+    let rt = rt();
+    let env = four_cloud_env();
+    let meta = rt.load_model("synthetic").unwrap().meta;
+    let scratch = dataplane::plan_for_on(&env, &skewed_cfg(PlacementMode::Joint), &meta, uniform_links(4))
+        .unwrap()
+        .plan;
+    let seeded = dataplane::plan_for_on_seeded(
+        &env,
+        &skewed_cfg(PlacementMode::Joint),
+        &meta,
+        uniform_links(4),
+        Some(&scratch.assign),
+    )
+    .unwrap()
+    .plan;
+    assert_eq!(scratch.assign, seeded.assign, "re-seeding the optimum must not move shards");
+    assert_eq!(scratch.est_objective, seeded.est_objective);
+}
+
+#[test]
+fn fleet_admission_with_incumbent_cache_completes_every_job() {
+    // End-to-end: a fleet whose jobs each carry a data plane exercises
+    // the admission-time incumbent cache (every admission after the
+    // first is seeded); all jobs must still complete their workloads.
+    let rt = rt();
+    let template = skewed_cfg(PlacementMode::Joint);
+    let reqs: Vec<JobRequest> = (0..3)
+        .map(|i| {
+            let mut train = template.clone();
+            train.seed = template.seed ^ ((i as u64 + 1) << 8);
+            JobRequest::new(&format!("job{i}"), i as f64 * 0.5, train)
+        })
+        .collect();
+    let cfg = FleetConfig::new(LeasePolicy::FairShare, four_cloud_env());
+    let report = run_fleet(&rt, &cfg, &reqs).unwrap();
+    assert_eq!(report.jobs.len(), 3);
+    for j in &report.jobs {
+        assert!(
+            j.report.dataplane.is_some(),
+            "{}: every admitted job planned a data plane",
+            j.name
+        );
+        let total: u64 = j.report.partitions.iter().map(|p| p.steps).sum();
+        assert!(total > 0, "{}: job trained", j.name);
+    }
+    // Determinism survives the cache (same seed, same incumbents).
+    let again = run_fleet(&rt, &cfg, &reqs).unwrap();
+    assert_eq!(fleet_json(report), fleet_json(again));
+}
