@@ -24,11 +24,23 @@ pub struct CostModel {
     /// data plane's shard-migration rate. Hub regions (low ids in the
     /// shipped environments) are discounted relative to edge regions.
     pub egress_per_gb: Vec<f64>,
+    /// Storage rent per GB-hour (USD) for *persisted replica copies* —
+    /// every physical copy of a shard is billed from its creation (or
+    /// job start, for seeded copies) to job end. The default tracks
+    /// object-store list prices (~$0.02/GB-month ≈ $2.8e-5/GB-hour);
+    /// tiny per-run, but it breaks the "copies are a free lunch once
+    /// created" degeneracy: a planner offered rent-heavy pricing stops
+    /// materializing marginal replicas.
+    pub storage_per_gb_hour: f64,
 }
 
 impl Default for CostModel {
     fn default() -> Self {
-        CostModel { wan_per_gb: 0.12, egress_per_gb: vec![0.08, 0.10, 0.10, 0.12] }
+        CostModel {
+            wan_per_gb: 0.12,
+            egress_per_gb: vec![0.08, 0.10, 0.10, 0.12],
+            storage_per_gb_hour: 2.8e-5,
+        }
     }
 }
 
@@ -74,6 +86,12 @@ impl CostModel {
         time_value_per_hour: f64,
     ) -> f64 {
         self.egress_cost(from, bytes) + time_value_per_hour * transfer_s / 3600.0
+    }
+
+    /// Storage rent for one persisted replica copy of `bytes` held for
+    /// `held_s` seconds.
+    pub fn storage_cost(&self, bytes: u64, held_s: Time) -> f64 {
+        self.storage_per_gb_hour * bytes as f64 / 1e9 * held_s / 3600.0
     }
 
     /// Total job cost.
@@ -124,6 +142,20 @@ mod tests {
         assert!(m.copy_objective(0, gb, 3600.0, 4.0) > m.copy_objective(3, gb, 10.0, 4.0));
         // Zero time value degenerates to pure egress.
         assert!((m.copy_objective(2, gb, 99.0, 0.0) - m.egress_cost(2, gb)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn storage_rent_scales_with_bytes_and_time() {
+        let m = CostModel::default();
+        let gb = 1_000_000_000u64;
+        assert!((m.storage_cost(gb, 3600.0) - m.storage_per_gb_hour).abs() < 1e-12);
+        assert!(
+            (m.storage_cost(2 * gb, 1800.0) - m.storage_cost(gb, 3600.0)).abs() < 1e-12,
+            "GB-hours commute"
+        );
+        assert_eq!(m.storage_cost(0, 1e9), 0.0);
+        let free = CostModel { storage_per_gb_hour: 0.0, ..CostModel::default() };
+        assert_eq!(free.storage_cost(gb, 1e6), 0.0, "zero rate restores the free lunch");
     }
 
     #[test]

@@ -22,10 +22,15 @@
 //!                "mean_interarrival_s": 0, "policy": "fair-share",
 //!                "min_units": 1},
 //!   "dataplane": {"placement": "skewed:8:0.7:r2",  // physical data plane
-//!                 // layout resident|uniform:n|skewed:n:frac|single:r,
-//!                 // optional :rK suffix = K replica copies per shard
+//!                 // layout resident|uniform:n|skewed:n:frac|single:r|fed:c:a,
+//!                 // optional :rK suffix = K replica copies per shard,
+//!                 // optional @shard=r1,r2 per-shard residency overrides
 //!                 "mode": "joint",     // compute-follows-data | data-follows-compute | joint
 //!                 "sample_kb": 256, "rebalance": true},
+//!   "federated": {"clients": 100000,   // edge-cohort tier below the clouds
+//!                 "cohorts": 40,       // aggregator pools per cloud (0 = flat)
+//!                 "sample_frac": 0.1,  // clients sampled per round, (0, 1]
+//!                 "dropout": 0.05},    // per-sampled-client dropout, [0, 1)
 //!   "worker_cores": 3,
 //!   "cohort_threshold": 64,            // aggregate >64-worker pools into cohort waves (0 = off)
 //!   "link": {"bandwidth_mbps": 100, "latency_ms": 15,
@@ -204,6 +209,32 @@ pub fn parse_job(text: &str) -> Result<JobSpec> {
         anyhow::ensure!(
             train.dataplane.placement.is_some(),
             "\"dataplane\" block needs a \"placement\" spec"
+        );
+    }
+
+    let fed = j.get("federated");
+    if !fed.is_null() {
+        anyhow::ensure!(
+            fed.as_obj().is_some(),
+            "\"federated\" must be an object (e.g. {{\"clients\": 100000, \"cohorts\": 40}})"
+        );
+        if let Some(c) = fed.get("clients").as_usize() {
+            train.federated.clients = c;
+        }
+        if let Some(k) = fed.get("cohorts").as_usize() {
+            train.federated.cohorts = k;
+        }
+        if let Some(f) = fed.get("sample_frac").as_f64() {
+            train.federated.sample_frac = f;
+        }
+        if let Some(d) = fed.get("dropout").as_f64() {
+            train.federated.dropout = d;
+        }
+        train.federated.validate().map_err(|e| anyhow::anyhow!(e))?;
+        anyhow::ensure!(
+            train.federated.clients > 0 && train.federated.cohorts > 0,
+            "\"federated\" block needs \"clients\" > 0 and \"cohorts\" > 0 \
+             (omit the block for a flat run)"
         );
     }
 
@@ -432,6 +463,57 @@ mod tests {
             r#""dataplane":{"placement":"uniform:4","mode":"teleport"}"#,
             r#""dataplane":{"placement":"uniform:4","sample_kb":-1}"#,
             r#""dataplane":{"placement":"uniform:4","time_value_per_hour":-1}"#,
+        ] {
+            let doc = format!(r#"{{"model":"synthetic",{bad},{region}}}"#);
+            assert!(parse_job(&doc).is_err(), "must reject: {doc}");
+        }
+    }
+
+    #[test]
+    fn federated_block_parses() {
+        let region = r#""regions":[{"name":"X","device":"sky","units":6,"data":100},
+                                   {"name":"Y","device":"sky","units":6,"data":100}]"#;
+        let spec = parse_job(&format!(
+            r#"{{"model":"synthetic",
+                "federated":{{"clients":100000,"cohorts":40,
+                              "sample_frac":0.1,"dropout":0.05}},{region}}}"#
+        ))
+        .unwrap();
+        let fed = &spec.train.federated;
+        assert!(fed.active());
+        assert_eq!(fed.clients, 100_000);
+        assert_eq!(fed.cohorts, 40);
+        assert!((fed.sample_frac - 0.1).abs() < 1e-12);
+        assert!((fed.dropout - 0.05).abs() < 1e-12);
+        // Sampling knobs default to full participation, no churn.
+        let minimal = parse_job(&format!(
+            r#"{{"model":"synthetic","federated":{{"clients":64,"cohorts":4}},{region}}}"#
+        ))
+        .unwrap();
+        assert!((minimal.train.federated.sample_frac - 1.0).abs() < 1e-12);
+        assert!((minimal.train.federated.dropout - 0.0).abs() < 1e-12);
+        // Absent block: the edge tier is off and the engine stays flat.
+        let flat = parse_job(&format!(r#"{{"model":"synthetic",{region}}}"#)).unwrap();
+        assert!(!flat.train.federated.active());
+        // The fed: layout rides through the dataplane block alongside it.
+        let skewed = parse_job(&format!(
+            r#"{{"model":"synthetic",
+                "federated":{{"clients":1000,"cohorts":8}},
+                "dataplane":{{"placement":"fed:1000:0.3"}},{region}}}"#
+        ))
+        .unwrap();
+        assert_eq!(
+            skewed.train.dataplane.placement.as_ref().unwrap().layout,
+            crate::dataplane::Layout::Federated { clients: 1000, alpha: 0.3 }
+        );
+        // Errors: wrong type, zero populations, out-of-range knobs.
+        for bad in [
+            r#""federated":true"#,
+            r#""federated":{"clients":0,"cohorts":4}"#,
+            r#""federated":{"clients":100,"cohorts":0}"#,
+            r#""federated":{"clients":100,"cohorts":4,"sample_frac":0}"#,
+            r#""federated":{"clients":100,"cohorts":4,"sample_frac":1.5}"#,
+            r#""federated":{"clients":100,"cohorts":4,"dropout":1}"#,
         ] {
             let doc = format!(r#"{{"model":"synthetic",{bad},{region}}}"#);
             assert!(parse_job(&doc).is_err(), "must reject: {doc}");

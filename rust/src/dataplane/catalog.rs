@@ -75,22 +75,46 @@ pub enum Layout {
     Skewed { shards: usize, frac: f64 },
     /// `single:<region>` — everything resident in one region.
     Single { region: RegionId },
+    /// `fed:<clients>:<alpha>` — the federated edge workload: one shard
+    /// per cloud whose sizes are Dirichlet(alpha)-proportioned (non-IID
+    /// quantity skew across clouds), deterministically seeded from the
+    /// layout parameters alone so two runs of the same spec carve the
+    /// same shards. `clients` records the edge population the driver
+    /// spreads below the clouds (it also perturbs the internal seed so
+    /// differently-sized populations do not share a skew draw).
+    Federated { clients: usize, alpha: f64 },
 }
 
-/// A full placement spec: the seeded layout plus the initial replica
-/// count per shard (`<layout>[:rK]`, e.g. `skewed:8:0.7:r2`).
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// A full placement spec: the seeded layout, the initial replica count
+/// per shard (`<layout>[:rK]`, e.g. `skewed:8:0.7:r2`), and optional
+/// per-shard replica-set pins (`@<shard>=<r1>,<r2>` suffixes, e.g.
+/// `uniform:4:r2@0=1,3@2=0`) that override the seeding rotation.
+#[derive(Debug, Clone, PartialEq)]
 pub struct PlacementSpec {
     pub layout: Layout,
     /// Physical copies each shard starts with (1 = single home, the
     /// PR-4 model; clamped to the region count at catalog build).
     pub replication: usize,
+    /// Explicit replica-set pins: `(shard_id, replicas)` pairs applied
+    /// after seeding, replacing that shard's whole replica set. Shard
+    /// ids refer to the *final* catalog ids (after empty shards are
+    /// dropped); out-of-range ids or regions error at build.
+    pub overrides: Vec<(usize, Vec<RegionId>)>,
 }
 
 impl PlacementSpec {
     /// A single-home spec over `layout`.
     pub fn new(layout: Layout) -> PlacementSpec {
-        PlacementSpec { layout, replication: 1 }
+        PlacementSpec { layout, replication: 1, overrides: Vec::new() }
+    }
+
+    /// The same spec with shard `shard_id`'s replica set pinned to
+    /// exactly `replicas` (first entry is the home).
+    pub fn with_override(mut self, shard_id: usize, replicas: Vec<RegionId>) -> PlacementSpec {
+        self.overrides.retain(|(id, _)| *id != shard_id);
+        self.overrides.push((shard_id, replicas));
+        self.overrides.sort_by_key(|(id, _)| *id);
+        self
     }
 
     /// The same layout seeded with `r` copies per shard.
@@ -105,13 +129,35 @@ impl PlacementSpec {
         let err = || {
             format!(
                 "unknown data placement {s:?} (valid: resident, uniform:<shards>, \
-                 skewed:<shards>:<frac>, single:<region>, each optionally suffixed \
-                 :r<replicas>, e.g. skewed:8:0.7:r2)"
+                 skewed:<shards>:<frac>, single:<region>, fed:<clients>:<alpha>, each \
+                 optionally suffixed :r<replicas> and/or @<shard>=<r1>,<r2> replica \
+                 pins, e.g. skewed:8:0.7:r2@0=1,3)"
             )
         };
+        // `@<shard>=<regions>` suffixes pin replica sets; strip them
+        // before the layout grammar.
+        let mut at_parts = s.split('@');
+        let base = at_parts.next().unwrap_or("");
+        let mut overrides: Vec<(usize, Vec<RegionId>)> = Vec::new();
+        for seg in at_parts {
+            let (id, regions) = seg.split_once('=').ok_or_else(err)?;
+            let id: usize = id.parse().map_err(|_| err())?;
+            let regions: Vec<RegionId> = regions
+                .split(',')
+                .map(|r| r.parse::<RegionId>().map_err(|_| err()))
+                .collect::<Result<_, _>>()?;
+            if regions.is_empty() {
+                return Err(err());
+            }
+            if overrides.iter().any(|(prev, _)| *prev == id) {
+                return Err(format!("shard {id} pinned twice in {s:?}"));
+            }
+            overrides.push((id, regions));
+        }
+        overrides.sort_by_key(|(id, _)| *id);
         // An `:rK` tail is the replication factor; everything before it
         // is the layout grammar.
-        let mut parts: Vec<&str> = s.split(':').collect();
+        let mut parts: Vec<&str> = base.split(':').collect();
         let mut replication = 1usize;
         if parts.len() > 1 {
             let last = parts[parts.len() - 1];
@@ -144,6 +190,11 @@ impl PlacementSpec {
                 let region: usize = parts.next().and_then(|v| v.parse().ok()).ok_or_else(err)?;
                 Layout::Single { region }
             }
+            "fed" => {
+                let clients: usize = parts.next().and_then(|v| v.parse().ok()).ok_or_else(err)?;
+                let alpha: f64 = parts.next().and_then(|v| v.parse().ok()).ok_or_else(err)?;
+                Layout::Federated { clients, alpha }
+            }
             _ => return Err(err()),
         };
         if parts.next().is_some() {
@@ -156,24 +207,35 @@ impl PlacementSpec {
             Layout::Skewed { frac, .. } if !(0.0..=1.0).contains(&frac) => {
                 Err(format!("skew fraction must be in [0, 1], got {frac}"))
             }
-            ok => Ok(PlacementSpec { layout: ok, replication }),
+            Layout::Federated { clients: 0, .. } => {
+                Err("fed layout needs at least one client".to_string())
+            }
+            Layout::Federated { alpha, .. } if !(alpha > 0.0) || !alpha.is_finite() => {
+                Err(format!("fed concentration alpha must be positive and finite, got {alpha}"))
+            }
+            ok => Ok(PlacementSpec { layout: ok, replication, overrides }),
         }
     }
 
     /// Stable name (inverse of [`PlacementSpec::from_name`]); the `:rK`
-    /// suffix appears only for replicated specs.
+    /// suffix appears only for replicated specs, `@` pins only when
+    /// overrides exist.
     pub fn name(&self) -> String {
-        let base = match self.layout {
+        let mut out = match self.layout {
             Layout::Resident => "resident".to_string(),
             Layout::Uniform { shards } => format!("uniform:{shards}"),
             Layout::Skewed { shards, frac } => format!("skewed:{shards}:{frac}"),
             Layout::Single { region } => format!("single:{region}"),
+            Layout::Federated { clients, alpha } => format!("fed:{clients}:{alpha}"),
         };
         if self.replication > 1 {
-            format!("{base}:r{}", self.replication)
-        } else {
-            base
+            out.push_str(&format!(":r{}", self.replication));
         }
+        for (id, regions) in &self.overrides {
+            let rs: Vec<String> = regions.iter().map(|r| r.to_string()).collect();
+            out.push_str(&format!("@{id}={}", rs.join(",")));
+        }
+        out
     }
 }
 
@@ -233,6 +295,16 @@ impl DatasetCatalog {
         // instead of panicking in the chunking below.
         if let Layout::Uniform { shards: 0 } | Layout::Skewed { shards: 0, .. } = spec.layout {
             return Err("data placement needs at least one shard".to_string());
+        }
+        if let Layout::Federated { clients, alpha } = spec.layout {
+            if clients == 0 {
+                return Err("fed layout needs at least one client".to_string());
+            }
+            if !(alpha > 0.0) || !alpha.is_finite() {
+                return Err(format!(
+                    "fed concentration alpha must be positive and finite, got {alpha}"
+                ));
+            }
         }
         let shard = |id: usize, home: RegionId, start: usize, end: usize| ShardInfo {
             id,
@@ -302,6 +374,31 @@ impl DatasetCatalog {
                     shards.push(shard(i, region, s, e));
                 }
             }
+            Layout::Federated { clients, alpha } => {
+                // One shard per cloud, Dirichlet(alpha)-proportioned:
+                // non-IID quantity skew across the clouds' edge
+                // populations. The seed is a pure function of the
+                // layout parameters (`from_spec` takes none), so the
+                // carve is identical across runs — the determinism the
+                // federated tests pin. Per-cohort *label* skew below
+                // each cloud is drawn by the engine from the same
+                // parameters (see `engine/driver`).
+                let mut rng = crate::util::rng::Pcg32::new(
+                    0xFED5_EED0 ^ (clients as u64).rotate_left(17) ^ alpha.to_bits(),
+                    n_regions as u64,
+                );
+                let weights = rng.dirichlet_symmetric(alpha, n_regions);
+                let mut start = 0usize;
+                for (r, w) in weights.iter().enumerate() {
+                    let end = if r + 1 == n_regions {
+                        n_train
+                    } else {
+                        (start + (n_train as f64 * w).round() as usize).min(n_train)
+                    };
+                    shards.push(shard(r, r, start, end));
+                    start = end;
+                }
+            }
         }
         shards.retain(|s| s.samples() > 0);
         for (i, s) in shards.iter_mut().enumerate() {
@@ -321,6 +418,34 @@ impl DatasetCatalog {
                     if !s.replicas.contains(&r) {
                         s.replicas.push(r);
                     }
+                }
+            }
+        }
+        // Explicit `@shard=` pins replace the seeded replica sets last,
+        // so tests and configs can dictate exact residency.
+        for (id, regions) in &spec.overrides {
+            if regions.is_empty() {
+                return Err(format!("shard {id} override pins an empty replica set"));
+            }
+            if let Some(bad) = regions.iter().find(|&&r| r >= n_regions) {
+                return Err(format!(
+                    "shard {id} override names region {bad} outside the \
+                     {n_regions}-region environment"
+                ));
+            }
+            let mut dedup = Vec::new();
+            for &r in regions {
+                if !dedup.contains(&r) {
+                    dedup.push(r);
+                }
+            }
+            match shards.get_mut(*id) {
+                Some(s) => s.replicas = dedup,
+                None => {
+                    return Err(format!(
+                        "@{id}= override names a shard outside the {}-shard catalog",
+                        shards.len()
+                    ))
                 }
             }
         }
@@ -422,7 +547,9 @@ mod tests {
     #[test]
     fn spec_names_round_trip() {
         for name in ["resident", "uniform:8", "skewed:8:0.7", "single:2", "skewed:8:0.7:r2",
-                     "uniform:4:r3", "resident:r2", "single:0:r2"] {
+                     "uniform:4:r3", "resident:r2", "single:0:r2", "fed:100000:0.5",
+                     "fed:64:1:r2", "uniform:4:r2@0=1,3@2=0", "skewed:8:0.7@1=2",
+                     "fed:1000:0.1@0=0,1,2"] {
             let spec = PlacementSpec::from_name(name).unwrap();
             assert_eq!(spec.name(), name);
         }
@@ -433,11 +560,73 @@ mod tests {
         assert_eq!(PlacementSpec::from_name("uniform:4:r1").unwrap().replication, 1);
         assert_eq!(PlacementSpec::from_name("uniform:4:r1").unwrap().name(), "uniform:4");
         assert_eq!(PlacementSpec::from_name("skewed:8:0.7:R2").unwrap().replication, 2);
+        let pinned = PlacementSpec::from_name("uniform:4@2=3,1@0=2").unwrap();
+        assert_eq!(pinned.overrides, vec![(0, vec![2]), (2, vec![3, 1])], "pins sorted by id");
+        assert_eq!(
+            pinned,
+            PlacementSpec::new(Layout::Uniform { shards: 4 })
+                .with_override(2, vec![3, 1])
+                .with_override(0, vec![2])
+        );
         for bad in ["", "striped:4", "uniform", "uniform:0", "skewed:4", "skewed:4:1.5",
                     "single:x", "uniform:4:9", "uniform:4:r0", "uniform:4:r", "r2",
-                    "skewed:8:0.7:r2:r3"] {
+                    "skewed:8:0.7:r2:r3", "fed:0:0.5", "fed:10:0", "fed:10:-1", "fed:10",
+                    "uniform:4@x=1", "uniform:4@0=", "uniform:4@0", "uniform:4@0=1@0=2"] {
             assert!(PlacementSpec::from_name(bad).is_err(), "{bad:?} must not parse");
         }
+    }
+
+    #[test]
+    fn fed_layout_is_deterministic_and_total() {
+        let spec = PlacementSpec::from_name("fed:100000:0.5").unwrap();
+        let a = DatasetCatalog::from_spec(&spec, 4096, 4, 100, &[1; 4]).unwrap();
+        let b = DatasetCatalog::from_spec(&spec, 4096, 4, 100, &[1; 4]).unwrap();
+        assert_eq!(a, b, "same spec carves the same shards every run");
+        assert_eq!(a.total_samples(), 4096, "every sample lands somewhere");
+        assert!(a.shards.len() <= 4, "one shard per cloud at most");
+        // The Dirichlet carve is actually skewed (alpha well below the
+        // uniform regime): the largest cloud holds more than its even
+        // share.
+        let max = a.shards.iter().map(|s| s.samples()).max().unwrap();
+        assert!(max > 4096 / 4, "alpha=0.5 skews the carve: {:?}",
+                a.shards.iter().map(|s| s.samples()).collect::<Vec<_>>());
+        // Different client populations reseed the carve.
+        let other = DatasetCatalog::from_spec(
+            &PlacementSpec::from_name("fed:50000:0.5").unwrap(),
+            4096,
+            4,
+            100,
+            &[1; 4],
+        )
+        .unwrap();
+        assert_ne!(
+            a.shards.iter().map(|s| s.samples()).collect::<Vec<_>>(),
+            other.shards.iter().map(|s| s.samples()).collect::<Vec<_>>(),
+            "client count perturbs the seed"
+        );
+    }
+
+    #[test]
+    fn shard_overrides_pin_replica_sets() {
+        let spec = PlacementSpec::from_name("uniform:4:r2@1=3,0@3=2").unwrap();
+        let c = DatasetCatalog::from_spec(&spec, 400, 4, 10, &[1; 4]).unwrap();
+        assert_eq!(c.shards[1].replicas, vec![3, 0], "pin replaces the seeded set");
+        assert_eq!(c.shards[3].replicas, vec![2], "a pin may shrink below :rK");
+        assert_eq!(c.shards[0].replicas.len(), 2, "unpinned shards keep seeded copies");
+        assert_eq!(c.shards[1].home(), 3, "first pinned region is the home");
+        // Duplicate regions inside one pin collapse.
+        let dup = PlacementSpec::new(Layout::Uniform { shards: 2 }).with_override(0, vec![1, 1]);
+        let cd = DatasetCatalog::from_spec(&dup, 100, 2, 1, &[1; 2]).unwrap();
+        assert_eq!(cd.shards[0].replicas, vec![1]);
+        // Out-of-range shard or region errors at build, not at parse
+        // (the grammar doesn't know the environment).
+        let bad_shard = PlacementSpec::from_name("uniform:2@9=0").unwrap();
+        assert!(DatasetCatalog::from_spec(&bad_shard, 100, 2, 1, &[1; 2]).is_err());
+        let bad_region = PlacementSpec::from_name("uniform:2@0=5").unwrap();
+        assert!(DatasetCatalog::from_spec(&bad_region, 100, 2, 1, &[1; 2]).is_err());
+        let empty_pin = PlacementSpec::new(Layout::Uniform { shards: 2 })
+            .with_override(0, Vec::new());
+        assert!(DatasetCatalog::from_spec(&empty_pin, 100, 2, 1, &[1; 2]).is_err());
     }
 
     #[test]
@@ -558,7 +747,8 @@ mod tests {
                 "{layout:?} must be rejected"
             );
         }
-        let zero_r = PlacementSpec { layout: Layout::Resident, replication: 0 };
+        let zero_r =
+            PlacementSpec { layout: Layout::Resident, replication: 0, overrides: Vec::new() };
         assert!(DatasetCatalog::from_spec(&zero_r, 100, 3, 1, &[1; 3]).is_err());
     }
 

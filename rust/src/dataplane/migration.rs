@@ -86,6 +86,10 @@ pub(crate) struct DataPlaneState {
     /// Replica provenance: every physical copy delivered, as
     /// `(shard, source replica, destination)`, delivery order.
     pub replicas_created: Vec<(usize, RegionId, RegionId)>,
+    /// Delivery instant of each created copy (absolute virtual time,
+    /// parallel to `replicas_created`) — the start of its storage-rent
+    /// billing window.
+    pub replica_delivered_at: Vec<Time>,
     /// In-flight rebalance shards re-routed because their destination
     /// finished before delivery.
     pub rerouted: usize,
@@ -122,6 +126,7 @@ impl DataPlaneState {
             moved_bytes: 0,
             moved_shards: 0,
             replicas_created: Vec::new(),
+            replica_delivered_at: Vec::new(),
             rerouted: 0,
             failed_moves: 0,
             egress_cost: 0.0,
@@ -150,10 +155,33 @@ impl DataPlaneState {
         self.moves.len() - 1
     }
 
-    /// Snapshot the report; `stall` is the summed partition block time
-    /// and `start_at` the job's admission epoch (staging time is
-    /// reported job-relative).
-    pub fn report(&self, stall: Time, start_at: Time) -> DataPlaneReport {
+    /// Storage rent over the job's lifetime `[start_at, end_at]`: every
+    /// physical copy is billed per second held — seeded copies from the
+    /// job start, created copies from their delivery instant. The fix
+    /// for the ROADMAP's "replica copies are a free lunch once created".
+    pub fn storage_rent(&self, start_at: Time, end_at: Time) -> f64 {
+        let end = end_at.max(start_at);
+        let mut created_per_shard = vec![0usize; self.catalog.shards.len()];
+        let mut rent = 0.0;
+        for ((shard, _, _), &at) in self.replicas_created.iter().zip(&self.replica_delivered_at)
+        {
+            created_per_shard[*shard] += 1;
+            rent += self
+                .cost
+                .storage_cost(self.catalog.shards[*shard].bytes, (end - at).max(0.0));
+        }
+        for (s, &created) in self.catalog.shards.iter().zip(&created_per_shard) {
+            let seeded = s.replicas.len().saturating_sub(created) as u64;
+            rent += self.cost.storage_cost(s.bytes * seeded, end - start_at);
+        }
+        rent
+    }
+
+    /// Snapshot the report; `stall` is the summed partition block time,
+    /// `start_at` the job's admission epoch (staging time is reported
+    /// job-relative), and `end_at` the job end that closes every copy's
+    /// rent billing window.
+    pub fn report(&self, stall: Time, start_at: Time, end_at: Time) -> DataPlaneReport {
         DataPlaneReport {
             mode: self.mode.name().to_string(),
             placement: self.placement.name(),
@@ -163,6 +191,7 @@ impl DataPlaneState {
             rerouted_shards: self.rerouted,
             failed_shards: self.failed_moves,
             egress_cost: self.egress_cost,
+            storage_cost: self.storage_rent(start_at, end_at),
             stall_time: stall,
             staging_done: if self.moved_shards == 0 {
                 0.0
@@ -296,6 +325,7 @@ pub(crate) fn deliver_shard(sim: &mut Sim<World>, w: &mut World, idx: usize) {
             st.moved_shards += 1;
             st.staging_done = st.staging_done.max(now);
             st.replicas_created.push((m.mv.shard, m.mv.from, m.mv.to));
+            st.replica_delivered_at.push(now);
             st.catalog.add_replica(m.mv.shard, m.mv.to);
         }
         (m.mv.to, std::mem::take(&mut m.indices), m.grow_dest, m.mv.shard)

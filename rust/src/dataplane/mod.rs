@@ -124,6 +124,10 @@ pub struct DataPlaneReport {
     /// Object-store egress cost of the migrations (per-source-region
     /// pricing; see `cloud::cost::CostModel::egress_cost`).
     pub egress_cost: f64,
+    /// Storage rent billed on every persisted replica copy per second
+    /// held — seeded copies from job start, created copies from their
+    /// delivery instant (see `cloud::cost::CostModel::storage_cost`).
+    pub storage_cost: f64,
     /// Total virtual seconds partitions sat `Gate::DataBlocked` waiting
     /// for a shard to arrive.
     pub stall_time: Time,

@@ -288,6 +288,24 @@ fn evaluate(inputs: &PlanInputs, assign: &[RegionId]) -> Eval {
                 .compute_cost(&BilledAllocation { device: dev, units, held_s: run });
         }
     }
+    // Storage rent on the copies this assignment *creates*, held for
+    // the estimated run. Pre-existing replicas are sunk at planning
+    // time — charging them would couple the objective to run length as
+    // phantom time pressure — but each marginal copy now carries a
+    // GB-hour price, so a rent-heavy cost model makes the climb
+    // replica-shy. The executed run bills every held copy for real in
+    // the report (see `engine/driver::finalize_report`).
+    if run.is_finite() {
+        let created_bytes: u64 = inputs
+            .catalog
+            .shards
+            .iter()
+            .zip(assign)
+            .filter(|(s, &a)| !s.has_replica(a))
+            .map(|(s, _)| s.bytes)
+            .sum();
+        cost += inputs.cost.storage_cost(created_bytes, run);
+    }
     let objective = cost + inputs.time_value_per_hour * run / 3600.0;
     Eval {
         allocations: plan.allocations,
@@ -1058,6 +1076,38 @@ mod tests {
             moves.iter().any(|m| m.bytes == 0),
             "the replicated catalog must yield at least one free handoff: {moves:?}"
         );
+    }
+
+    #[test]
+    fn high_storage_rent_makes_the_joint_climb_replica_shy() {
+        // The ROADMAP's "copies are a free lunch" fix: with rent near
+        // zero the joint climb materializes copies to relieve the 70%
+        // skew; priced like gold (dollars per GB-hour instead of
+        // fractions of a cent) each marginal copy costs more than the
+        // makespan it buys, so the climb must create strictly fewer.
+        let env = four_cloud_env();
+        let cat = skewed_catalog();
+        let mut cheap = inputs(&env, &cat);
+        cheap.cost.storage_per_gb_hour = 0.0;
+        let free_lunch = plan(&cheap, PlacementMode::Joint);
+        assert!(
+            !free_lunch.moves.is_empty(),
+            "rent-free joint must still relieve the skew with copies"
+        );
+        let mut dear = inputs(&env, &cat);
+        dear.cost.storage_per_gb_hour = 5_000.0;
+        let rented = plan(&dear, PlacementMode::Joint);
+        assert!(
+            rented.moves.len() < free_lunch.moves.len(),
+            "high rent must create strictly fewer replicas: {} vs {}",
+            rented.moves.len(),
+            free_lunch.moves.len()
+        );
+        // The rent shows up in the estimate of any copy-creating
+        // assignment.
+        let base = evaluate(&cheap, &free_lunch.assign);
+        let billed = evaluate(&dear, &free_lunch.assign);
+        assert!(billed.cost > base.cost, "created copies must show up in the cost estimate");
     }
 
     #[test]

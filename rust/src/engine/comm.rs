@@ -42,6 +42,44 @@ impl SendSlot {
     }
 }
 
+/// Modeled last-mile uplink bandwidth of one edge client (HiPS stage 1).
+/// Intra-cohort traffic never enters the inter-cloud fabric: every
+/// client uploads over its own residential-grade link, concurrently.
+pub(crate) const EDGE_UPLINK_BPS: f64 = 20e6;
+
+/// One cohort round's worth of intra-cohort uplink traffic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct CohortUplink {
+    /// Total bytes the participating clients put on their uplinks
+    /// (counted into the job's WAN-byte total, but unmetered by the cost
+    /// model — last-mile edge traffic is cheap, unlike inter-cloud
+    /// egress).
+    pub bytes: u64,
+    /// Modeled seconds until the cohort aggregator holds every surviving
+    /// upload.
+    pub seconds: Time,
+}
+
+/// The intra-cohort half of the composite's communication — cheap,
+/// lossy, and sampled, in contrast to the metered inter-cloud payloads
+/// below. `participants` clients each upload one `payload_bytes`
+/// gradient to their cohort aggregator; dropped-out clients (the lossy
+/// part — the caller drew them from the dropout churn) upload nothing.
+/// O(1) per round, analytic: uploads run concurrently on independent
+/// last-mile links, so the round's uplink time is one serialization
+/// stretched by a logarithmic straggler tail, never `n` fabric events.
+pub(crate) fn cohort_uplink(participants: u64, payload_bytes: u64) -> CohortUplink {
+    if participants == 0 {
+        return CohortUplink { bytes: 0, seconds: 0.0 };
+    }
+    let one = payload_bytes as f64 * 8.0 / EDGE_UPLINK_BPS;
+    let straggler = 1.0 + (participants as f64).ln() / 8.0;
+    CohortUplink {
+        bytes: participants.saturating_mul(payload_bytes),
+        seconds: one * straggler,
+    }
+}
+
 /// Asynchronous strategies: send now if the communicator is free,
 /// otherwise block the partition until it is (backpressure).
 pub(crate) fn trigger_async_sync(sim: &mut Sim<World>, w: &mut World, p: usize) {
@@ -74,11 +112,9 @@ pub(crate) fn unblock_comm(sim: &mut Sim<World>, w: &mut World, p: usize) {
     if w.cfg.sync.should_sync(&w.parts[p].ps) {
         perform_send(sim, w, p);
     }
-    // Restart idle workers (one call per cohort wave).
-    let waves = w.parts[p].idle_workers().div_ceil(w.parts[p].cohort.max(1));
-    for _ in 0..waves {
-        driver::start_worker_iteration(sim, w, p);
-    }
+    // Restart whatever the partition idles — worker waves on the flat
+    // path, edge-cohort rounds on the composite path.
+    driver::kick_partition(sim, w, p);
     if w.parts[p].local_done() && w.parts[p].in_flight == 0 {
         driver::finish_partition(sim, w, p);
     }
@@ -239,4 +275,25 @@ pub(crate) fn receive_sync_payload(
         remote_weight
     };
     apply_payload(&cfg, &mut w.parts[p].ps, payload, eff);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cohort_uplink_is_cheap_sampled_and_concurrent() {
+        let full = cohort_uplink(1000, 4096);
+        let sampled = cohort_uplink(100, 4096);
+        assert_eq!(full.bytes, 1000 * 4096);
+        assert_eq!(sampled.bytes, 100 * 4096);
+        assert!(sampled.seconds < full.seconds, "smaller straggler tail");
+        // Concurrent last-mile uploads: 10x the participants costs a
+        // logarithmic factor, never 10x the round time.
+        assert!(full.seconds < 2.0 * sampled.seconds);
+        assert_eq!(cohort_uplink(0, 4096), CohortUplink { bytes: 0, seconds: 0.0 });
+        // One participant pays exactly one payload serialization.
+        let one = cohort_uplink(1, 4096);
+        assert!((one.seconds - 4096.0 * 8.0 / EDGE_UPLINK_BPS).abs() < 1e-12);
+    }
 }

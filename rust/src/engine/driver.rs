@@ -55,7 +55,7 @@ use crate::train::metrics::{EvalPoint, PartitionReport, ReplanEvent, TrainReport
 use crate::util::rng::Pcg32;
 
 use super::comm::{self, SendSlot};
-use super::partition::{Gate, Partition};
+use super::partition::{EdgeCohort, Gate, Partition};
 use super::topology::{SyncPlan, TopologyKind};
 
 /// A resource/WAN churn injection — what the elastic control loop exists
@@ -70,6 +70,62 @@ pub enum ChurnEvent {
     PowerFactor { t: Time, region: usize, factor: f64 },
     /// At time `t`, the directed link's nominal bandwidth becomes `bps`.
     LinkBandwidth { t: Time, from: usize, to: usize, bps: f64 },
+}
+
+/// The `"federated"` config block / `--clients --cohorts --sample-frac
+/// --dropout` CLI surface: the edge tier below the clouds. When active,
+/// every cloud partition becomes a recursive composite — its worker pool
+/// is replaced by a population of edge clients grouped into cohorts that
+/// aggregate locally (HiPS stage 1) before the cloud joins the WAN sync
+/// (stage 2). Inactive (the default) leaves the flat per-cloud engine
+/// byte-identical to the pre-composite behavior.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederatedConfig {
+    /// Total edge clients across the job, split over clouds by resident
+    /// data share (at least one per data-holding cloud). 0 = off.
+    pub clients: usize,
+    /// Edge cohorts per cloud (stage-1 aggregation pools; clamped to the
+    /// cloud's client count). 0 = off.
+    pub cohorts: usize,
+    /// Fraction of each cohort's clients sampled into a round (clamped
+    /// so at least one client participates).
+    pub sample_frac: f64,
+    /// Probability a sampled client drops mid-round (dropout-as-churn);
+    /// its upload is lost but the cohort's full population weight still
+    /// lands (population-reweighted FedAvg), so update totals conserve.
+    pub dropout: f64,
+}
+
+impl Default for FederatedConfig {
+    fn default() -> Self {
+        FederatedConfig { clients: 0, cohorts: 0, sample_frac: 1.0, dropout: 0.0 }
+    }
+}
+
+impl FederatedConfig {
+    /// Is the edge tier on? Both knobs must be set: clients without
+    /// cohorts (or vice versa) stays flat.
+    pub fn active(&self) -> bool {
+        self.clients > 0 && self.cohorts > 0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.sample_frac > 0.0 && self.sample_frac <= 1.0,
+            "federated sample_frac must be in (0, 1], got {}",
+            self.sample_frac
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.dropout),
+            "federated dropout must be in [0, 1), got {}",
+            self.dropout
+        );
+        anyhow::ensure!(
+            self.clients <= u32::MAX as usize,
+            "federated clients must fit u32 update weights"
+        );
+        Ok(())
+    }
 }
 
 /// Configuration for one geo-distributed training job.
@@ -123,6 +179,9 @@ pub struct TrainConfig {
     /// wave, so it is opt-in (fleet-scale runs set it; see
     /// docs/CONFIG.md).
     pub cohort_threshold: usize,
+    /// The federated edge tier below the clouds (off by default; see
+    /// [`FederatedConfig`] and docs/CONFIG.md).
+    pub federated: FederatedConfig,
 }
 
 impl TrainConfig {
@@ -148,6 +207,7 @@ impl TrainConfig {
             churn: Vec::new(),
             dataplane: DataPlaneConfig::default(),
             cohort_threshold: 0,
+            federated: FederatedConfig::default(),
         }
     }
 }
@@ -209,6 +269,11 @@ pub(crate) struct World {
     /// Live data-plane state (catalog + migrations), when
     /// `cfg.dataplane` is enabled.
     pub(crate) dataplane: Option<DataPlaneState>,
+    /// Intra-cohort uplink bytes (HiPS stage 1) — included in
+    /// `wan_bytes` (the sampled-participation saving shows up there) but
+    /// excluded from the metered inter-cloud WAN cost: last-mile edge
+    /// traffic is cheap.
+    pub(crate) fed_uplink_bytes: u64,
 }
 
 impl World {
@@ -282,6 +347,7 @@ pub(crate) fn deploy_job_planned(
     pre_planned: Option<crate::dataplane::PlannedDataPlane>,
 ) -> Result<(Sim<World>, World)> {
     anyhow::ensure!(allocations.len() == env.regions.len(), "one allocation per region");
+    cfg.federated.validate()?;
     // Resumed runs must not silently mix sync strategies or topologies.
     if let Some(dir) = &cfg.checkpoint_dir {
         crate::train::checkpoint::ensure_run_compatible(
@@ -350,6 +416,22 @@ pub(crate) fn deploy_job_planned(
         }
     };
 
+    // Federated edge tier: split the client population over clouds by
+    // final resident data share (at least one per data-holding cloud);
+    // the Dirichlet skew parameter for cohort carving comes from the
+    // `fed:` catalog layout when one is configured, else a mild default.
+    let fed_active = cfg.federated.active();
+    let fed_clients: Vec<usize> = if fed_active {
+        let finals: Vec<usize> = shards.iter().map(|(_, n)| *n).collect();
+        split_clients(cfg.federated.clients, &finals)
+    } else {
+        vec![0; env.regions.len()]
+    };
+    let fed_alpha = match cfg.dataplane.placement.as_ref().map(|s| s.layout) {
+        Some(crate::dataplane::Layout::Federated { alpha, .. }) => alpha,
+        _ => 1.0,
+    };
+
     // ---- serverless control plane + training workflows ----
     let mut faas = FaasRuntime::new();
     let mut sim: Sim<World> = Sim::new();
@@ -394,15 +476,29 @@ pub(crate) fn deploy_job_planned(
         // A region with no resident (or inbound) data runs no workers —
         // the placement planner legitimately leaves it empty.
         let has_work = final_samples > 0;
-        let workers =
-            if has_work { calib::worker_count(alloc.total_units(), is_gpu, cfg.worker_cores) } else { 0 };
+        // A composite (federated) partition's "pool" is its edge-client
+        // population; its cloud-side FaaS footprint is one aggregator
+        // function per cohort. A data-holding cloud that drew zero
+        // clients (more clouds than clients) falls back to the flat path.
+        let fed_here = fed_active && has_work && fed_clients[i] > 0;
+        let workers = if !has_work {
+            0
+        } else if fed_here {
+            fed_clients[i]
+        } else {
+            calib::worker_count(alloc.total_units(), is_gpu, cfg.worker_cores)
+        };
         let power = alloc.power();
         anyhow::ensure!(
             !has_work || power > 0.0,
             "region {} has data but an empty allocation",
             region.name
         );
-        let t_iter = if has_work {
+        // Edge clients train at unit catalog power (a residential-class
+        // device), whatever cloud allocation sits behind the aggregators.
+        let t_iter = if fed_here {
+            calib::iter_time(base_step, 1.0)
+        } else if has_work {
             calib::iter_time(base_step, calib::worker_power(power, workers))
         } else {
             base_step // unused: no worker ever starts
@@ -432,7 +528,11 @@ pub(crate) fn deploy_job_planned(
         faas.addressing.assign_wan_identity(comm_rep, wan_ep);
         let mut worker_replicas = Vec::new();
         let mut workers_ready = comm_ready;
-        for _ in 0..workers {
+        // Composite partitions spawn one aggregator function per cohort,
+        // not one pod per edge client — the serverless footprint stays a
+        // few functions however large the client population.
+        let pool = if fed_here { cfg.federated.cohorts.min(workers) } else { workers };
+        for _ in 0..pool {
             let (rep, ready) = faas.scale_up(&worker_key, comm_ready)?;
             faas.mark_ready(rep);
             worker_replicas.push(rep);
@@ -441,11 +541,29 @@ pub(crate) fn deploy_job_planned(
         startup_done = startup_done.max(workers_ready);
         worker_keys.push(worker_key);
 
-        // Step budget sized to the final (post-migration) sample count.
+        // Step budget sized to the final (post-migration) sample count —
+        // or, on the composite path, to the client population: one epoch
+        // is one federated round of every client, each cohort pushing
+        // one population-weighted wave.
         let steps_per_epoch = if final_samples == 0 {
             0
+        } else if fed_here {
+            fed_clients[i] as u64
         } else {
             final_samples.div_ceil(model.meta.batch_size).max(1) as u64
+        };
+        let cohorts = if fed_here {
+            build_cohorts(
+                &train_ds,
+                &shard.indices,
+                fed_clients[i] as u64,
+                cfg.federated.cohorts,
+                fed_alpha,
+                cfg.seed,
+                i,
+            )
+        } else {
+            Vec::new()
         };
         parts.push(Partition {
             region: i,
@@ -478,6 +596,7 @@ pub(crate) fn deploy_job_planned(
             win_iter_sum: 0.0,
             win_iter_count: 0,
             rng: Pcg32::new(cfg.seed ^ 0x7A27, i as u64),
+            cohorts,
         });
     }
 
@@ -542,13 +661,16 @@ pub(crate) fn deploy_job_planned(
         wan_transfers: 0,
         start_at,
         dataplane,
+        fed_uplink_bytes: 0,
     };
 
-    // Kick off every worker loop at training start; a partition with no
+    // Kick off every partition at training start; a partition with no
     // planned steps (a data-less region the placement planner emptied)
-    // finishes immediately instead. Under cohort aggregation one kick
-    // fills a whole wave, so `ceil(workers/cohort)` kicks saturate the
-    // pool (identical to one kick per worker when the cohort is 1).
+    // finishes immediately instead. One kick saturates the partition —
+    // `kick_partition` fills every idle worker wave on the flat path and
+    // starts one stage-1 round per edge cohort on the composite path;
+    // the resulting event schedule is identical to the historic
+    // one-event-per-wave startup (same draws, same order, same times).
     for p in 0..n_parts {
         if world.parts[p].steps_total == 0 {
             sim.schedule_at(startup_done, move |sim, w: &mut World| {
@@ -556,13 +678,9 @@ pub(crate) fn deploy_job_planned(
             });
             continue;
         }
-        let part = &world.parts[p];
-        let waves = part.workers.div_ceil(part.cohort.max(1));
-        for _ in 0..waves {
-            sim.schedule_at(startup_done, move |sim, w: &mut World| {
-                start_worker_iteration(sim, w, p);
-            });
-        }
+        sim.schedule_at(startup_done, move |sim, w: &mut World| {
+            kick_partition(sim, w, p);
+        });
     }
 
     // Stage every planned shard migration at training start: prefetch
@@ -657,18 +775,27 @@ pub(crate) fn finalize_report(
     }
     // Cost split: sync traffic bills at the flat WAN rate; shard
     // migrations (when a data plane ran) bill at their source regions'
-    // object-store egress rates instead — `wan_bytes` itself counts both
-    // (it must reconcile against the shared fabric's totals).
-    let (dataplane, shard_bytes, egress_cost) = match &world.dataplane {
+    // object-store egress rates instead, plus storage rent on every
+    // persisted replica copy; intra-cohort edge uplinks are unmetered
+    // (cheap last-mile traffic, not inter-cloud egress) — `wan_bytes`
+    // itself counts everything (it must reconcile against the shared
+    // fabric's totals plus the analytic uplink model).
+    let (dataplane, shard_bytes, egress_cost, storage_cost) = match &world.dataplane {
         Some(dp) => {
             let stall: Time = world.parts.iter().map(|p| p.data_stall).sum();
-            (Some(dp.report(stall, world.start_at)), dp.sent_bytes, dp.egress_cost)
+            let rep = dp.report(stall, world.start_at, global_end);
+            let storage = rep.storage_cost;
+            (Some(rep), dp.sent_bytes, dp.egress_cost, storage)
         }
-        None => (None, 0, 0.0),
+        None => (None, 0, 0.0, 0.0),
     };
-    let gradient_bytes = world.wan_bytes.saturating_sub(shard_bytes);
+    let gradient_bytes = world
+        .wan_bytes
+        .saturating_sub(shard_bytes)
+        .saturating_sub(world.fed_uplink_bytes);
     let compute_cost: f64 = billed.iter().map(|a| cost_model.compute_cost(a)).sum();
     let wan_cost = cost_model.wan_cost(gradient_bytes) + egress_cost;
+    let federated = federated_report(world);
     TrainReport {
         model: world.cfg.model.clone(),
         strategy: world.cfg.sync.strategy.name().to_string(),
@@ -682,14 +809,45 @@ pub(crate) fn finalize_report(
         final_accuracy: final_acc,
         wan_bytes: world.wan_bytes,
         wan_transfers: world.wan_transfers,
-        cost: compute_cost + wan_cost,
+        cost: compute_cost + wan_cost + storage_cost,
         compute_cost,
         wan_cost,
         wall_seconds,
         pjrt_executions: world.model.exec_counts.get(),
         replan_events: world.replans.clone(),
         dataplane,
+        federated,
     }
+}
+
+/// Aggregate the edge tier's counters into the report's `federated`
+/// block; `None` when the run was flat (no composite partition ever
+/// deployed), which keeps flat-run JSON identical to a zero-cohort
+/// config.
+fn federated_report(world: &World) -> Option<crate::train::metrics::FederatedReport> {
+    if !world.cfg.federated.active() || world.parts.iter().all(|p| !p.is_composite()) {
+        return None;
+    }
+    let mut rep = crate::train::metrics::FederatedReport {
+        clients: 0,
+        cohorts: 0,
+        sample_frac: world.cfg.federated.sample_frac,
+        dropout: world.cfg.federated.dropout,
+        rounds: 0,
+        participants: 0,
+        dropouts: 0,
+        uplink_bytes: world.fed_uplink_bytes,
+    };
+    for p in &world.parts {
+        rep.cohorts += p.cohorts.len();
+        for c in &p.cohorts {
+            rep.clients += c.clients;
+            rep.rounds += c.rounds;
+            rep.participants += c.participants;
+            rep.dropouts += c.dropouts;
+        }
+    }
+    Some(rep)
 }
 
 // ---------------------------------------------------------------- events
@@ -818,6 +976,329 @@ fn finish_worker_iteration(
     }
 }
 
+// ------------------------------------------------- federated edge tier
+
+/// Centralized dispatch: start whatever partition `p` can run — idle
+/// worker waves on the flat path, one stage-1 round per idle edge cohort
+/// on the composite path. Every restart site (deploy kick, comm unblock,
+/// barrier resume, elastic scale-up, shard delivery) routes through
+/// here, so flat and composite partitions coexist in one job.
+pub(crate) fn kick_partition(sim: &mut Sim<World>, w: &mut World, p: usize) {
+    if w.parts[p].gate != Gate::Running || w.parts[p].local_done() {
+        return;
+    }
+    if w.parts[p].is_composite() {
+        for c in 0..w.parts[p].cohorts.len() {
+            start_cohort_round(sim, w, p, c);
+        }
+        return;
+    }
+    let waves = w.parts[p].idle_workers().div_ceil(w.parts[p].cohort.max(1));
+    for _ in 0..waves {
+        start_worker_iteration(sim, w, p);
+    }
+}
+
+/// Start one stage-1 round on cohort `c` of composite partition `p`:
+/// sample `sample_frac` of the cohort's clients, draw binomial dropout
+/// churn, and schedule the round's completion after local client
+/// training plus the analytic intra-cohort uplink. The round advances
+/// the step budget by the cohort's *full* client population (clamped
+/// only at the final ragged round), so sampled and full-participation
+/// runs do identical update counts — only uplink traffic differs.
+pub(crate) fn start_cohort_round(sim: &mut Sim<World>, w: &mut World, p: usize, c: usize) {
+    let b = w.model.meta.batch_size;
+    let payload_bytes = (w.parts[p].ps.params.len() * 4) as u64;
+    let now = sim.now();
+    let (sample_frac, dropout) = (w.cfg.federated.sample_frac, w.cfg.federated.dropout);
+    let part = &mut w.parts[p];
+    if part.gate != Gate::Running || part.local_done() || part.cohorts[c].in_flight {
+        return;
+    }
+    if part.cohorts[c].shard.is_empty() && part.shard.is_empty() {
+        // Data-plane staging: nothing resident on this cloud yet. Gate
+        // until the next shard lands (`deliver_shard` reopens the
+        // partition and re-kicks it).
+        part.gate = Gate::DataBlocked;
+        part.data_blocked_since = now;
+        return;
+    }
+    let clients = part.cohorts[c].clients;
+    let wave = clients.min(part.steps_total.saturating_sub(part.steps_started));
+    if wave == 0 {
+        return; // step budget exhausted (final ragged round already ran)
+    }
+    // Per-round client sampling + dropout-as-churn: dropped clients lose
+    // their uploads (lossy uplink), never the cohort's aggregate weight.
+    let k = ((sample_frac * clients as f64).round() as u64).clamp(1, clients);
+    let dropped = part.rng.binomial(k, dropout);
+    let arrived = k - dropped;
+    part.steps_started += wave;
+    part.in_flight += wave as usize;
+    {
+        let coh = &mut part.cohorts[c];
+        coh.in_flight = true;
+        coh.participants += arrived;
+        coh.dropouts += dropped;
+    }
+    let (snapshot, version) = part.ps.pull();
+    let batch = if part.cohorts[c].shard.is_empty() {
+        part.shard.next_batch(b) // carve was empty: parent's data stands in
+    } else {
+        part.cohorts[c].shard.next_batch(b)
+    };
+    let jitter = 0.75 + 0.5 * part.rng.f64();
+    let uplink = comm::cohort_uplink(arrived, payload_bytes);
+    let t_round = part.t_iter * jitter / part.power_factor + uplink.seconds;
+    w.fed_uplink_bytes += uplink.bytes;
+    w.wan_bytes += uplink.bytes;
+    sim.schedule(t_round, move |sim, w: &mut World| {
+        finish_cohort_round(sim, w, p, c, snapshot, version, batch, t_round, wave);
+    });
+}
+
+/// One stage-1 round completed: the cohort's aggregated gradient lands
+/// in the parent's PS state weighted by the full client population
+/// (population-reweighted FedAvg — exact update accounting under
+/// sampling and dropout), epoch crossings are accounted in bulk, and the
+/// parent's ordinary stage-2 WAN sync condition takes over.
+#[allow(clippy::too_many_arguments)]
+fn finish_cohort_round(
+    sim: &mut Sim<World>,
+    w: &mut World,
+    p: usize,
+    c: usize,
+    snapshot: Vec<f32>,
+    version: u64,
+    batch: Vec<usize>,
+    iter_s: f64,
+    wave: u64,
+) {
+    let (x, y) = w.train_ds.batch(&batch, &w.model.meta);
+    let (grads, _loss) = w
+        .model
+        .train_step(&snapshot, &x, &y)
+        .expect("PJRT train_step failed mid-simulation");
+    let first_crossed;
+    let crossed;
+    {
+        let part = &mut w.parts[p];
+        part.in_flight -= wave as usize;
+        part.cohorts[c].in_flight = false;
+        part.cohorts[c].rounds += 1;
+        part.note_iteration_times(iter_s, wave);
+        part.ps.push_gradient_weighted(&grads, version, wave.min(u32::MAX as u64) as u32);
+        first_crossed = part.epochs_done + 1;
+        crossed = part.note_steps_completed_bulk(wave);
+    }
+    for epoch in first_crossed..first_crossed + crossed as usize {
+        if p == 0 && !w.cfg.skip_eval {
+            let every = w.cfg.eval_every.max(1);
+            if epoch % every == 0 {
+                let (loss, acc) = evaluate(w, 0);
+                w.curve.push(EvalPoint { t: sim.now(), epoch, loss, accuracy: acc });
+            }
+        }
+        if p == 0 {
+            if let Some(dir) = w.cfg.checkpoint_dir.clone() {
+                checkpoint_all(w, &dir);
+            }
+        }
+    }
+    // Stage 2: the parent cloud's ordinary WAN sync condition.
+    if w.cfg.sync.should_sync(&w.parts[p].ps) && w.parts[p].gate != Gate::Finished {
+        if w.cfg.sync.strategy.is_synchronous() {
+            enter_barrier(sim, w, p);
+        } else {
+            comm::trigger_async_sync(sim, w, p);
+        }
+    }
+    match w.parts[p].gate {
+        Gate::Running => {
+            if !w.parts[p].local_done() {
+                start_cohort_round(sim, w, p, c);
+            } else if w.parts[p].in_flight == 0 {
+                finish_partition(sim, w, p);
+            }
+        }
+        Gate::AtBarrier => {
+            if w.parts[p].in_flight == 0 {
+                w.parts[p].barrier_arrived = true;
+                w.parts[p].barrier_entry = sim.now();
+                try_release_barrier(sim, w);
+            }
+        }
+        Gate::CommBlocked | Gate::DataBlocked | Gate::Finished => {}
+    }
+}
+
+/// Split the federated client population across clouds proportionally to
+/// their final resident sample counts (largest remainder, ties to the
+/// lower region id), topping up so every data-holding cloud trains at
+/// least one client whenever the population allows.
+fn split_clients(total: usize, samples: &[usize]) -> Vec<usize> {
+    let mut out = vec![0usize; samples.len()];
+    let sum: usize = samples.iter().sum();
+    if total == 0 || sum == 0 {
+        return out;
+    }
+    let mut assigned = 0usize;
+    let mut rem: Vec<(f64, usize)> = Vec::new();
+    for (i, &s) in samples.iter().enumerate() {
+        if s == 0 {
+            continue;
+        }
+        let exact = total as f64 * s as f64 / sum as f64;
+        out[i] = exact as usize;
+        assigned += out[i];
+        rem.push((exact - out[i] as f64, i));
+    }
+    rem.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+    });
+    let mut left = total.saturating_sub(assigned);
+    for &(_, i) in rem.iter().cycle() {
+        if left == 0 {
+            break;
+        }
+        out[i] += 1;
+        left -= 1;
+    }
+    // Min-one top-up from the most populous cloud (totals stay exact).
+    loop {
+        let Some(need) = (0..out.len()).find(|&i| samples[i] > 0 && out[i] == 0) else { break };
+        let donor = (0..out.len()).max_by_key(|&i| out[i]).expect("non-empty");
+        if out[donor] <= 1 {
+            break; // fewer clients than data-holding clouds
+        }
+        out[donor] -= 1;
+        out[need] += 1;
+    }
+    out
+}
+
+/// Carve one cloud's resident samples into label-skewed edge cohorts
+/// (the composite's stage-1 tier). Deterministic: a pure function of
+/// (seed, region, alpha, clients, n_cohorts, resident indices). Client
+/// populations and per-cohort label preferences are both
+/// Dirichlet(alpha)-drawn — low alpha concentrates clients and labels
+/// (severe non-IID), high alpha approaches uniform IID cohorts.
+fn build_cohorts(
+    ds: &Dataset,
+    resident: &[usize],
+    clients: u64,
+    n_cohorts: usize,
+    alpha: f64,
+    seed: u64,
+    region: usize,
+) -> Vec<EdgeCohort> {
+    let k = n_cohorts.min(clients.min(usize::MAX as u64) as usize).max(1);
+    let mut rng = Pcg32::new(
+        seed ^ 0xF3DC_0DE ^ alpha.to_bits().rotate_left(11),
+        ((region as u64) << 32) | k as u64,
+    );
+    // Client populations: Dirichlet proportions via largest remainder,
+    // then a min-one top-up (every cohort holds at least one client).
+    let props = rng.dirichlet_symmetric(alpha, k);
+    let mut counts = vec![0u64; k];
+    let mut assigned = 0u64;
+    let mut rem: Vec<(f64, usize)> = Vec::new();
+    for (c, &w) in props.iter().enumerate() {
+        let exact = clients as f64 * w;
+        counts[c] = exact as u64;
+        assigned += counts[c];
+        rem.push((exact - counts[c] as f64, c));
+    }
+    rem.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+    });
+    let mut left = clients.saturating_sub(assigned);
+    for &(_, c) in rem.iter().cycle() {
+        if left == 0 {
+            break;
+        }
+        counts[c] += 1;
+        left -= 1;
+    }
+    loop {
+        let Some(need) = (0..k).find(|&c| counts[c] == 0) else { break };
+        let donor = (0..k).max_by_key(|&c| counts[c]).expect("non-empty");
+        if counts[donor] <= 1 {
+            break;
+        }
+        counts[donor] -= 1;
+        counts[need] += 1;
+    }
+    // Label-skewed sub-shards: group resident indices by label (sorted,
+    // so the carve is independent of the parent shard's shuffle order),
+    // then split each label's examples across cohorts proportionally to
+    // the cohorts' Dirichlet label weights.
+    let mut sorted: Vec<usize> = resident.to_vec();
+    sorted.sort_unstable();
+    let mut by_label: std::collections::BTreeMap<i32, Vec<usize>> = Default::default();
+    for &i in &sorted {
+        by_label.entry(label_of(ds, i)).or_default().push(i);
+    }
+    let n_labels = by_label.len().max(1);
+    let weights: Vec<Vec<f64>> = (0..k).map(|_| rng.dirichlet_symmetric(alpha, n_labels)).collect();
+    let mut cohort_idxs: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (l, idxs) in by_label.values().enumerate() {
+        // Normalize this label's column over cohorts; largest remainder.
+        let col_sum: f64 = weights.iter().map(|w| w[l]).sum();
+        let mut shares = vec![0usize; k];
+        let mut taken = 0usize;
+        let mut lrem: Vec<(f64, usize)> = Vec::new();
+        for c in 0..k {
+            let share = if col_sum > 0.0 { weights[c][l] / col_sum } else { 1.0 / k as f64 };
+            let exact = idxs.len() as f64 * share;
+            shares[c] = exact as usize;
+            taken += shares[c];
+            lrem.push((exact - shares[c] as f64, c));
+        }
+        lrem.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        });
+        let mut left = idxs.len().saturating_sub(taken);
+        for &(_, c) in lrem.iter().cycle() {
+            if left == 0 {
+                break;
+            }
+            shares[c] += 1;
+            left -= 1;
+        }
+        let mut cursor = 0usize;
+        for c in 0..k {
+            cohort_idxs[c].extend_from_slice(&idxs[cursor..cursor + shares[c]]);
+            cursor += shares[c];
+        }
+    }
+    counts
+        .into_iter()
+        .zip(cohort_idxs)
+        .enumerate()
+        .map(|(c, (n, idxs))| {
+            // A stream disjoint from partition shards (stream = region)
+            // and cohort carves elsewhere: high bit + region page.
+            let stream = (1u64 << 40) | ((region as u64) << 20) | c as u64;
+            EdgeCohort::new(n, Shard::new(idxs, seed, stream), weights[c].clone())
+        })
+        .collect()
+}
+
+/// One example's label key for cohort-skew grouping: classifier labels
+/// directly, CTR's binary f32 labels as 0/1, the first token of an LM
+/// window, 0 when the dataset carries no labels at all.
+fn label_of(ds: &Dataset, i: usize) -> i32 {
+    let i = i % ds.n.max(1);
+    if !ds.y_is_f32 && !ds.y_i32.is_empty() {
+        ds.y_i32[i * ds.y_elems]
+    } else if ds.y_is_f32 && !ds.y_f32.is_empty() {
+        (ds.y_f32[i * ds.y_elems] > 0.5) as i32
+    } else {
+        0
+    }
+}
+
 // ------------------------------------------------------------- barrier
 
 fn enter_barrier(sim: &mut Sim<World>, w: &mut World, p: usize) {
@@ -868,10 +1349,7 @@ fn resume_from_barrier(sim: &mut Sim<World>, w: &mut World, p: usize) {
         }
         return;
     }
-    let waves = w.parts[p].idle_workers().div_ceil(w.parts[p].cohort.max(1));
-    for _ in 0..waves {
-        start_worker_iteration(sim, w, p);
-    }
+    kick_partition(sim, w, p);
 }
 
 // ------------------------------------------------------------- finish
@@ -1166,6 +1644,12 @@ pub(crate) fn resize_to_allocations(
         if w.parts[p].gate == Gate::Finished {
             continue;
         }
+        if w.parts[p].is_composite() {
+            // Elastic resizing targets cloud worker pools; a composite
+            // partition's pool is its fixed edge-client population and
+            // its cloud footprint is the per-cohort aggregators.
+            continue;
+        }
         let new_alloc = allocations[p].clone();
         if new_alloc.units == w.parts[p].alloc.units {
             continue;
@@ -1257,16 +1741,11 @@ pub(crate) fn apply_lease(
     }
 }
 
-/// Start worker loops on any idle pool slots (used after an elastic
-/// scale-up once the new replicas finish cold-starting).
+/// Start work on any idle capacity (used after an elastic scale-up once
+/// the new replicas finish cold-starting, and after a staged shard
+/// lands). Thin alias over the centralized [`kick_partition`] dispatch.
 pub(crate) fn kick_idle_workers(sim: &mut Sim<World>, w: &mut World, p: usize) {
-    if w.parts[p].gate != Gate::Running || w.parts[p].local_done() {
-        return;
-    }
-    let waves = w.parts[p].idle_workers().div_ceil(w.parts[p].cohort.max(1));
-    for _ in 0..waves {
-        start_worker_iteration(sim, w, p);
-    }
+    kick_partition(sim, w, p);
 }
 
 // --------------------------------------------------------- checkpoints

@@ -32,6 +32,52 @@ pub fn cohort_size(workers: usize, threshold: usize) -> usize {
     }
 }
 
+/// One edge cohort — a weighted sub-partition *below* a cloud partition,
+/// the federated tier of the composite (HiPS stage 1, after GeoMX). A
+/// cohort stands for `clients` edge devices behind one local aggregator:
+/// each round it samples a fraction of them, they train on the cohort's
+/// label-skewed sub-shard, and the aggregated update lands in the parent
+/// partition's PS state weighted by the *full* client population
+/// (population-reweighted FedAvg), so step/epoch/update totals are exact
+/// whatever the sampling fraction or dropout churn. The parent then
+/// participates in the inter-cloud WAN sync as before (HiPS stage 2).
+#[derive(Debug, Clone)]
+pub struct EdgeCohort {
+    /// Client population — the cohort's FedAvg weight. Every round
+    /// advances the parent's step budget by this many client updates
+    /// (clamped only at the final partial round).
+    pub clients: u64,
+    /// The cohort's non-IID local data: a Dirichlet-label-skewed
+    /// sub-shard of the parent's resident shard, carved deterministically
+    /// at deploy time. Empty cohorts fall back to the parent's shard.
+    pub shard: Shard,
+    /// The Dirichlet label weights the sub-shard was carved with
+    /// (diagnostics and the determinism tests).
+    pub label_weights: Vec<f64>,
+    /// A stage-1 round is currently aggregating.
+    pub in_flight: bool,
+    /// Completed stage-1 rounds.
+    pub rounds: u64,
+    /// Sampled clients that physically uploaded, across all rounds.
+    pub participants: u64,
+    /// Sampled clients that dropped mid-round (churn), across all rounds.
+    pub dropouts: u64,
+}
+
+impl EdgeCohort {
+    pub fn new(clients: u64, shard: Shard, label_weights: Vec<f64>) -> EdgeCohort {
+        EdgeCohort {
+            clients,
+            shard,
+            label_weights,
+            in_flight: false,
+            rounds: 0,
+            participants: 0,
+            dropouts: 0,
+        }
+    }
+}
+
 /// What a partition's worker pool is currently allowed to do.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Gate {
@@ -113,12 +159,23 @@ pub struct Partition {
     pub win_iter_count: u64,
     /// Deterministic per-partition jitter stream.
     pub rng: Pcg32,
+    /// The federated edge tier: weighted sub-partitions that aggregate
+    /// locally into this partition's PS state before it joins the WAN
+    /// sync (HiPS stage 1 under stage 2). Empty = the flat per-cloud
+    /// actor, byte-identical to the pre-composite engine.
+    pub cohorts: Vec<EdgeCohort>,
 }
 
 impl Partition {
     /// True once every planned local step has been started.
     pub fn local_done(&self) -> bool {
         self.steps_started >= self.steps_total
+    }
+
+    /// Does this partition own an edge tier (recursive composite), or is
+    /// it the flat per-cloud actor?
+    pub fn is_composite(&self) -> bool {
+        !self.cohorts.is_empty()
     }
 
     /// Workers currently idle (available to restart after an unblock).
@@ -156,6 +213,24 @@ impl Partition {
         } else {
             false
         }
+    }
+
+    /// Account `n` completed steps' epoch bookkeeping in O(1) — exactly
+    /// equivalent to `n` calls of [`Partition::note_step_completed`] —
+    /// and return how many local epochs the bulk closed. A cohort round
+    /// carries a whole client population's updates in one event; looping
+    /// the per-step path would cost O(clients) per round.
+    pub fn note_steps_completed_bulk(&mut self, n: u64) -> u64 {
+        self.steps_completed += n;
+        if self.epoch_steps == 0 {
+            self.steps_into_epoch += n;
+            return 0;
+        }
+        let total = self.steps_into_epoch + n;
+        let crossed = total / self.epoch_steps;
+        self.steps_into_epoch = total % self.epoch_steps;
+        self.epochs_done += crossed as usize;
+        crossed
     }
 
     /// Record one iteration's modeled completion time in the monitoring
@@ -240,6 +315,7 @@ mod tests {
             win_iter_sum: 0.0,
             win_iter_count: 0,
             rng: Pcg32::new(1, 0),
+            cohorts: Vec::new(),
         }
     }
 
@@ -276,6 +352,43 @@ mod tests {
         }
         assert!(p.note_step_completed());
         assert_eq!(p.epochs_done, 2);
+    }
+
+    #[test]
+    fn bulk_step_accounting_matches_the_per_step_path() {
+        // Any split of the same step count must land on identical state.
+        for (eps, chunks) in [
+            (4u64, vec![1u64, 3, 4, 2, 6]),
+            (7, vec![20, 1, 7, 14]),
+            (0, vec![5, 9]), // epoch_steps == 0: counts, never closes
+        ] {
+            let mut bulk = part();
+            let mut single = part();
+            bulk.epoch_steps = eps;
+            single.epoch_steps = eps;
+            for &n in &chunks {
+                let mut closed = 0u64;
+                for _ in 0..n {
+                    if single.note_step_completed() {
+                        closed += 1;
+                    }
+                }
+                assert_eq!(bulk.note_steps_completed_bulk(n), closed);
+            }
+            assert_eq!(bulk.steps_completed, single.steps_completed);
+            assert_eq!(bulk.steps_into_epoch, single.steps_into_epoch);
+            assert_eq!(bulk.epochs_done, single.epochs_done);
+        }
+    }
+
+    #[test]
+    fn composite_flag_follows_the_cohort_set() {
+        let mut p = part();
+        assert!(!p.is_composite(), "flat by default");
+        p.cohorts.push(EdgeCohort::new(1000, Shard::new(vec![0, 1], 1, 99), vec![0.5, 0.5]));
+        assert!(p.is_composite());
+        assert_eq!(p.cohorts[0].clients, 1000);
+        assert!(!p.cohorts[0].in_flight);
     }
 
     #[test]

@@ -51,6 +51,18 @@
 //! gradient one hop — peers beyond a hop are influenced through the
 //! receiver's updated parameters, as in the paper's two-cloud design —
 //! so AMA/SMA are the primary strategies for fan-in topologies.
+//!
+//! **The federated edge tier lives *below* this layer.** When a job runs
+//! with a `"federated"` block, each cloud partition becomes a composite
+//! whose edge cohorts aggregate locally into the cloud's PS (HiPS stage
+//! 1, `start_cohort_round` in the driver) before the cloud joins the
+//! WAN exchange planned here (stage 2). The WAN planner deliberately sees
+//! only the cloud roots: a cohort tree is a *leaf* of whatever ring /
+//! hierarchical / bandwidth-tree shape is configured, never a node in it,
+//! so `n` stays the region count and the Metropolis mixing analysis above
+//! is untouched by millions of clients. [`edge_fan_in`] exposes the
+//! resulting per-cloud fan-in so capacity planning can size aggregator
+//! pools without consulting the engine.
 
 use crate::net::{Fabric, RegionId};
 
@@ -212,6 +224,26 @@ pub fn sequential_weight(edge_weight: f32, incoming_total: f32, applied: f32) ->
         return edge_weight.min(1.0);
     }
     (edge_weight / denom).clamp(edge_weight, 1.0)
+}
+
+/// Per-cloud fan-in of the federated edge tier hanging below one WAN
+/// leaf: `(clients per cohort uplink, cohort uplinks into the cloud PS)`.
+///
+/// A cloud hosting `clients` edge clients carved into `cohorts` pools
+/// aggregates in two hops: each cohort round collapses its clients into
+/// one uplink (HiPS stage 1), and the cloud PS absorbs one uplink per
+/// cohort before the WAN sync ships a single payload upward (stage 2).
+/// The WAN plan's `n` never grows — this helper is how callers reason
+/// about the invisible tier. Zero `clients` or `cohorts` means the cloud
+/// is flat: `(0, 0)`.
+pub fn edge_fan_in(clients: u64, cohorts: usize) -> (u64, usize) {
+    if clients == 0 || cohorts == 0 {
+        return (0, 0);
+    }
+    // Cohorts never sit empty: carving clamps the pool count to the
+    // client population (see `driver::build_cohorts`).
+    let k = cohorts.min(clients as usize).max(1);
+    (clients.div_ceil(k as u64), k)
 }
 
 /// A pluggable sync-topology strategy: given the partition count and the
@@ -593,5 +625,25 @@ mod tests {
     #[should_panic(expected = "self-loop")]
     fn self_loops_rejected() {
         SyncPlan::from_directed_edges(3, &[(0, 0)]);
+    }
+
+    #[test]
+    fn edge_fan_in_keeps_the_wan_plan_at_cloud_granularity() {
+        // Flat clouds contribute nothing below the leaf.
+        assert_eq!(edge_fan_in(0, 8), (0, 0));
+        assert_eq!(edge_fan_in(1000, 0), (0, 0));
+        // 100k clients over 40 cohorts: 2500 clients per uplink, 40
+        // uplinks into the cloud PS — and the WAN plan never sees them.
+        assert_eq!(edge_fan_in(100_000, 40), (2_500, 40));
+        // Ragged split rounds the per-cohort population up.
+        assert_eq!(edge_fan_in(10, 3), (4, 3));
+        // More pools than clients clamps to one client per cohort.
+        assert_eq!(edge_fan_in(3, 16), (1, 3));
+        // However many clients hang below, a 4-cloud job still plans 4
+        // WAN nodes.
+        let f = uniform_fabric(4);
+        for kind in [TopologyKind::Ring, TopologyKind::Hierarchical, TopologyKind::BandwidthTree] {
+            assert_eq!(kind.plan(4, &f).n(), 4, "{kind:?}");
+        }
     }
 }

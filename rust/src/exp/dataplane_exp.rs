@@ -102,7 +102,7 @@ pub fn dataplane_compare(
     base.skip_eval = true;
     base.link_overrides = dataplane_overrides();
     base.dataplane = DataPlaneConfig {
-        placement: Some(placement),
+        placement: Some(placement.clone()),
         // Paper-scale datasets dwarf the scaled-down sample counts here;
         // 256 KB/sample restores a realistic bytes-to-compute ratio.
         sample_bytes: 256 * 1024,
@@ -158,7 +158,7 @@ pub fn dataplane_compare(
     // region's load spreads with little or no staged migration.
     let replicated = if placement.replication == 1 {
         let mut rep = base.clone();
-        rep.dataplane.placement = Some(placement.with_replication(2));
+        rep.dataplane.placement = Some(placement.clone().with_replication(2));
         let (r, est) = run_mode(coord, &rep, PlacementMode::Joint);
         record("joint:r2", &r, est, &mut rows, &mut docs);
         Some(r)

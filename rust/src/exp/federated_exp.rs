@@ -1,0 +1,132 @@
+//! Federated edge-cohort tier — full vs sampled participation under
+//! dropout churn, beyond the paper's cloud-only deployment.
+//!
+//! A 4-cloud heterogeneous WAN (the shared testbed) hosts a six-figure
+//! edge-client population carved into per-cloud cohort pools. Each cohort
+//! round aggregates its clients locally into the cloud's PS (HiPS stage
+//! 1) before the cloud joins the planned WAN sync (stage 2), so the WAN
+//! planner still sees four nodes however many clients hang below. Two
+//! runs compare:
+//!
+//! - **full** — every client participates every round (`sample_frac` 1,
+//!   no dropout): the FedAvg upper bound on uplink traffic;
+//! - **sampled** — 10% of each cohort is sampled per round and 5% of the
+//!   sampled clients drop out as churn: the realistic cross-device
+//!   regime. PS pushes are population-reweighted, so the *update counts
+//!   match the full run exactly* while only the arrived clients' uplink
+//!   bytes hit the wire.
+//!
+//! The acceptance bars (pinned in `rust/tests/federated.rs`): both runs
+//! complete in a few thousand simulator events despite the 100k-client
+//! population (cohort pooling — a round is ~2 events per cohort), equal
+//! client-update totals, and strictly fewer WAN bytes for the sampled
+//! run.
+
+use crate::coordinator::Coordinator;
+use crate::exp::{four_cloud_env, hetero_overrides, print_table, save_result, Scale};
+use crate::sync::{Strategy, SyncConfig};
+use crate::train::{TrainConfig, TrainReport};
+use crate::util::json::Json;
+
+/// Build the federated testbed config: `clients` edge clients over
+/// `cohorts` per-cloud pools on the 4-cloud WAN.
+pub(crate) fn federated_config(
+    model: &str,
+    scale: Scale,
+    clients: usize,
+    cohorts: usize,
+    sample_frac: f64,
+    dropout: f64,
+) -> TrainConfig {
+    let (n_train, n_eval) = crate::data::default_sizes(model);
+    let mut cfg = TrainConfig::new(model);
+    cfg.epochs = scale.epochs(model).min(4);
+    cfg.n_train = n_train;
+    cfg.n_eval = n_eval;
+    cfg.sync = SyncConfig::new(Strategy::AsgdGa, 8);
+    cfg.skip_eval = true;
+    cfg.link_overrides = hetero_overrides();
+    cfg.federated.clients = clients;
+    cfg.federated.cohorts = cohorts;
+    cfg.federated.sample_frac = sample_frac;
+    cfg.federated.dropout = dropout;
+    cfg.federated.validate().unwrap_or_else(|e| panic!("federated config: {e}"));
+    cfg
+}
+
+fn run_one(coord: &Coordinator, cfg: TrainConfig, label: &str) -> TrainReport {
+    let env = four_cloud_env(cfg.n_train);
+    crate::train::run_geo_training(coord.runtime(), &env, env.greedy_plan(), cfg)
+        .unwrap_or_else(|e| panic!("federated {label}: {e}"))
+}
+
+/// `exp --id federated`: full vs sampled participation for a 100k-client
+/// (quick) / 1M-client (full) population over 40 cohorts per cloud.
+pub fn federated_compare(coord: &Coordinator, scale: Scale, model: &str) -> Json {
+    let clients = match scale {
+        Scale::Quick => 100_000,
+        Scale::Full => 1_000_000,
+    };
+    let cohorts = 40;
+    println!(
+        "Federated edge tier: {model}, {clients} clients / {cohorts} cohorts per cloud on the 4-cloud WAN"
+    );
+
+    let mut rows = Vec::new();
+    let mut docs = Vec::new();
+    let mut reports = Vec::new();
+    for (label, frac, drop) in [("full", 1.0, 0.0), ("sampled", 0.1, 0.05)] {
+        let cfg = federated_config(model, scale, clients, cohorts, frac, drop);
+        let r = run_one(coord, cfg, label);
+        let fed = r.federated.clone().unwrap_or_else(|| {
+            panic!("federated {label}: report missing the federated block")
+        });
+        let updates: u64 = r.partitions.iter().map(|p| p.steps).sum();
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.0}s", r.total_time),
+            format!("{}", fed.rounds),
+            format!("{}", fed.participants),
+            format!("{}", fed.dropouts),
+            format!("{}", updates),
+            format!("{:.1}MB", fed.uplink_bytes as f64 / 1e6),
+            format!("{:.1}MB", r.wan_bytes as f64 / 1e6),
+        ]);
+        docs.push(Json::obj(vec![
+            ("mode", Json::str(label)),
+            ("sample_frac", Json::num(frac)),
+            ("dropout", Json::num(drop)),
+            ("clients", Json::num(fed.clients as f64)),
+            ("cohorts", Json::num(fed.cohorts as f64)),
+            ("total_time_s", Json::num(r.total_time)),
+            ("rounds", Json::num(fed.rounds as f64)),
+            ("participants", Json::num(fed.participants as f64)),
+            ("dropouts", Json::num(fed.dropouts as f64)),
+            ("client_updates", Json::num(updates as f64)),
+            ("uplink_bytes", Json::num(fed.uplink_bytes as f64)),
+            ("wan_bytes", Json::num(r.wan_bytes as f64)),
+            ("total_cost_usd", Json::num(r.cost)),
+        ]));
+        reports.push((label, r));
+    }
+    print_table(
+        &["participation", "time", "rounds", "arrived", "dropped", "updates", "uplink", "WAN MB"],
+        &rows,
+    );
+    let full = &reports[0].1;
+    let sampled = &reports[1].1;
+    println!(
+        "  sampled vs full: {:.1}x fewer WAN bytes at equal update counts ({} client updates each)",
+        full.wan_bytes as f64 / (sampled.wan_bytes as f64).max(1.0),
+        full.partitions.iter().map(|p| p.steps).sum::<u64>(),
+    );
+
+    let doc = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("clients", Json::num(clients as f64)),
+        ("cohorts_per_cloud", Json::num(cohorts as f64)),
+        ("modes", Json::arr(docs)),
+    ]);
+    save_result("federated", &doc);
+    doc
+}

@@ -29,12 +29,15 @@
 //! `fleetscale` benchmarks the simulator itself — hundreds of jobs on a
 //! 16-region GPU fleet, reporting events executed/second and the
 //! per-worker vs cohort-aggregation equivalence (module
-//! `fleetscale_exp`). The full id → figure/config/bench mapping lives
-//! in docs/EXPERIMENTS.md.
+//! `fleetscale_exp`); and `federated` runs a 100k-client edge-cohort
+//! tier below the 4 clouds, comparing full vs sampled participation
+//! under dropout churn (module `federated_exp`). The full id →
+//! figure/config/bench mapping lives in docs/EXPERIMENTS.md.
 
 pub mod ablations;
 pub mod dataplane_exp;
 pub mod elastic_exp;
+pub mod federated_exp;
 pub mod fleetscale_exp;
 pub mod motivation;
 pub mod multijob_exp;

@@ -6,7 +6,8 @@
 //!                   [--scheduling elastic|greedy] [--seed 42] [--json]
 //! cloudless plan    [--config <file>]          print the elastic plan
 //! cloudless exp     --id <table1|fig2|fig3|fig7|table4|fig8|fig9|fig10|
-//!                         fig11|topology|elastic|multijob|ablations|all>
+//!                         fig11|topology|elastic|multijob|federated|
+//!                         ablations|all>
 //!                   [--full]
 //! cloudless devices                            print the device catalog
 //! cloudless check                              verify artifacts load + run
@@ -43,8 +44,9 @@ USAGE:
                     [--elastic] [--replan-interval s] [--replan-hysteresis x]
                     [--bw-threshold x]
                     [--data-placement spec] [--placement-mode m] [--sample-kb n]
+                    [--clients n] [--cohorts n] [--sample-frac x] [--dropout x]
   cloudless plan    [--config f]
-  cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|multijob|dataplane|fleetscale|ablations|compression|all> [--full] [--model m]
+  cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|multijob|dataplane|federated|fleetscale|ablations|compression|all> [--full] [--model m]
   cloudless devices
   cloudless check
 
@@ -56,12 +58,20 @@ USAGE:
   (relative delivered-bandwidth divergence that re-plans the topology).
   --data-placement activates the physical data plane (dataset catalog +
   WAN shard migration): resident | uniform:<shards> | skewed:<shards>:<frac>
-  | single:<region>, each optionally suffixed :r<K> for K replica copies
-  per shard (e.g. skewed:8:0.7:r2 — consumers read from the nearest
-  replica, egress is paid once per created copy); --placement-mode picks
-  compute-follows-data | data-follows-compute | joint (default);
-  --sample-kb sets stored KB per sample. exp --id dataplane compares the
-  three modes (plus a replicated joint run) on a skewed catalog.
+  | single:<region> | fed:<clients>:<alpha>, each optionally suffixed
+  :r<K> for K replica copies per shard (e.g. skewed:8:0.7:r2 — consumers
+  read from the nearest replica, egress is paid once per created copy)
+  and/or @<shard>=<r1>,<r2> per-shard residency overrides;
+  --placement-mode picks compute-follows-data | data-follows-compute |
+  joint (default); --sample-kb sets stored KB per sample. exp --id
+  dataplane compares the three modes (plus a replicated joint run) on a
+  skewed catalog.
+  --clients/--cohorts activate the federated edge tier: each cloud's
+  clients are carved into cohort pools that aggregate locally (HiPS
+  stage 1) before the cloud joins the WAN sync (stage 2); --sample-frac
+  samples that fraction of each cohort per round, --dropout drops
+  sampled clients as churn. exp --id federated compares full vs sampled
+  participation under dropout on the 4-cloud WAN.
   exp --id multijob: [--config f (multijob block)] [--jobs n]
   [--mean-interarrival s] [--policy fifo|fair-share|cost-aware|all]
   runs concurrent jobs over one shared inventory (docs/EXPERIMENTS.md).
@@ -135,6 +145,12 @@ fn job_from_args(args: &Args) -> anyhow::Result<JobSpec> {
     anyhow::ensure!(sample_kb >= 0.0, "--sample-kb must be >= 0");
     spec.train.dataplane.sample_bytes = (sample_kb * 1024.0) as u64;
     spec.train.cohort_threshold = args.usize("cohort-threshold", spec.train.cohort_threshold);
+    spec.train.federated.clients = args.usize("clients", spec.train.federated.clients);
+    spec.train.federated.cohorts = args.usize("cohorts", spec.train.federated.cohorts);
+    spec.train.federated.sample_frac =
+        args.f64("sample-frac", spec.train.federated.sample_frac);
+    spec.train.federated.dropout = args.f64("dropout", spec.train.federated.dropout);
+    spec.train.federated.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(spec)
 }
 
@@ -248,6 +264,9 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
                     &exp_model,
                     args.get("data-placement"),
                 );
+            }
+            "federated" => {
+                exp::federated_exp::federated_compare(coord, scale, &exp_model);
             }
             "fleetscale" => {
                 let jobs = args.usize("jobs", 0);

@@ -44,6 +44,32 @@ pub struct ReplanEvent {
     pub data_moves: usize,
 }
 
+/// What the federated edge tier did during one training run (`None`
+/// when the run was flat — the pre-composite behavior). All counters
+/// aggregate over every cloud's cohorts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FederatedReport {
+    /// Total edge clients deployed across the clouds.
+    pub clients: u64,
+    /// Total edge cohorts (stage-1 aggregation pools) across the clouds.
+    pub cohorts: usize,
+    /// Configured per-round client sampling fraction.
+    pub sample_frac: f64,
+    /// Configured per-round dropout (churn) probability.
+    pub dropout: f64,
+    /// Completed stage-1 cohort rounds.
+    pub rounds: u64,
+    /// Sampled clients that physically uploaded a gradient.
+    pub participants: u64,
+    /// Sampled clients that dropped mid-round; their uploads were lost
+    /// but their cohorts' population weights still landed, so update
+    /// totals conserve.
+    pub dropouts: u64,
+    /// Intra-cohort uplink bytes (counted in `wan_bytes`, unmetered by
+    /// the cost model — last-mile edge traffic, not inter-cloud egress).
+    pub uplink_bytes: u64,
+}
+
 /// Per-partition outcome.
 #[derive(Debug, Clone, Default)]
 pub struct PartitionReport {
@@ -106,6 +132,8 @@ pub struct TrainReport {
     /// What the data plane did (None when the job ran without one — the
     /// seed behavior of locally-resident, never-moving data).
     pub dataplane: Option<crate::dataplane::DataPlaneReport>,
+    /// What the federated edge tier did (None for flat runs).
+    pub federated: Option<FederatedReport>,
 }
 
 impl TrainReport {
@@ -222,9 +250,26 @@ impl TrainReport {
                         ("rerouted_shards", Json::num(d.rerouted_shards as f64)),
                         ("failed_shards", Json::num(d.failed_shards as f64)),
                         ("egress_cost_usd", Json::num(d.egress_cost)),
+                        ("storage_cost_usd", Json::num(d.storage_cost)),
                         ("stall_s", Json::num(d.stall_time)),
                         ("staging_done_s", Json::num(d.staging_done)),
                         ("rebalances", Json::num(d.rebalances as f64)),
+                    ]),
+                },
+            ),
+            (
+                "federated",
+                match &self.federated {
+                    None => Json::Null,
+                    Some(f) => Json::obj(vec![
+                        ("clients", Json::num(f.clients as f64)),
+                        ("cohorts", Json::num(f.cohorts as f64)),
+                        ("sample_frac", Json::num(f.sample_frac)),
+                        ("dropout", Json::num(f.dropout)),
+                        ("rounds", Json::num(f.rounds as f64)),
+                        ("participants", Json::num(f.participants as f64)),
+                        ("dropouts", Json::num(f.dropouts as f64)),
+                        ("uplink_bytes", Json::num(f.uplink_bytes as f64)),
                     ]),
                 },
             ),
@@ -248,8 +293,18 @@ impl TrainReport {
                 d.stall_time
             ),
         };
+        let federated = match &self.federated {
+            None => String::new(),
+            Some(f) => format!(
+                " fed[{}c/{}coh rounds={} up={:.1}MB]",
+                f.clients,
+                f.cohorts,
+                f.rounds,
+                f.uplink_bytes as f64 / 1e6
+            ),
+        };
         format!(
-            "{} [{} f={}] time={:.1}s acc={:.4} loss={:.4} cost=${:.4} wan={:.1}MB wait={:.1}s comm={:.1}s{}{}",
+            "{} [{} f={}] time={:.1}s acc={:.4} loss={:.4} cost=${:.4} wan={:.1}MB wait={:.1}s comm={:.1}s{}{}{}",
             self.model,
             self.strategy,
             self.sync_freq,
@@ -262,6 +317,7 @@ impl TrainReport {
             self.total_comm_wait(),
             replans,
             dataplane,
+            federated,
         )
     }
 }
@@ -307,5 +363,32 @@ mod tests {
     fn summary_contains_key_fields() {
         let s = report().summary();
         assert!(s.contains("lenet") && s.contains("ASGD-GA") && s.contains("f=4"));
+    }
+
+    #[test]
+    fn federated_block_serializes_only_when_present() {
+        let flat = report();
+        let j = flat.to_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert!(matches!(parsed.get("federated"), Json::Null), "flat runs carry a null block");
+        assert!(!flat.summary().contains("fed["));
+
+        let mut fed = report();
+        fed.federated = Some(FederatedReport {
+            clients: 100_000,
+            cohorts: 40,
+            sample_frac: 0.1,
+            dropout: 0.05,
+            rounds: 160,
+            participants: 15_200,
+            dropouts: 800,
+            uplink_bytes: 9_999,
+        });
+        let parsed = Json::parse(&fed.to_json().to_string_pretty()).unwrap();
+        let block = parsed.get("federated");
+        assert!((block.get("clients").as_f64().unwrap() - 100_000.0).abs() < 1e-9);
+        assert!((block.get("rounds").as_f64().unwrap() - 160.0).abs() < 1e-9);
+        assert!((block.get("uplink_bytes").as_f64().unwrap() - 9_999.0).abs() < 1e-9);
+        assert!(fed.summary().contains("fed[100000c/40coh"));
     }
 }

@@ -112,6 +112,98 @@ impl Pcg32 {
             xs.swap(i, j);
         }
     }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang squeeze (2000). Shapes below 1
+    /// use the boost `Gamma(a) = Gamma(a+1) * U^(1/a)`, so Dirichlet
+    /// concentration parameters well under 1 (heavy label skew) stay
+    /// exact. Used by the data plane's non-IID cohort sharding.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0, "gamma shape must be positive, got {shape}");
+        if shape < 1.0 {
+            let u = self.f64().max(1e-300);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.f64().max(1e-300);
+            let x2 = x * x;
+            if u < 1.0 - 0.0331 * x2 * x2 {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x2 + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha, ..., alpha) over `k` components: `k` iid gamma
+    /// draws, normalized. Degenerate inputs return the uniform simplex
+    /// point so callers never divide by zero.
+    pub fn dirichlet_symmetric(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        assert!(k > 0, "dirichlet needs at least one component");
+        let draws: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let total: f64 = draws.iter().sum();
+        if total <= 0.0 || !total.is_finite() {
+            return vec![1.0 / k as f64; k];
+        }
+        draws.into_iter().map(|g| g / total).collect()
+    }
+
+    /// Binomial(n, p) draw. Small `n` runs the exact Bernoulli loop;
+    /// large `n` uses the normal approximation (mean np, var np(1-p)),
+    /// rounded and clamped to [0, n]. The approximation only engages
+    /// where its relative error is far below the simulator's jitter
+    /// (np(1-p) >= ~9), so federated dropout draws over 100k-client
+    /// cohorts cost O(1) instead of O(n).
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        let p = p.clamp(0.0, 1.0);
+        if n == 0 || p == 0.0 {
+            return 0;
+        }
+        if p == 1.0 {
+            return n;
+        }
+        if p > 0.5 {
+            return n - self.binomial(n, 1.0 - p);
+        }
+        let mean = n as f64 * p;
+        let var = mean * (1.0 - p);
+        if n <= 64 {
+            let mut hits = 0u64;
+            for _ in 0..n {
+                if self.f64() < p {
+                    hits += 1;
+                }
+            }
+            return hits;
+        }
+        if var < 9.0 {
+            // Waiting-time (geometric-gap) method: O(np) expected draws,
+            // exact, so a 0.01% dropout over a million clients costs ~100
+            // draws instead of a million Bernoulli trials.
+            let log_q = (1.0 - p).ln();
+            let mut hits = 0u64;
+            let mut pos = 0u64;
+            loop {
+                let u = self.f64().max(1e-300);
+                let gap = (u.ln() / log_q).floor() as u64;
+                pos = pos.saturating_add(gap).saturating_add(1);
+                if pos > n {
+                    return hits;
+                }
+                hits += 1;
+            }
+        }
+        let draw = mean + var.sqrt() * self.normal();
+        (draw.round().max(0.0) as u64).min(n)
+    }
 }
 
 #[cfg(test)]
@@ -178,6 +270,81 @@ mod tests {
         let n = 100_000;
         let mean: f64 = (0..n).map(|_| r.lognormal_mean1(0.3)).sum::<f64>() / n as f64;
         assert!((mean - 1.0).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn gamma_moments_match() {
+        // Gamma(k, 1) has mean k and variance k; check both regimes of
+        // the sampler (boost below 1, squeeze above).
+        for &shape in &[0.3, 1.0, 2.5, 9.0] {
+            let mut r = Pcg32::new(11, 3);
+            let n = 50_000;
+            let (mut sum, mut sq) = (0.0, 0.0);
+            for _ in 0..n {
+                let x = r.gamma(shape);
+                assert!(x >= 0.0 && x.is_finite());
+                sum += x;
+                sq += x * x;
+            }
+            let mean = sum / n as f64;
+            let var = sq / n as f64 - mean * mean;
+            assert!((mean - shape).abs() < 0.08 * shape.max(1.0), "shape {shape}: mean {mean}");
+            assert!((var - shape).abs() < 0.25 * shape.max(1.0), "shape {shape}: var {var}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_skews_with_alpha() {
+        let mut r = Pcg32::new(21, 0);
+        let heavy = r.dirichlet_symmetric(0.1, 8);
+        assert!((heavy.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        let mut r2 = Pcg32::new(21, 1);
+        let flat = r2.dirichlet_symmetric(100.0, 8);
+        assert!((flat.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // Low alpha concentrates mass; high alpha spreads it.
+        let max_heavy = heavy.iter().cloned().fold(0.0, f64::max);
+        let max_flat = flat.iter().cloned().fold(0.0, f64::max);
+        assert!(max_heavy > max_flat, "alpha=0.1 max {max_heavy} vs alpha=100 max {max_flat}");
+        assert!(max_flat < 0.25, "alpha=100 over 8 components is near-uniform: {flat:?}");
+    }
+
+    #[test]
+    fn binomial_matches_moments_in_every_regime() {
+        // (n, p) pairs exercising exact loop, geometric-gap, symmetry
+        // flip, and the normal approximation.
+        for &(n, p) in &[(40u64, 0.3), (1_000_000, 0.000_05), (50, 0.9), (100_000, 0.1)] {
+            let mut r = Pcg32::new(17, n ^ 5);
+            let trials = 3_000;
+            let mut sum = 0.0;
+            for _ in 0..trials {
+                let x = r.binomial(n, p);
+                assert!(x <= n);
+                sum += x as f64;
+            }
+            let mean = sum / trials as f64;
+            let expect = n as f64 * p;
+            let sd = (expect * (1.0 - p)).sqrt();
+            let tol = 4.0 * sd / (trials as f64).sqrt() + 0.05;
+            assert!((mean - expect).abs() < tol, "n={n} p={p}: mean {mean} expect {expect}");
+        }
+        let mut r = Pcg32::new(1, 1);
+        assert_eq!(r.binomial(0, 0.5), 0);
+        assert_eq!(r.binomial(10, 0.0), 0);
+        assert_eq!(r.binomial(10, 1.0), 10);
+    }
+
+    #[test]
+    fn new_samplers_are_deterministic() {
+        let mut a = Pcg32::new(99, 7);
+        let mut b = Pcg32::new(99, 7);
+        for _ in 0..50 {
+            assert_eq!(a.gamma(0.5).to_bits(), b.gamma(0.5).to_bits());
+            assert_eq!(a.binomial(10_000, 0.01), b.binomial(10_000, 0.01));
+        }
+        assert_eq!(
+            Pcg32::new(3, 3).dirichlet_symmetric(0.5, 6),
+            Pcg32::new(3, 3).dirichlet_symmetric(0.5, 6)
+        );
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Federated edge-cohort acceptance suite (the ISSUE-7 cases): the
+//! recursive composite partition must be *accounting-preserving* and
+//! cheap, not just plausible. Driven by the built-in synthetic model, so
+//! this suite runs everywhere tier-1 runs.
+//!
+//! - Zero cohorts (or zero clients) is the flat per-cloud engine, byte
+//!   for byte — the composite layer costs nothing when off.
+//! - Sampled rounds do *exactly* the update counts of full participation
+//!   (population-reweighted FedAvg), and dropout churn conserves step
+//!   and epoch totals.
+//! - The Dirichlet cohort carve is deterministic: same seed, same
+//!   report, byte for byte.
+//! - Sampling pays: fewer WAN bytes than full participation at equal
+//!   update counts.
+//! - A 100k-client round costs a few hundred model executions, not a
+//!   hundred thousand (cohort pooling).
+
+use cloudless::cloud::devices::Device;
+use cloudless::cloud::CloudEnv;
+use cloudless::runtime::PjrtRuntime;
+use cloudless::sync::{Strategy, SyncConfig};
+use cloudless::train::{run_geo_training, TrainConfig, TrainReport};
+
+fn rt() -> PjrtRuntime {
+    // The synthetic model never touches the artifacts directory.
+    PjrtRuntime::new("artifacts-not-needed").expect("PJRT CPU client")
+}
+
+fn four_cloud_env() -> CloudEnv {
+    CloudEnv::multi_region(vec![
+        ("Shanghai", Device::CascadeLake, 12, 128),
+        ("Chongqing", Device::Skylake, 12, 128),
+        ("Beijing", Device::Skylake, 12, 128),
+        ("Guangzhou", Device::IceLake, 12, 128),
+    ])
+}
+
+fn base_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::new("synthetic");
+    cfg.epochs = 2;
+    cfg.n_train = 512;
+    cfg.n_eval = 64;
+    cfg.sync = SyncConfig::new(Strategy::AsgdGa, 8);
+    cfg.skip_eval = true;
+    cfg.seed = 17;
+    cfg
+}
+
+fn fed_cfg(clients: usize, cohorts: usize, sample_frac: f64, dropout: f64) -> TrainConfig {
+    let mut cfg = base_cfg();
+    cfg.federated.clients = clients;
+    cfg.federated.cohorts = cohorts;
+    cfg.federated.sample_frac = sample_frac;
+    cfg.federated.dropout = dropout;
+    cfg
+}
+
+fn run(cfg: TrainConfig) -> TrainReport {
+    let rt = rt();
+    let env = four_cloud_env();
+    run_geo_training(&rt, &env, env.greedy_plan(), cfg).unwrap()
+}
+
+/// Serialize with wall time pinned (the only non-deterministic field).
+fn train_json(mut r: TrainReport) -> String {
+    r.wall_seconds = 0.0;
+    r.to_json().to_string_pretty()
+}
+
+fn total_steps(r: &TrainReport) -> u64 {
+    r.partitions.iter().map(|p| p.steps).sum()
+}
+
+fn per_part_steps(r: &TrainReport) -> Vec<u64> {
+    r.partitions.iter().map(|p| p.steps).collect()
+}
+
+// ----------------------------------------------- flat-path byte identity
+
+#[test]
+fn zero_cohorts_is_the_flat_engine_byte_for_byte() {
+    let flat = run(base_cfg());
+    assert!(flat.federated.is_none(), "flat runs carry no federated block");
+    // Half-configured edge tiers (either knob zero) must not perturb the
+    // engine in any way: same events, same RNG draws, same JSON.
+    let no_cohorts = run(fed_cfg(100_000, 0, 1.0, 0.0));
+    let no_clients = run(fed_cfg(0, 40, 1.0, 0.0));
+    assert_eq!(
+        train_json(flat.clone()),
+        train_json(no_cohorts),
+        "cohorts: 0 must reproduce the flat TrainReport byte for byte"
+    );
+    assert_eq!(
+        train_json(flat),
+        train_json(no_clients),
+        "clients: 0 must reproduce the flat TrainReport byte for byte"
+    );
+}
+
+// ------------------------------------------- update-count conservation
+
+#[test]
+fn sampled_rounds_do_exactly_the_full_participation_update_counts() {
+    let full = run(fed_cfg(10_000, 16, 1.0, 0.0));
+    let sampled = run(fed_cfg(10_000, 16, 0.1, 0.0));
+    assert_eq!(
+        per_part_steps(&full),
+        per_part_steps(&sampled),
+        "population-reweighted rounds must conserve per-cloud step totals"
+    );
+    let updates = |r: &TrainReport| -> u64 { r.partitions.iter().map(|p| p.local_updates).sum() };
+    assert_eq!(updates(&full), updates(&sampled), "PS update counters must match exactly");
+    // The budget is client-granular: every client trains once per epoch.
+    let fed = full.federated.as_ref().expect("federated block present");
+    assert_eq!(fed.clients, 10_000, "every configured client was carved into a cohort");
+    assert_eq!(total_steps(&full), 10_000 * 2, "clients x epochs client-updates");
+    // Sampling showed up physically: ~10x fewer arrived uploads.
+    let sfed = sampled.federated.as_ref().unwrap();
+    assert!(
+        sfed.participants * 5 < fed.participants,
+        "sampled participants {} must be well under full {}",
+        sfed.participants,
+        fed.participants
+    );
+}
+
+#[test]
+fn dropout_churn_conserves_step_and_epoch_totals() {
+    let calm = run(fed_cfg(10_000, 16, 0.5, 0.0));
+    let churny = run(fed_cfg(10_000, 16, 0.5, 0.3));
+    assert_eq!(
+        per_part_steps(&calm),
+        per_part_steps(&churny),
+        "dropout loses uploads, never the cohort's aggregate step weight"
+    );
+    assert_eq!(total_steps(&churny), 10_000 * 2);
+    let fed = churny.federated.as_ref().unwrap();
+    assert!(fed.dropouts > 0, "30% dropout over thousands of samples must drop someone");
+    // Dropped clients are the sampled-minus-arrived remainder, never
+    // phantom extras.
+    let sampled_total = fed.participants + fed.dropouts;
+    assert!(
+        fed.dropouts * 2 < sampled_total,
+        "dropouts {} must stay the minority of {} sampled",
+        fed.dropouts,
+        sampled_total
+    );
+    assert_eq!(calm.federated.as_ref().unwrap().dropouts, 0, "zero dropout drops no one");
+}
+
+// ------------------------------------------------ carve determinism
+
+#[test]
+fn cohort_carving_and_sampling_are_deterministic() {
+    let a = run(fed_cfg(10_000, 16, 0.2, 0.1));
+    let b = run(fed_cfg(10_000, 16, 0.2, 0.1));
+    assert_eq!(
+        train_json(a),
+        train_json(b),
+        "same seed must reproduce the federated TrainReport byte for byte"
+    );
+    // A different seed moves the Dirichlet carve and the sampling draws.
+    let mut other = fed_cfg(10_000, 16, 0.2, 0.1);
+    other.seed = 18;
+    let c = run(other);
+    let p = |r: &TrainReport| r.federated.as_ref().unwrap().participants;
+    let d = |r: &TrainReport| r.federated.as_ref().unwrap().dropouts;
+    let a2 = run(fed_cfg(10_000, 16, 0.2, 0.1));
+    assert!(
+        p(&a2) != p(&c) || d(&a2) != d(&c) || a2.total_time != c.total_time,
+        "a different seed must change the sampled trajectory"
+    );
+}
+
+// ---------------------------------------------- sampling saves WAN bytes
+
+#[test]
+fn sampled_participation_sends_fewer_wan_bytes_at_equal_update_counts() {
+    let full = run(fed_cfg(100_000, 40, 1.0, 0.0));
+    let sampled = run(fed_cfg(100_000, 40, 0.1, 0.05));
+    assert_eq!(
+        per_part_steps(&full),
+        per_part_steps(&sampled),
+        "equal update counts are the premise of the comparison"
+    );
+    assert!(
+        sampled.wan_bytes < full.wan_bytes,
+        "sampling must cut WAN bytes: sampled {} vs full {}",
+        sampled.wan_bytes,
+        full.wan_bytes
+    );
+    let up = |r: &TrainReport| r.federated.as_ref().unwrap().uplink_bytes;
+    assert!(
+        up(&sampled) * 5 < up(&full),
+        "~10x sampling must cut uplink bytes well past 5x: {} vs {}",
+        up(&sampled),
+        up(&full)
+    );
+}
+
+// --------------------------------------------------- cohort-pool scale
+
+#[test]
+fn a_hundred_thousand_clients_round_in_a_few_hundred_executions() {
+    let r = run(fed_cfg(100_000, 40, 0.1, 0.05));
+    let fed = r.federated.as_ref().expect("federated block present");
+    assert_eq!(fed.clients, 100_000);
+    assert_eq!(fed.cohorts, 40 * 4, "40 cohorts carved per cloud");
+    assert_eq!(total_steps(&r), 100_000 * 2, "every client trained every epoch");
+    // Cohort pooling: one model execution per cohort round, not one per
+    // client — the whole run is a few hundred executions / rounds, so
+    // the simulator stays in the low thousands of events.
+    assert!(
+        r.pjrt_executions < 2_000,
+        "100k clients must pool into cohort rounds, got {} executions",
+        r.pjrt_executions
+    );
+    assert!(
+        fed.rounds < 2_000,
+        "round count must scale with cohorts x epochs, got {}",
+        fed.rounds
+    );
+    assert!(fed.rounds >= 160, "every cohort rounds at least once per epoch floor");
+}
