@@ -18,6 +18,9 @@
 //!   "elastic": {"enabled": true,       // live re-scheduling control loop
 //!               "interval_s": 60, "hysteresis": 0.2,
 //!               "bw_threshold": 0.5, "smoothing": 0.5},
+//!   "wan_lanes": true,                 // WAN priority lanes (default false)
+//!   "relay_routes": true,              // 2-hop relay routes (default false)
+//!   "auto_compression": true,          // controller picks per-link codecs
 //!   "multijob": {"jobs": 6,            // multi-job fleet (exp --id multijob)
 //!                "mean_interarrival_s": 0, "policy": "fair-share",
 //!                "min_units": 1},
@@ -115,6 +118,24 @@ pub fn parse_job(text: &str) -> Result<JobSpec> {
         train.cohort_threshold = cohort.as_usize().ok_or_else(|| {
             anyhow::anyhow!("\"cohort_threshold\" must be a non-negative integer (0 = off)")
         })?;
+    }
+    let lanes = j.get("wan_lanes");
+    if !lanes.is_null() {
+        train.wan_lanes = lanes
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("\"wan_lanes\" must be a boolean"))?;
+    }
+    let relays = j.get("relay_routes");
+    if !relays.is_null() {
+        train.relay_routes = relays
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("\"relay_routes\" must be a boolean"))?;
+    }
+    let auto_comp = j.get("auto_compression");
+    if !auto_comp.is_null() {
+        train.elastic.auto_compression = auto_comp
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("\"auto_compression\" must be a boolean"))?;
     }
 
     let strategy_name = j.get("strategy").as_str().unwrap_or("asgd");
@@ -389,6 +410,34 @@ mod tests {
             parse_job(&format!(r#"{{"model":"lenet","cohort_threshold":"big",{region}}}"#))
                 .is_err()
         );
+    }
+
+    #[test]
+    fn wan_lane_keys_parse() {
+        let region = r#""regions":[{"name":"X","device":"sky","units":6,"data":100}]"#;
+        let spec = parse_job(&format!(
+            r#"{{"model":"lenet","wan_lanes":true,"relay_routes":true,
+                "auto_compression":true,{region}}}"#
+        ))
+        .unwrap();
+        assert!(spec.train.wan_lanes);
+        assert!(spec.train.relay_routes);
+        assert!(spec.train.elastic.auto_compression);
+        // Defaults: all off — the seed's single-FIFO fabric and static
+        // codec.
+        let off = parse_job(&format!(r#"{{"model":"lenet",{region}}}"#)).unwrap();
+        assert!(!off.train.wan_lanes);
+        assert!(!off.train.relay_routes);
+        assert!(!off.train.elastic.auto_compression);
+        // Wrong JSON types error rather than being silently ignored.
+        for bad in [
+            r#""wan_lanes":"yes""#,
+            r#""relay_routes":1"#,
+            r#""auto_compression":"on""#,
+        ] {
+            let doc = format!(r#"{{"model":"lenet",{bad},{region}}}"#);
+            assert!(parse_job(&doc).is_err(), "must reject: {doc}");
+        }
     }
 
     #[test]

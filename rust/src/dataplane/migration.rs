@@ -32,7 +32,7 @@
 use crate::cloud::cost::CostModel;
 use crate::engine::driver::{self, World};
 use crate::engine::partition::Gate;
-use crate::net::RegionId;
+use crate::net::{RegionId, TrafficClass};
 use crate::sim::{Sim, Time};
 
 use super::catalog::{DatasetCatalog, PlacementSpec};
@@ -203,8 +203,11 @@ impl DataPlaneState {
     }
 }
 
-/// Put move `idx` on the WAN now. The transfer FIFO-queues on the
-/// directed link behind any earlier traffic; egress is priced at the
+/// Put move `idx` on the WAN now. The transfer rides the `BulkData`
+/// lane: on a lanes-off fabric it FIFO-queues behind any earlier
+/// traffic (the seed behavior); with `wan_lanes` it yields to
+/// latency-critical barrier/gradient transfers at serialization
+/// boundaries. Egress is priced at the
 /// source replica's object-store rate at send time. A zero-byte handoff
 /// (the destination already holds a replica) delivers immediately
 /// without touching the fabric. Dropped transfers (failure injection)
@@ -225,7 +228,7 @@ pub(crate) fn begin_move(sim: &mut Sim<World>, w: &mut World, idx: usize) {
         });
         return;
     }
-    let t = w.fabric.transfer(from, to, bytes, now);
+    let t = w.fabric.transfer_class(from, to, bytes, now, TrafficClass::BulkData);
     w.wan_transfers += 1;
     if t.dropped {
         let attempts = {

@@ -15,8 +15,9 @@
 
 use std::rc::Rc;
 
+use crate::net::{TrafficClass, Transfer};
 use crate::sim::{Sim, Time};
-use crate::sync::{apply_payload, make_payload, Payload};
+use crate::sync::{apply_payload, encode_gradient, make_payload, Compression, Payload};
 
 use super::driver::{self, World};
 use super::partition::Gate;
@@ -120,6 +121,44 @@ pub(crate) fn unblock_comm(sim: &mut Sim<World>, w: &mut World, p: usize) {
     }
 }
 
+/// Ship `bytes` from partition `p` toward plan peer `peer` under the
+/// given traffic class, following the plan's auxiliary 2-hop relay route
+/// when one is recorded (store-and-forward: the relay fully receives the
+/// payload before re-serializing it on the second hop, so the route's
+/// rate is the harmonic combination `engine::topology::relay_route`
+/// planned with). Accounts `wan_transfers`/`wan_bytes` — both hops of a
+/// relay are real WAN traffic — and leaves wire-time, acks, and drop
+/// recovery to the caller. The returned `done` is the *sender's*
+/// serialization finish (hop 1); `arrival` is delivery at `peer`.
+pub(crate) fn wan_send(
+    w: &mut World,
+    p: usize,
+    peer: usize,
+    bytes: u64,
+    now: Time,
+    class: TrafficClass,
+) -> Transfer {
+    let (from, to) = (w.parts[p].region, w.parts[peer].region);
+    let via = w.plan.relay_via(p, peer).map(|r| w.parts[r].region);
+    let t1 = match via {
+        Some(r) => w.fabric.transfer_class(from, r, bytes, now, class),
+        None => w.fabric.transfer_class(from, to, bytes, now, class),
+    };
+    w.wan_transfers += 1;
+    if t1.dropped {
+        return t1;
+    }
+    w.wan_bytes += bytes;
+    let Some(r) = via else { return t1 };
+    let t2 = w.fabric.transfer_class(r, to, bytes, t1.arrival, class);
+    w.wan_transfers += 1;
+    if t2.dropped {
+        return Transfer { start: t1.start, done: t1.done, arrival: f64::INFINITY, dropped: true };
+    }
+    w.wan_bytes += bytes;
+    Transfer { start: t1.start, done: t1.done, arrival: t2.arrival, dropped: false }
+}
+
 /// Pack the payload and put it on the WAN along every planned edge.
 ///
 /// Gradient payloads (ASGD/ASGD-GA) carry the sender's *local*
@@ -128,36 +167,68 @@ pub(crate) fn unblock_comm(sim: &mut Sim<World>, w: &mut World, p: usize) {
 /// updated model), not by re-forwarding, exactly as in the paper's
 /// two-cloud design. Model-averaging payloads mix directly, which is why
 /// AMA/SMA are the primary strategies for the fan-in N-cloud topologies.
+///
+/// Edges are grouped by their *effective* codec — the elastic
+/// controller's per-link auto-compression overrides (`World::link_codecs`)
+/// fall back to the job-wide `sync.compression` — and the accumulated
+/// gradient is drained once and encoded once per codec group, so TopK
+/// error feedback enters the accumulator only for mass actually withheld.
+/// With no overrides there is a single group in plan order: byte- and
+/// RNG-identical to the ungrouped path.
 pub(crate) fn perform_send(sim: &mut Sim<World>, w: &mut World, p: usize) {
     let edges: Vec<PlanEdge> = w.plan.outgoing(p).to_vec();
     if edges.is_empty() {
         return; // single-partition job: nothing to sync with
     }
-    let payload = Rc::new(make_payload(&w.cfg.sync, &mut w.parts[p].ps));
-    let bytes = payload.wire_bytes();
+    let base = w.cfg.sync;
+    let mut groups: Vec<(Compression, Vec<PlanEdge>)> = Vec::new();
+    for e in &edges {
+        let key = (w.parts[p].region, w.parts[e.to].region);
+        let codec = w.link_codecs.get(&key).copied().unwrap_or(base.compression);
+        match groups.iter_mut().find(|(c, _)| *c == codec) {
+            Some((_, es)) => es.push(*e),
+            None => groups.push((codec, vec![*e])),
+        }
+    }
+    let payloads: Vec<(Rc<Payload>, Vec<PlanEdge>)> = if base.strategy.sends_gradient() {
+        let (grad, steps) = w.parts[p].ps.take_accumulated();
+        groups
+            .into_iter()
+            .map(|(codec, es)| {
+                (Rc::new(encode_gradient(codec, &grad, steps, &mut w.parts[p].ps)), es)
+            })
+            .collect()
+    } else {
+        // Model-averaging payloads ship uncompressed parameters: every
+        // group carries the same snapshot.
+        let payload = Rc::new(Payload::Params(w.parts[p].ps.snapshot_params()));
+        groups.into_iter().map(|(_, es)| (Rc::clone(&payload), es)).collect()
+    };
     let now = sim.now();
     let mut ack_at: Option<Time> = None;
     let mut any_dropped = false;
-    for e in &edges {
-        let (from, to) = (w.parts[p].region, w.parts[e.to].region);
-        let t = w.fabric.transfer(from, to, bytes, now);
-        w.wan_transfers += 1;
-        if t.dropped {
-            any_dropped = true;
-            continue;
+    for (payload, es) in payloads {
+        let bytes = payload.wire_bytes();
+        for e in &es {
+            let t = wan_send(w, p, e.to, bytes, now, TrafficClass::Gradient);
+            if t.dropped {
+                any_dropped = true;
+                continue;
+            }
+            w.parts[p].wire_time += t.done - t.start;
+            // The gRPC send slot frees when this edge's payload lands AND
+            // its ack returns (one edge-specific RTT; overrides may differ
+            // from the uniform mesh latency). Relayed edges approximate
+            // the ack with the direct link's RTT share.
+            let (from, to) = (w.parts[p].region, w.parts[e.to].region);
+            let latency = w.fabric.link_latency(from, to).unwrap_or(w.cfg.link.latency_s);
+            let ack = t.arrival + latency;
+            ack_at = Some(ack_at.map_or(ack, |a: Time| a.max(ack)));
+            let (peer, weight, pl) = (e.to, e.weight, Rc::clone(&payload));
+            sim.schedule_at(t.arrival, move |sim, w: &mut World| {
+                receive_payload(sim, w, peer, &pl, weight);
+            });
         }
-        w.wan_bytes += bytes;
-        w.parts[p].wire_time += t.done - t.start;
-        // The gRPC send slot frees when this edge's payload lands AND its
-        // ack returns (one edge-specific RTT; overrides may differ from
-        // the uniform mesh latency).
-        let latency = w.fabric.link_latency(from, to).unwrap_or(w.cfg.link.latency_s);
-        let ack = t.arrival + latency;
-        ack_at = Some(ack_at.map_or(ack, |a: Time| a.max(ack)));
-        let (peer, weight, pl) = (e.to, e.weight, Rc::clone(&payload));
-        sim.schedule_at(t.arrival, move |sim, w: &mut World| {
-            receive_payload(sim, w, peer, &pl, weight);
-        });
     }
     // The PS communicator is a request/response sender: its send slot
     // stays busy until the last ack returns (serialization + RTT).
@@ -205,15 +276,15 @@ pub(crate) fn barrier_exchange(
         let bytes = payload.wire_bytes();
         let mut slot_busy: Option<Time> = None;
         for e in &edges {
-            let (from, to) = (w.parts[p].region, w.parts[e.to].region);
-            let t = w.fabric.transfer(from, to, bytes, now);
-            w.wan_transfers += 1;
+            // Barrier payloads are latency-critical: with lanes enabled
+            // they preempt in-flight bulk migration instead of sharing
+            // the gradient lane's queue position.
+            let t = wan_send(w, p, e.to, bytes, now, TrafficClass::Barrier);
             if t.dropped {
                 // Lossy link: this edge's payload is lost; the barrier
                 // still releases (the receiver keeps its local model).
                 continue;
             }
-            w.wan_bytes += bytes;
             w.parts[p].wire_time += t.done - t.start;
             slot_busy = Some(slot_busy.map_or(t.done, |s: Time| s.max(t.done)));
             release_at = release_at.max(t.arrival);

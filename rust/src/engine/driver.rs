@@ -47,9 +47,11 @@ use crate::faas::{autoscaler, FaasRuntime, FunctionKind, FunctionSpec};
 use crate::net::{Fabric, LinkSpec, SharedFabric};
 use crate::ps::PsState;
 use crate::runtime::{ModelRuntime, PjrtRuntime};
-use crate::sched::elastic::{ElasticConfig, ElasticController, MonitorSample, ReplanDecision};
+use crate::sched::elastic::{
+    ElasticConfig, ElasticController, LinkCodec, MonitorSample, ReplanDecision,
+};
 use crate::sim::{Sim, Time};
-use crate::sync::SyncConfig;
+use crate::sync::{Compression, SyncConfig};
 use crate::train::calib;
 use crate::train::metrics::{EvalPoint, PartitionReport, ReplanEvent, TrainReport};
 use crate::util::rng::Pcg32;
@@ -182,6 +184,17 @@ pub struct TrainConfig {
     /// The federated edge tier below the clouds (off by default; see
     /// [`FederatedConfig`] and docs/CONFIG.md).
     pub federated: FederatedConfig,
+    /// WAN priority lanes: when true the fabric schedules transfers in
+    /// per-class lanes (Control > Barrier > Gradient > BulkData) so
+    /// latency-critical exchanges preempt bulk shard migration at
+    /// serialization boundaries. Off (the default) is byte-identical to
+    /// the single-FIFO fabric.
+    pub wan_lanes: bool,
+    /// Auxiliary 2-hop relay routes: when true the sync planner may route
+    /// a planned edge through an intermediate region whenever the
+    /// two-hop path's effective bandwidth beats the direct link (see
+    /// `engine::topology::relay_route`).
+    pub relay_routes: bool,
 }
 
 impl TrainConfig {
@@ -208,6 +221,8 @@ impl TrainConfig {
             dataplane: DataPlaneConfig::default(),
             cohort_threshold: 0,
             federated: FederatedConfig::default(),
+            wan_lanes: false,
+            relay_routes: false,
         }
     }
 }
@@ -248,7 +263,8 @@ pub(crate) struct World {
     /// Per-partition FaaS worker-pool function key (one function per
     /// cloud, scaled to N replicas — the autoscaler's resize unit).
     pub(crate) worker_keys: Vec<String>,
-    /// The elastic re-scheduler, when `cfg.elastic.enabled`.
+    /// The elastic re-scheduler, when `cfg.elastic.enabled` or
+    /// `cfg.elastic.auto_compression` (compression-only control loop).
     pub(crate) controller: Option<ElasticController>,
     /// Committed re-plan events (copied into the report).
     pub(crate) replans: Vec<ReplanEvent>,
@@ -274,6 +290,10 @@ pub(crate) struct World {
     /// excluded from the metered inter-cloud WAN cost: last-mile edge
     /// traffic is cheap.
     pub(crate) fed_uplink_bytes: u64,
+    /// Per-directed-region-pair gradient codec overrides the elastic
+    /// controller installed (`auto_compression`); links not present ship
+    /// the configured `sync.compression`.
+    pub(crate) link_codecs: std::collections::BTreeMap<(usize, usize), Compression>,
 }
 
 impl World {
@@ -309,7 +329,8 @@ pub(crate) fn run_geo_training_planned(
     planned: Option<crate::dataplane::PlannedDataPlane>,
 ) -> Result<TrainReport> {
     let wall0 = std::time::Instant::now();
-    let fabric = Fabric::full_mesh(cfg.seed, env.regions.len(), &cfg.link, &cfg.link_overrides);
+    let mut fabric = Fabric::full_mesh(cfg.seed, env.regions.len(), &cfg.link, &cfg.link_overrides);
+    fabric.set_lanes(cfg.wan_lanes);
     let shared = SharedFabric::new(fabric);
     let (mut sim, mut world) = deploy_job_planned(rt, env, allocations, cfg, 0.0, shared, planned)?;
     let drained = sim.run_with_limit(&mut world, 200_000_000);
@@ -605,7 +626,7 @@ pub(crate) fn deploy_job_planned(
     // bandwidths the initial sync topology was planned against, and —
     // under an active data plane — the *post-migration* residency (its
     // Algorithm-1 candidates must match the layout actually trained on).
-    let controller = if cfg.elastic.enabled {
+    let controller = if cfg.elastic.enabled || cfg.elastic.auto_compression {
         let nominal_bw: Vec<(usize, usize, f64)> = (0..n_parts)
             .flat_map(|a| (0..n_parts).filter(move |b| *b != a).map(move |b| (a, b)))
             .filter_map(|(a, b)| fabric.link_bandwidth(a, b).map(|bw| (a, b, bw)))
@@ -638,7 +659,7 @@ pub(crate) fn deploy_job_planned(
         st
     });
     let world = World {
-        plan: fabric.with(|f| cfg.topology.plan(n_parts, f)),
+        plan: fabric.with(|f| cfg.topology.plan_with(n_parts, f, cfg.relay_routes)),
         cfg,
         env: env.clone(),
         model,
@@ -662,6 +683,7 @@ pub(crate) fn deploy_job_planned(
         start_at,
         dataplane,
         fed_uplink_bytes: 0,
+        link_codecs: std::collections::BTreeMap::new(),
     };
 
     // Kick off every partition at training start; a partition with no
@@ -1474,8 +1496,21 @@ fn apply_replan(sim: &mut Sim<World>, w: &mut World, dec: &ReplanDecision) {
         for &(from, to, bps) in &dec.bw_view {
             observed.add_link(from, to, LinkSpec { bandwidth_bps: bps, ..w.cfg.link.clone() });
         }
-        w.plan = w.cfg.topology.plan(w.parts.len(), &observed);
+        w.plan = w.cfg.topology.plan_with(w.parts.len(), &observed, w.cfg.relay_routes);
         topology_replanned = true;
+    }
+    // Elastic per-link compression: install the controller's codec
+    // reassignments; `comm::perform_send` reads them per edge at the next
+    // sync, so the switch takes effect at payload granularity.
+    let mut compression_changes: Vec<(usize, usize, String)> = Vec::new();
+    for &(from, to, codec) in &dec.codec_changes {
+        let wire = match codec {
+            LinkCodec::None => Compression::None,
+            LinkCodec::TopK => Compression::TopK { ratio: 0.01 },
+            LinkCodec::Q8 => Compression::Q8,
+        };
+        w.link_codecs.insert((from, to), wire);
+        compression_changes.push((from, to, codec.name().to_string()));
     }
     // Data-plane rebalancing rides only on *committed* load re-plans
     // (the same hysteresis gate), so observed-power drift can relocate
@@ -1485,22 +1520,28 @@ fn apply_replan(sim: &mut Sim<World>, w: &mut World, dec: &ReplanDecision) {
     } else {
         0
     };
-    if !load_changed && !topology_replanned {
+    if !load_changed && !topology_replanned && compression_changes.is_empty() {
         return;
     }
-    let cause = match (load_changed, topology_replanned) {
-        (true, true) => "load+bandwidth",
-        (true, false) => "load",
-        _ => "bandwidth",
-    };
+    let mut causes: Vec<&str> = Vec::new();
+    if load_changed {
+        causes.push("load");
+    }
+    if topology_replanned {
+        causes.push("bandwidth");
+    }
+    if !compression_changes.is_empty() {
+        causes.push("compression");
+    }
     w.replans.push(ReplanEvent {
         t: now,
-        cause: cause.to_string(),
+        cause: causes.join("+"),
         plan_delta: dec.plan_delta,
         straggler: dec.straggler,
         units: w.parts.iter().map(|p| p.alloc.total_units()).collect(),
         topology_replanned,
         data_moves,
+        compression_changes,
     });
 }
 
@@ -1737,6 +1778,7 @@ pub(crate) fn apply_lease(
             units: w.parts.iter().map(|p| p.alloc.total_units()).collect(),
             topology_replanned: false,
             data_moves: 0,
+            compression_changes: Vec::new(),
         });
     }
 }

@@ -85,6 +85,11 @@ pub struct PlanEdge {
 pub struct SyncPlan {
     n: usize,
     outgoing: Vec<Vec<PlanEdge>>,
+    /// Auxiliary 2-hop relay routes: `(from, to, via)` — the
+    /// communicator ships `from -> via -> to` (store-and-forward) instead
+    /// of the direct thin link. Planned by [`BandwidthTree`] with
+    /// `relay: true`; empty otherwise.
+    relays: Vec<(RegionId, RegionId, RegionId)>,
 }
 
 impl SyncPlan {
@@ -119,7 +124,27 @@ impl SyncPlan {
             );
             outgoing[from].push(PlanEdge { from, to, weight });
         }
-        SyncPlan { n, outgoing }
+        SyncPlan { n, outgoing, relays: Vec::new() }
+    }
+
+    /// Attach auxiliary 2-hop relay routes (`(from, to, via)` triples).
+    /// Routes whose endpoints are not plan edges are harmless — the
+    /// communicator only consults [`SyncPlan::relay_via`] for edges it
+    /// actually ships on.
+    pub fn with_relays(mut self, relays: Vec<(RegionId, RegionId, RegionId)>) -> SyncPlan {
+        self.relays = relays;
+        self
+    }
+
+    /// The relay region for `from -> to`, if the plan routes that edge
+    /// around its thin direct link.
+    pub fn relay_via(&self, from: RegionId, to: RegionId) -> Option<RegionId> {
+        self.relays.iter().find(|(f, t, _)| *f == from && *t == to).map(|(_, _, via)| *via)
+    }
+
+    /// Every planned relay route (`(from, to, via)`), in plan order.
+    pub fn relays(&self) -> &[(RegionId, RegionId, RegionId)] {
+        &self.relays
     }
 
     /// Degree of partition `i` in the plan's undirected support — the
@@ -264,6 +289,38 @@ fn pair_bandwidth(fabric: &Fabric, a: RegionId, b: RegionId) -> f64 {
     (fwd + rev) / 2.0
 }
 
+/// Best auxiliary 2-hop relay route between `a` and `b`: the relay `r`
+/// maximizing the store-and-forward effective bandwidth
+/// `1 / (1/bw(a,r) + 1/bw(r,b))` (each hop fully re-serializes the
+/// payload, so the route's rate is the harmonic combination, never better
+/// than its thinner hop). Returns `Some((via, effective_bw))` only when
+/// the route strictly beats the direct edge's bandwidth — thin-link
+/// bypass, not a free alternative. Ties break toward the lowest relay
+/// index for deterministic planning.
+pub fn relay_route(
+    fabric: &Fabric,
+    n: usize,
+    a: RegionId,
+    b: RegionId,
+) -> Option<(RegionId, f64)> {
+    let direct = pair_bandwidth(fabric, a, b);
+    let mut best: Option<(RegionId, f64)> = None;
+    for r in 0..n {
+        if r == a || r == b {
+            continue;
+        }
+        let (h1, h2) = (pair_bandwidth(fabric, a, r), pair_bandwidth(fabric, r, b));
+        if h1 <= 0.0 || h2 <= 0.0 {
+            continue;
+        }
+        let eff = 1.0 / (1.0 / h1 + 1.0 / h2);
+        if eff > direct && best.map_or(true, |(_, be)| eff > be) {
+            best = Some((r, eff));
+        }
+    }
+    best
+}
+
 /// Region with the largest aggregate bandwidth to all others (ties break
 /// toward the lowest index, so planning is deterministic).
 fn best_connected(n: usize, fabric: &Fabric) -> RegionId {
@@ -339,8 +396,18 @@ impl Topology for Hierarchical {
 /// tree (Prim) over the fabric's link specs, rooted at the best-connected
 /// region. Payloads travel both directions along every tree edge, so the
 /// slowest links carry no sync traffic at all.
+///
+/// With `relay: true`, every candidate pair is additionally scored at its
+/// best auxiliary 2-hop route ([`relay_route`]): a pair whose direct link
+/// is thin but which can store-and-forward through a well-connected relay
+/// competes at the route's effective bandwidth, and when such an edge is
+/// selected the plan records the route so the communicator ships both
+/// hops instead of the thin link.
 #[derive(Debug, Clone, Copy, Default)]
-pub struct BandwidthTree;
+pub struct BandwidthTree {
+    /// Consider auxiliary 2-hop relay routes as candidate edges.
+    pub relay: bool,
+}
 
 impl Topology for BandwidthTree {
     fn name(&self) -> &'static str {
@@ -353,12 +420,15 @@ impl Topology for BandwidthTree {
             return SyncPlan::from_directed_edges(1, &[]);
         }
         let root = best_connected(n, fabric);
-        // Prim's algorithm, maximizing bandwidth of the connecting edge.
+        // Prim's algorithm, maximizing bandwidth of the connecting edge
+        // (direct, or its best relay route when enabled).
         let mut in_tree = vec![false; n];
         in_tree[root] = true;
         let mut tree_pairs: Vec<(RegionId, RegionId)> = Vec::new();
+        let mut relays: Vec<(RegionId, RegionId, RegionId)> = Vec::new();
         for _ in 1..n {
-            let mut best: Option<(f64, RegionId, RegionId)> = None; // (bw, tree node, new node)
+            // (effective bw, tree node, new node, relay)
+            let mut best: Option<(f64, RegionId, RegionId, Option<RegionId>)> = None;
             for u in 0..n {
                 if !in_tree[u] {
                     continue;
@@ -367,28 +437,37 @@ impl Topology for BandwidthTree {
                     if in_tree[v] {
                         continue;
                     }
-                    let bw = pair_bandwidth(fabric, u, v);
+                    let direct = pair_bandwidth(fabric, u, v);
+                    let relay = if self.relay { relay_route(fabric, n, u, v) } else { None };
+                    let (bw, via) = match relay {
+                        Some((r, eff)) => (eff, Some(r)),
+                        None => (direct, None),
+                    };
                     let better = match best {
                         None => true,
                         // Strict > keeps ties at the earliest (u, v) in scan
                         // order — deterministic planning.
-                        Some((bb, _, _)) => bw > bb,
+                        Some((bb, _, _, _)) => bw > bb,
                     };
                     if better {
-                        best = Some((bw, u, v));
+                        best = Some((bw, u, v, via));
                     }
                 }
             }
-            let (_, u, v) = best.expect("n >= 2 leaves a node to attach");
+            let (_, u, v, via) = best.expect("n >= 2 leaves a node to attach");
             in_tree[v] = true;
             tree_pairs.push((u, v));
+            if let Some(r) = via {
+                relays.push((u, v, r));
+                relays.push((v, u, r));
+            }
         }
         let mut edges = Vec::new();
         for (u, v) in tree_pairs {
             edges.push((u, v));
             edges.push((v, u));
         }
-        SyncPlan::from_directed_edges(n, &edges)
+        SyncPlan::from_directed_edges(n, &edges).with_relays(relays)
     }
 }
 
@@ -427,13 +506,43 @@ impl TopologyKind {
         match self {
             TopologyKind::Ring => Box::new(Ring),
             TopologyKind::Hierarchical => Box::new(Hierarchical::default()),
-            TopologyKind::BandwidthTree => Box::new(BandwidthTree),
+            TopologyKind::BandwidthTree => Box::new(BandwidthTree::default()),
         }
     }
 
     /// Plan edges over `n` partitions against the given fabric.
     pub fn plan(&self, n: usize, fabric: &Fabric) -> SyncPlan {
-        self.build().plan(n, fabric)
+        self.plan_with(n, fabric, false)
+    }
+
+    /// Plan edges, optionally with auxiliary 2-hop relay routes around
+    /// thin links (`--relay-routes`): the bandwidth-tree planner scores
+    /// relay routes as extra candidate edges, and every planned directed
+    /// edge — whatever the shape — gets a recorded relay when a 2-hop
+    /// route strictly beats its direct link ([`relay_route`]). On a
+    /// max-bandwidth spanning tree this post-pass is provably vacuous
+    /// (each tree edge was selected over both hops of any candidate
+    /// relay), so relays fire mainly for fixed-shape plans (a ring edge
+    /// across the thin long haul, a star leaf far from the hub).
+    pub fn plan_with(&self, n: usize, fabric: &Fabric, relay: bool) -> SyncPlan {
+        let plan = match self {
+            TopologyKind::BandwidthTree => BandwidthTree { relay }.plan(n, fabric),
+            _ => self.build().plan(n, fabric),
+        };
+        if !relay {
+            return plan;
+        }
+        let mut relays = plan.relays().to_vec();
+        let edges: Vec<(RegionId, RegionId)> =
+            plan.edges().map(|e| (e.from, e.to)).collect();
+        for (from, to) in edges {
+            if plan.relay_via(from, to).is_none() {
+                if let Some((via, _)) = relay_route(fabric, n, from, to) {
+                    relays.push((from, to, via));
+                }
+            }
+        }
+        plan.with_relays(relays)
     }
 }
 
@@ -580,9 +689,74 @@ mod tests {
                 }
             }
         }
-        let plan = BandwidthTree.plan(4, &f);
+        let plan = BandwidthTree::default().plan(4, &f);
         assert!(plan.is_tree());
         assert_eq!(plan.undirected_support(), vec![(0, 1), (1, 2), (2, 3)]);
+        assert!(plan.relays().is_empty(), "relay routes are opt-in");
+    }
+
+    #[test]
+    fn relay_route_only_when_it_beats_the_direct_edge() {
+        // 2<->3 direct is 40 Mbps; both reach the Shanghai-like hub 0 at
+        // 300 Mbps, so the 2-hop route runs at harmonic 150 Mbps > 40.
+        let mut f = Fabric::new(1);
+        for a in 0..4usize {
+            for b in 0..4usize {
+                if a != b {
+                    let mbps = match (a.min(b), a.max(b)) {
+                        (0, _) => 300.0,
+                        (2, 3) => 40.0,
+                        _ => 100.0,
+                    };
+                    f.add_link(a, b, wan_at(mbps));
+                }
+            }
+        }
+        let (via, eff) = relay_route(&f, 4, 2, 3).expect("relay beats the thin direct link");
+        assert_eq!(via, 0);
+        assert!((eff - 150e6).abs() < 1.0, "harmonic of two 300 Mbps hops: {eff}");
+        // A fat direct edge is never displaced: the best 2-hop route
+        // through 300 Mbps pipes tops out at 150 Mbps < 300 direct.
+        assert_eq!(relay_route(&f, 4, 0, 1), None);
+        // Symmetric query plans the same relay.
+        assert_eq!(relay_route(&f, 4, 3, 2).map(|(r, _)| r), Some(0));
+    }
+
+    #[test]
+    fn relay_routes_fire_for_fixed_shapes_and_stay_vacuous_on_the_tree() {
+        // The thin-GZ testbed: fat 300 Mbps star around 0, a 40 Mbps
+        // 2<->3 long haul, 100 Mbps elsewhere.
+        let mut f = Fabric::new(1);
+        for a in 0..4usize {
+            for b in 0..4usize {
+                if a != b {
+                    let mbps = match (a.min(b), a.max(b)) {
+                        (0, _) => 300.0,
+                        (2, 3) => 40.0,
+                        _ => 100.0,
+                    };
+                    f.add_link(a, b, wan_at(mbps));
+                }
+            }
+        }
+        // Ring must ship 2 -> 3 across the thin haul; with relays on it
+        // routes through the hub instead.
+        let ring = TopologyKind::Ring.plan_with(4, &f, true);
+        assert_eq!(ring.relay_via(2, 3), Some(0), "{:?}", ring.relays());
+        // Relays never appear unless asked for.
+        assert!(TopologyKind::Ring.plan(4, &f).relays().is_empty());
+        // A recorded route always strictly beats its direct edge.
+        for &(from, to, via) in ring.relays() {
+            let direct = f.link_bandwidth(from, to).unwrap();
+            let (r, eff) = relay_route(&f, 4, from, to).unwrap();
+            assert_eq!(r, via);
+            assert!(eff > direct, "relay {from}->{via}->{to}: {eff} vs {direct}");
+        }
+        // The max-bandwidth tree already routed around the thin haul, so
+        // every tree edge beats any 2-hop route: no relays recorded.
+        let tree = TopologyKind::BandwidthTree.plan_with(4, &f, true);
+        assert!(tree.is_tree());
+        assert!(tree.relays().is_empty(), "{:?}", tree.relays());
     }
 
     #[test]

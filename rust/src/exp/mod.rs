@@ -31,7 +31,10 @@
 //! per-worker vs cohort-aggregation equivalence (module
 //! `fleetscale_exp`); and `federated` runs a 100k-client edge-cohort
 //! tier below the 4 clouds, comparing full vs sampled participation
-//! under dropout churn (module `federated_exp`). The full id →
+//! under dropout churn (module `federated_exp`); and `wanopt` pits the
+//! net-layer optimizations — priority lanes, controller-picked per-link
+//! compression, and 2-hop relay routes — against the static-FIFO fabric
+//! under a mid-run link collapse (module `wanopt_exp`). The full id →
 //! figure/config/bench mapping lives in docs/EXPERIMENTS.md.
 
 pub mod ablations;
@@ -45,6 +48,7 @@ pub mod scheduling;
 pub mod sync_exp;
 pub mod topology_exp;
 pub mod usability;
+pub mod wanopt_exp;
 
 use std::path::PathBuf;
 

@@ -42,11 +42,12 @@ USAGE:
                     [--seed n] [--n-train n] [--n-eval n] [--json]
                     [--compression none|topk[:r]|q8]
                     [--elastic] [--replan-interval s] [--replan-hysteresis x]
-                    [--bw-threshold x]
+                    [--bw-threshold x] [--auto-compression]
+                    [--wan-lanes] [--relay-routes]
                     [--data-placement spec] [--placement-mode m] [--sample-kb n]
                     [--clients n] [--cohorts n] [--sample-frac x] [--dropout x]
   cloudless plan    [--config f]
-  cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|multijob|dataplane|federated|fleetscale|ablations|compression|all> [--full] [--model m]
+  cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|multijob|dataplane|federated|fleetscale|ablations|compression|wanopt|all> [--full] [--model m]
   cloudless devices
   cloudless check
 
@@ -56,6 +57,13 @@ USAGE:
   re-plan -> apply): --replan-interval (virtual s between samples),
   --replan-hysteresis (min relative plan movement to act), --bw-threshold
   (relative delivered-bandwidth divergence that re-plans the topology).
+  --wan-lanes schedules WAN transfers in priority lanes (Control >
+  Barrier > Gradient > BulkData) so barriers preempt bulk migration;
+  --auto-compression lets the controller pick per-link gradient codecs
+  (none|topk|q8) from observed bandwidth (works without --elastic);
+  --relay-routes lets the sync planner route planned edges through a
+  2-hop relay when it beats the direct link. exp --id wanopt compares
+  all three against the static-FIFO baseline on the thin-GZ WAN.
   --data-placement activates the physical data plane (dataset catalog +
   WAN shard migration): resident | uniform:<shards> | skewed:<shards>:<frac>
   | single:<region> | fed:<clients>:<alpha>, each optionally suffixed
@@ -130,6 +138,15 @@ fn job_from_args(args: &Args) -> anyhow::Result<JobSpec> {
     }
     if args.flag("elastic") {
         spec.train.elastic.enabled = true;
+    }
+    if args.flag("auto-compression") {
+        spec.train.elastic.auto_compression = true;
+    }
+    if args.flag("wan-lanes") {
+        spec.train.wan_lanes = true;
+    }
+    if args.flag("relay-routes") {
+        spec.train.relay_routes = true;
     }
     spec.train.elastic.interval_s = args.f64("replan-interval", spec.train.elastic.interval_s);
     spec.train.elastic.hysteresis = args.f64("replan-hysteresis", spec.train.elastic.hysteresis);
@@ -276,6 +293,9 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             "ablations" => exp::ablations::all(coord, scale),
             "compression" => {
                 exp::ablations::compression_vs_frequency(coord, scale);
+            }
+            "wanopt" => {
+                exp::wanopt_exp::wanopt_compare(coord, scale, &exp_model);
             }
             other => anyhow::bail!("unknown experiment id {other:?}"),
         }

@@ -11,6 +11,20 @@
 //!
 //! All stochasticity comes from a per-link PCG stream seeded from the
 //! experiment seed, so runs replay deterministically.
+//!
+//! # Priority lanes
+//!
+//! With [`Fabric::set_lanes`] enabled, each directed link schedules four
+//! priority lanes instead of one FIFO: every transfer carries a
+//! [`TrafficClass`] (Control > Barrier > Gradient > BulkData). A transfer
+//! waits behind its own lane's backlog and — capped at
+//! [`MAX_PRIORITY_WAIT_S`] — behind higher-priority lanes; it never waits
+//! for lower-priority traffic (preemption at serialization boundaries,
+//! modeled as bounded capacity overlap). The cap is the no-starvation
+//! guarantee: bulk shard migration proceeds within a bounded wait even
+//! under an adversarial Control flood. With lanes disabled (the default)
+//! the scheduling path is byte-for-byte identical to the historical
+//! single-FIFO fabric — the `tests/wan_sched.rs` equivalence property.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -21,6 +35,51 @@ use crate::util::rng::Pcg32;
 
 /// Region identifier (index into the cloud's region table).
 pub type RegionId = usize;
+
+/// Longest a lower-priority transfer will yield to higher-priority lanes
+/// before starting anyway (virtual seconds). This bounds bulk-lane wait
+/// under an adversarial flood of latency-critical traffic: no starvation.
+pub const MAX_PRIORITY_WAIT_S: Time = 1.0;
+
+/// Traffic class of a WAN transfer; lower lane index = higher priority.
+///
+/// - [`TrafficClass::Control`] — coordinator RPCs, leases, monitor pulls;
+/// - [`TrafficClass::Barrier`] — synchronous barrier (SMA) exchanges,
+///   latency-critical: a barrier must not queue behind a shard migration;
+/// - [`TrafficClass::Gradient`] — asynchronous gradient/parameter sync
+///   payloads, the steady-state training traffic;
+/// - [`TrafficClass::BulkData`] — shard migration / dataset bulk moves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TrafficClass {
+    Control,
+    Barrier,
+    Gradient,
+    BulkData,
+}
+
+impl TrafficClass {
+    /// Number of lanes a link schedules.
+    pub const COUNT: usize = 4;
+
+    /// Lane index (0 = highest priority).
+    pub fn lane(self) -> usize {
+        match self {
+            TrafficClass::Control => 0,
+            TrafficClass::Barrier => 1,
+            TrafficClass::Gradient => 2,
+            TrafficClass::BulkData => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TrafficClass::Control => "control",
+            TrafficClass::Barrier => "barrier",
+            TrafficClass::Gradient => "gradient",
+            TrafficClass::BulkData => "bulk",
+        }
+    }
+}
 
 /// Static description of a directed link.
 #[derive(Debug, Clone)]
@@ -106,6 +165,20 @@ struct Link {
     queue_delay: Time,
     /// Outage windows (failure injection): transfers cannot start inside.
     outages: Vec<(Time, Time)>,
+    /// Per-lane serialization horizon (lanes mode; lane 0 = Control).
+    lane_busy: [Time; TrafficClass::COUNT],
+    /// Per-lane traffic attribution (kept in both modes — accounting only,
+    /// never consulted by the scheduler).
+    lane: [LaneStats; TrafficClass::COUNT],
+}
+
+/// Per-lane share of a link's statistics (see [`TrafficClass::lane`] for
+/// the index order: Control, Barrier, Gradient, BulkData).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LaneStats {
+    pub bytes: u64,
+    pub transfers: u64,
+    pub busy_time: Time,
 }
 
 /// Per-link statistics snapshot.
@@ -120,6 +193,9 @@ pub struct LinkStats {
     /// delivered-bandwidth estimate the elastic control loop samples.
     pub stream_time: Time,
     pub queue_delay: Time,
+    /// Per-traffic-class attribution of `bytes`/`transfers`/`busy_time`
+    /// (delivered transfers only; drops are not attributed to a lane).
+    pub lanes: [LaneStats; TrafficClass::COUNT],
 }
 
 /// The network fabric: directed (from, to) -> link.
@@ -127,11 +203,23 @@ pub struct Fabric {
     links: BTreeMap<(RegionId, RegionId), Link>,
     default_lan: LinkSpec,
     seed: u64,
+    lanes: bool,
 }
 
 impl Fabric {
     pub fn new(seed: u64) -> Self {
-        Fabric { links: BTreeMap::new(), default_lan: LinkSpec::lan(), seed }
+        Fabric { links: BTreeMap::new(), default_lan: LinkSpec::lan(), seed, lanes: false }
+    }
+
+    /// Enable or disable priority-lane scheduling (default: off, the
+    /// historical single-FIFO behavior — byte-identical timings).
+    pub fn set_lanes(&mut self, on: bool) {
+        self.lanes = on;
+    }
+
+    /// Whether priority-lane scheduling is active.
+    pub fn lanes_enabled(&self) -> bool {
+        self.lanes
     }
 
     /// Install a directed link. For a symmetric WAN install both directions
@@ -151,6 +239,8 @@ impl Fabric {
                 stream_time: 0.0,
                 queue_delay: 0.0,
                 outages: Vec::new(),
+                lane_busy: [0.0; TrafficClass::COUNT],
+                lane: [LaneStats::default(); TrafficClass::COUNT],
             },
         );
     }
@@ -208,8 +298,31 @@ impl Fabric {
         self.links.get_mut(&(from, to)).unwrap()
     }
 
-    /// Schedule a transfer of `bytes` submitted at `now`; returns its timing.
+    /// Schedule a transfer of `bytes` submitted at `now`; returns its
+    /// timing. Untagged traffic rides the [`TrafficClass::Gradient`] lane.
     pub fn transfer(&mut self, from: RegionId, to: RegionId, bytes: u64, now: Time) -> Transfer {
+        self.transfer_class(from, to, bytes, now, TrafficClass::Gradient)
+    }
+
+    /// Schedule a transfer of `bytes` of traffic class `class` submitted
+    /// at `now`; returns its timing.
+    ///
+    /// Lanes off (default): `class` affects only the per-lane statistics
+    /// attribution — queueing is the single FIFO, identical to the
+    /// historical [`Fabric::transfer`]. Lanes on: the transfer queues
+    /// behind its own lane, yields to higher-priority lanes for at most
+    /// [`MAX_PRIORITY_WAIT_S`], and ignores lower-priority backlogs. The
+    /// RNG draw order (drop, then fluctuation) is the same in both modes,
+    /// so toggling lanes never perturbs the stochastic stream.
+    pub fn transfer_class(
+        &mut self,
+        from: RegionId,
+        to: RegionId,
+        bytes: u64,
+        now: Time,
+        class: TrafficClass,
+    ) -> Transfer {
+        let lanes = self.lanes;
         let link = self.ensure_link(from, to);
         link.transfers += 1;
 
@@ -218,7 +331,17 @@ impl Fabric {
             return Transfer { start: now, done: now, arrival: f64::INFINITY, dropped: true };
         }
 
-        let mut start = now.max(link.busy_until);
+        let c = class.lane();
+        let mut start = if lanes {
+            // Own-lane backlog is binding; higher-priority backlog yields
+            // a bounded wait; lower-priority backlog is preempted at the
+            // next serialization boundary (modeled as no wait at all).
+            let higher =
+                link.lane_busy[..c].iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            now.max(link.lane_busy[c]).max(higher.min(now + MAX_PRIORITY_WAIT_S))
+        } else {
+            now.max(link.busy_until)
+        };
         // Outage windows push the start past the window end.
         for &(o_from, o_to) in &link.outages {
             if start >= o_from && start < o_to {
@@ -238,8 +361,16 @@ impl Fabric {
         link.queue_delay += start - now;
         link.busy_time += ser;
         link.stream_time += stream;
-        link.busy_until = done;
+        if lanes {
+            link.lane_busy[c] = done;
+            link.busy_until = link.busy_until.max(done);
+        } else {
+            link.busy_until = done;
+        }
         link.bytes += bytes;
+        link.lane[c].bytes += bytes;
+        link.lane[c].transfers += 1;
+        link.lane[c].busy_time += ser;
         Transfer { start, done, arrival, dropped: false }
     }
 
@@ -281,6 +412,7 @@ impl Fabric {
             busy_time: l.busy_time,
             stream_time: l.stream_time,
             queue_delay: l.queue_delay,
+            lanes: l.lane,
         })
     }
 
@@ -320,6 +452,23 @@ impl SharedFabric {
     /// Schedule a transfer (see [`Fabric::transfer`]).
     pub fn transfer(&self, from: RegionId, to: RegionId, bytes: u64, now: Time) -> Transfer {
         self.0.borrow_mut().transfer(from, to, bytes, now)
+    }
+
+    /// Schedule a class-tagged transfer (see [`Fabric::transfer_class`]).
+    pub fn transfer_class(
+        &self,
+        from: RegionId,
+        to: RegionId,
+        bytes: u64,
+        now: Time,
+        class: TrafficClass,
+    ) -> Transfer {
+        self.0.borrow_mut().transfer_class(from, to, bytes, now, class)
+    }
+
+    /// Enable or disable priority-lane scheduling (see [`Fabric::set_lanes`]).
+    pub fn set_lanes(&self, on: bool) {
+        self.0.borrow_mut().set_lanes(on)
     }
 
     /// Mutate a directed link's nominal bandwidth mid-run.
@@ -502,6 +651,81 @@ mod tests {
         assert_eq!(job_b.link_bandwidth(0, 1), Some(10e6));
         assert_eq!(shared.total_wan_bytes(), 25_000_000);
         assert_eq!(shared.with(|f| f.estimate(0, 1, 0) > 0.0), true);
+    }
+
+    #[test]
+    fn lanes_off_transfer_class_matches_fifo() {
+        // With lanes disabled, class-tagged transfers schedule exactly
+        // like the historical FIFO — same Transfer timings, same
+        // aggregate stats — regardless of the class mix.
+        let classes = [
+            TrafficClass::BulkData,
+            TrafficClass::Control,
+            TrafficClass::Gradient,
+            TrafficClass::Barrier,
+            TrafficClass::BulkData,
+        ];
+        let mut fifo = Fabric::new(9);
+        let mut tagged = Fabric::new(9);
+        fifo.add_link(0, 1, LinkSpec::wan_100mbps());
+        tagged.add_link(0, 1, LinkSpec::wan_100mbps());
+        for (i, class) in classes.iter().enumerate() {
+            let t = i as f64 * 0.1;
+            let a = fifo.transfer(0, 1, 1_000_000, t);
+            let b = tagged.transfer_class(0, 1, 1_000_000, t, *class);
+            assert_eq!(a, b, "lanes-off transfer {i} diverged");
+        }
+        let sa = fifo.stats(0, 1).unwrap();
+        let sb = tagged.stats(0, 1).unwrap();
+        assert_eq!((sa.bytes, sa.transfers, sa.busy_time, sa.queue_delay),
+                   (sb.bytes, sb.transfers, sb.busy_time, sb.queue_delay));
+    }
+
+    #[test]
+    fn lanes_on_priority_preempts_bulk_backlog() {
+        let mut f = Fabric::new(1);
+        f.add_link(0, 1, stable_wan());
+        f.set_lanes(true);
+        // 10 s of bulk backlog, then a barrier submitted at t=0.5: it
+        // must start immediately, not behind the migration.
+        f.transfer_class(0, 1, 125_000_000, 0.0, TrafficClass::BulkData); // 10 s
+        let b = f.transfer_class(0, 1, 125_000, 0.5, TrafficClass::Barrier); // 10 ms
+        assert!((b.start - 0.5).abs() < 1e-9, "barrier queued behind bulk: {b:?}");
+        // But a second barrier queues behind the first (its own lane).
+        let b2 = f.transfer_class(0, 1, 125_000, 0.5, TrafficClass::Barrier);
+        assert!((b2.start - b.done).abs() < 1e-9, "{b2:?}");
+    }
+
+    #[test]
+    fn lanes_on_bulk_wait_is_bounded() {
+        // Adversarial Control flood: bulk still starts within
+        // MAX_PRIORITY_WAIT_S — the no-starvation bound.
+        let mut f = Fabric::new(1);
+        f.add_link(0, 1, stable_wan());
+        f.set_lanes(true);
+        for i in 0..100 {
+            f.transfer_class(0, 1, 12_500_000, i as f64 * 0.01, TrafficClass::Control);
+        }
+        let bulk = f.transfer_class(0, 1, 1_000_000, 2.0, TrafficClass::BulkData);
+        assert!(
+            bulk.start <= 2.0 + MAX_PRIORITY_WAIT_S + 1e-9,
+            "bulk starved past the bound: {bulk:?}"
+        );
+    }
+
+    #[test]
+    fn lane_stats_conserve_link_bytes() {
+        let mut f = Fabric::new(1);
+        f.add_link(0, 1, LinkSpec::wan_100mbps());
+        f.set_lanes(true);
+        f.transfer_class(0, 1, 100, 0.0, TrafficClass::Control);
+        f.transfer_class(0, 1, 2_000, 0.0, TrafficClass::Barrier);
+        f.transfer_class(0, 1, 30_000, 0.0, TrafficClass::Gradient);
+        f.transfer_class(0, 1, 400_000, 0.0, TrafficClass::BulkData);
+        let st = f.stats(0, 1).unwrap();
+        assert_eq!(st.lanes.iter().map(|l| l.bytes).sum::<u64>(), st.bytes);
+        assert_eq!(st.lanes.iter().map(|l| l.transfers).sum::<u64>(), st.transfers);
+        assert_eq!(st.lanes[TrafficClass::BulkData.lane()].bytes, 400_000);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //!        │    per-link delivered bandwidth)    │ optimal_matching on
 //!        │                                     │ observed powers
 //!        └───────── ReplanDecision ◀───────────┘ (only past hysteresis)
-//!          (new allocations / stale topology)
+//!          (new allocations / stale topology / per-link codecs)
 //! ```
 //!
 //! The controller is pure state-machine logic (no simulator, no FaaS):
@@ -59,6 +59,12 @@ pub struct ElasticConfig {
     /// EWMA coefficient for new observations in (0, 1]; 1.0 = trust the
     /// latest sample completely.
     pub smoothing: f64,
+    /// When true the controller also assigns a per-link gradient codec
+    /// ([`LinkCodec`]) from the EWMA-observed delivered bandwidth: the
+    /// further a link falls below its nominal bandwidth, the more
+    /// aggressive the codec it is worth paying accuracy for. Works with
+    /// `enabled == false` too (compression-only control loop).
+    pub auto_compression: bool,
 }
 
 impl Default for ElasticConfig {
@@ -69,6 +75,7 @@ impl Default for ElasticConfig {
             hysteresis: 0.2,
             bw_threshold: 0.5,
             smoothing: 0.5,
+            auto_compression: false,
         }
     }
 }
@@ -92,6 +99,63 @@ impl ElasticConfig {
             return Err(format!("elastic smoothing must be in (0, 1], got {}", self.smoothing));
         }
         Ok(())
+    }
+}
+
+/// Per-link gradient codec the controller assigns when
+/// [`ElasticConfig::auto_compression`] is on. A `sched`-local mirror of
+/// the sync layer's compression choices (this module never imports
+/// `engine` or `sync`); the driver maps it onto the wire codec when it
+/// applies a decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkCodec {
+    /// Dense f32 gradients — full fidelity, full wire bytes.
+    None,
+    /// Top-k sparsification (~1% of coordinates): ~50x fewer wire bytes
+    /// at the largest staleness-equivalent accuracy penalty.
+    TopK,
+    /// 8-bit block quantization: ~4x fewer wire bytes at a mild penalty.
+    Q8,
+}
+
+impl LinkCodec {
+    /// Stable lowercase name (matches the `"compression"` config values).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkCodec::None => "none",
+            LinkCodec::TopK => "topk",
+            LinkCodec::Q8 => "q8",
+        }
+    }
+}
+
+/// Pick the codec that maximizes staleness-equivalent utility at link
+/// congestion `c = max(0, 1 - delivered/nominal)`.
+///
+/// The bytes a codec saves only buy anything when the link is actually
+/// congested (saved seconds scale with `c`), while its accuracy cost —
+/// modeled as a constant staleness-equivalent penalty per sync, the same
+/// currency the ASGD staleness analysis uses — is paid regardless:
+///
+/// ```text
+///   utility(none) = 0
+///   utility(q8)   = 0.75·c − 0.25   (≈4x byte savings, mild penalty)
+///   utility(topk) = 0.98·c − 0.45   (≈50x byte savings, large penalty)
+/// ```
+///
+/// Crossovers: q8 overtakes dense past `c > 1/3` (delivered below ~67%
+/// of nominal); topk overtakes q8 past `c > 0.87` (delivered below ~13%
+/// of nominal — a genuinely collapsing link). Ties prefer the milder
+/// codec, so a healthy link (`c = 0`) always ships dense.
+fn codec_for(c: f64) -> LinkCodec {
+    let q8 = 0.75 * c - 0.25;
+    let topk = 0.98 * c - 0.45;
+    if topk > q8 && topk > 0.0 {
+        LinkCodec::TopK
+    } else if q8 > 0.0 {
+        LinkCodec::Q8
+    } else {
+        LinkCodec::None
     }
 }
 
@@ -142,6 +206,12 @@ pub struct ReplanDecision {
     /// The controller's current bandwidth belief for every tracked
     /// directed link (observed where measured, planning basis elsewhere).
     pub bw_view: Vec<(RegionId, RegionId, f64)>,
+    /// Per-link codec reassignments committed this round (only links
+    /// whose codec actually changed). Empty unless
+    /// [`ElasticConfig::auto_compression`] is on; the driver records each
+    /// as a `"compression"` replan event and re-routes those links'
+    /// gradient payloads through the new codec.
+    pub codec_changes: Vec<(RegionId, RegionId, LinkCodec)>,
 }
 
 /// The control-plane re-scheduler (the scheduler function re-invoked
@@ -157,6 +227,13 @@ pub struct ElasticController {
     bw_basis: Vec<(RegionId, RegionId, f64)>,
     /// EWMA-smoothed delivered-bandwidth estimates.
     bw_est: Vec<(RegionId, RegionId, f64)>,
+    /// Immutable nominal (construction-time) bandwidths — the congestion
+    /// reference for codec selection. Unlike `bw_basis` this never
+    /// advances on commit, so a link that collapsed and re-planned still
+    /// reads as congested until it actually recovers.
+    bw_nominal: Vec<(RegionId, RegionId, f64)>,
+    /// Current per-link codec assignment (absent = `LinkCodec::None`).
+    codecs: Vec<(RegionId, RegionId, LinkCodec)>,
     /// Number of committed re-plans (diagnostic).
     pub replans: u64,
 }
@@ -178,7 +255,9 @@ impl ElasticController {
             scale: vec![1.0; n],
             current_units: initial.iter().map(|a| a.total_units()).collect(),
             bw_est: nominal_bw.clone(),
-            bw_basis: nominal_bw,
+            bw_basis: nominal_bw.clone(),
+            bw_nominal: nominal_bw,
+            codecs: Vec::new(),
             replans: 0,
         }
     }
@@ -191,6 +270,12 @@ impl ElasticController {
     /// Units per cloud of the plan currently in force.
     pub fn current_units(&self) -> &[u32] {
         &self.current_units
+    }
+
+    /// The per-link codec assignment currently in force (diagnostic /
+    /// tests). Links not listed ship dense (`LinkCodec::None`).
+    pub fn codecs(&self) -> &[(RegionId, RegionId, LinkCodec)] {
+        &self.codecs
     }
 
     /// Re-base the controller on a new resource lease (the multi-job
@@ -277,24 +362,28 @@ impl ElasticController {
             }
         }
         let delta = plan_delta(&self.current_units, &candidate.allocations);
-        let topo_stale = self.topology_stale();
-        if delta <= self.cfg.hysteresis && !topo_stale {
+        // With `enabled == false` the controller runs compression-only
+        // (`auto_compression`): it never moves load or re-plans the
+        // topology — those stay the user's static choices.
+        let topo_stale = self.cfg.enabled && self.topology_stale();
+        let load_moved = self.cfg.enabled && delta > self.cfg.hysteresis;
+        let codec_changes = self.commit_codec_changes();
+        if !load_moved && !topo_stale && codec_changes.is_empty() {
             return None;
         }
-
-        // Commit: the decision is what the driver will apply.
-        let load_moved = delta > self.cfg.hysteresis;
         let decision = ReplanDecision {
             allocations: if load_moved {
                 candidate.allocations.clone()
             } else {
-                // Topology-only re-plan keeps the current allocations.
+                // Topology-only / compression-only re-plan keeps the
+                // current allocations.
                 self.current_allocations(&candidate)
             },
             plan_delta: if load_moved { delta } else { 0.0 },
             straggler: candidate.straggler,
             replan_topology: topo_stale,
             bw_view: self.bw_est.clone(),
+            codec_changes,
         };
         if load_moved {
             self.current_units =
@@ -348,6 +437,52 @@ impl ElasticController {
                 }
             })
             .collect()
+    }
+
+    /// Re-score every tracked link's codec against its congestion and
+    /// commit the reassignments, returning only the links that changed.
+    /// Committing here is safe because any non-empty return fires a
+    /// decision (it is part of `observe`'s gate), so the driver always
+    /// sees exactly the changes the controller recorded — and feeding the
+    /// same observations again returns an empty list (idempotent).
+    fn commit_codec_changes(&mut self) -> Vec<(RegionId, RegionId, LinkCodec)> {
+        let mut changes = Vec::new();
+        if !self.cfg.auto_compression {
+            return changes;
+        }
+        for i in 0..self.bw_est.len() {
+            let (from, to, est) = self.bw_est[i];
+            let nominal =
+                match self.bw_nominal.iter().find(|(f, t, _)| *f == from && *t == to) {
+                    Some(&(_, _, n)) => n,
+                    None => {
+                        // A link first observed mid-run (e.g. a late
+                        // lease): its first estimate becomes the nominal.
+                        self.bw_nominal.push((from, to, est));
+                        est
+                    }
+                };
+            if nominal <= 0.0 {
+                continue;
+            }
+            let congestion = (1.0 - est / nominal).max(0.0);
+            let want = codec_for(congestion);
+            match self.codecs.iter_mut().find(|(f, t, _)| *f == from && *t == to) {
+                Some(entry) => {
+                    if entry.2 != want {
+                        entry.2 = want;
+                        changes.push((from, to, want));
+                    }
+                }
+                None => {
+                    if want != LinkCodec::None {
+                        self.codecs.push((from, to, want));
+                        changes.push((from, to, want));
+                    }
+                }
+            }
+        }
+        changes
     }
 
     /// True when any planned link's delivered bandwidth diverged from the
@@ -571,6 +706,134 @@ mod tests {
                 assert!(a.fits(r), "replan escaped the lease: {a:?}");
             }
         }
+    }
+
+    fn bw_sample(link_bw: Vec<(usize, usize, f64)>) -> MonitorSample {
+        MonitorSample {
+            t: 0.0,
+            power_scale: vec![Some(1.0); 4],
+            mean_iter_s: vec![None; 4],
+            finished: vec![false; 4],
+            link_bw,
+        }
+    }
+
+    fn auto_cfg() -> ElasticConfig {
+        ElasticConfig {
+            enabled: true,
+            smoothing: 1.0,
+            auto_compression: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn codec_scoring_crossovers() {
+        assert_eq!(codec_for(0.0), LinkCodec::None, "healthy link ships dense");
+        assert_eq!(codec_for(0.2), LinkCodec::None, "mild congestion not worth the penalty");
+        assert_eq!(codec_for(0.5), LinkCodec::Q8, "halved bandwidth pays for quantization");
+        assert_eq!(codec_for(0.9), LinkCodec::TopK, "collapsing link pays for sparsification");
+    }
+
+    #[test]
+    fn collapsing_link_picks_topk_and_reverts_on_recovery() {
+        let mut c = controller(auto_cfg());
+        // GZ spur collapses 100 -> 10 Mbps (congestion 0.9).
+        let dec = c
+            .observe(&bw_sample(vec![(0, 2, 10e6), (2, 0, 10e6)]))
+            .expect("a 10x collapse must fire a decision");
+        assert!(
+            dec.codec_changes.contains(&(0, 2, LinkCodec::TopK))
+                && dec.codec_changes.contains(&(2, 0, LinkCodec::TopK)),
+            "both collapsed directions switch to topk: {:?}",
+            dec.codec_changes
+        );
+        // Recovery back to nominal reverts to dense.
+        let dec = c
+            .observe(&bw_sample(vec![(0, 2, 100e6), (2, 0, 100e6)]))
+            .expect("recovery must fire (codec revert)");
+        assert!(
+            dec.codec_changes.contains(&(0, 2, LinkCodec::None))
+                && dec.codec_changes.contains(&(2, 0, LinkCodec::None)),
+            "recovered links revert to dense: {:?}",
+            dec.codec_changes
+        );
+        assert!(c.codecs().iter().all(|&(_, _, k)| k == LinkCodec::None));
+    }
+
+    #[test]
+    fn codec_only_change_fires_below_topology_threshold() {
+        // 100 -> 50 Mbps: exactly at (not past) bw_threshold 0.5, so no
+        // topology replan — but congestion 0.5 is past the q8 crossover,
+        // so the compression decision alone must fire.
+        let mut c = controller(auto_cfg());
+        let dec = c
+            .observe(&bw_sample(vec![(1, 3, 50e6), (3, 1, 50e6)]))
+            .expect("codec change alone must fire a decision");
+        assert!(!dec.replan_topology, "50% divergence is not past the topology threshold");
+        assert_eq!(dec.plan_delta, 0.0, "no load moved");
+        assert!(
+            dec.codec_changes.contains(&(1, 3, LinkCodec::Q8))
+                && dec.codec_changes.contains(&(3, 1, LinkCodec::Q8)),
+            "halved links quantize: {:?}",
+            dec.codec_changes
+        );
+        // Idempotent: same observations, no new changes, no decision.
+        assert!(c.observe(&bw_sample(vec![(1, 3, 50e6), (3, 1, 50e6)])).is_none());
+    }
+
+    #[test]
+    fn auto_compression_off_never_emits_codec_changes() {
+        let mut c = controller(ElasticConfig {
+            enabled: true,
+            smoothing: 1.0,
+            ..Default::default()
+        });
+        let dec = c
+            .observe(&bw_sample(vec![(0, 2, 10e6), (2, 0, 10e6)]))
+            .expect("collapse still fires a topology replan");
+        assert!(dec.replan_topology);
+        assert!(dec.codec_changes.is_empty(), "codec control is opt-in");
+        assert!(c.codecs().is_empty());
+    }
+
+    #[test]
+    fn compression_only_controller_never_moves_load_or_topology() {
+        // `auto_compression` without `enabled`: codecs are the ONLY
+        // thing the controller may change — load and topology stay the
+        // user's static choices, whatever the observations say.
+        let mut c = controller(ElasticConfig {
+            smoothing: 1.0,
+            auto_compression: true,
+            ..Default::default()
+        });
+        let units = c.current_units().to_vec();
+        let mut s = bw_sample(vec![(0, 2, 10e6), (2, 0, 10e6)]);
+        s.power_scale = vec![Some(1.0), Some(1.0), Some(0.35), Some(1.0)];
+        let dec = c.observe(&s).expect("the codec decision still fires");
+        assert_eq!(dec.plan_delta, 0.0, "no load movement in compression-only mode");
+        assert!(!dec.replan_topology, "no topology re-plan in compression-only mode");
+        assert!(!dec.codec_changes.is_empty());
+        assert_eq!(c.current_units(), &units[..], "baseline untouched");
+    }
+
+    #[test]
+    fn nominal_basis_survives_topology_commits() {
+        // After the collapse commits (bw_basis advances to 10 Mbps), the
+        // link must still read as congested against the *nominal* 100
+        // Mbps — a second sample at 10 Mbps stays topk, and only a real
+        // recovery reverts it.
+        let mut c = controller(auto_cfg());
+        c.observe(&bw_sample(vec![(0, 2, 10e6), (2, 0, 10e6)])).unwrap();
+        assert!(
+            c.observe(&bw_sample(vec![(0, 2, 10e6), (2, 0, 10e6)])).is_none(),
+            "steady collapsed state: no new decision"
+        );
+        assert!(
+            c.codecs().contains(&(0, 2, LinkCodec::TopK)),
+            "codec holds while the link stays collapsed: {:?}",
+            c.codecs()
+        );
     }
 
     #[test]

@@ -238,22 +238,38 @@ impl Payload {
 pub fn make_payload(cfg: &SyncConfig, ps: &mut PsState) -> Payload {
     if cfg.strategy.sends_gradient() {
         let (grad, steps) = ps.take_accumulated();
-        match cfg.compression {
-            Compression::None => Payload::Gradient { grad, steps },
-            Compression::TopK { ratio } => {
-                let (packed, residual) = TopK::new(ratio).encode(&grad);
-                // DGC error feedback: the dropped mass re-enters the
-                // accumulator and ships with a later sync.
-                crate::runtime::vecops::accumulate_inplace(&mut ps.accum, &residual);
-                Payload::CompressedGradient { packed, steps }
-            }
-            Compression::Q8 => {
-                let packed = QuantQ8::default().encode(&grad);
-                Payload::CompressedGradient { packed, steps }
-            }
-        }
+        encode_gradient(cfg.compression, &grad, steps, ps)
     } else {
         Payload::Params(ps.snapshot_params())
+    }
+}
+
+/// Encode one already-drained accumulated gradient under `codec`.
+///
+/// Split out of [`make_payload`] for per-link elastic compression: one
+/// sync may ship the same accumulated gradient under several codecs (one
+/// encode per codec group), with [`PsState::take_accumulated`] called
+/// exactly once. TopK folds its DGC error feedback — the dropped mass
+/// re-enters the accumulator and ships with a later sync — once per
+/// encode, so only the mass actually withheld from the top-k edges is
+/// ever re-sent.
+pub fn encode_gradient(
+    codec: Compression,
+    grad: &[f32],
+    steps: u32,
+    ps: &mut PsState,
+) -> Payload {
+    match codec {
+        Compression::None => Payload::Gradient { grad: grad.to_vec(), steps },
+        Compression::TopK { ratio } => {
+            let (packed, residual) = TopK::new(ratio).encode(grad);
+            crate::runtime::vecops::accumulate_inplace(&mut ps.accum, &residual);
+            Payload::CompressedGradient { packed, steps }
+        }
+        Compression::Q8 => {
+            let packed = QuantQ8::default().encode(grad);
+            Payload::CompressedGradient { packed, steps }
+        }
     }
 }
 

@@ -27,7 +27,10 @@ pub struct EvalPoint {
 pub struct ReplanEvent {
     /// Virtual time the re-plan was applied.
     pub t: Time,
-    /// What tripped it: "load", "bandwidth", or "load+bandwidth".
+    /// What tripped it: any "+"-joined combination of "load" (allocation
+    /// movement), "bandwidth" (topology re-plan), and "compression"
+    /// (per-link codec reassignment) — plus "lease" for multi-job lease
+    /// re-divisions.
     pub cause: String,
     /// Relative plan movement that cleared hysteresis (0 for
     /// topology-only re-plans).
@@ -42,6 +45,10 @@ pub struct ReplanEvent {
     /// Shard migrations the data-plane rebalancer committed alongside
     /// this re-plan (0 without an active data plane).
     pub data_moves: usize,
+    /// Per-link codec reassignments `(from, to, codec_name)` the elastic
+    /// controller installed with this re-plan (`auto_compression`);
+    /// codec names are "none" / "topk" / "q8".
+    pub compression_changes: Vec<(usize, usize, String)>,
 }
 
 /// What the federated edge tier did during one training run (`None`
@@ -227,6 +234,16 @@ impl TrainReport {
                         ),
                         ("topology_replanned", Json::Bool(e.topology_replanned)),
                         ("data_moves", Json::num(e.data_moves as f64)),
+                        (
+                            "compression_changes",
+                            Json::arr(e.compression_changes.iter().map(|(f, t, c)| {
+                                Json::arr(vec![
+                                    Json::num(*f as f64),
+                                    Json::num(*t as f64),
+                                    Json::str(c),
+                                ])
+                            })),
+                        ),
                     ])
                 })),
             ),

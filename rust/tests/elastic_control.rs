@@ -141,6 +141,86 @@ fn elastic_costs_no_more_than_static_under_churn() {
 }
 
 #[test]
+fn auto_compression_picks_a_codec_on_collapse_and_reverts_on_recovery() {
+    // Compression-only control loop (`auto_compression` with `enabled`
+    // off): the Shanghai<->Beijing star edges of the bandwidth-tree plan
+    // collapse to 10% of nominal mid-run, then recover. The controller
+    // must switch the collapsed pair to a lossy codec (recorded as a
+    // "compression" re-plan event), put smaller payloads on the wire,
+    // revert to dense after recovery — and never move load or re-plan
+    // the topology, because `enabled` is off.
+    let env = four_cloud_env();
+    let initial = optimal_matching(&env).allocations;
+    let mut cfg = churned_cfg(false);
+    cfg.churn.clear();
+    cfg.sync = SyncConfig::new(Strategy::AsgdGa, 4);
+    cfg.topology = cloudless::engine::TopologyKind::BandwidthTree;
+
+    // Baseline pass sizes the churn schedule in virtual time.
+    let baseline = run_geo_training(&rt(), &env, initial.clone(), cfg.clone()).unwrap();
+    assert!(baseline.replan_events.is_empty(), "no controller, no events");
+    let t_total = baseline.total_time;
+    let (t_collapse, t_recover) = (0.15 * t_total, 0.55 * t_total);
+
+    cfg.churn = vec![
+        ChurnEvent::LinkBandwidth { t: t_collapse, from: 0, to: 2, bps: 10e6 },
+        ChurnEvent::LinkBandwidth { t: t_collapse, from: 2, to: 0, bps: 10e6 },
+        ChurnEvent::LinkBandwidth { t: t_recover, from: 0, to: 2, bps: 100e6 },
+        ChurnEvent::LinkBandwidth { t: t_recover, from: 2, to: 0, bps: 100e6 },
+    ];
+    cfg.elastic = ElasticConfig {
+        auto_compression: true,
+        interval_s: (t_total / 40.0).max(1e-3),
+        ..ElasticConfig::default()
+    };
+    let report = run_geo_training(&rt(), &env, initial, cfg).unwrap();
+
+    // Compression-only: every event is a pure codec event.
+    assert!(!report.replan_events.is_empty(), "the collapse must be acted on");
+    for ev in &report.replan_events {
+        assert_eq!(ev.cause, "compression", "{ev:?}");
+        assert!(!ev.topology_replanned, "{ev:?}");
+        assert_eq!(ev.plan_delta, 0.0, "{ev:?}");
+        assert!(!ev.compression_changes.is_empty(), "{ev:?}");
+    }
+
+    // The collapsed pair picks a lossy codec after the collapse...
+    let changes = |pred: &dyn Fn(&str) -> bool| {
+        report
+            .replan_events
+            .iter()
+            .flat_map(|ev| ev.compression_changes.iter().map(move |c| (ev.t, c)))
+            .filter(|(_, (f, t, codec))| (*f, *t) == (0, 2) && pred(codec))
+            .map(|(t, _)| t)
+            .collect::<Vec<_>>()
+    };
+    let picks = changes(&|c| c != "none");
+    assert!(
+        picks.iter().any(|&t| t > t_collapse),
+        "collapsed link never picked a codec: {:?}",
+        report.replan_events
+    );
+    // ...and reverts to dense once the recovery has been observed.
+    let reverts = changes(&|c| c == "none");
+    assert!(
+        reverts.iter().any(|&t| t > t_recover),
+        "recovered link never reverted (reverts {reverts:?}): {:?}",
+        report.replan_events
+    );
+
+    // The codec override reached the wire: same count-based send
+    // schedule, smaller payloads on the collapsed pair.
+    let steps = |r: &TrainReport| r.partitions.iter().map(|p| p.steps).sum::<u64>();
+    assert_eq!(steps(&baseline), steps(&report));
+    assert!(
+        report.wan_bytes < baseline.wan_bytes,
+        "compressed run shipped {} B >= dense {} B",
+        report.wan_bytes,
+        baseline.wan_bytes
+    );
+}
+
+#[test]
 fn bandwidth_churn_replans_the_topology() {
     let env = four_cloud_env();
     let initial = optimal_matching(&env).allocations;
