@@ -45,18 +45,34 @@ impl Default for CostModel {
 }
 
 /// One allocation interval to bill: `units` cores/devices of `device`
-/// held for `held_s` seconds.
+/// held for `held_s` seconds at `rate` × the on-demand list price
+/// (1.0 = on-demand; a spot segment carries its trace-averaged price
+/// multiplier — see `cloud::spot::SpotMarket::avg_price_mult`).
 #[derive(Debug, Clone)]
 pub struct BilledAllocation {
     pub device: Device,
     pub units: u32,
     pub held_s: Time,
+    pub rate: f64,
+}
+
+impl BilledAllocation {
+    /// An on-demand (rate 1.0) interval — the historical constructor.
+    pub fn on_demand(device: Device, units: u32, held_s: Time) -> BilledAllocation {
+        BilledAllocation { device, units, held_s, rate: 1.0 }
+    }
+
+    /// What the same interval would have cost on-demand minus what it
+    /// actually cost: the segment's spot savings (0 for on-demand).
+    pub fn savings_vs_on_demand(&self, m: &CostModel) -> f64 {
+        m.compute_cost(&BilledAllocation { rate: 1.0, ..self.clone() }) - m.compute_cost(self)
+    }
 }
 
 impl CostModel {
-    /// Compute cost of one allocation interval.
+    /// Compute cost of one allocation interval (market rate applied).
     pub fn compute_cost(&self, a: &BilledAllocation) -> f64 {
-        a.device.info().price_per_unit_hour * a.units as f64 * a.held_s / 3600.0
+        a.device.info().price_per_unit_hour * a.units as f64 * a.held_s / 3600.0 * a.rate
     }
 
     /// WAN sync-traffic cost (flat rate).
@@ -107,11 +123,21 @@ mod tests {
     #[test]
     fn compute_cost_scales_linearly() {
         let m = CostModel::default();
-        let base = BilledAllocation { device: Device::CascadeLake, units: 12, held_s: 3600.0 };
-        let twice = BilledAllocation { device: Device::CascadeLake, units: 12, held_s: 7200.0 };
+        let base = BilledAllocation::on_demand(Device::CascadeLake, 12, 3600.0);
+        let twice = BilledAllocation::on_demand(Device::CascadeLake, 12, 7200.0);
         assert!((m.compute_cost(&twice) - 2.0 * m.compute_cost(&base)).abs() < 1e-12);
         // 12 cores * $0.04/h * 1h
         assert!((m.compute_cost(&base) - 0.48).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spot_rate_discounts_the_segment() {
+        let m = CostModel::default();
+        let od = BilledAllocation::on_demand(Device::CascadeLake, 12, 3600.0);
+        let spot = BilledAllocation { rate: 0.35, ..od.clone() };
+        assert!((m.compute_cost(&spot) - 0.35 * m.compute_cost(&od)).abs() < 1e-12);
+        assert!((spot.savings_vs_on_demand(&m) - 0.65 * m.compute_cost(&od)).abs() < 1e-12);
+        assert_eq!(od.savings_vs_on_demand(&m), 0.0);
     }
 
     #[test]
@@ -164,12 +190,12 @@ mod tests {
         // the same duration cost less.
         let m = CostModel::default();
         let greedy = vec![
-            BilledAllocation { device: Device::CascadeLake, units: 12, held_s: 1000.0 },
-            BilledAllocation { device: Device::Skylake, units: 12, held_s: 1000.0 },
+            BilledAllocation::on_demand(Device::CascadeLake, 12, 1000.0),
+            BilledAllocation::on_demand(Device::Skylake, 12, 1000.0),
         ];
         let elastic = vec![
-            BilledAllocation { device: Device::CascadeLake, units: 12, held_s: 1000.0 },
-            BilledAllocation { device: Device::Skylake, units: 8, held_s: 1000.0 },
+            BilledAllocation::on_demand(Device::CascadeLake, 12, 1000.0),
+            BilledAllocation::on_demand(Device::Skylake, 8, 1000.0),
         ];
         assert!(m.total(&elastic, 0) < m.total(&greedy, 0));
     }

@@ -52,11 +52,22 @@ pub enum Device {
     Skylake,
     T4,
     V100,
+    /// CPU-serverless (function) capacity: weaker shared cores at a
+    /// deep per-core-hour discount — the serverless-vs-VM tier choice
+    /// studied in arXiv 2509.14920. Not a paper TABLE I row; the
+    /// numbers follow the same IN calibration methodology.
+    Serverless,
 }
 
 impl Device {
-    pub const ALL: [Device; 5] =
-        [Device::IceLake, Device::CascadeLake, Device::Skylake, Device::T4, Device::V100];
+    pub const ALL: [Device; 6] = [
+        Device::IceLake,
+        Device::CascadeLake,
+        Device::Skylake,
+        Device::T4,
+        Device::V100,
+        Device::Serverless,
+    ];
 
     pub fn info(self) -> &'static DeviceType {
         match self {
@@ -65,6 +76,7 @@ impl Device {
             Device::Skylake => &SKYLAKE,
             Device::T4 => &T4,
             Device::V100 => &V100,
+            Device::Serverless => &SERVERLESS,
         }
     }
 
@@ -75,6 +87,7 @@ impl Device {
             "skylake" | "sky" => Some(Device::Skylake),
             "t4" => Some(Device::T4),
             "v100" => Some(Device::V100),
+            "serverless" | "faas" | "fn" => Some(Device::Serverless),
             _ => None,
         }
     }
@@ -153,6 +166,18 @@ static V100: DeviceType = DeviceType {
     price_per_unit_hour: 2.50,
 };
 
+static SERVERLESS: DeviceType = DeviceType {
+    name: "CPU Serverless (function cores)",
+    kind: DeviceKind::Cpu,
+    measured_cores: 2,
+    tflops: 0.070,
+    // Shared function cores run the baseline workload ~half IceLake's
+    // speed; class power rounds to 1/4 per core (vs IceLake's 1/2).
+    iter_time_s: 7.394,
+    class_power_per_core: 0.25,
+    price_per_unit_hour: 0.020,
+};
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,9 +232,26 @@ mod tests {
                 Device::Skylake => "sky",
                 Device::T4 => "t4",
                 Device::V100 => "v100",
+                Device::Serverless => "serverless",
             };
             assert_eq!(Device::from_name(short), Some(d));
         }
         assert_eq!(Device::from_name("tpu"), None);
+    }
+
+    #[test]
+    fn serverless_tier_is_cheap_and_slow() {
+        let s = Device::Serverless;
+        assert_eq!(s.info().kind, DeviceKind::Cpu);
+        // Half an IceLake core's class power at under half its price.
+        assert!((s.power_of(2) - 0.5).abs() < 1e-9);
+        assert!(s.info().price_per_unit_hour < 0.5 * Device::IceLake.info().price_per_unit_hour);
+        // Cheaper per unit of compute power than any fixed CPU tier —
+        // the reason the tier exists — but slower per core.
+        let per_power = |d: Device| d.info().price_per_unit_hour / d.info().class_power_per_core;
+        for d in [Device::IceLake, Device::CascadeLake, Device::Skylake] {
+            assert!(per_power(s) < per_power(d), "{d:?}");
+        }
+        assert!(s.in_norm() < Device::IceLake.in_norm());
     }
 }

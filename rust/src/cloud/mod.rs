@@ -9,6 +9,7 @@
 
 pub mod cost;
 pub mod devices;
+pub mod spot;
 
 use devices::Device;
 

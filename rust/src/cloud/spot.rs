@@ -1,0 +1,449 @@
+//! The spot market: per-region preemptible capacity with deterministic
+//! price and revocation traces.
+//!
+//! The paper's elastic scheduler adapts workflows to "the heterogeneity
+//! of available cloud resources" (§Abstract, Algorithm 1), but until
+//! this module every tier was fixed on-demand capacity: rentable at list
+//! price, never revoked. Real clouds sell the same cores at a deep
+//! discount as *preemptible* (spot) instances — the serverless cost
+//! study arXiv 2509.14920 and HeterPS (arXiv 2111.10635) both put the
+//! real cost wins in tier choice — at the price of revocation on short
+//! notice. This module makes that a genuine trade instead of a free
+//! lunch:
+//!
+//! - a **price trace** per (region, device tier): a piecewise-constant
+//!   multiplier on the on-demand rate, one independent draw per
+//!   [`SpotConfig::segment_s`] window around the configured
+//!   [`SpotConfig::discount`];
+//! - a **revocation trace** per region: exponential interarrival times
+//!   at [`SpotConfig::preempt_per_hour`];
+//! - an **expected-cost rate** ([`SpotMarket::effective_rate`]) that
+//!   folds the expected number of preemptions and the checkpoint/restore
+//!   stall each one costs into one multiplier the placement planner can
+//!   compare against on-demand's 1.0 — [`plan_markets`] picks the
+//!   [`Market`] per region exactly that way.
+//!
+//! Both traces are **deterministic and prefix-stable**: every price
+//! segment and every revocation sequence is derived from a fresh
+//! [`Pcg32`] stream keyed by `(seed, region, device, segment)`, so the
+//! value at virtual time `t` never depends on how much of the trace was
+//! queried before it, and two runs with the same seed see byte-identical
+//! markets. With `enabled: false` nothing here is ever consulted — the
+//! on-demand-only path is byte-identical to the pre-spot engine
+//! (`rust/tests/spot.rs` pins this).
+
+use crate::cloud::devices::Device;
+use crate::cloud::CloudEnv;
+use crate::net::RegionId;
+use crate::sim::Time;
+use crate::util::rng::Pcg32;
+
+/// The `"spot"` config block / `--spot*` CLI surface. Off by default;
+/// every field is validated by [`SpotConfig::validate`] so out-of-range
+/// values are config errors, not silent clamps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpotConfig {
+    /// Master switch. Off = the market is never consulted and the run
+    /// is byte-identical to the on-demand-only engine.
+    pub enabled: bool,
+    /// Mean spot price as a multiplier on the on-demand rate, in (0, 1]
+    /// (0.35 = the typical ~65% spot discount).
+    pub discount: f64,
+    /// Relative half-range of the per-segment price noise, in [0, 1):
+    /// each segment draws uniformly in `discount * (1 ± volatility)`.
+    pub volatility: f64,
+    /// Mean revocations per hour per spot pool (exponential
+    /// interarrival). 0 = prices fluctuate but capacity is never taken.
+    pub preempt_per_hour: f64,
+    /// Virtual seconds a revoked pool stalls for checkpoint restore +
+    /// re-provisioning before training resumes (real simulated time —
+    /// lost in-flight steps are re-run after it).
+    pub restore_stall_s: f64,
+    /// Price-trace segment length in virtual seconds (one independent
+    /// price draw per segment).
+    pub segment_s: f64,
+    /// Trace seed; 0 derives it from the job seed so `train --seed`
+    /// reproduces the whole market.
+    pub seed: u64,
+}
+
+impl Default for SpotConfig {
+    fn default() -> Self {
+        SpotConfig {
+            enabled: false,
+            discount: 0.35,
+            volatility: 0.25,
+            preempt_per_hour: 0.5,
+            restore_stall_s: 30.0,
+            segment_s: 300.0,
+            seed: 0,
+        }
+    }
+}
+
+impl SpotConfig {
+    /// Range-check the knobs (shared by the config parser and the CLI).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.discount > 0.0 && self.discount <= 1.0) {
+            return Err(format!(
+                "spot discount must be in (0, 1], got {}",
+                self.discount
+            ));
+        }
+        if !(0.0..1.0).contains(&self.volatility) {
+            return Err(format!(
+                "spot volatility must be in [0, 1), got {}",
+                self.volatility
+            ));
+        }
+        if !(self.preempt_per_hour >= 0.0) || !self.preempt_per_hour.is_finite() {
+            return Err(format!(
+                "spot preempt_per_hour must be >= 0 and finite, got {}",
+                self.preempt_per_hour
+            ));
+        }
+        if !(self.restore_stall_s >= 0.0) || !self.restore_stall_s.is_finite() {
+            return Err(format!(
+                "spot restore_stall_s must be >= 0 and finite, got {}",
+                self.restore_stall_s
+            ));
+        }
+        if !(self.segment_s > 0.0) || !self.segment_s.is_finite() {
+            return Err(format!(
+                "spot segment_s must be > 0 and finite, got {}",
+                self.segment_s
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Which market a region's capacity is rented on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Market {
+    /// List price, never revoked (the historical behavior).
+    OnDemand,
+    /// Discounted by the price trace, revocable by the preemption trace.
+    Spot,
+}
+
+impl Market {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Market::OnDemand => "on-demand",
+            Market::Spot => "spot",
+        }
+    }
+}
+
+/// Stable per-device code for trace stream derivation (position in the
+/// catalog — extends automatically as the catalog grows).
+fn dev_code(d: Device) -> u64 {
+    Device::ALL.iter().position(|x| *x == d).unwrap_or(0) as u64
+}
+
+/// One job's view of the spot market: deterministic price + revocation
+/// traces derived from a single seed.
+#[derive(Debug, Clone)]
+pub struct SpotMarket {
+    cfg: SpotConfig,
+    seed: u64,
+}
+
+impl SpotMarket {
+    /// Build the market for one job. A zero `cfg.seed` derives the trace
+    /// seed from `job_seed` so the whole market follows `--seed`.
+    pub fn new(cfg: &SpotConfig, job_seed: u64) -> SpotMarket {
+        let seed = if cfg.seed != 0 {
+            cfg.seed
+        } else {
+            job_seed ^ 0x5D07_A11C_E5D0_7A11
+        };
+        SpotMarket { cfg: cfg.clone(), seed }
+    }
+
+    pub fn config(&self) -> &SpotConfig {
+        &self.cfg
+    }
+
+    /// Spot price multiplier (vs the on-demand rate) for `dev` capacity
+    /// in `region` at virtual time `t`. Piecewise-constant: one
+    /// independent uniform draw in `discount * (1 ± volatility)` per
+    /// `segment_s` window, keyed by `(seed, region, dev, segment)` so
+    /// any segment is computable without its predecessors
+    /// (prefix-stable).
+    pub fn price_mult(&self, region: RegionId, dev: Device, t: Time) -> f64 {
+        let seg = (t.max(0.0) / self.cfg.segment_s).floor() as u64;
+        let stream = 0xA11C_E000u64 ^ ((region as u64) << 8) ^ dev_code(dev);
+        let mut rng = Pcg32::new(self.seed.wrapping_add(seg.wrapping_mul(0x9E37_79B9_7F4A_7C15)), stream);
+        let u = rng.f64();
+        let mult = self.cfg.discount * (1.0 + self.cfg.volatility * (2.0 * u - 1.0));
+        mult.clamp(0.01, 1.0)
+    }
+
+    /// Exact time-average of [`SpotMarket::price_mult`] over `[t0, t1]`
+    /// (the piecewise-constant integral, not a sample) — what a closed
+    /// billing segment is charged at.
+    pub fn avg_price_mult(&self, region: RegionId, dev: Device, t0: Time, t1: Time) -> f64 {
+        let (t0, t1) = (t0.max(0.0), t1.max(0.0));
+        if t1 <= t0 {
+            return self.price_mult(region, dev, t0);
+        }
+        let seg_s = self.cfg.segment_s;
+        let first = (t0 / seg_s).floor() as u64;
+        let last = (t1 / seg_s).ceil() as u64;
+        let mut acc = 0.0;
+        for seg in first..last {
+            let lo = (seg as f64 * seg_s).max(t0);
+            let hi = ((seg + 1) as f64 * seg_s).min(t1);
+            if hi > lo {
+                acc += self.price_mult(region, dev, seg as f64 * seg_s) * (hi - lo);
+            }
+        }
+        acc / (t1 - t0)
+    }
+
+    /// Revocation instants for `region`'s spot pool within
+    /// `[0, horizon_s)`: exponential interarrival at `preempt_per_hour`,
+    /// drawn sequentially from a per-region stream (prefix-stable — a
+    /// longer horizon only appends).
+    pub fn preemption_times(&self, region: RegionId, horizon_s: Time) -> Vec<Time> {
+        let mut out = Vec::new();
+        if self.cfg.preempt_per_hour <= 0.0 || horizon_s <= 0.0 {
+            return out;
+        }
+        let mean_s = 3600.0 / self.cfg.preempt_per_hour;
+        let mut rng = Pcg32::new(self.seed, 0x9E37_0000 ^ region as u64);
+        let mut t = 0.0;
+        loop {
+            t += -mean_s * (1.0 - rng.f64()).ln();
+            if t >= horizon_s {
+                return out;
+            }
+            out.push(t);
+        }
+    }
+
+    /// Expected revocations over `dt` virtual seconds.
+    pub fn expected_preemptions(&self, dt: Time) -> f64 {
+        self.cfg.preempt_per_hour * dt.max(0.0) / 3600.0
+    }
+
+    /// The planner's scalar: the expected per-unit-hour cost of renting
+    /// `dev` in `region` on the spot market over a `horizon_s` run, as a
+    /// multiplier on the on-demand rate. The expected preemptions each
+    /// stretch the run by `restore_stall_s` (plus the re-run of lost
+    /// in-flight work, dominated by the stall), all billed at the spot
+    /// rate:
+    ///
+    /// ```text
+    /// effective = avg_price * (1 + E[preemptions] * restore_stall / horizon)
+    /// ```
+    ///
+    /// Spot wins exactly when this is below on-demand's 1.0 — which is
+    /// how [`plan_markets`] chooses.
+    pub fn effective_rate(&self, region: RegionId, dev: Device, horizon_s: Time) -> f64 {
+        let h = horizon_s.max(1.0);
+        let avg = self.avg_price_mult(region, dev, 0.0, h);
+        let overhead = self.expected_preemptions(h) * self.cfg.restore_stall_s / h;
+        avg * (1.0 + overhead)
+    }
+}
+
+/// Pick the market per region: spot wherever its expected effective rate
+/// (price trace + expected preemption/restore overhead) undercuts
+/// on-demand, judged on the region's first inventory tier over the
+/// job's estimated horizon. Disabled spot = all on-demand.
+pub fn plan_markets(env: &CloudEnv, market: Option<&SpotMarket>, horizon_s: Time) -> Vec<Market> {
+    let n = env.regions.len();
+    let market = match market {
+        Some(m) if m.config().enabled => m,
+        _ => return vec![Market::OnDemand; n],
+    };
+    env.regions
+        .iter()
+        .map(|r| {
+            let dev = r.inventory.first().map(|(d, _)| *d).unwrap_or(Device::IceLake);
+            if market.effective_rate(r.id, dev, horizon_s) < 1.0 {
+                Market::Spot
+            } else {
+                Market::OnDemand
+            }
+        })
+        .collect()
+}
+
+/// Per-region compute price multipliers for the placement planner's
+/// joint objective: 1.0 for on-demand regions, the (expected-preemption
+/// adjusted) effective spot rate for spot regions — never above 1.0,
+/// because a region whose spot rate beats on-demand is rented there and
+/// one that doesn't is rented on-demand.
+pub fn rate_scale(env: &CloudEnv, market: Option<&SpotMarket>, horizon_s: Time) -> Vec<f64> {
+    let markets = plan_markets(env, market, horizon_s);
+    env.regions
+        .iter()
+        .zip(&markets)
+        .map(|(r, m)| match m {
+            Market::OnDemand => 1.0,
+            Market::Spot => {
+                let dev = r.inventory.first().map(|(d, _)| *d).unwrap_or(Device::IceLake);
+                market
+                    .map(|mk| mk.effective_rate(r.id, dev, horizon_s).min(1.0))
+                    .unwrap_or(1.0)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Region;
+
+    fn cfg() -> SpotConfig {
+        SpotConfig { enabled: true, ..SpotConfig::default() }
+    }
+
+    fn env() -> CloudEnv {
+        CloudEnv::new(vec![
+            Region::new(0, "A", vec![(Device::CascadeLake, 12)], 100),
+            Region::new(1, "B", vec![(Device::Skylake, 12)], 100),
+        ])
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        for bad in [
+            SpotConfig { discount: 0.0, ..cfg() },
+            SpotConfig { discount: 1.5, ..cfg() },
+            SpotConfig { volatility: 1.0, ..cfg() },
+            SpotConfig { volatility: -0.1, ..cfg() },
+            SpotConfig { preempt_per_hour: -1.0, ..cfg() },
+            SpotConfig { preempt_per_hour: f64::NAN, ..cfg() },
+            SpotConfig { restore_stall_s: -1.0, ..cfg() },
+            SpotConfig { segment_s: 0.0, ..cfg() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} must be rejected");
+        }
+        assert!(cfg().validate().is_ok());
+        assert!(SpotConfig::default().validate().is_ok(), "defaults are valid");
+    }
+
+    #[test]
+    fn price_trace_is_deterministic_and_bounded() {
+        let a = SpotMarket::new(&cfg(), 42);
+        let b = SpotMarket::new(&cfg(), 42);
+        for seg in 0..40 {
+            let t = seg as f64 * 300.0 + 1.0;
+            let pa = a.price_mult(0, Device::CascadeLake, t);
+            assert_eq!(pa, b.price_mult(0, Device::CascadeLake, t), "same seed, same trace");
+            // discount 0.35 ± 25%
+            assert!((0.2625..=0.4375).contains(&pa), "segment {seg}: {pa}");
+        }
+        let c = SpotMarket::new(&cfg(), 43);
+        let diff = (0..40).any(|seg| {
+            let t = seg as f64 * 300.0 + 1.0;
+            a.price_mult(0, Device::CascadeLake, t) != c.price_mult(0, Device::CascadeLake, t)
+        });
+        assert!(diff, "different seeds must differ somewhere");
+    }
+
+    #[test]
+    fn price_differs_across_regions_and_tiers() {
+        let m = SpotMarket::new(&cfg(), 42);
+        let r0 = (0..40).map(|s| m.price_mult(0, Device::Skylake, s as f64 * 300.0)).sum::<f64>();
+        let r1 = (0..40).map(|s| m.price_mult(1, Device::Skylake, s as f64 * 300.0)).sum::<f64>();
+        let d1 = (0..40).map(|s| m.price_mult(0, Device::T4, s as f64 * 300.0)).sum::<f64>();
+        assert!(r0 != r1, "regions draw independent traces");
+        assert!(r0 != d1, "tiers draw independent traces");
+    }
+
+    #[test]
+    fn avg_price_is_the_exact_piecewise_integral() {
+        let m = SpotMarket::new(&cfg(), 7);
+        // Spanning two half segments: the average is the midpoint.
+        let p0 = m.price_mult(0, Device::Skylake, 0.0);
+        let p1 = m.price_mult(0, Device::Skylake, 300.0);
+        let avg = m.avg_price_mult(0, Device::Skylake, 150.0, 450.0);
+        assert!((avg - 0.5 * (p0 + p1)).abs() < 1e-12);
+        // Inside one segment the average is the segment price.
+        assert_eq!(m.avg_price_mult(0, Device::Skylake, 10.0, 20.0), p0);
+        // Degenerate interval falls back to the instant price.
+        assert_eq!(m.avg_price_mult(0, Device::Skylake, 50.0, 50.0), p0);
+    }
+
+    #[test]
+    fn prefix_stability_querying_further_never_rewrites_history() {
+        let m = SpotMarket::new(&cfg(), 42);
+        let early = m.avg_price_mult(0, Device::CascadeLake, 0.0, 600.0);
+        let _far = m.price_mult(0, Device::CascadeLake, 1e6);
+        assert_eq!(early, m.avg_price_mult(0, Device::CascadeLake, 0.0, 600.0));
+        let short = m.preemption_times(0, 3600.0);
+        let long = m.preemption_times(0, 36_000.0);
+        assert!(long.len() >= short.len());
+        assert_eq!(&long[..short.len()], &short[..], "longer horizon only appends");
+    }
+
+    #[test]
+    fn preemption_times_follow_the_rate() {
+        let heavy = SpotMarket::new(&SpotConfig { preempt_per_hour: 6.0, ..cfg() }, 42);
+        let light = SpotMarket::new(&SpotConfig { preempt_per_hour: 0.5, ..cfg() }, 42);
+        let h = 40.0 * 3600.0;
+        let nh = heavy.preemption_times(0, h).len();
+        let nl = light.preemption_times(0, h).len();
+        assert!(nh > nl, "6/h must revoke more than 0.5/h ({nh} vs {nl})");
+        // Rough mean check: 6/h over 40h ≈ 240, allow wide slack.
+        assert!((120..=480).contains(&nh), "{nh}");
+        let none = SpotMarket::new(&SpotConfig { preempt_per_hour: 0.0, ..cfg() }, 42);
+        assert!(none.preemption_times(0, h).is_empty());
+        assert!(heavy.preemption_times(0, 0.0).is_empty());
+    }
+
+    #[test]
+    fn effective_rate_folds_in_preemption_overhead() {
+        let calm = SpotMarket::new(&SpotConfig { preempt_per_hour: 0.0, ..cfg() }, 42);
+        let churny =
+            SpotMarket::new(&SpotConfig { preempt_per_hour: 30.0, restore_stall_s: 240.0, ..cfg() }, 42);
+        let h = 3600.0;
+        let base = calm.effective_rate(0, Device::Skylake, h);
+        let loaded = churny.effective_rate(0, Device::Skylake, h);
+        assert!(loaded > base, "preemption overhead must raise the rate");
+        // 30 preempts × 240 s = 2h of stall on a 1h run: triple the price.
+        assert!((loaded / base - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn markets_pick_spot_only_when_it_wins() {
+        let e = env();
+        let cheap = SpotMarket::new(&cfg(), 42);
+        assert_eq!(plan_markets(&e, Some(&cheap), 3600.0), vec![Market::Spot, Market::Spot]);
+        // A market whose stalls eat the whole discount goes on-demand.
+        let ruinous = SpotMarket::new(
+            &SpotConfig { preempt_per_hour: 60.0, restore_stall_s: 600.0, ..cfg() },
+            42,
+        );
+        assert_eq!(
+            plan_markets(&e, Some(&ruinous), 3600.0),
+            vec![Market::OnDemand, Market::OnDemand]
+        );
+        // Disabled market: always on-demand, never consulted.
+        let off = SpotMarket::new(&SpotConfig::default(), 42);
+        assert_eq!(plan_markets(&e, Some(&off), 3600.0), vec![Market::OnDemand, Market::OnDemand]);
+        assert_eq!(plan_markets(&e, None, 3600.0), vec![Market::OnDemand, Market::OnDemand]);
+    }
+
+    #[test]
+    fn rate_scale_is_one_on_demand_and_below_one_on_spot() {
+        let e = env();
+        assert_eq!(rate_scale(&e, None, 3600.0), vec![1.0, 1.0]);
+        let m = SpotMarket::new(&cfg(), 42);
+        let scale = rate_scale(&e, Some(&m), 3600.0);
+        assert!(scale.iter().all(|&s| s > 0.0 && s < 1.0), "{scale:?}");
+    }
+
+    #[test]
+    fn market_names() {
+        assert_eq!(Market::OnDemand.name(), "on-demand");
+        assert_eq!(Market::Spot.name(), "spot");
+    }
+}

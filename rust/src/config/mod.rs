@@ -29,7 +29,16 @@
 //!                 // optional :rK suffix = K replica copies per shard,
 //!                 // optional @shard=r1,r2 per-shard residency overrides
 //!                 "mode": "joint",     // compute-follows-data | data-follows-compute | joint
-//!                 "sample_kb": 256, "rebalance": true},
+//!                 "sample_kb": 256, "rebalance": true,
+//!                 "replica_map": "shards.json"},  // whole-catalog replica-set
+//!                 // pins from a JSON file {"<shard>": [region, ...], ...};
+//!                 // inline @ pins in "placement" win per shard
+//!   "spot": {"enabled": true,          // preemptible capacity market
+//!            "discount": 0.35,         // mean spot price vs on-demand, (0, 1]
+//!            "volatility": 0.25,       // per-segment price noise, [0, 1)
+//!            "preempt_per_hour": 0.5,  // mean revocations/hour per spot pool
+//!            "restore_stall_s": 30,    // checkpoint-restore stall per revocation
+//!            "segment_s": 300, "seed": 0},  // price segment length; 0 = job seed
 //!   "federated": {"clients": 100000,   // edge-cohort tier below the clouds
 //!                 "cohorts": 40,       // aggregator pools per cloud (0 = flat)
 //!                 "sample_frac": 0.1,  // clients sampled per round, (0, 1]
@@ -231,6 +240,17 @@ pub fn parse_job(text: &str) -> Result<JobSpec> {
             train.dataplane.placement.is_some(),
             "\"dataplane\" block needs a \"placement\" spec"
         );
+        let rm = dp.get("replica_map");
+        if !rm.is_null() {
+            let path = rm.as_str().ok_or_else(|| {
+                anyhow::anyhow!("dataplane \"replica_map\" must be a file path string")
+            })?;
+            let map =
+                crate::dataplane::load_replica_map(path).map_err(|e| anyhow::anyhow!(e))?;
+            let spec = train.dataplane.placement.take().expect("ensured above");
+            train.dataplane.placement = Some(spec.with_replica_map(map));
+            train.dataplane.replica_map = Some(path.to_string());
+        }
     }
 
     let fed = j.get("federated");
@@ -257,6 +277,36 @@ pub fn parse_job(text: &str) -> Result<JobSpec> {
             "\"federated\" block needs \"clients\" > 0 and \"cohorts\" > 0 \
              (omit the block for a flat run)"
         );
+    }
+
+    let spot = j.get("spot");
+    if !spot.is_null() {
+        anyhow::ensure!(
+            spot.as_obj().is_some(),
+            "\"spot\" must be an object (e.g. {{\"enabled\": true}})"
+        );
+        if let Some(e) = spot.get("enabled").as_bool() {
+            train.spot.enabled = e;
+        }
+        if let Some(v) = spot.get("discount").as_f64() {
+            train.spot.discount = v;
+        }
+        if let Some(v) = spot.get("volatility").as_f64() {
+            train.spot.volatility = v;
+        }
+        if let Some(v) = spot.get("preempt_per_hour").as_f64() {
+            train.spot.preempt_per_hour = v;
+        }
+        if let Some(v) = spot.get("restore_stall_s").as_f64() {
+            train.spot.restore_stall_s = v;
+        }
+        if let Some(v) = spot.get("segment_s").as_f64() {
+            train.spot.segment_s = v;
+        }
+        if let Some(s) = spot.get("seed").as_f64() {
+            train.spot.seed = s as u64;
+        }
+        train.spot.validate().map_err(|e| anyhow::anyhow!(e))?;
     }
 
     let mut multijob = None;
@@ -516,6 +566,73 @@ mod tests {
             let doc = format!(r#"{{"model":"synthetic",{bad},{region}}}"#);
             assert!(parse_job(&doc).is_err(), "must reject: {doc}");
         }
+    }
+
+    #[test]
+    fn spot_block_parses() {
+        let region = r#""regions":[{"name":"X","device":"sky","units":6,"data":100}]"#;
+        let spec = parse_job(&format!(
+            r#"{{"model":"synthetic",
+                "spot":{{"enabled":true,"discount":0.3,"volatility":0.1,
+                         "preempt_per_hour":2,"restore_stall_s":45,
+                         "segment_s":120,"seed":7}},{region}}}"#
+        ))
+        .unwrap();
+        let sp = &spec.train.spot;
+        assert!(sp.enabled);
+        assert!((sp.discount - 0.3).abs() < 1e-12);
+        assert!((sp.volatility - 0.1).abs() < 1e-12);
+        assert!((sp.preempt_per_hour - 2.0).abs() < 1e-12);
+        assert!((sp.restore_stall_s - 45.0).abs() < 1e-12);
+        assert!((sp.segment_s - 120.0).abs() < 1e-12);
+        assert_eq!(sp.seed, 7);
+        // Absent block: the market is off (the byte-identical seed path).
+        let off = parse_job(&format!(r#"{{"model":"synthetic",{region}}}"#)).unwrap();
+        assert!(!off.train.spot.enabled);
+        // Errors: wrong type, out-of-range knobs.
+        for bad in [
+            r#""spot":true"#,
+            r#""spot":{"enabled":true,"discount":0}"#,
+            r#""spot":{"enabled":true,"discount":1.5}"#,
+            r#""spot":{"enabled":true,"volatility":1}"#,
+            r#""spot":{"enabled":true,"preempt_per_hour":-1}"#,
+            r#""spot":{"enabled":true,"restore_stall_s":-5}"#,
+            r#""spot":{"enabled":true,"segment_s":0}"#,
+        ] {
+            let doc = format!(r#"{{"model":"synthetic",{bad},{region}}}"#);
+            assert!(parse_job(&doc).is_err(), "must reject: {doc}");
+        }
+    }
+
+    #[test]
+    fn dataplane_replica_map_file_parses() {
+        let region = r#""regions":[{"name":"X","device":"sky","units":6,"data":100},
+                                   {"name":"Y","device":"sky","units":6,"data":100}]"#;
+        let path = std::env::temp_dir().join("cloudless_cfg_replica_map.json");
+        std::fs::write(&path, r#"{"0": [1], "2": [0, 1]}"#).unwrap();
+        let doc = format!(
+            r#"{{"model":"synthetic",
+                "dataplane":{{"placement":"uniform:4@2=1","replica_map":{path:?}}},{region}}}"#,
+            path = path.display().to_string()
+        );
+        let spec = parse_job(&doc).unwrap();
+        let placement = spec.train.dataplane.placement.unwrap();
+        // Map pins fold in; the inline @2 pin wins over the map's entry.
+        assert_eq!(placement.overrides, vec![(0, vec![1]), (2, vec![1])]);
+        assert_eq!(spec.train.dataplane.replica_map.as_deref(), Some(path.to_str().unwrap()));
+        // A missing file or wrong JSON type is a config error.
+        assert!(parse_job(&format!(
+            r#"{{"model":"synthetic",
+                "dataplane":{{"placement":"uniform:4",
+                              "replica_map":"/nonexistent/map.json"}},{region}}}"#
+        ))
+        .is_err());
+        assert!(parse_job(&format!(
+            r#"{{"model":"synthetic",
+                "dataplane":{{"placement":"uniform:4","replica_map":7}},{region}}}"#
+        ))
+        .is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -303,6 +303,14 @@ pub struct FleetReport {
     /// Lease re-divisions applied to *running* jobs (preemption-by-resize
     /// count; 0 under FIFO).
     pub lease_events: u64,
+    /// Σ per-job spot-market revocations recovered (0 with the market
+    /// off — distinct from `lease_events`, which counts the fleet's own
+    /// voluntary lease re-divisions).
+    pub preemptions: u64,
+    /// Σ per-job compute billed below list price on spot segments, USD
+    /// (what the same allocations would have cost on-demand minus what
+    /// was actually billed).
+    pub spot_savings: f64,
     /// Maximum simultaneously-leased units per region (inventory-safety
     /// witness: never exceeds the region's inventory).
     pub peak_units: Vec<u32>,
@@ -340,6 +348,8 @@ impl FleetReport {
             ("mean_slowdown", Json::num(self.mean_slowdown)),
             ("jain_fairness", Json::num(self.jain_fairness)),
             ("lease_events", Json::num(self.lease_events as f64)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("spot_savings_usd", Json::num(self.spot_savings)),
             ("events_executed", Json::num(self.events_executed as f64)),
             ("events_per_wall_second", Json::num(self.events_per_wall_second())),
             ("total_queue_wait_s", Json::num(self.total_queue_wait())),
@@ -361,6 +371,8 @@ impl FleetReport {
                         ("cost_usd", Json::num(j.report.cost)),
                         ("wan_bytes", Json::num(j.report.wan_bytes as f64)),
                         ("replans", Json::num(j.report.replan_events.len() as f64)),
+                        ("preemptions", Json::num(j.report.preemptions as f64)),
+                        ("spot_savings_usd", Json::num(j.report.spot_savings)),
                     ])
                 })),
             ),
@@ -369,8 +381,13 @@ impl FleetReport {
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
+        let spot = if self.preemptions > 0 || self.spot_savings > 0.0 {
+            format!(" spot[preempt={} saved=${:.4}]", self.preemptions, self.spot_savings)
+        } else {
+            String::new()
+        };
         format!(
-            "{} jobs={} makespan={:.0}s slowdown={:.2} jain={:.3} cost=${:.4} leases={} queue={:.0}s events={} ({:.0}/s)",
+            "{} jobs={} makespan={:.0}s slowdown={:.2} jain={:.3} cost=${:.4} leases={} queue={:.0}s events={} ({:.0}/s){}",
             self.policy,
             self.jobs.len(),
             self.makespan,
@@ -381,6 +398,7 @@ impl FleetReport {
             self.total_queue_wait(),
             self.events_executed,
             self.events_per_wall_second(),
+            spot,
         )
     }
 }
@@ -1041,6 +1059,8 @@ pub fn run_fleet(
         mean_slowdown,
         jain_fairness: jain_index(&rates),
         lease_events: st.lease_events,
+        preemptions: jobs.iter().map(|j| j.report.preemptions).sum(),
+        spot_savings: jobs.iter().map(|j| j.report.spot_savings).sum(),
         peak_units: st.peak_units,
         events_executed: executed,
         wall_seconds: wall0.elapsed().as_secs_f64(),

@@ -237,6 +237,81 @@ impl PlacementSpec {
         }
         out
     }
+
+    /// Fold a whole-catalog replica map (see [`parse_replica_map`]) into
+    /// the spec as per-shard pins. Inline `@` pins from the spec name
+    /// win: a shard the spec already pins keeps its pin and the map's
+    /// entry for it is ignored, so a map file can set the catalog-wide
+    /// baseline while the spec string spot-corrects individual shards.
+    pub fn with_replica_map(mut self, map: Vec<(usize, Vec<RegionId>)>) -> PlacementSpec {
+        for (id, regions) in map {
+            if self.overrides.iter().any(|(pinned, _)| *pinned == id) {
+                continue;
+            }
+            self.overrides.push((id, regions));
+        }
+        self.overrides.sort_by_key(|(id, _)| *id);
+        self
+    }
+}
+
+/// Parse a whole-catalog replica map document — the `"replica_map"`
+/// dataplane config key and the `--replica-map` CLI flag both point at a
+/// JSON file in this shape:
+///
+/// ```json
+/// { "0": [1, 3], "2": [0] }
+/// ```
+///
+/// Keys are final catalog shard ids (decimal strings — JSON object keys
+/// are always strings), values are the shard's full replica set with the
+/// home region first. Returns `(shard_id, replicas)` pairs sorted by id;
+/// out-of-range ids or regions are caught later at catalog build, like
+/// inline `@` pins.
+pub fn parse_replica_map(text: &str) -> Result<Vec<(usize, Vec<RegionId>)>, String> {
+    let err = |what: &str| {
+        format!(
+            "bad replica map: {what} (expected a JSON object of \
+             \"<shard id>\": [region, ...] entries, e.g. {{\"0\": [1, 3]}})"
+        )
+    };
+    let doc = crate::util::json::Json::parse(text)
+        .map_err(|e| err(&format!("unparseable JSON ({e:?})")))?;
+    let obj = doc.as_obj().ok_or_else(|| err("top level is not an object"))?;
+    let mut map: Vec<(usize, Vec<RegionId>)> = Vec::new();
+    for (key, value) in obj {
+        let id: usize = key
+            .parse()
+            .map_err(|_| err(&format!("key {key:?} is not a shard id")))?;
+        let arr = value
+            .as_arr()
+            .ok_or_else(|| err(&format!("shard {id}'s value is not an array")))?;
+        let regions: Vec<RegionId> = arr
+            .iter()
+            .map(|r| {
+                r.as_usize()
+                    .ok_or_else(|| err(&format!("shard {id} lists a non-integer region")))
+            })
+            .collect::<Result<_, _>>()?;
+        if regions.is_empty() {
+            return Err(err(&format!("shard {id}'s replica set is empty")));
+        }
+        map.push((id, regions));
+    }
+    // BTreeMap iteration sorts keys lexicographically ("10" < "2");
+    // re-sort numerically so pins land in catalog order.
+    map.sort_by_key(|(id, _)| *id);
+    Ok(map)
+}
+
+/// [`parse_replica_map`] over a file path (the CLI/config entry point).
+pub fn load_replica_map(
+    path: impl AsRef<std::path::Path>,
+) -> Result<Vec<(usize, Vec<RegionId>)>, String> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading replica map {}: {e}", path.display()))?;
+    parse_replica_map(&text)
 }
 
 /// The catalog: every shard of one dataset with its current replica set.
@@ -627,6 +702,35 @@ mod tests {
         let empty_pin = PlacementSpec::new(Layout::Uniform { shards: 2 })
             .with_override(0, Vec::new());
         assert!(DatasetCatalog::from_spec(&empty_pin, 100, 2, 1, &[1; 2]).is_err());
+    }
+
+    #[test]
+    fn replica_map_parses_and_folds_under_inline_pins() {
+        let map = parse_replica_map(r#"{"2": [0], "10": [1, 3], "0": [2, 1]}"#).unwrap();
+        assert_eq!(
+            map,
+            vec![(0, vec![2, 1]), (2, vec![0]), (10, vec![1, 3])],
+            "entries sort numerically, not by JSON key order"
+        );
+        // The map seeds pins for unpinned shards; inline @ pins win.
+        let spec = PlacementSpec::from_name("uniform:4@2=3")
+            .unwrap()
+            .with_replica_map(vec![(0, vec![2, 1]), (2, vec![0])]);
+        assert_eq!(spec.overrides, vec![(0, vec![2, 1]), (2, vec![3])]);
+        // A folded map behaves exactly like the equivalent inline pins.
+        let c = DatasetCatalog::from_spec(&spec, 400, 4, 10, &[1; 4]).unwrap();
+        assert_eq!(c.shards[0].replicas, vec![2, 1]);
+        assert_eq!(c.shards[2].replicas, vec![3]);
+        for bad in [
+            "[]",
+            "not json",
+            r#"{"x": [0]}"#,
+            r#"{"0": 1}"#,
+            r#"{"0": []}"#,
+            r#"{"0": ["east"]}"#,
+        ] {
+            assert!(parse_replica_map(bad).is_err(), "must reject: {bad}");
+        }
     }
 
     #[test]

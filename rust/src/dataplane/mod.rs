@@ -43,7 +43,10 @@ pub mod catalog;
 pub mod migration;
 pub mod placement;
 
-pub use catalog::{sample_bytes, DatasetCatalog, Layout, PlacementSpec, ShardInfo};
+pub use catalog::{
+    load_replica_map, parse_replica_map, sample_bytes, DatasetCatalog, Layout, PlacementSpec,
+    ShardInfo,
+};
 pub use placement::{
     plan_for, plan_for_catalog, plan_for_catalog_seeded, plan_for_on, plan_for_on_seeded,
     PlacementMode, PlacementPlan, PlannedDataPlane, ShardMove,
@@ -73,6 +76,13 @@ pub struct DataPlaneConfig {
     /// objective; 0 derives the default from the inventory rental rate
     /// ([`placement::default_time_value_per_hour`]).
     pub time_value_per_hour: f64,
+    /// Provenance: path of the whole-catalog replica map file
+    /// (`"replica_map"` config key / `--replica-map`) whose per-shard
+    /// pins were folded into `placement` at load time; `None` when no
+    /// map file was given. The pins themselves live in
+    /// [`PlacementSpec::overrides`] — this only records where they came
+    /// from.
+    pub replica_map: Option<String>,
 }
 
 impl Default for DataPlaneConfig {
@@ -83,6 +93,7 @@ impl Default for DataPlaneConfig {
             sample_bytes: 0,
             rebalance: true,
             time_value_per_hour: 0.0,
+            replica_map: None,
         }
     }
 }

@@ -150,6 +150,13 @@ pub struct PlanInputs<'a> {
     /// [`default_time_value_per_hour`] derives the default from the
     /// inventory's rental rate.
     pub time_value_per_hour: f64,
+    /// Per-region compute price multipliers on the on-demand rate
+    /// (all ones without a spot market): the market layer's
+    /// [`cloud::spot::rate_scale`](crate::cloud::spot::rate_scale)
+    /// folds each region's expected spot price *and* its expected
+    /// preemption/restore overhead into this one scalar, so the joint
+    /// climb weighs cheap-but-revocable capacity honestly.
+    pub rate_scale: Vec<f64>,
 }
 
 /// The default makespan valuation: twice the full inventory's hourly
@@ -161,7 +168,7 @@ pub fn default_time_value_per_hour(env: &CloudEnv, cost: &CostModel) -> f64 {
         .iter()
         .flat_map(|a| a.units.iter())
         .map(|&(dev, units)| {
-            cost.compute_cost(&BilledAllocation { device: dev, units, held_s: 3600.0 })
+            cost.compute_cost(&BilledAllocation::on_demand(dev, units, 3600.0))
         })
         .sum();
     2.0 * rate
@@ -282,10 +289,11 @@ fn evaluate(inputs: &PlanInputs, assign: &[RegionId]) -> Eval {
     }
     let mut cost = egress;
     for alloc in &plan.allocations {
+        let rate = inputs.rate_scale.get(alloc.region).copied().unwrap_or(1.0);
         for &(dev, units) in &alloc.units {
             cost += inputs
                 .cost
-                .compute_cost(&BilledAllocation { device: dev, units, held_s: run });
+                .compute_cost(&BilledAllocation { device: dev, units, held_s: run, rate });
         }
     }
     // Storage rent on the copies this assignment *creates*, held for
@@ -688,6 +696,21 @@ pub fn plan_for_catalog_seeded(
     } else {
         default_time_value_per_hour(env, &cost)
     };
+    // Market rates: spot regions plan at their expected effective rate
+    // (price trace + expected preemption/restore overhead) over the
+    // straggler-bound horizon estimate; on-demand regions at 1.0.
+    let rate_scale = if cfg.spot.enabled {
+        let market = crate::cloud::spot::SpotMarket::new(&cfg.spot, cfg.seed);
+        let shard = cfg.n_train / env.regions.len().max(1);
+        let steps =
+            (shard.max(1) as f64 / meta.batch_size.max(1) as f64).ceil() * cfg.epochs as f64;
+        let power =
+            env.greedy_plan().iter().map(|a| a.power()).fold(f64::INFINITY, f64::min);
+        let horizon = (steps * base_step / power.max(1e-9)).max(1.0);
+        crate::cloud::spot::rate_scale(env, Some(&market), horizon)
+    } else {
+        vec![1.0; env.regions.len()]
+    };
     let inputs = PlanInputs {
         env,
         catalog: &catalog,
@@ -698,6 +721,7 @@ pub fn plan_for_catalog_seeded(
         cost,
         scale: vec![1.0; env.regions.len()],
         time_value_per_hour: time_value,
+        rate_scale,
     };
     let plan = plan_seeded(&inputs, cfg.dataplane.mode, incumbent);
     Ok(PlannedDataPlane { catalog, plan })
@@ -762,7 +786,27 @@ mod tests {
             cost,
             scale: vec![1.0; 4],
             time_value_per_hour: tv,
+            rate_scale: vec![1.0; 4],
         }
+    }
+
+    #[test]
+    fn spot_rates_pull_the_joint_plan_toward_discounted_regions() {
+        let env = four_cloud_env();
+        let cat = skewed_catalog();
+        let base = plan(&inputs(&env, &cat), PlacementMode::Joint);
+        let mut discounted = inputs(&env, &cat);
+        // Chongqing's compute rents at 20% of list: holding cores there
+        // is cheap, so the climb should shed at least as much load onto
+        // it as the all-on-demand plan does, never less.
+        discounted.rate_scale = vec![1.0, 0.2, 1.0, 1.0];
+        let spot = plan(&discounted, PlacementMode::Joint);
+        assert!(
+            spot.resident[1] >= base.resident[1],
+            "discounted region lost samples: {:?} vs {:?}",
+            spot.resident,
+            base.resident
+        );
     }
 
     #[test]

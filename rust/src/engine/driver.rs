@@ -36,7 +36,8 @@ use std::rc::Rc;
 use anyhow::Result;
 
 use crate::cloud::cost::{BilledAllocation, CostModel};
-use crate::cloud::devices::DeviceKind;
+use crate::cloud::devices::{Device, DeviceKind};
+use crate::cloud::spot::{Market, SpotConfig, SpotMarket};
 use crate::cloud::{Allocation, CloudEnv};
 use crate::data::{shard_by_fraction, Dataset, Shard};
 use crate::dataplane::migration::{self, DataPlaneState};
@@ -72,6 +73,12 @@ pub enum ChurnEvent {
     PowerFactor { t: Time, region: usize, factor: f64 },
     /// At time `t`, the directed link's nominal bandwidth becomes `bps`.
     LinkBandwidth { t: Time, from: usize, to: usize, bps: f64 },
+    /// At time `t`, the spot market revokes region `region`'s worker
+    /// pool (an injected revocation on top of the market's own trace —
+    /// tests and `exp --id spot` use it for controlled scenarios).
+    /// Ignored when `TrainConfig::spot` is disabled: revocations are a
+    /// market phenomenon, not generic churn.
+    Preemption { t: Time, region: usize },
 }
 
 /// The `"federated"` config block / `--clients --cohorts --sample-frac
@@ -195,6 +202,12 @@ pub struct TrainConfig {
     /// two-hop path's effective bandwidth beats the direct link (see
     /// `engine::topology::relay_route`).
     pub relay_routes: bool,
+    /// Spot market (preemptible capacity): when enabled, the placement
+    /// planner may commit a region to the spot market — discounted
+    /// compute billed at the deterministic price trace, revocable on the
+    /// trace's preemption times (see `cloud::spot`). Off (the default)
+    /// is byte-identical to the on-demand-only behavior.
+    pub spot: SpotConfig,
 }
 
 impl TrainConfig {
@@ -223,6 +236,7 @@ impl TrainConfig {
             federated: FederatedConfig::default(),
             wan_lanes: false,
             relay_routes: false,
+            spot: SpotConfig::default(),
         }
     }
 }
@@ -235,6 +249,22 @@ pub fn default_lr(model: &str) -> f32 {
         "deepfm" => 0.1,
         _ => 0.02, // transformers
     }
+}
+
+/// Live spot-market state for one job (`TrainConfig::spot` enabled):
+/// the deterministic price/revocation trace, the per-region market the
+/// placement committed, and the preemption-recovery accounting.
+pub(crate) struct SpotState {
+    pub(crate) market: SpotMarket,
+    /// Per-region market choice (spot vs on-demand) the plan committed —
+    /// fixed for the run; billing segments in a spot region carry the
+    /// trace-averaged price multiplier.
+    pub(crate) markets: Vec<Market>,
+    /// The billing-horizon estimate the markets were priced against
+    /// (re-used by the mid-run rebalancer's rate scaling).
+    pub(crate) horizon_s: f64,
+    /// Checkpoint save/fetch traffic billed for preemption recoveries.
+    pub(crate) restore_cost: f64,
 }
 
 /// The driver's world: partitions + substrates, stepped by `sim::Sim`.
@@ -294,6 +324,8 @@ pub(crate) struct World {
     /// controller installed (`auto_compression`); links not present ship
     /// the configured `sync.compression`.
     pub(crate) link_codecs: std::collections::BTreeMap<(usize, usize), Compression>,
+    /// Spot-market state, when `cfg.spot.enabled`.
+    pub(crate) spot: Option<SpotState>,
 }
 
 impl World {
@@ -383,6 +415,24 @@ pub(crate) fn deploy_job_planned(
         cfg.base_step_s
     } else {
         calib::default_base_step_s(&cfg.model)
+    };
+
+    // ---- spot market ----
+    // The per-region market choice (spot vs on-demand) is committed at
+    // deploy time against the same horizon estimate the placement
+    // planner prices with; the trace's revocations for the committed
+    // spot regions are scheduled below once training start is known.
+    let spot = if cfg.spot.enabled {
+        let market = SpotMarket::new(&cfg.spot, cfg.seed);
+        let shard = cfg.n_train / env.regions.len().max(1);
+        let steps = (shard.max(1) as f64 / model.meta.batch_size.max(1) as f64).ceil()
+            * cfg.epochs as f64;
+        let power = env.greedy_plan().iter().map(|a| a.power()).fold(f64::INFINITY, f64::min);
+        let horizon_s = (steps * base_step / power.max(1e-9)).max(1.0);
+        let markets = crate::cloud::spot::plan_markets(env, Some(&market), horizon_s);
+        Some(SpotState { market, markets, horizon_s, restore_cost: 0.0 })
+    } else {
+        None
     };
 
     // ---- data ----
@@ -684,6 +734,7 @@ pub(crate) fn deploy_job_planned(
         dataplane,
         fed_uplink_bytes: 0,
         link_codecs: std::collections::BTreeMap::new(),
+        spot,
     };
 
     // Kick off every partition at training start; a partition with no
@@ -733,6 +784,29 @@ pub(crate) fn deploy_job_planned(
                     w.fabric.set_bandwidth(from, to, bps);
                 });
             }
+            ChurnEvent::Preemption { t, region } => {
+                sim.schedule_at((start_at + t).max(startup_done), move |sim, w: &mut World| {
+                    preempt_partition(sim, w, region, 0);
+                });
+            }
+        }
+    }
+
+    // Spot revocations from the market's deterministic preemption trace,
+    // for every region the plan committed to spot. Times are relative to
+    // training start; the trace is cut at 4x the priced horizon — far
+    // past any plausible run length, and a revocation event landing
+    // after completion is a no-op anyway.
+    if let Some(sp) = &world.spot {
+        for region in 0..n_parts {
+            if sp.markets.get(region) != Some(&Market::Spot) {
+                continue;
+            }
+            for t_rev in sp.market.preemption_times(region, 4.0 * sp.horizon_s) {
+                sim.schedule_at(startup_done + t_rev, move |sim, w: &mut World| {
+                    preempt_partition(sim, w, region, 0);
+                });
+            }
         }
     }
 
@@ -774,6 +848,7 @@ pub(crate) fn finalize_report(
                 device: dev,
                 units: n,
                 held_s: global_end - part.alloc_since,
+                rate: billing_rate(world, part.region, dev, part.alloc_since, global_end),
             });
         }
         partitions.push(PartitionReport {
@@ -816,7 +891,10 @@ pub(crate) fn finalize_report(
         .saturating_sub(shard_bytes)
         .saturating_sub(world.fed_uplink_bytes);
     let compute_cost: f64 = billed.iter().map(|a| cost_model.compute_cost(a)).sum();
-    let wan_cost = cost_model.wan_cost(gradient_bytes) + egress_cost;
+    let spot_savings: f64 = billed.iter().map(|a| a.savings_vs_on_demand(&cost_model)).sum();
+    let wan_cost = cost_model.wan_cost(gradient_bytes);
+    let restore_cost = world.spot.as_ref().map_or(0.0, |sp| sp.restore_cost);
+    let preemptions: u64 = world.parts.iter().map(|p| p.preemptions as u64).sum();
     let federated = federated_report(world);
     TrainReport {
         model: world.cfg.model.clone(),
@@ -831,9 +909,14 @@ pub(crate) fn finalize_report(
         final_accuracy: final_acc,
         wan_bytes: world.wan_bytes,
         wan_transfers: world.wan_transfers,
-        cost: compute_cost + wan_cost + storage_cost,
+        cost: compute_cost + wan_cost + egress_cost + storage_cost + restore_cost,
         compute_cost,
         wan_cost,
+        egress_cost,
+        storage_cost,
+        restore_cost,
+        preemptions,
+        spot_savings,
         wall_seconds,
         pjrt_executions: world.model.exec_counts.get(),
         replan_events: world.replans.clone(),
@@ -910,8 +993,13 @@ pub(crate) fn start_worker_iteration(sim: &mut Sim<World>, w: &mut World, p: usi
     // injected churn: a slowed cloud's every iteration stretches.
     let jitter = 0.75 + 0.5 * part.rng.f64();
     let t_iter = part.t_iter * jitter / part.power_factor;
+    // Waves capture the partition's preemption epoch at launch: a spot
+    // revocation bumps it, marking every in-flight wave stale — its pods
+    // are gone, so its completion must not land (the rolled-back steps
+    // re-run on the restored pool instead).
+    let epoch_guard = part.preempt_epoch;
     sim.schedule(t_iter, move |sim, w: &mut World| {
-        finish_worker_iteration(sim, w, p, snapshot, version, batch, t_iter, wave);
+        finish_worker_iteration(sim, w, p, snapshot, version, batch, t_iter, wave, epoch_guard);
     });
 }
 
@@ -925,7 +1013,14 @@ fn finish_worker_iteration(
     batch: Vec<usize>,
     iter_s: f64,
     wave: usize,
+    epoch_guard: u64,
 ) {
+    if w.parts[p].preempt_epoch != epoch_guard {
+        // The pool this wave ran on was revoked mid-flight: its steps
+        // were rolled back at preemption time and nothing of it lands —
+        // no gradient, no step accounting, no monitor sample.
+        return;
+    }
     // Real compute: gradient of the model at the pulled snapshot — once
     // per event; a cohort wave's single gradient stands for all `wave`
     // iterations (applied weighted below).
@@ -994,7 +1089,7 @@ fn finish_worker_iteration(
                 try_release_barrier(sim, w);
             }
         }
-        Gate::CommBlocked | Gate::DataBlocked | Gate::Finished => {}
+        Gate::CommBlocked | Gate::DataBlocked | Gate::Preempted | Gate::Finished => {}
     }
 }
 
@@ -1150,7 +1245,7 @@ fn finish_cohort_round(
                 try_release_barrier(sim, w);
             }
         }
-        Gate::CommBlocked | Gate::DataBlocked | Gate::Finished => {}
+        Gate::CommBlocked | Gate::DataBlocked | Gate::Preempted | Gate::Finished => {}
     }
 }
 
@@ -1402,6 +1497,143 @@ pub(crate) fn finish_partition(sim: &mut Sim<World>, w: &mut World, p: usize) {
     }
 }
 
+// ------------------------------------------------------ spot preemption
+
+/// The market rate a billing segment in `region` carries over `[t0, t1]`:
+/// the spot trace's average price multiplier when the plan committed the
+/// region to the spot market, 1.0 (on-demand) otherwise.
+fn billing_rate(w: &World, region: usize, dev: Device, t0: Time, t1: Time) -> f64 {
+    match &w.spot {
+        Some(sp) if sp.markets.get(region) == Some(&Market::Spot) => {
+            sp.market.avg_price_mult(region, dev, t0, t1)
+        }
+        _ => 1.0,
+    }
+}
+
+/// A spot-market revocation landed on region `p`: bill the revoked
+/// segment at the spot rate, checkpoint the PS, roll back in-flight work
+/// (those pods are gone — their completions are discarded by the
+/// preemption-epoch guard and their steps re-run after restore, so
+/// step/epoch/update totals stay exact), tear the pool down through the
+/// autoscaler, and schedule the restore one `restore_stall_s` later.
+///
+/// Revocation is only safe while the partition is freely `Running`: a
+/// partition holding a protocol invariant (mid-barrier, comm- or
+/// data-blocked) retries shortly; a revocation that keeps missing, or
+/// lands on a finished/locally-done/composite partition, is dropped
+/// (composite partitions run edge clients, not spot cloud pools).
+pub(crate) fn preempt_partition(sim: &mut Sim<World>, w: &mut World, p: usize, retries: u32) {
+    let now = sim.now();
+    if w.spot.is_none() || w.global_end.is_some() || p >= w.parts.len() {
+        return; // spot disabled (injected churn is ignored) or job done
+    }
+    if w.parts[p].gate == Gate::Finished || w.parts[p].local_done() || w.parts[p].is_composite()
+    {
+        return;
+    }
+    if w.parts[p].gate != Gate::Running {
+        if retries < 200 {
+            sim.schedule(1.0, move |sim, w: &mut World| {
+                preempt_partition(sim, w, p, retries + 1);
+            });
+        }
+        return;
+    }
+    // Close the revoked allocation's billing segment at the spot rate —
+    // the seconds before the revocation were real, paid capacity. The
+    // stall window that follows is unbilled (the capacity is gone);
+    // billing re-opens when the replacement pool is acquired.
+    let since = w.parts[p].alloc_since;
+    let closed: Vec<BilledAllocation> = w.parts[p]
+        .alloc
+        .units
+        .iter()
+        .map(|&(dev, n)| BilledAllocation {
+            device: dev,
+            units: n,
+            held_s: now - since,
+            rate: billing_rate(w, p, dev, since, now),
+        })
+        .collect();
+    w.closed_billing.extend(closed);
+    // Checkpoint at the revocation instant; the restored pool resumes
+    // from exactly these bytes. In this simulation the PS state never
+    // physically leaves memory, so the capture is the recovery point and
+    // what the revocation costs is the save + fetch WAN traffic.
+    let ckpt = crate::train::checkpoint::PsCheckpoint::capture(&w.parts[p].ps);
+    let ckpt_bytes = (36 + ckpt.params.len() * 8) as u64;
+    let restore_fee = CostModel::default().wan_cost(2 * ckpt_bytes);
+    if let Some(sp) = w.spot.as_mut() {
+        sp.restore_cost += restore_fee;
+    }
+    {
+        let part = &mut w.parts[p];
+        let lost = part.in_flight as u64;
+        part.steps_started -= lost;
+        part.in_flight = 0;
+        part.preempt_epoch += 1;
+        part.preemptions += 1;
+        part.gate = Gate::Preempted;
+        // Iterations recorded under the revoked pool no longer measure
+        // anything the controller should trust.
+        part.reset_monitor_window();
+    }
+    let key = w.worker_keys[p].clone();
+    autoscaler::resize_pool(&mut w.faas, &key, 0, now)
+        .expect("worker pool registered at deploy time");
+    w.parts[p].worker_replicas = Vec::new();
+    // The controller learns immediately (hysteresis bypass) instead of
+    // waiting for the revoked region's stall to show up in samples.
+    if let Some(ctrl) = w.controller.as_mut() {
+        ctrl.note_preemption(p);
+    }
+    let stall = w.cfg.spot.restore_stall_s.max(0.0);
+    sim.schedule(stall, move |sim, w: &mut World| {
+        restore_partition(sim, w, p);
+    });
+}
+
+/// The spot stall elapsed: re-acquire region `p`'s worker pool through
+/// the autoscaler (replacement capacity cold-starts like any elastic
+/// scale-up), open a fresh billing segment at the restore instant, and
+/// resume training from the checkpointed PS state. The steps rolled back
+/// at revocation re-run from here — totals conserve; the run just takes
+/// longer.
+pub(crate) fn restore_partition(sim: &mut Sim<World>, w: &mut World, p: usize) {
+    let now = sim.now();
+    if w.global_end.is_some() || w.parts[p].gate != Gate::Preempted {
+        return;
+    }
+    let workers = w.parts[p].workers;
+    let key = w.worker_keys[p].clone();
+    let (spawned, live) = autoscaler::resize_pool(&mut w.faas, &key, workers as u32, now)
+        .expect("worker pool registered at deploy time");
+    let mut ready_at = now;
+    for id in &spawned {
+        if let Some(r) = w.faas.replica(*id) {
+            ready_at = ready_at.max(r.ready_at);
+        }
+        w.faas.mark_ready(*id);
+    }
+    {
+        let part = &mut w.parts[p];
+        part.worker_replicas = live;
+        part.alloc_since = now;
+        part.gate = Gate::Running;
+    }
+    // A rebalance may have drained the shard while the region was down.
+    if w.parts[p].local_done() {
+        if w.parts[p].in_flight == 0 {
+            finish_partition(sim, w, p);
+        }
+        return;
+    }
+    sim.schedule_at(ready_at, move |sim, w: &mut World| {
+        kick_partition(sim, w, p);
+    });
+}
+
 // ---------------------------------------------------- elastic control loop
 
 /// One control-loop tick: sample the running system, feed the controller,
@@ -1520,10 +1752,17 @@ fn apply_replan(sim: &mut Sim<World>, w: &mut World, dec: &ReplanDecision) {
     } else {
         0
     };
-    if !load_changed && !topology_replanned && compression_changes.is_empty() {
+    if !load_changed
+        && !topology_replanned
+        && compression_changes.is_empty()
+        && !dec.preemption_triggered
+    {
         return;
     }
     let mut causes: Vec<&str> = Vec::new();
+    if dec.preemption_triggered {
+        causes.push("preemption");
+    }
     if load_changed {
         causes.push("load");
     }
@@ -1600,6 +1839,12 @@ fn maybe_rebalance(sim: &mut Sim<World>, w: &mut World) -> usize {
             cost: dp.cost.clone(),
             scale: scales,
             time_value_per_hour: time_value,
+            rate_scale: match &w.spot {
+                Some(sp) => {
+                    crate::cloud::spot::rate_scale(&w.env, Some(&sp.market), sp.horizon_s)
+                }
+                None => vec![1.0; w.env.regions.len()],
+            },
         };
         placement::rebalance(&inputs, 0.05, &movable, &dp.assign)
     };
@@ -1682,7 +1927,9 @@ pub(crate) fn resize_to_allocations(
     let now = sim.now();
     let mut changed = false;
     for p in 0..w.parts.len() {
-        if w.parts[p].gate == Gate::Finished {
+        if w.parts[p].gate == Gate::Finished || w.parts[p].gate == Gate::Preempted {
+            // A revoked pool cannot be resized — there is nothing there;
+            // the restore path re-acquires it at its pre-revocation size.
             continue;
         }
         if w.parts[p].is_composite() {
@@ -1696,15 +1943,21 @@ pub(crate) fn resize_to_allocations(
             continue;
         }
         changed = true;
-        // Close the billing segment of the outgoing allocation.
+        // Close the billing segment of the outgoing allocation (at the
+        // segment's market rate — a spot region's seconds were cheaper).
         let since = w.parts[p].alloc_since;
-        for &(dev, n) in &w.parts[p].alloc.units {
-            w.closed_billing.push(BilledAllocation {
+        let closed: Vec<BilledAllocation> = w.parts[p]
+            .alloc
+            .units
+            .iter()
+            .map(|&(dev, n)| BilledAllocation {
                 device: dev,
                 units: n,
                 held_s: now - since,
-            });
-        }
+                rate: billing_rate(w, p, dev, since, now),
+            })
+            .collect();
+        w.closed_billing.extend(closed);
         let is_gpu = new_alloc
             .units
             .first()

@@ -90,6 +90,10 @@ pub enum Gate {
     DataBlocked,
     /// Waiting at a synchronous-strategy barrier (SMA).
     AtBarrier,
+    /// Spot capacity revoked: the pool is released, PS state is being
+    /// checkpoint-restored, and training resumes after the market's
+    /// restore stall (the spot subsystem's churn class).
+    Preempted,
     /// All local epochs done; worker functions terminated.
     Finished,
 }
@@ -157,6 +161,13 @@ pub struct Partition {
     /// sample and on every pool resize.
     pub win_iter_sum: f64,
     pub win_iter_count: u64,
+    /// Spot-preemption epoch: bumped on every revocation. Worker waves
+    /// capture it when scheduled; a completion whose captured epoch is
+    /// stale belonged to the revoked pool and is discarded (its steps
+    /// were already rolled back at revocation, so totals stay exact).
+    pub preempt_epoch: u64,
+    /// Revocations this partition survived (reported per region).
+    pub preemptions: u32,
     /// Deterministic per-partition jitter stream.
     pub rng: Pcg32,
     /// The federated edge tier: weighted sub-partitions that aggregate
@@ -314,6 +325,8 @@ mod tests {
             data_stall: 0.0,
             win_iter_sum: 0.0,
             win_iter_count: 0,
+            preempt_epoch: 0,
+            preemptions: 0,
             rng: Pcg32::new(1, 0),
             cohorts: Vec::new(),
         }

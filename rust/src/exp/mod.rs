@@ -34,8 +34,11 @@
 //! under dropout churn (module `federated_exp`); and `wanopt` pits the
 //! net-layer optimizations — priority lanes, controller-picked per-link
 //! compression, and 2-hop relay routes — against the static-FIFO fabric
-//! under a mid-run link collapse (module `wanopt_exp`). The full id →
-//! figure/config/bench mapping lives in docs/EXPERIMENTS.md.
+//! under a mid-run link collapse (module `wanopt_exp`); and `spot` pits
+//! spot-aware placement — discounted price traces, expected-preemption
+//! planning, and revocation recovery — against the on-demand-only
+//! baseline (module `spot_exp`). The full id → figure/config/bench
+//! mapping lives in docs/EXPERIMENTS.md.
 
 pub mod ablations;
 pub mod dataplane_exp;
@@ -45,6 +48,7 @@ pub mod fleetscale_exp;
 pub mod motivation;
 pub mod multijob_exp;
 pub mod scheduling;
+pub mod spot_exp;
 pub mod sync_exp;
 pub mod topology_exp;
 pub mod usability;

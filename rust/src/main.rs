@@ -45,9 +45,12 @@ USAGE:
                     [--bw-threshold x] [--auto-compression]
                     [--wan-lanes] [--relay-routes]
                     [--data-placement spec] [--placement-mode m] [--sample-kb n]
+                    [--replica-map f]
                     [--clients n] [--cohorts n] [--sample-frac x] [--dropout x]
+                    [--spot] [--spot-discount x] [--spot-preempt-per-hour x]
+                    [--spot-restore-stall s]
   cloudless plan    [--config f]
-  cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|multijob|dataplane|federated|fleetscale|ablations|compression|wanopt|all> [--full] [--model m]
+  cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|multijob|dataplane|federated|fleetscale|ablations|compression|wanopt|spot|all> [--full] [--model m]
   cloudless devices
   cloudless check
 
@@ -71,9 +74,18 @@ USAGE:
   read from the nearest replica, egress is paid once per created copy)
   and/or @<shard>=<r1>,<r2> per-shard residency overrides;
   --placement-mode picks compute-follows-data | data-follows-compute |
-  joint (default); --sample-kb sets stored KB per sample. exp --id
-  dataplane compares the three modes (plus a replicated joint run) on a
-  skewed catalog.
+  joint (default); --sample-kb sets stored KB per sample; --replica-map
+  folds a whole-catalog JSON pin file ({\"<shard>\": [region, ...]})
+  into the placement spec (inline @ pins win). exp --id dataplane
+  compares the three modes (plus a replicated joint run) on a skewed
+  catalog.
+  --spot turns on the preemptible-capacity market: spot regions bill at
+  a discounted deterministic price trace (--spot-discount, default
+  0.35) but are revoked at --spot-preempt-per-hour (default 0.5) and
+  pay --spot-restore-stall virtual seconds of checkpoint restore per
+  revocation (default 30); the placement planner weighs the expected
+  effective rate against on-demand's 1.0. exp --id spot compares
+  spot-aware placement against the on-demand-only baseline.
   --clients/--cohorts activate the federated edge tier: each cloud's
   clients are carved into cohort pools that aggregate locally (HiPS
   stage 1) before the cloud joins the WAN sync (stage 2); --sample-frac
@@ -161,6 +173,27 @@ fn job_from_args(args: &Args) -> anyhow::Result<JobSpec> {
     let sample_kb = args.f64("sample-kb", spec.train.dataplane.sample_bytes as f64 / 1024.0);
     anyhow::ensure!(sample_kb >= 0.0, "--sample-kb must be >= 0");
     spec.train.dataplane.sample_bytes = (sample_kb * 1024.0) as u64;
+    if let Some(path) = args.get("replica-map") {
+        let map = cloudless::dataplane::load_replica_map(path)
+            .map_err(|e| anyhow::anyhow!("--replica-map: {e}"))?;
+        let placement = spec
+            .train
+            .dataplane
+            .placement
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("--replica-map needs --data-placement"))?;
+        spec.train.dataplane.placement = Some(placement.with_replica_map(map));
+        spec.train.dataplane.replica_map = Some(path.to_string());
+    }
+    if args.flag("spot") {
+        spec.train.spot.enabled = true;
+    }
+    spec.train.spot.discount = args.f64("spot-discount", spec.train.spot.discount);
+    spec.train.spot.preempt_per_hour =
+        args.f64("spot-preempt-per-hour", spec.train.spot.preempt_per_hour);
+    spec.train.spot.restore_stall_s =
+        args.f64("spot-restore-stall", spec.train.spot.restore_stall_s);
+    spec.train.spot.validate().map_err(|e| anyhow::anyhow!(e))?;
     spec.train.cohort_threshold = args.usize("cohort-threshold", spec.train.cohort_threshold);
     spec.train.federated.clients = args.usize("clients", spec.train.federated.clients);
     spec.train.federated.cohorts = args.usize("cohorts", spec.train.federated.cohorts);
@@ -296,6 +329,9 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             }
             "wanopt" => {
                 exp::wanopt_exp::wanopt_compare(coord, scale, &exp_model);
+            }
+            "spot" => {
+                exp::spot_exp::spot_compare(coord, scale, &exp_model);
             }
             other => anyhow::bail!("unknown experiment id {other:?}"),
         }

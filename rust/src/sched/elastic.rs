@@ -212,6 +212,12 @@ pub struct ReplanDecision {
     /// as a `"compression"` replan event and re-routes those links'
     /// gradient payloads through the new codec.
     pub codec_changes: Vec<(RegionId, RegionId, LinkCodec)>,
+    /// True when this decision was forced by a spot-market revocation
+    /// ([`ElasticController::note_preemption`]): the hysteresis gate was
+    /// bypassed, because a revocation is a step change the EWMA would
+    /// otherwise take several windows to trust. The driver records the
+    /// replan event with cause `"preemption"`.
+    pub preemption_triggered: bool,
 }
 
 /// The control-plane re-scheduler (the scheduler function re-invoked
@@ -234,6 +240,10 @@ pub struct ElasticController {
     bw_nominal: Vec<(RegionId, RegionId, f64)>,
     /// Current per-link codec assignment (absent = `LinkCodec::None`).
     codecs: Vec<(RegionId, RegionId, LinkCodec)>,
+    /// Regions revoked by the spot market since the last decision; any
+    /// pending entry forces the next `observe` to emit a decision with
+    /// the hysteresis gate bypassed.
+    preempted: Vec<RegionId>,
     /// Number of committed re-plans (diagnostic).
     pub replans: u64,
 }
@@ -258,6 +268,7 @@ impl ElasticController {
             bw_basis: nominal_bw.clone(),
             bw_nominal: nominal_bw,
             codecs: Vec::new(),
+            preempted: Vec::new(),
             replans: 0,
         }
     }
@@ -276,6 +287,18 @@ impl ElasticController {
     /// tests). Links not listed ship dense (`LinkCodec::None`).
     pub fn codecs(&self) -> &[(RegionId, RegionId, LinkCodec)] {
         &self.codecs
+    }
+
+    /// Record a spot-market revocation in `region`. The next `observe`
+    /// call bypasses the hysteresis gate and always emits a decision,
+    /// flagged [`ReplanDecision::preemption_triggered`] — a revocation
+    /// is a step change the smoothed samples would otherwise take
+    /// several control windows to trust. Idempotent per region per
+    /// window (double-revoking one region forces one decision).
+    pub fn note_preemption(&mut self, region: RegionId) {
+        if !self.preempted.contains(&region) {
+            self.preempted.push(region);
+        }
     }
 
     /// Re-base the controller on a new resource lease (the multi-job
@@ -364,11 +387,16 @@ impl ElasticController {
         let delta = plan_delta(&self.current_units, &candidate.allocations);
         // With `enabled == false` the controller runs compression-only
         // (`auto_compression`): it never moves load or re-plans the
-        // topology — those stay the user's static choices.
+        // topology — those stay the user's static choices. A pending
+        // revocation (`note_preemption`) bypasses the hysteresis gate:
+        // the decision fires even when the candidate barely moved, so
+        // the driver can record the re-plan and re-balance immediately.
+        let forced = self.cfg.enabled && !self.preempted.is_empty();
         let topo_stale = self.cfg.enabled && self.topology_stale();
-        let load_moved = self.cfg.enabled && delta > self.cfg.hysteresis;
+        let load_moved =
+            self.cfg.enabled && (delta > self.cfg.hysteresis || (forced && delta > 0.0));
         let codec_changes = self.commit_codec_changes();
-        if !load_moved && !topo_stale && codec_changes.is_empty() {
+        if !load_moved && !topo_stale && codec_changes.is_empty() && !forced {
             return None;
         }
         let decision = ReplanDecision {
@@ -384,6 +412,7 @@ impl ElasticController {
             replan_topology: topo_stale,
             bw_view: self.bw_est.clone(),
             codec_changes,
+            preemption_triggered: forced,
         };
         if load_moved {
             self.current_units =
@@ -392,6 +421,7 @@ impl ElasticController {
         if topo_stale {
             self.bw_basis = self.bw_est.clone();
         }
+        self.preempted.clear();
         self.replans += 1;
         Some(decision)
     }
@@ -834,6 +864,39 @@ mod tests {
             "codec holds while the link stays collapsed: {:?}",
             c.codecs()
         );
+    }
+
+    #[test]
+    fn preemption_bypasses_hysteresis_once() {
+        let mut c = controller(ElasticConfig {
+            enabled: true,
+            smoothing: 1.0,
+            ..Default::default()
+        });
+        // Nominal observations never replan on their own...
+        assert!(c.observe(&sample(vec![Some(1.0); 4])).is_none());
+        // ...but a noted revocation forces the next decision through,
+        // even though the candidate plan did not move past hysteresis.
+        c.note_preemption(2);
+        c.note_preemption(2); // double-revoke is idempotent
+        let dec = c.observe(&sample(vec![Some(1.0); 4])).expect("preemption forces a decision");
+        assert!(dec.preemption_triggered);
+        assert_eq!(dec.plan_delta, 0.0, "nominal scales: no load actually moves");
+        // Consumed: the following nominal sample is quiet again.
+        assert!(c.observe(&sample(vec![Some(1.0); 4])).is_none());
+    }
+
+    #[test]
+    fn preemption_flag_is_off_on_ordinary_replans() {
+        let mut c = controller(ElasticConfig {
+            enabled: true,
+            smoothing: 1.0,
+            ..Default::default()
+        });
+        let dec = c
+            .observe(&sample(vec![Some(1.0), Some(1.0), Some(0.35), Some(1.0)]))
+            .expect("a 65% power loss must clear hysteresis");
+        assert!(!dec.preemption_triggered);
     }
 
     #[test]

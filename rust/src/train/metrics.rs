@@ -27,10 +27,11 @@ pub struct EvalPoint {
 pub struct ReplanEvent {
     /// Virtual time the re-plan was applied.
     pub t: Time,
-    /// What tripped it: any "+"-joined combination of "load" (allocation
-    /// movement), "bandwidth" (topology re-plan), and "compression"
-    /// (per-link codec reassignment) — plus "lease" for multi-job lease
-    /// re-divisions.
+    /// What tripped it: any "+"-joined combination of "preemption" (a
+    /// spot revocation forced the re-plan past hysteresis), "load"
+    /// (allocation movement), "bandwidth" (topology re-plan), and
+    /// "compression" (per-link codec reassignment) — plus "lease" for
+    /// multi-job lease re-divisions.
     pub cause: String,
     /// Relative plan movement that cleared hysteresis (0 for
     /// topology-only re-plans).
@@ -122,13 +123,31 @@ pub struct TrainReport {
     pub final_accuracy: f64,
     pub wan_bytes: u64,
     pub wan_transfers: u64,
-    /// Monetary cost (USD): compute held to global end + WAN traffic.
+    /// Monetary cost (USD): the sum of the itemized components below
+    /// (compute + WAN sync + object-store egress + storage rent +
+    /// preemption restores).
     pub cost: f64,
-    /// Compute-only component (instance-seconds billed to global end) —
-    /// the paper's "training cost" headline compares this.
+    /// Compute-only component (instance-seconds billed to global end,
+    /// at each billing segment's market rate) — the paper's "training
+    /// cost" headline compares this.
     pub compute_cost: f64,
-    /// WAN-traffic component.
+    /// WAN gradient-sync traffic component (flat per-GB rate; shard
+    /// migration egress is itemized separately below).
     pub wan_cost: f64,
+    /// Object-store egress for data-plane shard migrations (0 without
+    /// an active data plane).
+    pub egress_cost: f64,
+    /// Storage rent on persisted replica copies (0 without a data plane).
+    pub storage_cost: f64,
+    /// Checkpoint save/fetch traffic for spot-preemption recoveries
+    /// (0 without the spot market).
+    pub restore_cost: f64,
+    /// Spot revocations this job absorbed (each one: pool revoked,
+    /// checkpoint restored after the stall, lost in-flight steps re-run).
+    pub preemptions: u64,
+    /// What the same billed segments would have cost on-demand minus
+    /// what they actually cost (0 for on-demand-only runs).
+    pub spot_savings: f64,
     /// Real wall-clock seconds the simulation took (diagnostic).
     pub wall_seconds: f64,
     /// PJRT executions (diagnostic / perf accounting).
@@ -186,6 +205,11 @@ impl TrainReport {
             ("cost_usd", Json::num(self.cost)),
             ("compute_cost_usd", Json::num(self.compute_cost)),
             ("wan_cost_usd", Json::num(self.wan_cost)),
+            ("egress_cost_usd", Json::num(self.egress_cost)),
+            ("storage_cost_usd", Json::num(self.storage_cost)),
+            ("restore_cost_usd", Json::num(self.restore_cost)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("spot_savings_usd", Json::num(self.spot_savings)),
             ("total_waiting_s", Json::num(self.total_waiting())),
             ("total_comm_wait_s", Json::num(self.total_comm_wait())),
             ("wall_seconds", Json::num(self.wall_seconds)),
@@ -320,8 +344,13 @@ impl TrainReport {
                 f.uplink_bytes as f64 / 1e6
             ),
         };
+        let spot = if self.preemptions > 0 || self.spot_savings > 0.0 {
+            format!(" spot[preempt={} saved=${:.4}]", self.preemptions, self.spot_savings)
+        } else {
+            String::new()
+        };
         format!(
-            "{} [{} f={}] time={:.1}s acc={:.4} loss={:.4} cost=${:.4} wan={:.1}MB wait={:.1}s comm={:.1}s{}{}{}",
+            "{} [{} f={}] time={:.1}s acc={:.4} loss={:.4} cost=${:.4} wan={:.1}MB wait={:.1}s comm={:.1}s{}{}{}{}",
             self.model,
             self.strategy,
             self.sync_freq,
@@ -335,6 +364,7 @@ impl TrainReport {
             replans,
             dataplane,
             federated,
+            spot,
         )
     }
 }
@@ -374,6 +404,44 @@ mod tests {
         assert_eq!(parsed.get("model").as_str().unwrap(), "lenet");
         assert_eq!(parsed.get("partitions").as_arr().unwrap().len(), 2);
         assert!((parsed.get("total_waiting_s").as_f64().unwrap() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_itemization_roundtrips() {
+        let mut r = report();
+        r.compute_cost = 1.25;
+        r.wan_cost = 0.3;
+        r.egress_cost = 0.08;
+        r.storage_cost = 0.002;
+        r.restore_cost = 0.015;
+        r.cost = r.compute_cost + r.wan_cost + r.egress_cost + r.storage_cost + r.restore_cost;
+        r.preemptions = 3;
+        r.spot_savings = 0.4;
+        let parsed = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        for (key, want) in [
+            ("cost_usd", r.cost),
+            ("compute_cost_usd", 1.25),
+            ("wan_cost_usd", 0.3),
+            ("egress_cost_usd", 0.08),
+            ("storage_cost_usd", 0.002),
+            ("restore_cost_usd", 0.015),
+            ("preemptions", 3.0),
+            ("spot_savings_usd", 0.4),
+        ] {
+            assert!(
+                (parsed.get(key).as_f64().unwrap() - want).abs() < 1e-12,
+                "{key}: {:?}",
+                parsed.get(key)
+            );
+        }
+        // The headline cost is exactly the sum of the itemized parts.
+        let sum = ["compute_cost_usd", "wan_cost_usd", "egress_cost_usd", "storage_cost_usd", "restore_cost_usd"]
+            .iter()
+            .map(|k| parsed.get(k).as_f64().unwrap())
+            .sum::<f64>();
+        assert!((parsed.get("cost_usd").as_f64().unwrap() - sum).abs() < 1e-12);
+        assert!(r.summary().contains("spot[preempt=3"));
+        assert!(!report().summary().contains("spot["), "on-demand runs stay quiet");
     }
 
     #[test]
