@@ -6,5 +6,5 @@ mod common;
 fn main() {
     common::banner("ablations");
     let coord = common::coordinator();
-    cloudless::exp::ablations::all(&coord, common::scale_from_args());
+    cloudless::exp::ablations::all(&coord, common::scale_from_args(), "lenet");
 }

@@ -5,5 +5,5 @@ mod common;
 fn main() {
     common::banner("topologies");
     let coord = common::coordinator();
-    cloudless::exp::topology_exp::topology_compare(&coord, common::scale_from_args());
+    cloudless::exp::topology_exp::topology_compare(&coord, common::scale_from_args(), "lenet");
 }

@@ -54,7 +54,7 @@ use crate::sched::elastic::{
 use crate::sim::{Sim, Time};
 use crate::sync::{Compression, SyncConfig};
 use crate::train::calib;
-use crate::train::metrics::{EvalPoint, PartitionReport, ReplanEvent, TrainReport};
+use crate::train::metrics::{replan_cause, EvalPoint, PartitionReport, ReplanEvent, TrainReport};
 use crate::util::rng::Pcg32;
 
 use super::comm::{self, SendSlot};
@@ -1761,16 +1761,16 @@ fn apply_replan(sim: &mut Sim<World>, w: &mut World, dec: &ReplanDecision) {
     }
     let mut causes: Vec<&str> = Vec::new();
     if dec.preemption_triggered {
-        causes.push("preemption");
+        causes.push(replan_cause::PREEMPTION);
     }
     if load_changed {
-        causes.push("load");
+        causes.push(replan_cause::LOAD);
     }
     if topology_replanned {
-        causes.push("bandwidth");
+        causes.push(replan_cause::BANDWIDTH);
     }
     if !compression_changes.is_empty() {
-        causes.push("compression");
+        causes.push(replan_cause::COMPRESSION);
     }
     w.replans.push(ReplanEvent {
         t: now,
@@ -2025,7 +2025,7 @@ pub(crate) fn apply_lease(
     if changed {
         w.replans.push(ReplanEvent {
             t: sim.now(),
-            cause: "lease".to_string(),
+            cause: replan_cause::LEASE.to_string(),
             plan_delta: crate::sched::elastic::plan_delta(&old_units, allocations),
             straggler,
             units: w.parts.iter().map(|p| p.alloc.total_units()).collect(),

@@ -65,8 +65,14 @@ pub fn multijob_compare(
     let est = solo_estimate_s(&template, &env, batch_size).max(1.0);
     // Each job keeps its own elastic control loop re-planning within its
     // lease (the two-level control story).
-    template.elastic =
-        ElasticConfig { enabled: true, interval_s: (est / 10.0).max(0.25), ..Default::default() };
+    template.elastic = ElasticConfig {
+        enabled: true,
+        interval_s: (est / 10.0).max(0.25),
+        hysteresis: 0.2,
+        bw_threshold: 0.5,
+        smoothing: 0.5,
+        auto_compression: false,
+    };
 
     // Poisson arrivals dense enough that the fleet actually overlaps.
     let mean = if params.mean_interarrival_s > 0.0 {

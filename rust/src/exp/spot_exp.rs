@@ -29,6 +29,7 @@ use crate::coordinator::Coordinator;
 use crate::dataplane::{self, Layout, PlacementSpec};
 use crate::exp::{four_cloud_env, hetero_overrides, print_table, save_result, Scale};
 use crate::sync::{Strategy, SyncConfig};
+use crate::train::metrics::replan_cause;
 use crate::train::{TrainConfig, TrainReport};
 use crate::util::json::Json;
 
@@ -117,7 +118,8 @@ pub fn spot_compare(coord: &Coordinator, scale: Scale, model: &str) -> Json {
     let makespan_ratio = sp.total_time / od.total_time.max(1e-9);
     println!("  spot/ondemand cost: {cost_ratio:.2}x  (< 1.0 = spot cheaper)");
     println!("  spot/ondemand makespan: {makespan_ratio:.2}x  (revocation overhead)");
-    for ev in sp.replan_events.iter().filter(|ev| ev.cause.contains("preemption")) {
+    let pre = replan_cause::PREEMPTION;
+    for ev in sp.replan_events.iter().filter(|ev| ev.cause.contains(pre)) {
         println!("  replan @{:.0}s [{}] delta={:.3}", ev.t, ev.cause, ev.plan_delta);
     }
 

@@ -30,8 +30,8 @@ fn run_one(
     scale: Scale,
     topology: TopologyKind,
     overrides: Vec<(usize, usize, LinkSpec)>,
+    model: &str,
 ) -> TrainReport {
-    let model = "lenet";
     let (n_train, n_eval) = crate::data::default_sizes(model);
     let mut cfg = TrainConfig::new(model);
     cfg.epochs = scale.epochs(model).min(6);
@@ -45,16 +45,16 @@ fn run_one(
 }
 
 /// Compare Ring vs Hierarchical vs BandwidthTree on the 4-cloud WAN.
-pub fn topology_compare(coord: &Coordinator, scale: Scale) -> Json {
-    println!("Topology comparison: 4-cloud AMA f8 on a heterogeneous WAN");
-    let model = "lenet";
+/// `model` is the experiment workload (`synthetic` runs artifact-free).
+pub fn topology_compare(coord: &Coordinator, scale: Scale, model: &str) -> Json {
+    println!("Topology comparison: 4-cloud AMA f8 on a heterogeneous WAN ({model})");
     let (n_train, _) = crate::data::default_sizes(model);
     let mut rows = Vec::new();
     let mut out = Vec::new();
 
     // Seed-parity reference: 2-cloud ring = the paper's pairwise exchange.
     let env2 = CloudEnv::tencent_two_region(Device::Skylake, n_train / 2, n_train - n_train / 2);
-    let r2 = run_one(coord, &env2, scale, TopologyKind::Ring, Vec::new());
+    let r2 = run_one(coord, &env2, scale, TopologyKind::Ring, Vec::new(), model);
     rows.push(vec![
         "ring @2 (seed parity)".to_string(),
         format!("{:.0}s", r2.total_time),
@@ -73,7 +73,7 @@ pub fn topology_compare(coord: &Coordinator, scale: Scale) -> Json {
 
     let env4 = four_cloud_env(n_train);
     for kind in [TopologyKind::Ring, TopologyKind::Hierarchical, TopologyKind::BandwidthTree] {
-        let r = run_one(coord, &env4, scale, kind, hetero_overrides());
+        let r = run_one(coord, &env4, scale, kind, hetero_overrides(), model);
         rows.push(vec![
             format!("{} @4", kind.name()),
             format!("{:.0}s", r.total_time),

@@ -42,6 +42,7 @@ pub mod dataplane;
 pub mod engine;
 pub mod exp;
 pub mod faas;
+pub mod lint;
 pub mod net;
 pub mod prop;
 pub mod ps;

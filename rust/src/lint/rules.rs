@@ -1,0 +1,625 @@
+//! The rule set for `cloudless lint`.
+//!
+//! Each rule enforces an invariant the paper's claims rest on — bit-determinism of
+//! seeded runs, exact billing/replan accounting, or code↔doc agreement. Rules match
+//! on token sequences from [`super::scan`]; every forbidden name below is spelled as
+//! a *string literal* precisely so this module never trips its own checks.
+//!
+//! Registries (`WALLCLOCK_SITES`, `BILLING_CONSTRUCT_SITES`, `BILLING_OPEN_SITES`)
+//! are the single place new sites get reviewed into: a rule failure tells you to
+//! audit the new site's invariant first, then add it here.
+
+use super::scan::{matches, Kind, SourceFile};
+use super::{Finding, Project};
+
+pub trait Rule {
+    /// Stable kebab-case id, used in findings and `lint:allow(...)`.
+    fn id(&self) -> &'static str;
+    /// One-line invariant statement (docs/DEVELOPMENT.md mirrors these).
+    fn summary(&self) -> &'static str;
+    fn check(&self, p: &Project, out: &mut Vec<Finding>);
+}
+
+/// Every rule, in documentation order. `lint-allow` (suppression hygiene) is
+/// enforced by the runner itself and is listed in [`ALL_RULE_IDS`] only.
+pub fn registry() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(NoUnorderedCollections),
+        Box::new(NoWallclock),
+        Box::new(InstantNowAllowlist),
+        Box::new(Pcg32ExplicitSeed),
+        Box::new(BillingSiteRegistry),
+        Box::new(ReplanCauseRegistry),
+        Box::new(NoDefaultSpread),
+        Box::new(ConfigDocSync),
+        Box::new(ExpDocSync),
+        Box::new(FlagDocSync),
+    ]
+}
+
+pub const ALL_RULE_IDS: [&str; 11] = [
+    "no-unordered-collections",
+    "no-wallclock",
+    "instant-now-allowlist",
+    "pcg32-explicit-seed",
+    "billing-site-registry",
+    "replan-cause-registry",
+    "no-default-spread",
+    "config-doc-sync",
+    "exp-doc-sync",
+    "flag-doc-sync",
+    "lint-allow",
+];
+
+pub fn known_rule(id: &str) -> bool {
+    ALL_RULE_IDS.contains(&id)
+}
+
+fn push(out: &mut Vec<Finding>, file: &str, line: u32, rule: &'static str, message: String) {
+    out.push(Finding { file: file.to_string(), line, rule, message });
+}
+
+// ---------------------------------------------------------------- determinism
+
+/// Hash collections iterate in randomized order; a single `for` over one changes
+/// report bytes between runs. Simulator and report paths use BTree collections.
+struct NoUnorderedCollections;
+
+impl Rule for NoUnorderedCollections {
+    fn id(&self) -> &'static str {
+        "no-unordered-collections"
+    }
+    fn summary(&self) -> &'static str {
+        "sim/report paths must use BTreeMap/BTreeSet, never hash collections"
+    }
+    fn check(&self, p: &Project, out: &mut Vec<Finding>) {
+        for f in p.files.iter().filter(|f| f.path.contains("src/") && !f.is_test_file) {
+            for t in &f.tokens {
+                let banned = t.kind == Kind::Ident && (t.text == "HashMap" || t.text == "HashSet");
+                if banned && !f.is_test_line(t.line) {
+                    let msg = format!(
+                        "`{}` iterates in randomized order and breaks bit-determinism — use the BTree sibling",
+                        t.text
+                    );
+                    push(out, &f.path, t.line, self.id(), msg);
+                }
+            }
+        }
+    }
+}
+
+/// Ambient entropy sources. Everywhere, tests included: a test that consults the
+/// wall clock or a thread-local RNG is flaky by construction.
+struct NoWallclock;
+
+impl Rule for NoWallclock {
+    fn id(&self) -> &'static str {
+        "no-wallclock"
+    }
+    fn summary(&self) -> &'static str {
+        "no SystemTime / thread_rng / rand::random — derive Pcg32 streams from the config seed"
+    }
+    fn check(&self, p: &Project, out: &mut Vec<Finding>) {
+        for f in &p.files {
+            for (i, t) in f.tokens.iter().enumerate() {
+                if t.kind != Kind::Ident {
+                    continue;
+                }
+                let hit = t.text == "SystemTime"
+                    || t.text == "thread_rng"
+                    || (t.text == "rand" && matches(&f.tokens, i + 1, &["::", "random"]));
+                if hit {
+                    let msg = format!(
+                        "`{}` is ambient nondeterminism — seed a Pcg32 stream from the config instead",
+                        t.text
+                    );
+                    push(out, &f.path, t.line, self.id(), msg);
+                }
+            }
+        }
+    }
+}
+
+/// The only legitimate wall-clock reads are self-measurement (fleet throughput,
+/// driver wall-time, calibration) — one site each, and nowhere else.
+struct InstantNowAllowlist;
+
+const WALLCLOCK_SITES: [&str; 3] =
+    ["src/coordinator/fleet.rs", "src/engine/driver.rs", "src/train/calib.rs"];
+
+impl Rule for InstantNowAllowlist {
+    fn id(&self) -> &'static str {
+        "instant-now-allowlist"
+    }
+    fn summary(&self) -> &'static str {
+        "Instant::now only at the allowlisted self-measurement sites (one per file)"
+    }
+    fn check(&self, p: &Project, out: &mut Vec<Finding>) {
+        for f in &p.files {
+            let allowlisted = WALLCLOCK_SITES.iter().any(|s| f.path.ends_with(s));
+            let mut seen = 0u32;
+            for (i, t) in f.tokens.iter().enumerate() {
+                if t.kind == Kind::Ident
+                    && t.text == "Instant"
+                    && matches(&f.tokens, i + 1, &["::", "now"])
+                {
+                    seen += 1;
+                    if !allowlisted {
+                        let msg = "wall-clock read outside the allowlisted self-measurement sites \
+                                   (fleet.rs / driver.rs / calib.rs)"
+                            .to_string();
+                        push(out, &f.path, t.line, self.id(), msg);
+                    } else if seen > 1 {
+                        let msg = "only one wall-clock site is allowlisted per file — fold this \
+                                   read into the existing one"
+                            .to_string();
+                        push(out, &f.path, t.line, self.id(), msg);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Every RNG stream must visibly derive from a seed: `Pcg32::new(...)`'s first
+/// argument has to contain a literal or a seed-named value, and raw struct
+/// literals (which bypass the stream-derivation constructor) are banned outside
+/// the defining module.
+struct Pcg32ExplicitSeed;
+
+impl Rule for Pcg32ExplicitSeed {
+    fn id(&self) -> &'static str {
+        "pcg32-explicit-seed"
+    }
+    fn summary(&self) -> &'static str {
+        "every Pcg32 construction takes an explicitly derived seed"
+    }
+    fn check(&self, p: &Project, out: &mut Vec<Finding>) {
+        for f in p.files.iter().filter(|f| !f.path.ends_with("src/util/rng.rs")) {
+            for (i, t) in f.tokens.iter().enumerate() {
+                if t.kind != Kind::Ident || t.text != "Pcg32" {
+                    continue;
+                }
+                if matches(&f.tokens, i + 1, &["::", "new", "("]) {
+                    if !first_arg_is_seed_derived(f, i + 4) {
+                        let msg = "Pcg32::new's seed argument must be explicitly derived — a \
+                                   literal, or an expression naming a seed"
+                            .to_string();
+                        push(out, &f.path, t.line, self.id(), msg);
+                    }
+                } else if matches(&f.tokens, i + 1, &["{"]) {
+                    let prev = i.checked_sub(1).map(|j| f.tokens[j].text.as_str());
+                    if prev != Some("->") && prev != Some("impl") {
+                        let msg = "construct RNGs via Pcg32::new(seed, stream) — raw struct \
+                                   literals bypass seed derivation"
+                            .to_string();
+                        push(out, &f.path, t.line, self.id(), msg);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scan the first argument starting at token `j` (just past the open paren);
+/// true when it contains a numeric literal or a seed-named identifier.
+fn first_arg_is_seed_derived(f: &SourceFile, mut j: usize) -> bool {
+    let mut depth = 0i32;
+    while j < f.tokens.len() {
+        let t = &f.tokens[j];
+        match t.text.as_str() {
+            "(" | "[" | "{" => depth += 1,
+            ")" | "]" | "}" => {
+                if depth == 0 {
+                    return false;
+                }
+                depth -= 1;
+            }
+            "," if depth == 0 => return false,
+            _ => {
+                if t.kind == Kind::Num {
+                    return true;
+                }
+                if t.kind == Kind::Ident && t.text.to_ascii_lowercase().contains("seed") {
+                    return true;
+                }
+            }
+        }
+        j += 1;
+    }
+    false
+}
+
+// ----------------------------------------------------------------- accounting
+
+/// Billing is segment-based: a segment opens when `alloc_since` is written and
+/// closes when a `BilledAllocation` is constructed at the traced market rate.
+/// Both halves live at a handful of audited sites; a new site means a new
+/// open/close pairing to review, so constructions and opens outside the
+/// registries are findings.
+struct BillingSiteRegistry;
+
+const BILLING_CONSTRUCT_SITES: [(&str, &[&str]); 2] = [
+    ("src/engine/driver.rs", &["finalize_report", "preempt_partition", "resize_to_allocations"]),
+    ("src/dataplane/placement.rs", &["default_time_value_per_hour", "evaluate"]),
+];
+
+const BILLING_OPEN_SITES: [(&str, &[&str]); 1] = [(
+    "src/engine/driver.rs",
+    &["deploy_job_planned", "restore_partition", "resize_to_allocations"],
+)];
+
+fn registered(regs: &[(&str, &[&str])], path: &str, func: Option<&str>) -> bool {
+    let Some(func) = func else { return false };
+    regs.iter().any(|(p, fns)| path.ends_with(p) && fns.contains(&func))
+}
+
+impl Rule for BillingSiteRegistry {
+    fn id(&self) -> &'static str {
+        "billing-site-registry"
+    }
+    fn summary(&self) -> &'static str {
+        "billing segment opens (alloc_since writes) and closes (BilledAllocation constructions) only at registered, audited sites"
+    }
+    fn check(&self, p: &Project, out: &mut Vec<Finding>) {
+        let skip = |f: &&SourceFile| !f.path.ends_with("src/cloud/cost.rs") && !f.is_test_file;
+        for f in p.files.iter().filter(skip) {
+            for (i, t) in f.tokens.iter().enumerate() {
+                if t.kind != Kind::Ident || f.is_test_line(t.line) {
+                    continue;
+                }
+                if t.text == "BilledAllocation" {
+                    let construct = matches(&f.tokens, i + 1, &["{"])
+                        || matches(&f.tokens, i + 1, &["::", "on_demand"]);
+                    if construct && !registered(&BILLING_CONSTRUCT_SITES, &f.path, f.enclosing_fn(i))
+                    {
+                        let msg = "unregistered billing close — audit that this segment's open \
+                                   (alloc_since) is paired and the rate is the traced market \
+                                   rate, then add the fn to BILLING_CONSTRUCT_SITES"
+                            .to_string();
+                        push(out, &f.path, t.line, self.id(), msg);
+                    }
+                } else if t.text == "alloc_since" {
+                    let next = f.tokens.get(i + 1).map(|n| n.text.as_str());
+                    let write = next == Some("=")
+                        || (next == Some(":") && f.enclosing_fn(i).is_some());
+                    if write && !registered(&BILLING_OPEN_SITES, &f.path, f.enclosing_fn(i)) {
+                        let msg = "unregistered billing open — audit that every path from here \
+                                   reaches a BilledAllocation close, then add the fn to \
+                                   BILLING_OPEN_SITES"
+                            .to_string();
+                        push(out, &f.path, t.line, self.id(), msg);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Every `ReplanEvent` cause string comes from the one registry in
+/// `train::metrics::replan_cause`; ad-hoc literals drift (a typo'd cause is
+/// silently never matched by the experiments that filter on it).
+struct ReplanCauseRegistry;
+
+impl Rule for ReplanCauseRegistry {
+    fn id(&self) -> &'static str {
+        "replan-cause-registry"
+    }
+    fn summary(&self) -> &'static str {
+        "ReplanEvent cause strings come from train::metrics::replan_cause, nowhere else"
+    }
+    fn check(&self, p: &Project, out: &mut Vec<Finding>) {
+        for f in p.files.iter().filter(|f| !f.path.ends_with("src/train/metrics.rs")) {
+            for (i, t) in f.tokens.iter().enumerate() {
+                if t.kind != Kind::Ident || (t.text != "cause" && t.text != "causes") {
+                    continue;
+                }
+                for j in i + 1..=(i + 4).min(f.tokens.len().saturating_sub(1)) {
+                    let n = &f.tokens[j];
+                    if n.line != t.line {
+                        break;
+                    }
+                    if n.kind == Kind::Str && cause_like(&n.text) {
+                        let msg = format!(
+                            "cause literal \"{}\" — use the constants in train::metrics::replan_cause (one registry)",
+                            n.text
+                        );
+                        push(out, &f.path, n.line, self.id(), msg);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A lowercase word that plausibly is a cause tag (`"lease"`, `"load+bandwidth"`).
+fn cause_like(s: &str) -> bool {
+    s.len() >= 3
+        && s.as_bytes()[0].is_ascii_lowercase()
+        && s.bytes().all(|c| c.is_ascii_lowercase() || c == b'_' || c == b'+' || c == b'-')
+}
+
+/// `..Default::default()` in a Config/Report/Params/Event/Spec literal absorbs
+/// any field added later without the author ever seeing it — the exact drift the
+/// struct-literal completeness sweeps of earlier PRs existed to catch.
+struct NoDefaultSpread;
+
+const DRIFT_SUFFIXES: [&str; 5] = ["Config", "Report", "Params", "Event", "Spec"];
+
+impl Rule for NoDefaultSpread {
+    fn id(&self) -> &'static str {
+        "no-default-spread"
+    }
+    fn summary(&self) -> &'static str {
+        "no ..Default::default() in Config/Report/Params/Event/Spec literals — spell every field"
+    }
+    fn check(&self, p: &Project, out: &mut Vec<Finding>) {
+        for f in p.files.iter().filter(|f| !f.is_test_file) {
+            // Stack of the token preceding each open brace: for a struct literal
+            // that is the struct's name.
+            let mut openers: Vec<Option<usize>> = Vec::new();
+            for (i, t) in f.tokens.iter().enumerate() {
+                match t.text.as_str() {
+                    "{" => openers.push(i.checked_sub(1)),
+                    "}" => {
+                        openers.pop();
+                    }
+                    ".." if matches(&f.tokens, i + 1, &["Default", "::", "default", "("])
+                        && !f.is_test_line(t.line) =>
+                    {
+                        let opener = openers.last().copied().flatten().map(|o| &f.tokens[o]);
+                        if let Some(o) = opener {
+                            let drifty = o.kind == Kind::Ident
+                                && DRIFT_SUFFIXES.iter().any(|s| o.text.ends_with(s));
+                            if drifty {
+                                let msg = format!(
+                                    "..Default::default() in `{}` hides fields added later — spell every field so additions get reviewed",
+                                    o.text
+                                );
+                                push(out, &f.path, t.line, self.id(), msg);
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------- doc-sync
+
+/// Every config key parsed out of the JSON config has a backticked row in
+/// docs/CONFIG.md — the doc drift PRs 3/5/9 kept re-fixing by hand.
+struct ConfigDocSync;
+
+impl Rule for ConfigDocSync {
+    fn id(&self) -> &'static str {
+        "config-doc-sync"
+    }
+    fn summary(&self) -> &'static str {
+        "every config key parsed in src/config/ has a row in docs/CONFIG.md"
+    }
+    fn check(&self, p: &Project, out: &mut Vec<Finding>) {
+        for f in p.files.iter().filter(|f| f.path.ends_with("src/config/mod.rs")) {
+            for (i, t) in f.tokens.iter().enumerate() {
+                let getter = t.kind == Kind::Ident
+                    && t.text == "get"
+                    && i > 0
+                    && f.tokens[i - 1].text == "."
+                    && matches(&f.tokens, i + 1, &["("])
+                    && f.tokens.get(i + 2).map(|k| k.kind == Kind::Str).unwrap_or(false);
+                if getter && !f.is_test_line(t.line) {
+                    let key = &f.tokens[i + 2].text;
+                    if !p.docs.config_md.contains(&format!("`{key}`")) {
+                        let msg = format!(
+                            "config key \"{key}\" is parsed here but has no `{key}` row in docs/CONFIG.md"
+                        );
+                        push(out, &f.path, t.line, self.id(), msg);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The exp-id surface stays in sync three ways: every id registered in
+/// `cmd_exp` has a docs/EXPERIMENTS.md row; every id CI smokes actually exists;
+/// every extension id (whose drivers all accept `--model synthetic`) has a CI
+/// smoke invocation. Paper-reproduction ids need model artifacts, which CI does
+/// not build, so the smoke requirement covers the extensions table.
+struct ExpDocSync;
+
+impl Rule for ExpDocSync {
+    fn id(&self) -> &'static str {
+        "exp-doc-sync"
+    }
+    fn summary(&self) -> &'static str {
+        "exp ids: registered ⇒ documented; documented ⇒ registered; extensions ⇒ CI-smoked"
+    }
+    fn check(&self, p: &Project, out: &mut Vec<Finding>) {
+        let Some(f) = p.files.iter().find(|f| f.path.ends_with("src/main.rs")) else { return };
+        let Some((open, close)) = f.fn_span("cmd_exp") else {
+            push(out, &f.path, 1, self.id(), "cannot locate fn cmd_exp in src/main.rs".into());
+            return;
+        };
+        // Alias groups from the match arms: `"fig9" | "fig8_fig9" => ...`.
+        // "all" is the union runner, registered implicitly (no doc row needed).
+        let mut groups: Vec<(Vec<String>, u32)> = Vec::new();
+        let mut cur: Vec<String> = Vec::new();
+        for i in open..close {
+            let t = &f.tokens[i];
+            if t.kind != Kind::Str {
+                continue;
+            }
+            match f.tokens.get(i + 1).map(|n| n.text.as_str()) {
+                Some("|") => cur.push(t.text.clone()),
+                Some("=>") => {
+                    cur.push(t.text.clone());
+                    groups.push((std::mem::take(&mut cur), t.line));
+                }
+                _ => cur.clear(),
+            }
+        }
+        let mut ids: Vec<&str> =
+            groups.iter().flat_map(|(g, _)| g.iter()).map(|s| s.as_str()).collect();
+        ids.push("all");
+        // (a) registered ⇒ documented.
+        for (group, line) in &groups {
+            for id in group {
+                if !p.docs.experiments_md.contains(&format!("`{id}`")) {
+                    let msg = format!(
+                        "exp id \"{id}\" is registered here but has no `{id}` row in docs/EXPERIMENTS.md"
+                    );
+                    push(out, &f.path, *line, self.id(), msg);
+                }
+            }
+        }
+        // (b) CI smokes only registered ids.
+        let smoked = id_mentions(&p.docs.ci_yml);
+        for (id, line) in &smoked {
+            if !ids.contains(&id.as_str()) {
+                let msg = format!("CI smokes `exp --id {id}`, which is not registered in cmd_exp");
+                push(out, ".github/workflows/ci.yml", *line, self.id(), msg);
+            }
+        }
+        // (c) every extension-table id is registered and its alias group is smoked.
+        let smoked_ids: Vec<&str> = smoked.iter().map(|(id, _)| id.as_str()).collect();
+        for (ext, line) in extension_ids(&p.docs.experiments_md) {
+            let Some((group, _)) = groups.iter().find(|(g, _)| g.contains(&ext)) else {
+                let msg =
+                    format!("extension exp `{ext}` is documented but not registered in cmd_exp");
+                push(out, "docs/EXPERIMENTS.md", line, self.id(), msg);
+                continue;
+            };
+            if !group.iter().any(|id| smoked_ids.contains(&id.as_str())) {
+                let msg = format!(
+                    "extension exp `{ext}` has no CI smoke — add `exp --id {ext}` to .github/workflows/ci.yml"
+                );
+                push(out, "docs/EXPERIMENTS.md", line, self.id(), msg);
+            }
+        }
+        // (d) every `--id X` the docs mention is a real id.
+        for (id, line) in id_mentions(&p.docs.experiments_md) {
+            if !ids.contains(&id.as_str()) {
+                let msg = format!("docs mention `--id {id}`, which is not registered in cmd_exp");
+                push(out, "docs/EXPERIMENTS.md", line, self.id(), msg);
+            }
+        }
+    }
+}
+
+/// Every `--id <word>` mention in `text` with its 1-based line number.
+fn id_mentions(text: &str) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let mut rest = line;
+        while let Some(at) = rest.find("--id") {
+            rest = &rest[at + 4..];
+            let word: String = rest
+                .trim_start()
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if !word.is_empty() {
+                out.push((word, ln as u32 + 1));
+            }
+        }
+    }
+    out
+}
+
+/// First-column backticked ids of the EXPERIMENTS.md "Extensions beyond the
+/// paper" table, with line numbers.
+fn extension_ids(md: &str) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    let mut in_ext = false;
+    for (ln, line) in md.lines().enumerate() {
+        if line.starts_with("## ") {
+            in_ext = line.starts_with("## Extensions");
+            continue;
+        }
+        if in_ext && line.starts_with("| `") {
+            if let Some(end) = line[3..].find('`') {
+                out.push((line[3..3 + end].to_string(), ln as u32 + 1));
+            }
+        }
+    }
+    out
+}
+
+/// Every CLI flag `main.rs` reads has a `--flag` mention in docs/CONFIG.md
+/// (either a config-key row's CLI column or the flags-without-keys section).
+struct FlagDocSync;
+
+const ARG_METHODS: [&str; 7] = ["get", "get_or", "flag", "usize", "u64", "f64", "parsed"];
+
+impl Rule for FlagDocSync {
+    fn id(&self) -> &'static str {
+        "flag-doc-sync"
+    }
+    fn summary(&self) -> &'static str {
+        "every CLI flag read in src/main.rs is documented in docs/CONFIG.md"
+    }
+    fn check(&self, p: &Project, out: &mut Vec<Finding>) {
+        let mut seen: Vec<String> = Vec::new();
+        for f in p.files.iter().filter(|f| f.path.ends_with("src/main.rs")) {
+            for (i, t) in f.tokens.iter().enumerate() {
+                if t.kind != Kind::Ident || t.text != "args" {
+                    continue;
+                }
+                if f.tokens.get(i + 1).map(|n| n.text.as_str()) != Some(".") {
+                    continue;
+                }
+                let Some(m) = f.tokens.get(i + 2) else { continue };
+                if m.kind != Kind::Ident || !ARG_METHODS.contains(&m.text.as_str()) {
+                    continue;
+                }
+                // Skip an optional turbofish between the method and its args.
+                let mut j = i + 3;
+                if f.tokens.get(j).map(|n| n.text.as_str()) == Some("::") {
+                    while j < f.tokens.len() && f.tokens[j].text != "(" {
+                        j += 1;
+                    }
+                }
+                let is_call = f.tokens.get(j).map(|n| n.text.as_str()) == Some("(")
+                    && f.tokens.get(j + 1).map(|k| k.kind == Kind::Str).unwrap_or(false);
+                if !is_call {
+                    continue;
+                }
+                let flag = f.tokens[j + 1].text.clone();
+                if seen.contains(&flag) {
+                    continue;
+                }
+                seen.push(flag.clone());
+                if !contains_flag(&p.docs.config_md, &flag) {
+                    let msg = format!(
+                        "CLI flag --{flag} is undocumented — add it to docs/CONFIG.md (CLI column or the flags-without-keys section)"
+                    );
+                    push(out, &f.path, t.line, self.id(), msg);
+                }
+            }
+        }
+    }
+}
+
+/// True when `--name` appears in `md` at a flag boundary (not as a prefix of a
+/// longer flag, so `--n-train` never satisfies `--n-eval`).
+fn contains_flag(md: &str, name: &str) -> bool {
+    let pat = format!("--{name}");
+    let mut from = 0;
+    while let Some(pos) = md[from..].find(&pat) {
+        let end = from + pos + pat.len();
+        let boundary = md[end..]
+            .chars()
+            .next()
+            .map(|c| !(c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'))
+            .unwrap_or(true);
+        if boundary {
+            return true;
+        }
+        from = end;
+    }
+    false
+}

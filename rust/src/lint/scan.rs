@@ -1,0 +1,436 @@
+//! Token-level scanner for the repo lint (zero external deps — no syn, no regex).
+//!
+//! The scanner is deliberately not a full Rust parser: rules match on small token
+//! sequences, so all we need is a lexer that is *exact* about what is code and what
+//! is not. Comments and string contents never become `Ident` tokens, which is what
+//! lets the lint module itself (whose rule tables spell the forbidden names as
+//! string literals) scan clean under its own rules.
+//!
+//! Besides the token stream, `SourceFile` precomputes three views the rules share:
+//! `#[cfg(test)]` / `#[test]` line spans (rules that only govern shipping code skip
+//! them), enclosing-`fn` spans (the accounting registries are keyed by function
+//! name), and the `// lint:allow(rule-id)` suppression table.
+
+/// Token class. `Str` carries the *contents* of the literal (quotes and raw-string
+/// hashes stripped) so doc-sync rules can read keys out of `get("key")` calls.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One `// lint:allow(...)` entry: the code line it governs plus one rule id.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub line: u32,
+    pub rule: String,
+    /// Set by the runner when the allow suppresses at least one finding.
+    pub used: std::cell::Cell<bool>,
+}
+
+/// A scanned source file: token stream plus the derived views rules consume.
+pub struct SourceFile {
+    /// Repo-relative path with `/` separators (e.g. `rust/src/engine/driver.rs`).
+    pub path: String,
+    pub tokens: Vec<Token>,
+    pub allows: Vec<Allow>,
+    /// Lines holding a `lint:allow` comment that does not parse.
+    pub malformed_allows: Vec<u32>,
+    /// Line spans (inclusive) covered by `#[cfg(test)]` / `#[test]` items.
+    test_spans: Vec<(u32, u32)>,
+    /// `(open_brace_token, close_brace_token, fn_name)` for every `fn` body.
+    fn_spans: Vec<(usize, usize, String)>,
+    /// Whole file is test scope (anything under `tests/`).
+    pub is_test_file: bool,
+}
+
+impl SourceFile {
+    pub fn parse(path: String, text: &str) -> SourceFile {
+        let is_test_file = path.contains("tests/");
+        let (tokens, allows, malformed_allows) = lex(text);
+        let test_spans = find_test_spans(&tokens);
+        let fn_spans = find_fn_spans(&tokens);
+        SourceFile { path, tokens, allows, malformed_allows, test_spans, fn_spans, is_test_file }
+    }
+
+    /// True when `line` belongs to test scope (a `tests/` file or a `#[cfg(test)]`
+    /// / `#[test]` item). Rules restricted to shipping code skip such lines.
+    pub fn is_test_line(&self, line: u32) -> bool {
+        self.is_test_file || self.test_spans.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// Name of the innermost `fn` whose body contains token `i`, if any.
+    pub fn enclosing_fn(&self, i: usize) -> Option<&str> {
+        self.fn_spans
+            .iter()
+            .filter(|&&(open, close, _)| open < i && i < close)
+            .max_by_key(|&&(open, _, _)| open)
+            .map(|(_, _, name)| name.as_str())
+    }
+
+    /// Token span `(open_brace, close_brace)` of the first `fn name` body.
+    pub fn fn_span(&self, name: &str) -> Option<(usize, usize)> {
+        self.fn_spans.iter().find(|(_, _, n)| n == name).map(|&(a, b, _)| (a, b))
+    }
+
+    /// True when a `lint:allow(rule)` governs `line`.
+    pub fn allowed(&self, line: u32, rule: &str) -> bool {
+        let mut hit = false;
+        for a in &self.allows {
+            if a.line == line && a.rule == rule {
+                a.used.set(true);
+                hit = true;
+            }
+        }
+        hit
+    }
+}
+
+/// Lex `text` into tokens, collecting `lint:allow` comments along the way.
+/// An allow on a line that already holds code governs that line; an allow on a
+/// comment-only line governs the next line that holds code.
+fn lex(text: &str) -> (Vec<Token>, Vec<Allow>, Vec<u32>) {
+    let b = text.as_bytes();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut allows: Vec<Allow> = Vec::new();
+    let mut malformed: Vec<u32> = Vec::new();
+    // Rules parsed from comment-only lines, waiting for the next code line.
+    let mut pending: Vec<String> = Vec::new();
+    let (mut i, mut line) = (0usize, 1u32);
+    let mut last_tok_line = 0u32;
+    let attach = |toks: &mut Vec<Token>, pending: &mut Vec<String>, allows: &mut Vec<Allow>| {
+        if let Some(t) = toks.last() {
+            let ln = t.line;
+            for r in pending.drain(..) {
+                allows.push(Allow { line: ln, rule: r, used: std::cell::Cell::new(false) });
+            }
+        }
+    };
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment — the only place the suppression grammar lives.
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            // The directive must BE the comment (`// lint:allow(...)`), not merely
+            // appear in one: doc comments (`///`, `//!`) and prose that quotes the
+            // grammar are plain text. Stripping exactly `//` leaves doc comments
+            // starting with `/` or `!`, which never match.
+            let directive = text[start + 2..i].trim_start();
+            if directive.starts_with("lint:allow") {
+                match parse_allow(directive) {
+                    Some(rules) if last_tok_line == line => {
+                        for r in rules {
+                            allows.push(Allow { line, rule: r, used: std::cell::Cell::new(false) });
+                        }
+                    }
+                    Some(rules) => pending.extend(rules),
+                    None => malformed.push(line),
+                }
+            }
+            continue;
+        }
+        // Block comment (nested).
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let mut depth = 1;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Identifier / keyword — or the prefix of a raw/byte string literal.
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let start = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            let word = &text[start..i];
+            let next = b.get(i).copied();
+            if matches!(word, "r" | "b" | "br") && matches!(next, Some(b'"') | Some(b'#')) {
+                if let Some((val, ni, nl)) = lex_raw_or_byte_str(text, b, i, line, word) {
+                    toks.push(Token { kind: Kind::Str, text: val, line });
+                    last_tok_line = line;
+                    attach(&mut toks, &mut pending, &mut allows);
+                    line = nl;
+                    i = ni;
+                    continue;
+                }
+            }
+            toks.push(Token { kind: Kind::Ident, text: word.to_string(), line });
+            last_tok_line = line;
+            attach(&mut toks, &mut pending, &mut allows);
+            continue;
+        }
+        // Number (loose: consumes suffixes/hex; never eats a `..` range).
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            if i + 1 < b.len() && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+            }
+            toks.push(Token { kind: Kind::Num, text: text[start..i].to_string(), line });
+            last_tok_line = line;
+            attach(&mut toks, &mut pending, &mut allows);
+            continue;
+        }
+        // String literal.
+        if c == b'"' {
+            let (val, ni, nl) = lex_quoted(text, b, i + 1, line);
+            toks.push(Token { kind: Kind::Str, text: val, line });
+            last_tok_line = line;
+            attach(&mut toks, &mut pending, &mut allows);
+            line = nl;
+            i = ni;
+            continue;
+        }
+        // Char literal vs lifetime. A lifetime is `'` + ident not closed by `'`.
+        if c == b'\'' {
+            if i + 2 < b.len() && b[i + 1] == b'\\' {
+                // Escaped char literal: skip to the closing quote.
+                i += 2;
+                while i < b.len() && b[i] != b'\'' {
+                    i += 1;
+                }
+                i += 1;
+            } else if i + 2 < b.len() && b[i + 2] == b'\'' {
+                i += 3; // plain char literal 'x'
+            } else {
+                // Lifetime: consume the tick and let the ident lex normally.
+                i += 1;
+            }
+            continue;
+        }
+        // Non-ASCII outside comments/strings: skip the whole char, never a token.
+        if c >= 0x80 {
+            i += 1;
+            while i < b.len() && (b[i] & 0xC0) == 0x80 {
+                i += 1;
+            }
+            continue;
+        }
+        // Punctuation — longest match first so `::`, `=>`, `..` stay atomic.
+        const MULTI: [&str; 19] = [
+            "..=", "...", "<<=", ">>=", "::", "->", "=>", "==", "!=", "<=", ">=", "..", "&&",
+            "||", "<<", ">>", "+=", "-=", "*=",
+        ];
+        let rest = &text[i..];
+        let m = MULTI.iter().find(|p| rest.starts_with(**p));
+        let p = match m {
+            Some(p) => (*p).to_string(),
+            None => (c as char).to_string(),
+        };
+        i += p.len();
+        toks.push(Token { kind: Kind::Punct, text: p, line });
+        last_tok_line = line;
+        attach(&mut toks, &mut pending, &mut allows);
+    }
+    (toks, allows, malformed)
+}
+
+/// Parse `lint:allow(rule-a, rule-b)` out of a line comment. Returns `None` when
+/// the grammar is malformed (missing parens, empty list, bad characters).
+fn parse_allow(comment: &str) -> Option<Vec<String>> {
+    let at = comment.find("lint:allow")?;
+    let rest = &comment[at + "lint:allow".len()..];
+    let rest = rest.strip_prefix('(')?;
+    let close = rest.find(')')?;
+    let inner = &rest[..close];
+    let mut rules = Vec::new();
+    let id_char = |c: u8| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'-';
+    for part in inner.split(',') {
+        let id = part.trim();
+        if id.is_empty() || !id.bytes().all(id_char) {
+            return None;
+        }
+        rules.push(id.to_string());
+    }
+    if rules.is_empty() {
+        None
+    } else {
+        Some(rules)
+    }
+}
+
+/// Lex a normal `"..."` body starting just past the opening quote.
+/// Returns (contents, next index, next line).
+fn lex_quoted(text: &str, b: &[u8], mut i: usize, mut line: u32) -> (String, usize, u32) {
+    let start = i;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => break,
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    let end = i.min(b.len());
+    (text[start..end].to_string(), (end + 1).min(b.len()), line)
+}
+
+/// Lex the tail of a raw/byte string whose prefix word (`r`, `b`, `br`) ended at
+/// `i`. Returns (contents, next index, next line) or `None` if it is not actually
+/// a string (e.g. stray `#`).
+fn lex_raw_or_byte_str(
+    text: &str,
+    b: &[u8],
+    mut i: usize,
+    mut line: u32,
+    word: &str,
+) -> Option<(String, usize, u32)> {
+    if word == "b" && b.get(i) == Some(&b'"') {
+        let (v, ni, nl) = lex_quoted(text, b, i + 1, line);
+        return Some((v, ni, nl));
+    }
+    // Raw forms: r"..."  r#"..."#  br#"..."# (any number of #).
+    let mut hashes = 0usize;
+    while b.get(i) == Some(&b'#') {
+        hashes += 1;
+        i += 1;
+    }
+    if b.get(i) != Some(&b'"') {
+        return None;
+    }
+    i += 1;
+    let start = i;
+    let closer: String = std::iter::once('"').chain(std::iter::repeat('#').take(hashes)).collect();
+    while i < b.len() {
+        if b[i] == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if text[i..].starts_with(&closer) {
+            let v = text[start..i].to_string();
+            return Some((v, i + closer.len(), line));
+        }
+        i += 1;
+    }
+    Some((text[start..].to_string(), b.len(), line))
+}
+
+/// Locate `#[cfg(test)]` / `#[test]` items and return their line spans.
+fn find_test_spans(toks: &[Token]) -> Vec<(u32, u32)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].text == "#" && i + 1 < toks.len() && toks[i + 1].text == "[" {
+            let is_test = matches(toks, i + 2, &["test", "]"])
+                || matches(toks, i + 2, &["cfg", "(", "test", ")", "]"]);
+            if is_test {
+                // Skip any further attributes, then brace-match the item body.
+                let mut j = i + 2;
+                while j < toks.len() && toks[j].text != "{" && toks[j].text != ";" {
+                    j += 1;
+                }
+                if j < toks.len() && toks[j].text == "{" {
+                    if let Some(close) = brace_match(toks, j) {
+                        spans.push((toks[i].line, toks[close].line));
+                        i = j + 1; // nested #[test] fns inside a cfg(test) mod still recorded
+                        continue;
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// Locate every `fn name ... { body }` and record its body's token span.
+fn find_fn_spans(toks: &[Token]) -> Vec<(usize, usize, String)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].kind == Kind::Ident && toks[i].text == "fn" && i + 1 < toks.len() {
+            let name_tok = &toks[i + 1];
+            if name_tok.kind == Kind::Ident {
+                // Find the body `{`, bailing at `;` (trait method declaration).
+                let mut j = i + 2;
+                let mut depth = 0i32;
+                while j < toks.len() {
+                    match toks[j].text.as_str() {
+                        "(" | "[" => depth += 1,
+                        ")" | "]" => depth -= 1,
+                        "{" if depth == 0 => break,
+                        ";" if depth == 0 => {
+                            j = toks.len();
+                            break;
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if j < toks.len() {
+                    if let Some(close) = brace_match(toks, j) {
+                        spans.push((j, close, name_tok.text.clone()));
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// Index of the `}` matching the `{` at `open`, or `None` when unbalanced.
+fn brace_match(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// True when the token texts at `toks[at..]` equal `pat`.
+pub fn matches(toks: &[Token], at: usize, pat: &[&str]) -> bool {
+    pat.iter().enumerate().all(|(k, p)| toks.get(at + k).map(|t| t.text == *p).unwrap_or(false))
+}

@@ -1,0 +1,72 @@
+//! Deterministic file walker for `cloudless lint`.
+//!
+//! Collects every `.rs` file under `rust/src/` and `rust/tests/` (sorted, so the
+//! findings report is byte-stable across runs and machines) plus the three
+//! documents the doc-sync rules check against.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// The docs the doc-sync rules cross-check code against.
+pub struct DocContext {
+    pub config_md: String,
+    pub experiments_md: String,
+    pub ci_yml: String,
+}
+
+/// All `.rs` files under `root/rust/src` and `root/rust/tests`, as
+/// `(repo-relative path, contents)`, sorted by path.
+pub fn rust_sources(root: &Path) -> Result<Vec<(String, String)>> {
+    let mut files = Vec::new();
+    for dir in ["rust/src", "rust/tests"] {
+        let abs = root.join(dir);
+        if abs.is_dir() {
+            collect(&abs, &mut files)?;
+        }
+    }
+    let mut out = Vec::new();
+    for p in files {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let text = fs::read_to_string(&p).with_context(|| format!("reading {}", p.display()))?;
+        out.push((rel, text));
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .with_context(|| format!("walking {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Load the doc-sync inputs from their canonical repo locations.
+pub fn load_docs(root: &Path) -> Result<DocContext> {
+    let read = |rel: &str| {
+        fs::read_to_string(root.join(rel))
+            .with_context(|| format!("reading doc-sync input {rel}"))
+    };
+    Ok(DocContext {
+        config_md: read("docs/CONFIG.md")?,
+        experiments_md: read("docs/EXPERIMENTS.md")?,
+        ci_yml: read(".github/workflows/ci.yml")?,
+    })
+}

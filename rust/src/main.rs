@@ -11,6 +11,7 @@
 //!                   [--full]
 //! cloudless devices                            print the device catalog
 //! cloudless check                              verify artifacts load + run
+//! cloudless lint    [--root <repo>]            repo static-analysis pass
 //! ```
 //!
 //! Every flag and config key is documented in docs/CONFIG.md; the
@@ -53,6 +54,9 @@ USAGE:
   cloudless exp     --id <table1|fig2|fig3|fig7|table4|scheduling|fig8|fig9|fig10|fig11|topology|elastic|multijob|dataplane|federated|fleetscale|ablations|compression|wanopt|spot|all> [--full] [--model m]
   cloudless devices
   cloudless check
+  cloudless lint    [--root d]  static-analysis pass: determinism, billing
+                    accounting, doc-sync (rules: docs/DEVELOPMENT.md);
+                    nonzero exit on findings
 
   strategies: asgd (baseline), asgd-ga, ama (alias: ma), sma
   topologies: ring (default), hierarchical, bandwidth-tree
@@ -111,6 +115,7 @@ fn main() -> anyhow::Result<()> {
         Some("exp") => cmd_exp(&args),
         Some("devices") => cmd_devices(),
         Some("check") => cmd_check(),
+        Some("lint") => cmd_lint(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -301,7 +306,7 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
                 exp::sync_exp::fig11(coord, scale);
             }
             "topology" => {
-                exp::topology_exp::topology_compare(coord, scale);
+                exp::topology_exp::topology_compare(coord, scale, &exp_model);
             }
             "multijob" => {
                 let params = multijob_params(args)?;
@@ -323,9 +328,11 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
                 let regions = args.usize("regions", 0);
                 exp::fleetscale_exp::fleetscale(coord, scale, jobs, regions)?;
             }
-            "ablations" => exp::ablations::all(coord, scale),
+            "ablations" => exp::ablations::all(coord, scale, &exp_model),
             "compression" => {
-                exp::ablations::compression_vs_frequency(coord, scale);
+                // Historical default: the comm-heavy DeepFM workload.
+                let m = args.get_or("model", "deepfm");
+                exp::ablations::compression_vs_frequency(coord, scale, m);
             }
             "wanopt" => {
                 exp::wanopt_exp::wanopt_compare(coord, scale, &exp_model);
@@ -349,6 +356,21 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     } else {
         run(&id, &coord)?;
     }
+    Ok(())
+}
+
+/// `cloudless lint [--root <repo>]` — the repo-specific static-analysis pass
+/// (determinism / accounting / doc-sync invariants; rule reference and the
+/// `lint:allow` grammar live in docs/DEVELOPMENT.md). `--root` defaults to the
+/// repo this binary was built from. Exits nonzero when findings remain.
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    let root = args
+        .get("root")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(".."));
+    let report = cloudless::lint::lint_repo(&root)?;
+    print!("{}", report.render());
+    anyhow::ensure!(report.clean(), "lint found {} violation(s)", report.findings.len());
     Ok(())
 }
 

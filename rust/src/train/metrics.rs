@@ -20,6 +20,25 @@ pub struct EvalPoint {
     pub accuracy: f64,
 }
 
+/// The one registry of [`ReplanEvent::cause`] tags. Everything that files a
+/// re-plan — the driver's control loop, the fleet coordinator, experiments
+/// filtering events back out — goes through these constants, never ad-hoc
+/// string literals: a typo'd cause is silently never matched downstream, so
+/// the `replan-cause-registry` lint rule pins all cause strings to this
+/// module. A composite cause joins several tags with `"+"`.
+pub mod replan_cause {
+    /// A spot revocation forced the re-plan past hysteresis.
+    pub const PREEMPTION: &str = "preemption";
+    /// Allocation movement (load re-plan).
+    pub const LOAD: &str = "load";
+    /// WAN bandwidth divergence re-planned the sync topology.
+    pub const BANDWIDTH: &str = "bandwidth";
+    /// Per-link gradient-codec reassignment.
+    pub const COMPRESSION: &str = "compression";
+    /// Multi-job lease re-division applied by the fleet coordinator.
+    pub const LEASE: &str = "lease";
+}
+
 /// One committed re-plan of the elastic control loop (`sched::elastic`):
 /// the monitor observed resource churn or WAN divergence, the controller
 /// produced a new plan past hysteresis, and the driver applied it.
@@ -27,11 +46,9 @@ pub struct EvalPoint {
 pub struct ReplanEvent {
     /// Virtual time the re-plan was applied.
     pub t: Time,
-    /// What tripped it: any "+"-joined combination of "preemption" (a
-    /// spot revocation forced the re-plan past hysteresis), "load"
-    /// (allocation movement), "bandwidth" (topology re-plan), and
-    /// "compression" (per-link codec reassignment) — plus "lease" for
-    /// multi-job lease re-divisions.
+    /// What tripped it: any "+"-joined combination of the
+    /// [`replan_cause`] tags (`PREEMPTION`, `LOAD`, `BANDWIDTH`,
+    /// `COMPRESSION`, plus `LEASE` for multi-job lease re-divisions).
     pub cause: String,
     /// Relative plan movement that cleared hysteresis (0 for
     /// topology-only re-plans).

@@ -17,6 +17,7 @@ use cloudless::runtime::PjrtRuntime;
 use cloudless::sched::elastic::ElasticConfig;
 use cloudless::sched::optimal_matching;
 use cloudless::sync::{Strategy, SyncConfig};
+use cloudless::train::metrics::replan_cause;
 use cloudless::train::{run_geo_training, TrainConfig, TrainReport};
 
 fn rt() -> PjrtRuntime {
@@ -178,7 +179,7 @@ fn auto_compression_picks_a_codec_on_collapse_and_reverts_on_recovery() {
     // Compression-only: every event is a pure codec event.
     assert!(!report.replan_events.is_empty(), "the collapse must be acted on");
     for ev in &report.replan_events {
-        assert_eq!(ev.cause, "compression", "{ev:?}");
+        assert_eq!(ev.cause, replan_cause::COMPRESSION, "{ev:?}");
         assert!(!ev.topology_replanned, "{ev:?}");
         assert_eq!(ev.plan_delta, 0.0, "{ev:?}");
         assert!(!ev.compression_changes.is_empty(), "{ev:?}");

@@ -1,0 +1,399 @@
+//! Integration tests for the `cloudless lint` static-analysis pass
+//! (`rust/src/lint/`): fixture-based self-tests for every rule (a known-bad
+//! snippet each rule must flag and a clean sibling it must pass), the
+//! `lint:allow` suppression round-trip, and findings-determinism (same tree →
+//! byte-identical report). The last test runs the real repo tree and pins it
+//! clean, which is what gates tier-1.
+
+use cloudless::lint::{lint_files, lint_repo, DocContext, LintReport};
+
+/// Synthetic doc-sync inputs for fixtures. The doc-sync fixtures build their
+/// own variants; the code-rule fixtures just need something well-formed.
+fn docs() -> DocContext {
+    DocContext {
+        config_md: "| `alpha` | int | 1 | first knob. CLI: `--alpha` |\n".to_string(),
+        experiments_md: "## Extensions beyond the paper\n\n| exp id |\n|---|\n| `alpha` |\n"
+            .to_string(),
+        ci_yml: "  run: cargo run --release -- exp --id alpha\n".to_string(),
+    }
+}
+
+fn lint_one(path: &str, code: &str) -> LintReport {
+    lint_files(vec![(path.to_string(), code.to_string())], docs())
+}
+
+fn hits<'a>(report: &'a LintReport, rule: &str) -> Vec<&'a str> {
+    report
+        .findings
+        .iter()
+        .filter(|f| f.rule == rule)
+        .map(|f| f.message.as_str())
+        .collect()
+}
+
+// ---------------------------------------------------------------- determinism
+
+#[test]
+fn flags_hash_collections_in_src() {
+    let bad = r#"
+        use std::collections::BTreeMap;
+        pub fn f() -> usize { let m: HashMap<u32, u32> = HashMap::new(); m.len() }
+    "#;
+    let r = lint_one("rust/src/sim/bad.rs", bad);
+    assert_eq!(hits(&r, "no-unordered-collections").len(), 2, "{}", r.render());
+
+    let clean = bad.replace("HashMap", "BTreeMap");
+    let r = lint_one("rust/src/sim/bad.rs", &clean);
+    assert!(r.clean(), "{}", r.render());
+}
+
+#[test]
+fn hash_collections_allowed_in_test_scope() {
+    let code = r#"
+        #[cfg(test)]
+        mod tests {
+            #[test]
+            fn t() { let m: HashSet<u32> = HashSet::new(); assert!(m.is_empty()); }
+        }
+    "#;
+    let r = lint_one("rust/src/sim/mod.rs", code);
+    assert!(r.clean(), "{}", r.render());
+    // Same tokens in a tests/ file: whole file is test scope.
+    let r = lint_one("rust/tests/foo.rs", code);
+    assert!(r.clean(), "{}", r.render());
+}
+
+#[test]
+fn flags_ambient_entropy_everywhere() {
+    for snippet in [
+        "fn f() { let t = SystemTime::now(); }",
+        "fn f() { let mut rng = thread_rng(); }",
+        "fn f() -> f64 { rand::random() }",
+    ] {
+        let r = lint_one("rust/tests/foo.rs", snippet);
+        assert_eq!(hits(&r, "no-wallclock").len(), 1, "{snippet}: {}", r.render());
+    }
+    let r = lint_one("rust/tests/foo.rs", "fn f() { let rng = Pcg32::new(7, 1); }");
+    assert!(hits(&r, "no-wallclock").is_empty(), "{}", r.render());
+}
+
+#[test]
+fn instant_now_only_at_allowlisted_sites() {
+    let one = "fn f() -> Instant { Instant::now() }";
+    // Allowlisted file, single site: clean.
+    let r = lint_one("rust/src/train/calib.rs", one);
+    assert!(r.clean(), "{}", r.render());
+    // Same code anywhere else: flagged.
+    let r = lint_one("rust/src/sched/elastic.rs", one);
+    assert_eq!(hits(&r, "instant-now-allowlist").len(), 1, "{}", r.render());
+    // Two sites in an allowlisted file: the second is flagged.
+    let two = "fn f() -> f64 { let a = Instant::now(); a.elapsed().as_secs_f64() }\n\
+               fn g() -> Instant { Instant::now() }";
+    let r = lint_one("rust/src/engine/driver.rs", two);
+    assert_eq!(hits(&r, "instant-now-allowlist").len(), 1, "{}", r.render());
+}
+
+#[test]
+fn pcg32_seed_must_be_explicitly_derived() {
+    // Neither a literal nor anything seed-named in the first argument.
+    let r = lint_one("rust/src/net/x.rs", "fn f(n: usize) { let g = Pcg32::new(n as u64, 1); }");
+    assert_eq!(hits(&r, "pcg32-explicit-seed").len(), 1, "{}", r.render());
+    // Literal-derived and seed-named first arguments pass.
+    for ok in [
+        "fn f(cfg: &C) { let g = Pcg32::new(cfg.seed ^ 0x5A17, 2); }",
+        "fn f(seed: u64) { let g = Pcg32::new(seed.wrapping_add(3), 0); }",
+        "fn f() { let g = Pcg32::new(1000 + 7, 1); }",
+    ] {
+        let r = lint_one("rust/src/net/x.rs", ok);
+        assert!(hits(&r, "pcg32-explicit-seed").is_empty(), "{ok}: {}", r.render());
+    }
+    // Raw struct literals bypass seed derivation — banned outside util/rng.rs.
+    let raw = "fn f() { let g = Pcg32 { state: 1, inc: 2 }; }";
+    let r = lint_one("rust/src/net/x.rs", raw);
+    assert_eq!(hits(&r, "pcg32-explicit-seed").len(), 1, "{}", r.render());
+    let r = lint_one("rust/src/util/rng.rs", raw);
+    assert!(r.clean(), "{}", r.render());
+}
+
+// ----------------------------------------------------------------- accounting
+
+#[test]
+fn billing_sites_must_be_registered() {
+    // A construction site outside the registry is flagged...
+    let r = lint_one(
+        "rust/src/exp/foo.rs",
+        "fn sneaky(d: Device) { let b = BilledAllocation { device: d, units: 1, held_s: 2.0, rate: 1.0 }; }",
+    );
+    assert_eq!(hits(&r, "billing-site-registry").len(), 1, "{}", r.render());
+    // ...registered (file, fn) pairs and type-position uses are not.
+    let r = lint_one(
+        "rust/src/engine/driver.rs",
+        "fn finalize_report(v: &mut Vec<BilledAllocation>) { v.push(BilledAllocation::on_demand(1)); }",
+    );
+    assert!(r.clean(), "{}", r.render());
+    // Same for segment opens: alloc_since writes outside the registry.
+    let r = lint_one("rust/src/engine/driver.rs", "fn helper(p: &mut P) { p.alloc_since = 0.0; }");
+    assert_eq!(hits(&r, "billing-site-registry").len(), 1, "{}", r.render());
+    let r = lint_one(
+        "rust/src/engine/driver.rs",
+        "fn deploy_job_planned(p: &mut P, t: f64) { p.alloc_since = t; }",
+    );
+    assert!(r.clean(), "{}", r.render());
+    // Reads and field declarations are not writes.
+    let r = lint_one(
+        "rust/src/engine/partition.rs",
+        "pub struct Partition { pub alloc_since: f64 }\nfn held(p: &Partition, t: f64) -> f64 { t - p.alloc_since }",
+    );
+    assert!(r.clean(), "{}", r.render());
+}
+
+#[test]
+fn replan_causes_come_from_the_registry() {
+    let r = lint_one(
+        "rust/src/engine/foo.rs",
+        r#"fn f(w: &mut W) { w.replans.push(ReplanEvent { cause: "manual".to_string() }); }"#,
+    );
+    assert_eq!(hits(&r, "replan-cause-registry").len(), 1, "{}", r.render());
+    // Constants from the registry module pass...
+    let r = lint_one(
+        "rust/src/engine/foo.rs",
+        "fn f(causes: &mut Vec<&str>) { causes.push(replan_cause::LEASE); }",
+    );
+    assert!(r.clean(), "{}", r.render());
+    // ...and the registry's own definitions are exempt.
+    let r = lint_one(
+        "rust/src/train/metrics.rs",
+        r#"pub mod replan_cause { pub const LEASE: &str = "lease"; }"#,
+    );
+    assert!(r.clean(), "{}", r.render());
+}
+
+#[test]
+fn default_spread_banned_in_drift_prone_literals() {
+    let r = lint_one(
+        "rust/src/exp/foo.rs",
+        "fn f() -> ElasticConfig { ElasticConfig { enabled: true, ..Default::default() } }",
+    );
+    assert_eq!(hits(&r, "no-default-spread").len(), 1, "{}", r.render());
+    // Non-drift-prone struct names and test scope are out of bounds.
+    let r = lint_one(
+        "rust/src/exp/foo.rs",
+        "fn f() -> Cursor { Cursor { pos: 0, ..Default::default() } }",
+    );
+    assert!(r.clean(), "{}", r.render());
+    let r = lint_one(
+        "rust/tests/foo.rs",
+        "fn f() -> ElasticConfig { ElasticConfig { enabled: true, ..Default::default() } }",
+    );
+    assert!(r.clean(), "{}", r.render());
+}
+
+// ------------------------------------------------------------------- doc-sync
+
+#[test]
+fn config_keys_must_have_doc_rows() {
+    let code = r#"fn parse(j: &Json) { let a = j.get("alpha"); let b = j.get("beta"); }"#;
+    let r = lint_files(vec![("rust/src/config/mod.rs".to_string(), code.to_string())], docs());
+    let found = hits(&r, "config-doc-sync");
+    assert_eq!(found.len(), 1, "{}", r.render());
+    assert!(found[0].contains("beta"), "{}", r.render());
+    // Indexed/non-literal gets are not config keys.
+    let code = "fn f(v: &[u32], m: &M) { let a = v.get(0); let b = m.get(&key); }";
+    let r = lint_files(vec![("rust/src/config/mod.rs".to_string(), code.to_string())], docs());
+    assert!(r.clean(), "{}", r.render());
+}
+
+/// A minimal `main.rs` registering ids `alpha` and `beta`/`beta2`.
+const FIXTURE_MAIN: &str = r#"
+fn cmd_exp(args: &Args) -> Result<()> {
+    match id {
+        "alpha" => run_alpha(),
+        "beta" | "beta2" => run_beta(),
+        other => bail!("unknown experiment id {other:?}"),
+    }
+}
+"#;
+
+fn lint_main(experiments_md: &str, ci_yml: &str) -> LintReport {
+    let ctx = DocContext {
+        config_md: docs().config_md,
+        experiments_md: experiments_md.to_string(),
+        ci_yml: ci_yml.to_string(),
+    };
+    lint_files(vec![("rust/src/main.rs".to_string(), FIXTURE_MAIN.to_string())], ctx)
+}
+
+#[test]
+fn exp_ids_sync_against_docs_and_ci() {
+    let good_md = concat!(
+        "## Extensions beyond the paper\n\n| exp id |\n|---|\n",
+        "| `alpha` |\n| `beta` (alias `beta2`) |\n\nrun `--id alpha` first.\n"
+    );
+    let good_ci = "  run: |\n    cargo run -- exp --id alpha\n    cargo run -- exp --id beta\n";
+    let r = lint_main(good_md, good_ci);
+    assert!(hits(&r, "exp-doc-sync").is_empty(), "{}", r.render());
+
+    // A registered id with no doc row.
+    let r = lint_main("## Extensions beyond the paper\n\n| `alpha` |\n", "exp --id alpha\n");
+    assert!(
+        hits(&r, "exp-doc-sync").iter().any(|m| m.contains("beta")),
+        "{}",
+        r.render()
+    );
+    // An extension id with no CI smoke.
+    let r = lint_main(good_md, "  run: cargo run -- exp --id alpha\n");
+    assert!(
+        hits(&r, "exp-doc-sync").iter().any(|m| m.contains("no CI smoke")),
+        "{}",
+        r.render()
+    );
+    // CI smoking an unknown id.
+    let r = lint_main(good_md, "exp --id alpha\nexp --id beta\nexp --id gamma\n");
+    assert!(
+        hits(&r, "exp-doc-sync").iter().any(|m| m.contains("gamma")),
+        "{}",
+        r.render()
+    );
+    // Docs mentioning an unknown id.
+    let md = format!("{good_md}\nalso run `--id gamma`.\n");
+    let r = lint_main(&md, "exp --id alpha\nexp --id beta\n");
+    assert!(
+        hits(&r, "exp-doc-sync").iter().any(|m| m.contains("gamma")),
+        "{}",
+        r.render()
+    );
+    // A documented extension that is not registered at all.
+    let md = format!("{good_md}| `delta` |\n");
+    let r = lint_main(&md, "exp --id alpha\nexp --id beta\n");
+    assert!(
+        hits(&r, "exp-doc-sync").iter().any(|m| m.contains("delta")),
+        "{}",
+        r.render()
+    );
+}
+
+#[test]
+fn cli_flags_must_be_documented() {
+    let code = r#"fn cmd(args: &Args) { args.get_or("alpha", "1"); args.flag("missing"); }"#;
+    let ctx = docs();
+    let r = lint_files(vec![("rust/src/main.rs".to_string(), code.to_string())], ctx);
+    let found = hits(&r, "flag-doc-sync");
+    assert_eq!(found.len(), 1, "{}", r.render());
+    assert!(found[0].contains("--missing"), "{}", r.render());
+}
+
+// ---------------------------------------------------------------- suppression
+
+#[test]
+fn lint_allow_suppresses_same_line_and_line_above() {
+    let same_line = concat!(
+        "fn f() { let m: HashMap<u32, u32> = make(); }",
+        " // lint:allow(no-unordered-collections)"
+    );
+    let r = lint_one("rust/src/sim/bad.rs", same_line);
+    assert!(r.clean(), "{}", r.render());
+    assert_eq!(r.suppressed, 1);
+
+    let line_above = concat!(
+        "// lint:allow(no-unordered-collections)\n",
+        "fn f() { let m: HashMap<u32, u32> = make(); }"
+    );
+    let r = lint_one("rust/src/sim/bad.rs", line_above);
+    assert!(r.clean(), "{}", r.render());
+    assert_eq!(r.suppressed, 1);
+
+    // Several rules in one allow.
+    let multi = concat!(
+        "// lint:allow(no-unordered-collections, no-wallclock)\n",
+        "fn f() { let m: HashMap<u32, SystemTime> = make(); }"
+    );
+    let r = lint_one("rust/src/sim/bad.rs", multi);
+    assert!(r.clean(), "{}", r.render());
+    assert_eq!(r.suppressed, 2);
+}
+
+#[test]
+fn lint_allow_hygiene_is_itself_linted() {
+    // Unknown rule id.
+    let r = lint_one("rust/src/sim/bad.rs", "// lint:allow(not-a-rule)\nfn f() {}");
+    assert!(
+        hits(&r, "lint-allow").iter().any(|m| m.contains("not-a-rule")),
+        "{}",
+        r.render()
+    );
+    // Malformed grammar (no parenthesized list).
+    let r = lint_one("rust/src/sim/bad.rs", "// lint:allow no-wallclock\nfn f() {}");
+    assert!(
+        hits(&r, "lint-allow").iter().any(|m| m.contains("malformed")),
+        "{}",
+        r.render()
+    );
+    // A well-formed allow that suppresses nothing is dead weight.
+    let r = lint_one("rust/src/sim/bad.rs", "// lint:allow(no-wallclock)\nfn f() {}");
+    assert!(
+        hits(&r, "lint-allow").iter().any(|m| m.contains("suppresses nothing")),
+        "{}",
+        r.render()
+    );
+}
+
+#[test]
+fn lint_allow_mentions_in_prose_and_doc_comments_are_not_directives() {
+    // The directive must BE the comment. Doc comments and prose that merely
+    // quote the grammar (as this module's own docs do) parse as plain text —
+    // no allow entry, no malformed-grammar finding.
+    let prose = concat!(
+        "//! Suppression grammar: `// lint:allow(rule-id)` on the line.\n",
+        "/// See lint:allow(not-a-rule, ...) in docs/DEVELOPMENT.md.\n",
+        "fn f() {} // grammar is lint:allow(...) as documented\n"
+    );
+    let r = lint_one("rust/src/sim/doc.rs", prose);
+    assert!(r.clean(), "{}", r.render());
+    assert_eq!(r.suppressed, 0);
+}
+
+// -------------------------------------------------------- determinism + repo
+
+fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+#[test]
+fn findings_are_sorted_and_report_is_deterministic() {
+    // Multiple files, multiple findings: the report must come out sorted by
+    // (file, line, rule) and byte-identical across runs.
+    let files = vec![
+        (
+            "rust/src/zeta.rs".to_string(),
+            "fn f() { let t = SystemTime::now(); }".to_string(),
+        ),
+        (
+            "rust/src/alpha.rs".to_string(),
+            "fn f() { let m: HashMap<u32, u32> = make(); }\nfn g() { let s: HashSet<u32> = make(); }"
+                .to_string(),
+        ),
+    ];
+    let a = lint_files(files.clone(), docs());
+    let b = lint_files(files, docs());
+    assert_eq!(a.render(), b.render(), "same tree must render byte-identically");
+    let keys: Vec<(String, u32)> =
+        a.findings.iter().map(|f| (f.file.clone(), f.line)).collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted, "{}", a.render());
+}
+
+#[test]
+fn repo_lint_runs_deterministically() {
+    let a = lint_repo(&repo_root()).expect("lint_repo");
+    let b = lint_repo(&repo_root()).expect("lint_repo");
+    assert_eq!(a.render(), b.render(), "same tree must render byte-identically");
+    assert!(a.files_scanned > 40, "walker found only {} files", a.files_scanned);
+}
+
+/// The repaired tree is clean — this is the gate that runs inside tier-1.
+#[test]
+fn repo_tree_is_lint_clean() {
+    let report = lint_repo(&repo_root()).expect("lint_repo");
+    assert!(report.clean(), "repo lint violations:\n{}", report.render());
+}

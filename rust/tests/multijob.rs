@@ -20,6 +20,7 @@ use cloudless::coordinator::fleet::{
 };
 use cloudless::runtime::PjrtRuntime;
 use cloudless::sync::{Strategy, SyncConfig};
+use cloudless::train::metrics::replan_cause;
 use cloudless::train::TrainConfig;
 
 fn rt() -> PjrtRuntime {
@@ -114,7 +115,9 @@ fn fifo_queues_what_fair_share_admits() {
     assert_eq!(fair.total_queue_wait(), 0.0, "fair-share admits every arrival immediately");
     assert!(fair.lease_events > 0, "re-divisions must resize running jobs");
     assert!(
-        fair.jobs.iter().any(|j| j.report.replan_events.iter().any(|e| e.cause == "lease")),
+        fair.jobs.iter().any(|j| {
+            j.report.replan_events.iter().any(|e| e.cause == replan_cause::LEASE)
+        }),
         "lease re-divisions are recorded on the job's own re-plan log"
     );
     // Sharing is work-conserving: overlapping the fleet must not cost

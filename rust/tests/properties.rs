@@ -414,7 +414,8 @@ fn check_weights_sum(plan: &SyncPlan) {
 #[test]
 fn prop_ring_plans_one_outgoing_edge_per_region() {
     for n in 2..=16usize {
-        let fabric = random_mesh(&mut Pcg32::new(n as u64, 1), n);
+        let seed = n as u64;
+        let fabric = random_mesh(&mut Pcg32::new(seed, 1), n);
         let plan = TopologyKind::Ring.plan(n, &fabric);
         for i in 0..n {
             assert_eq!(plan.outgoing(i).len(), 1, "ring n={n}: region {i}");
